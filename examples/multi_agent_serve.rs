@@ -1,0 +1,69 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): serve a multi-agent
+//! ReAct workload through the full stack — workload generator → router →
+//! continuous-batching scheduler → paged KV manager with cross-model
+//! prefix caching → real PJRT decode of the AOT artifacts — and report
+//! P95 latency + throughput for baseline vs ICaRus on identical traces.
+//!
+//!   cargo run --release --example multi_agent_serve [n_workflows]
+//!
+//! Real compute on CPU PJRT is slow, so the default workload is small
+//! (12 workflows, 2 models); the sim-executor benches sweep the full
+//! paper grid with costs calibrated against exactly this path.
+
+use anyhow::Result;
+use icarus::config::{ServingConfig, ServingMode, WorkloadConfig};
+use icarus::engine::Engine;
+use icarus::runtime::{Manifest, PjrtExecutor};
+use icarus::workload::generate;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let manifest = Manifest::load("artifacts")?;
+    let spec = manifest.spec("serve-small")?;
+    let kv_bpt = spec.kv_bytes_per_token;
+
+    let wcfg = WorkloadConfig {
+        n_models: 2,
+        qps: 2.0,
+        n_requests: n,
+        prompt_mean: 48.0,
+        prompt_std: 12.0,
+        turns_min: 2,
+        turns_max: 3,
+        output_mean: 12.0,
+        output_std: 4.0,
+        obs_mean: 8.0,
+        obs_std: 2.0,
+        seed: 42,
+        ..Default::default()
+    };
+
+    println!("== multi_agent_serve: {} workflows, 2 agents, ReAct, serve-small ==", n);
+    for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+        let scfg = ServingConfig { mode, kv_pool_bytes: 256 << 20, ..Default::default() };
+        let exec = PjrtExecutor::load(&manifest, "serve-small", mode, wcfg.n_models)?;
+        let t0 = std::time::Instant::now();
+        let stats = Engine::new(scfg, kv_bpt, wcfg.n_models, exec).run(generate(&wcfg));
+        let tl = stats.turn_latency.as_ref().unwrap();
+        println!(
+            "\n[{}] wall {:.1}s | turns {} | P95 {:.3}s P50 {:.3}s | {:.1} tok/s | \
+             prefix hit-rate {:.3} | prefill {} cached {} tokens",
+            mode.as_str(),
+            t0.elapsed().as_secs_f64(),
+            stats.completed_turns,
+            tl.p95(),
+            tl.p50(),
+            stats.throughput_tok_s(),
+            stats.cache_hit_rate(),
+            stats.prefill_tokens,
+            stats.cached_prefill_tokens,
+        );
+        std::fs::create_dir_all("bench_results").ok();
+        std::fs::write(
+            format!("bench_results/e2e_pjrt_{}.json", mode.as_str()),
+            stats.to_json().to_string_pretty(),
+        )?;
+    }
+    println!("\nwrote bench_results/e2e_pjrt_{{baseline,icarus}}.json");
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Appendix F scenario as a runnable example: random + skewed agent
+//! invocation — one hot agent gets 50% of turns, the rest share the
+//! remainder in random order.
+//!
+//!   cargo run --release --example skewed_agents
+//!
+//! (Full sweep: `cargo bench --bench fig9_skewed`.)
+
+use icarus::bench_util::{header, print_row, Point, Row, KV_BPT_SMALL};
+use icarus::config::{Routing, ServingMode};
+
+fn main() {
+    println!("== skewed invocation (hot agent 50%), ReAct, qps 0.4 ==\n");
+    header();
+    for &n in &[2usize, 8] {
+        for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+            let p = Point {
+                mode,
+                n_models: n,
+                qps: 0.4,
+                routing: Routing::Skewed { hot_p_percent: 50 },
+                kv_pool_bytes: 24 << 20,
+                kv_bytes_per_token: KV_BPT_SMALL,
+                ..Default::default()
+            };
+            let s = p.run();
+            let mut r = Row::from_stats(&p, &s);
+            r.label = format!("{}/N={n}/skewed", mode.as_str());
+            print_row(&r);
+        }
+    }
+    println!("\nEven under skew, baseline pays per-model cache duplication on every handoff;");
+    println!("ICaRus turns are prefix hits regardless of which agent served the previous turn.");
+}

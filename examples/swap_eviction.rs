@@ -1,0 +1,38 @@
+//! Appendix E scenario as a runnable example: multi-model serving with
+//! swap-based KV eviction instead of recompute (4 GB host swap tier).
+//!
+//!   cargo run --release --example swap_eviction
+//!
+//! Shows the paper's point that swap and ICaRus are orthogonal: swap
+//! changes what happens *after* the pool fills; ICaRus keeps the pool
+//! from filling.  (Full sweep: `cargo bench --bench fig8_swap`.)
+
+use icarus::bench_util::{header, print_row, Point, Row, KV_BPT_SMALL};
+use icarus::config::{EvictionPolicy, ServingMode};
+
+fn main() {
+    println!("== swap-based eviction, ReAct N=4, qps 2.0, pool 12 MB ==\n");
+    header();
+    for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+        for eviction in [EvictionPolicy::Recompute, EvictionPolicy::Swap] {
+            let p = Point {
+                mode,
+                n_models: 4,
+                qps: 2.0,
+                eviction,
+                kv_pool_bytes: 12 << 20,
+                kv_bytes_per_token: KV_BPT_SMALL,
+                ..Default::default()
+            };
+            let s = p.run();
+            let mut r = Row::from_stats(&p, &s);
+            r.label = format!("{}/{}", mode.as_str(), eviction.as_str());
+            print_row(&r);
+            println!(
+                "    swap-outs {} swap-ins {} recomputed-tokens {}",
+                s.swap_outs, s.swap_ins, s.recomputed_tokens
+            );
+        }
+    }
+    println!("\nICaRus rarely touches the swap tier at all — its KV footprint stays below the pool budget.");
+}

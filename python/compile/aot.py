@@ -1,0 +1,267 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + weights npz + manifest.
+
+Python runs once at build time (``make artifacts``); the Rust coordinator
+loads the HLO text via ``HloModuleProto::from_text_file`` and the weights
+via the xla crate's npz reader, then executes with device-resident
+buffers.  HLO text (not ``.serialize()``) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts per serving config:
+  * ``prefill_{cfg}_{bucket}.hlo.txt``  — one per prompt-length bucket.
+  * ``decode_baseline_{cfg}.hlo.txt``   — conventional LoRA decode step.
+  * ``decode_icarus_{cfg}.hlo.txt``     — ICaRus paired decode step.
+  * ``weights_{cfg}.npz``               — base model parameters.
+  * ``manifest.json``                   — configs, argument orders, files.
+
+Argument order (all artifacts): positional leading args, then the flat
+base-parameter list, then the flat LoRA list (see ``flatten_params`` /
+``flatten_lora``).  Weights are runtime arguments rather than baked
+constants so the HLO text stays small and one artifact serves any
+checkpoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_BUCKETS = (32, 64, 128, 256, 512)
+SERVE_CONFIGS = (M.SERVE_SMALL, M.SERVE_BASE)
+
+PARAM_ORDER_LAYER = (
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up",
+    "w_down",
+)
+
+
+def flatten_params(cfg: M.ModelConfig, params: M.Params) -> List[jnp.ndarray]:
+    """Deterministic flat ordering of base parameters (manifest contract)."""
+    out = [params["embed"]]
+    for layer in params["layers"]:
+        out.extend(layer[k] for k in PARAM_ORDER_LAYER)
+    out.append(params["norm"])
+    out.append(params["lm_head"])
+    return out
+
+
+def param_names(cfg: M.ModelConfig) -> List[str]:
+    names = ["embed"]
+    for i in range(cfg.layers):
+        names.extend(f"layers.{i}.{k}" for k in PARAM_ORDER_LAYER)
+    names.extend(["norm", "lm_head"])
+    return names
+
+
+def unflatten_params(cfg: M.ModelConfig, flat) -> M.Params:
+    flat = list(flat)
+    embed = flat.pop(0)
+    layers = []
+    for _ in range(cfg.layers):
+        layers.append({k: flat.pop(0) for k in PARAM_ORDER_LAYER})
+    return {"embed": embed, "layers": layers, "norm": flat.pop(0),
+            "lm_head": flat.pop(0)}
+
+
+def flatten_lora(cfg: M.ModelConfig, lora: M.Lora,
+                 targets=M.LORA_TARGETS) -> List[jnp.ndarray]:
+    out = []
+    for layer in lora:
+        for t in targets:
+            out.extend(layer[t])
+    return out
+
+
+def lora_names(cfg: M.ModelConfig, targets=M.LORA_TARGETS) -> List[str]:
+    names = []
+    for i in range(cfg.layers):
+        for t in targets:
+            names.extend([f"layers.{i}.{t}.A", f"layers.{i}.{t}.B"])
+    return names
+
+
+def unflatten_lora(cfg: M.ModelConfig, flat,
+                   targets=M.LORA_TARGETS) -> M.Lora:
+    """Rebuild the per-layer dict; targets not in `targets` get zeros.
+
+    The ICaRus decode artifact only takes the logical-decoder targets
+    (q,o,gate,up,down) as arguments — jax would DCE unused k/v adapter
+    parameters out of the lowered module anyway, so the artifact
+    signature must match exactly what the computation reads.
+    """
+    flat = list(flat)
+    dims = {
+        "q": (cfg.d_model, cfg.q_dim),
+        "k": (cfg.d_model, cfg.kv_dim),
+        "v": (cfg.d_model, cfg.kv_dim),
+        "o": (cfg.q_dim, cfg.d_model),
+        "gate": (cfg.d_model, cfg.ffn),
+        "up": (cfg.d_model, cfg.ffn),
+        "down": (cfg.ffn, cfg.d_model),
+    }
+    out = []
+    for _ in range(cfg.layers):
+        layer = {}
+        for t in M.LORA_TARGETS:
+            if t in targets:
+                a = flat.pop(0)
+                b = flat.pop(0)
+            else:
+                din, dout = dims[t]
+                a = jnp.zeros((din, cfg.lora_rank), jnp.float32)
+                b = jnp.zeros((cfg.lora_rank, dout), jnp.float32)
+            layer[t] = (a, b)
+        out.append(layer)
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _prefill_fn(cfg: M.ModelConfig, bucket: int, use_kernels: bool):
+    n_params = len(param_names(cfg))
+
+    def fn(tokens, true_len, *flat):
+        params = unflatten_params(cfg, flat[:n_params])
+        lora = unflatten_lora(cfg, flat[n_params:])
+        kc, vc, logits = M.prefill(cfg, params, lora, tokens, true_len,
+                                   use_kernels=use_kernels)
+        # Pad the bucket-length cache to max_seq so rust can feed it
+        # straight into the decode artifact.
+        pad = cfg.max_seq - bucket
+        kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return kc, vc, logits
+
+    return fn
+
+
+def _decode_fn(cfg: M.ModelConfig, mode: str, use_kernels: bool):
+    n_params = len(param_names(cfg))
+    targets = M.LORA_TARGETS if mode == "baseline" else M.ICARUS_TARGETS
+
+    def fn(token, pos, k_cache, v_cache, *flat):
+        params = unflatten_params(cfg, flat[:n_params])
+        lora = unflatten_lora(cfg, flat[n_params:], targets)
+        if mode == "baseline":
+            return M.decode_baseline(cfg, params, lora, token, pos,
+                                     k_cache, v_cache)
+        return M.decode_icarus(cfg, params, lora, token, pos, k_cache,
+                               v_cache, use_kernels=use_kernels)
+
+    return fn
+
+
+def _example_args(cfg: M.ModelConfig, kind: str, bucket: int = 0,
+                  targets=M.LORA_TARGETS):
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(p.shape, f32)
+              for p in flatten_params(cfg, M.init_params(cfg, jax.random.PRNGKey(0)))]
+    lora = [jax.ShapeDtypeStruct(p.shape, f32)
+            for p in flatten_lora(cfg, M.zero_lora(cfg), targets)]
+    cache = jax.ShapeDtypeStruct(
+        (cfg.layers, cfg.max_seq, cfg.kv_heads, cfg.head_dim), f32)
+    i32 = jnp.int32
+    if kind == "prefill":
+        return (jax.ShapeDtypeStruct((bucket,), i32),
+                jax.ShapeDtypeStruct((), i32), *params, *lora)
+    return (jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32),
+            cache, cache, *params, *lora)
+
+
+def build(out_dir: str, kernels: str = "pallas", configs=SERVE_CONFIGS,
+          buckets=PREFILL_BUCKETS, seed: int = 42) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    use_kernels = kernels == "pallas"
+    manifest = {
+        "kernels": kernels,
+        "prefill_buckets": list(buckets),
+        "param_order_layer": list(PARAM_ORDER_LAYER),
+        "lora_targets": list(M.LORA_TARGETS),
+        "icarus_targets": list(M.ICARUS_TARGETS),
+        "configs": {},
+    }
+    for cfg in configs:
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        weights_file = f"weights_{cfg.name}.npz"
+        np.savez(
+            os.path.join(out_dir, weights_file),
+            **{n: np.asarray(p) for n, p in
+               zip(param_names(cfg), flatten_params(cfg, params))},
+        )
+        entry = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "layers": cfg.layers, "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads, "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn, "max_seq": cfg.max_seq,
+            "lora_rank": cfg.lora_rank, "lora_alpha": cfg.lora_alpha,
+            "kv_bytes_per_token": cfg.kv_bytes_per_token(),
+            "param_count": cfg.param_count(),
+            "weights": weights_file,
+            "param_names": param_names(cfg),
+            "lora_names": lora_names(cfg),
+            "lora_names_icarus": lora_names(cfg, M.ICARUS_TARGETS),
+            "prefill": {},
+        }
+        for bucket in buckets:
+            if bucket > cfg.max_seq:
+                continue
+            name = f"prefill_{cfg.name}_{bucket}.hlo.txt"
+            lowered = jax.jit(_prefill_fn(cfg, bucket, use_kernels)).lower(
+                *_example_args(cfg, "prefill", bucket))
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(to_hlo_text(lowered))
+            entry["prefill"][str(bucket)] = name
+            print(f"wrote {name}")
+        for mode in ("baseline", "icarus"):
+            name = f"decode_{mode}_{cfg.name}.hlo.txt"
+            targets = M.LORA_TARGETS if mode == "baseline" else M.ICARUS_TARGETS
+            lowered = jax.jit(_decode_fn(cfg, mode, use_kernels)).lower(
+                *_example_args(cfg, "decode", targets=targets))
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(to_hlo_text(lowered))
+            entry[f"decode_{mode}"] = name
+            print(f"wrote {name}")
+        manifest["configs"][cfg.name] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['configs'])} configs)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--kernels", choices=("pallas", "ref"), default="ref",
+                    help="lowering path for the attention/linear hot-spots. "
+                    "'ref' (default) is the mathematically identical jnp "
+                    "path — interpret-mode Pallas lowers to per-grid-step "
+                    "while loops that are ~1.4-1.7x slower on CPU PJRT "
+                    "(EXPERIMENTS.md §Perf); the kernels stay verified "
+                    "against ref by pytest and are the TPU lowering path.")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="subset of serving configs to build")
+    args = ap.parse_args()
+    configs = SERVE_CONFIGS
+    if args.configs:
+        configs = tuple(M.CONFIGS[c] for c in args.configs)
+    build(args.out_dir, kernels=args.kernels, configs=configs)
+
+
+if __name__ == "__main__":
+    main()

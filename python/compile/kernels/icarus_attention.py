@@ -1,0 +1,110 @@
+"""Pallas kernel: paired-query GQA decode attention (Algorithm 3, l.13-16).
+
+The heart of ICaRus's decode phase: the logical-encoder query and the
+logical-decoder query are concatenated **along the head dimension** so a
+single pass over the shared KV cache serves both streams.  KV-cache read
+amplification vs a single model is 1.0 — this is what restores decode
+latency to O(M + L_t) memory traffic (Table 1) despite running 2× compute.
+
+TPU mapping: grid = (kv_heads, S/block_s).  Each program streams one
+``block_s`` tile of K and V for one KV head through VMEM and updates a
+flash-attention style online softmax accumulator in scratch for the
+2*group concatenated query heads.  BlockSpec expresses the HBM→VMEM KV
+schedule the paper implements with CUDA threadblocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, block_s: int, dh: int):
+    # Grid: (kv_head k, seq block j). q_ref: [2G, dh] for this kv head;
+    # k_ref/v_ref: [block_s, dh]; o_ref: [2G, dh].
+    j = pl.program_id(1)
+    num_j = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[...]  # [2G, dh]
+    k = k_ref[...]  # [bs, dh]
+    v = v_ref[...]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.asarray(dh, jnp.float32))  # [2G, bs]
+    idx = j * block_s + jnp.arange(block_s)
+    scores = jnp.where(idx[None, :] <= pos, scores, -1e30)
+
+    # Online softmax update.
+    m_prev = m_ref[...]              # [2G]
+    m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)  # rescale of previous accumulator
+    p = jnp.exp(scores - m_cur[:, None])   # [2G, bs]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == num_j - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...] / l_ref[...][:, None]
+
+
+def paired_decode_attention(q, k_cache, v_cache, pos, kv_heads, *,
+                            block_s: int = 128, interpret: bool = True):
+    """Attention for both logical streams with one KV-cache read.
+
+    Args:
+      q: f32[2, H, dh] RoPE'd queries (stream 0 = encoder, 1 = decoder).
+      k_cache: f32[S, KV, dh]; entry at ``pos`` must already be written.
+      v_cache: f32[S, KV, dh].
+      pos: i32[] current position (positions > pos are masked out).
+      kv_heads: static int, number of KV heads.
+
+    Returns:
+      f32[2, H, dh]
+    """
+    two, h, dh = q.shape
+    s = k_cache.shape[0]
+    group = h // kv_heads
+    bs = min(block_s, s)
+    assert s % bs == 0, (s, bs)
+    # [2, KV, G, dh] -> [KV, 2G, dh]: the head-dim concat of Alg. 3.
+    qg = q.reshape(two, kv_heads, group, dh).transpose(1, 0, 2, 3)
+    qg = qg.reshape(kv_heads, two * group, dh)
+    kk = k_cache.transpose(1, 0, 2)  # [KV, S, dh]
+    vv = v_cache.transpose(1, 0, 2)
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, dh=dh),
+        grid=(kv_heads, s // bs),
+        in_specs=[
+            pl.BlockSpec((1,), lambda k, j: (0,)),
+            pl.BlockSpec((None, two * group, dh), lambda k, j: (k, 0, 0)),
+            pl.BlockSpec((None, bs, dh), lambda k, j: (k, j, 0)),
+            pl.BlockSpec((None, bs, dh), lambda k, j: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, two * group, dh), lambda k, j: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kv_heads, two * group, dh),
+                                       jnp.float32),
+        scratch_shapes=[
+            pl.MemorySpace.ANY((two * group, dh), jnp.float32),
+            pl.MemorySpace.ANY((two * group,), jnp.float32),
+            pl.MemorySpace.ANY((two * group,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, kk, vv)
+    out = out.reshape(kv_heads, two, group, dh).transpose(1, 0, 2, 3)
+    return out.reshape(two, h, dh)

@@ -1,0 +1,71 @@
+"""Pallas kernel: fused base + LoRA linear (Algorithm 2, "ICaRus Linear").
+
+The paper's decode-phase optimization: the logical encoder (stream 0) and
+logical decoder (stream 1) share every base weight matrix, so the weight
+is streamed through VMEM **once** per output block and applied to the
+stacked [2, T, d_in] activation as a single batched matmul (MXU-friendly).
+Only the decoder stream receives the low-rank adapter delta.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks d_out in
+``block_n`` tiles; each program holds one W tile + the full A/B adapter in
+VMEM. Weight-read amplification vs a single model is exactly 1.0 — the
+paper's memory-traffic claim. Runs under ``interpret=True`` on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scale):
+    # x_ref: [2, T, d_in] (whole), w_ref: [d_in, bn] tile,
+    # a_ref: [d_in, r] (whole), b_ref: [r, bn] tile, o_ref: [2, T, bn].
+    x = x_ref[...]
+    w = w_ref[...]
+    # Shared base matmul: one weight read serves both streams.
+    y = jax.lax.dot_general(
+        x, w, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # LoRA delta on the decoder stream only.
+    xa = x[1] @ a_ref[...]
+    delta = (xa @ b_ref[...]) * scale
+    o_ref[...] = y.at[1].add(delta)
+
+
+def icarus_linear(x, w, a, b, scale, *, block_n: int = 128,
+                  interpret: bool = True):
+    """Compute ``[x0 @ w, x1 @ w + (x1 @ a) @ b * scale]``.
+
+    Args:
+      x: f32[2, T, d_in] stacked encoder/decoder activations.
+      w: f32[d_in, d_out] frozen base weight.
+      a: f32[d_in, r], b: f32[r, d_out]: LoRA factors.
+      scale: float, LoRA alpha/rank.
+      block_n: d_out tile width (VMEM sizing knob).
+
+    Returns:
+      f32[2, T, d_out]
+    """
+    two, t, d_in = x.shape
+    d_out = w.shape[1]
+    bn = min(block_n, d_out)
+    while d_out % bn != 0:  # largest divisor of d_out not above block_n
+        bn -= 1
+    grid = (d_out // bn,)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((two, t, d_in), lambda j: (0, 0, 0)),
+            pl.BlockSpec((d_in, bn), lambda j: (0, j)),
+            pl.BlockSpec(a.shape, lambda j: (0, 0)),
+            pl.BlockSpec((b.shape[0], bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((two, t, bn), lambda j: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((two, t, d_out), jnp.float32),
+        interpret=interpret,
+    )(x, w, a, b)

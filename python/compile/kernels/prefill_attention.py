@@ -1,0 +1,110 @@
+"""Pallas kernel: causal GQA prefill attention (logical-encoder pass).
+
+Flash-attention style: grid = (kv_heads, Sq/block_q, Sk/block_k); each
+program streams one K/V tile through VMEM and updates an online-softmax
+accumulator for one query tile of one KV head group.  Padding positions
+(>= ``true_len``) and acausal positions are masked.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, block_q: int, block_k: int, dh: int):
+    # Grid: (kv head, q block i, k block j).
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    num_j = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    true_len = len_ref[0]
+    q = q_ref[...]  # [bq*G, dh]  (q heads of this kv group, flattened)
+    k = k_ref[...]  # [bk, dh]
+    v = v_ref[...]
+    g = q.shape[0] // block_q
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.asarray(dh, jnp.float32))  # [bq*G, bk]
+    q_idx = i * block_q + jnp.arange(block_q)
+    k_idx = j * block_k + jnp.arange(block_k)
+    q_idx = jnp.repeat(q_idx, g)  # row r belongs to query position r//G
+    mask = (q_idx[:, None] >= k_idx[None, :]) & (k_idx[None, :] < true_len)
+    scores = jnp.where(mask, scores, -1e30)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(scores - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == num_j - 1)
+    def _finish():
+        # Fully-masked rows (padding queries) have l == 0; emit zeros.
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = acc_ref[...] / safe[:, None]
+
+
+def prefill_attention(q, k, v, true_len, kv_heads, *, block_q: int = 64,
+                      block_k: int = 64, interpret: bool = True):
+    """Causal GQA attention over a padded prompt.
+
+    Args:
+      q: f32[S, H, dh] RoPE'd queries.
+      k: f32[S, KV, dh] keys.  v: f32[S, KV, dh] values.
+      true_len: i32[] true prompt length; keys beyond it are padding.
+      kv_heads: static int.
+
+    Returns:
+      f32[S, H, dh] (rows >= true_len are zeros).
+    """
+    s, h, dh = q.shape
+    group = h // kv_heads
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    # [S, KV, G, dh] -> [KV, S*G, dh]: rows grouped by query position so a
+    # q block covers positions [i*bq, (i+1)*bq) for all its group heads.
+    qg = q.reshape(s, kv_heads, group, dh).transpose(1, 0, 2, 3)
+    qg = qg.reshape(kv_heads, s * group, dh)
+    kk = k.transpose(1, 0, 2)
+    vv = v.transpose(1, 0, 2)
+    len_arr = jnp.reshape(true_len, (1,)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, dh=dh),
+        grid=(kv_heads, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda kh, i, j: (0,)),
+            pl.BlockSpec((None, bq * group, dh), lambda kh, i, j: (kh, i, 0)),
+            pl.BlockSpec((None, bk, dh), lambda kh, i, j: (kh, j, 0)),
+            pl.BlockSpec((None, bk, dh), lambda kh, i, j: (kh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, bq * group, dh), lambda kh, i, j: (kh, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((kv_heads, s * group, dh), jnp.float32),
+        scratch_shapes=[
+            pl.MemorySpace.ANY((bq * group, dh), jnp.float32),
+            pl.MemorySpace.ANY((bq * group,), jnp.float32),
+            pl.MemorySpace.ANY((bq * group,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_arr, qg, kk, vv)
+    out = out.reshape(kv_heads, s, group, dh).transpose(1, 0, 2, 3)
+    return out.reshape(s, h, dh)

@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the ICaRus Pallas kernels.
+
+These are the ground truth that every Pallas kernel is checked against in
+``python/tests/``; they are also selectable as the lowering path for the
+AOT artifacts (``aot.py --kernels ref``) since they are mathematically
+identical to the kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def icarus_linear_ref(x, w, a, b, scale):
+    """Fused base + LoRA linear over a [2, T, d_in] stacked activation.
+
+    Stream 0 (logical encoder) sees only the frozen base weight ``w``;
+    stream 1 (logical decoder) additionally receives the LoRA delta
+    ``(x[1] @ a) @ b * scale``.  This is Algorithm 2 (``ICaRus Linear``)
+    of the paper: the base matmul is shared so the weight matrix is read
+    once for both streams.
+
+    Args:
+      x: f32[2, T, d_in] stacked encoder/decoder activations.
+      w: f32[d_in, d_out] frozen base weight.
+      a: f32[d_in, r] LoRA down-projection.
+      b: f32[r, d_out] LoRA up-projection.
+      scale: python float, LoRA alpha / rank.
+
+    Returns:
+      f32[2, T, d_out]
+    """
+    y = jnp.einsum("btd,df->btf", x, w)
+    delta = (x[1] @ a) @ b * scale
+    return y.at[1].add(delta)
+
+
+def paired_decode_attention_ref(q, k_cache, v_cache, pos, kv_heads):
+    """Paired-query GQA decode attention over the shared KV cache.
+
+    Algorithm 3 lines 13-16: the logical-encoder and logical-decoder
+    queries are concatenated along the head axis so one pass over the
+    (shared) KV cache serves both streams.
+
+    Args:
+      q: f32[2, H, dh] RoPE'd queries for this decode step
+         (stream 0 = encoder, stream 1 = decoder).
+      k_cache: f32[S, KV, dh] key cache (entry at ``pos`` already written).
+      v_cache: f32[S, KV, dh] value cache.
+      pos: i32 scalar, index of the current token; positions > pos masked.
+      kv_heads: static int, number of KV heads (GQA groups).
+
+    Returns:
+      f32[2, H, dh] attention outputs per stream.
+    """
+    two, h, dh = q.shape
+    s = k_cache.shape[0]
+    group = h // kv_heads
+    # [2, KV, group, dh] -> [KV, 2*group, dh]: concat along head dim.
+    qg = q.reshape(two, kv_heads, group, dh).transpose(1, 0, 2, 3)
+    qg = qg.reshape(kv_heads, two * group, dh)
+    k = k_cache.transpose(1, 0, 2)  # [KV, S, dh]
+    v = v_cache.transpose(1, 0, 2)
+    scores = jnp.einsum("kgd,ksd->kgs", qg, k) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    )
+    mask = jnp.arange(s)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("kgs,ksd->kgd", p, v)  # [KV, 2*group, dh]
+    out = out.reshape(kv_heads, two, group, dh).transpose(1, 0, 2, 3)
+    return out.reshape(two, h, dh)
+
+
+def prefill_attention_ref(q, k, v, true_len, kv_heads):
+    """Causal GQA prefill attention (logical-encoder pass).
+
+    Args:
+      q: f32[S, H, dh] RoPE'd queries.
+      k: f32[S, KV, dh] keys.
+      v: f32[S, KV, dh] values.
+      true_len: i32 scalar; keys at position >= true_len are padding.
+      kv_heads: static int.
+
+    Returns:
+      f32[S, H, dh]
+    """
+    s, h, dh = q.shape
+    group = h // kv_heads
+    qg = q.reshape(s, kv_heads, group, dh)
+    scores = jnp.einsum("skgd,tkd->kgst", qg, k) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    )
+    ar = jnp.arange(s)
+    causal = ar[:, None] >= ar[None, :]
+    valid = ar[None, :] < true_len
+    mask = (causal & valid)[None, None, :, :]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("kgst,tkd->skgd", p, v)
+    return out.reshape(s, h, dh)

@@ -1,0 +1,530 @@
+"""L2: ICaRus decoder-only Transformer in JAX.
+
+A complete LLaMA-family architecture (RMSNorm, RoPE, GQA, SwiGLU, untied
+LM head) with LoRA adapters, exposing the four entry points the serving
+system compiles AOT:
+
+  * ``prefill``          — the logical encoder: prompt -> KV cache + first
+                           logits.  With zero adapters the cache is pure
+                           base-model cache (ICaRus mode, shareable across
+                           models); with a conventional adapter the cache
+                           is model-specific (baseline mode).
+  * ``decode_baseline``  — conventional fine-tuned model decode: one
+                           stream, adapter on q,k,v,o,mlp, writes *its*
+                           cache.
+  * ``decode_icarus``    — Algorithm 3: stacked [2,1,d] encoder/decoder
+                           streams; the frozen encoder stream writes the
+                           shared cache, the adapter stream predicts the
+                           task token; paired-query attention reads KV
+                           once for both streams.
+  * training forwards    — ``forward_conventional`` / ``forward_icarus``
+                           full-sequence versions used by ``train.py`` to
+                           reproduce the accuracy experiments.
+
+Adapter convention: ``lora`` is a list (one dict per layer) mapping target
+name in {q,k,v,o,gate,up,down} to an ``(A, B)`` pair.  ICaRus never reads
+the k/v entries (the logical encoder is frozen); they exist so the two
+modes share one artifact signature and are zero-enforced by training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.icarus_attention import paired_decode_attention
+from .kernels.icarus_linear import icarus_linear
+from .kernels.prefill_attention import prefill_attention
+from .kernels import ref as kref
+
+Params = Dict[str, Any]
+Lora = List[Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]]
+
+LORA_TARGETS = ("q", "k", "v", "o", "gate", "up", "down")
+# Targets the ICaRus logical decoder may adapt (k/v belong to the frozen
+# logical encoder).
+ICARUS_TARGETS = ("q", "o", "gate", "up", "down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters of one model size."""
+
+    name: str
+    vocab: int
+    d_model: int
+    layers: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    ffn: int
+    max_seq: int
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    rope_theta: float = 10000.0
+
+    @property
+    def q_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.lora_rank
+
+    def param_count(self) -> int:
+        per_layer = (
+            self.d_model * self.q_dim          # wq
+            + 2 * self.d_model * self.kv_dim   # wk, wv
+            + self.q_dim * self.d_model        # wo
+            + 2 * self.d_model * self.ffn      # gate, up
+            + self.ffn * self.d_model          # down
+            + 2 * self.d_model                 # norms
+        )
+        return (
+            self.vocab * self.d_model * 2      # embed + lm head
+            + self.layers * per_layer
+            + self.d_model
+        )
+
+    def kv_bytes_per_token(self) -> int:
+        """f32 KV cache bytes per token — used by the L3 block allocator."""
+        return self.layers * 2 * self.kv_dim * 4
+
+
+# Serving configs (AOT-compiled to artifacts).  Sizes are the paper's
+# LLaMA-8B / Qwen-14B stand-ins (see DESIGN.md substitution table).
+SERVE_SMALL = ModelConfig(
+    name="serve-small", vocab=2048, d_model=128, layers=4, heads=8,
+    kv_heads=4, head_dim=16, ffn=352, max_seq=1024,
+)
+SERVE_BASE = ModelConfig(
+    name="serve-base", vocab=4096, d_model=256, layers=8, heads=8,
+    kv_heads=4, head_dim=32, ffn=704, max_seq=1024,
+)
+# Training configs (accuracy experiments; never AOT-compiled).
+TRAIN_TINY = ModelConfig(
+    name="train-tiny", vocab=256, d_model=64, layers=2, heads=4,
+    kv_heads=2, head_dim=16, ffn=176, max_seq=64,
+)
+TRAIN_SMALL = ModelConfig(
+    name="train-small", vocab=256, d_model=96, layers=3, heads=6,
+    kv_heads=2, head_dim=16, ffn=256, max_seq=64,
+)
+TRAIN_BASE = ModelConfig(
+    name="train-base", vocab=256, d_model=128, layers=4, heads=8,
+    kv_heads=4, head_dim=16, ffn=352, max_seq=64,
+)
+
+CONFIGS = {
+    c.name: c
+    for c in (SERVE_SMALL, SERVE_BASE, TRAIN_TINY, TRAIN_SMALL, TRAIN_BASE)
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Random base-model parameters (stands in for the pretrained LLM)."""
+    keys = jax.random.split(key, 2 + cfg.layers)
+
+    def dense(k, shape):
+        fan_in = shape[0]
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    layers = []
+    for i in range(cfg.layers):
+        lk = jax.random.split(keys[2 + i], 7)
+        layers.append({
+            "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "wq": dense(lk[0], (cfg.d_model, cfg.q_dim)),
+            "wk": dense(lk[1], (cfg.d_model, cfg.kv_dim)),
+            "wv": dense(lk[2], (cfg.d_model, cfg.kv_dim)),
+            "wo": dense(lk[3], (cfg.q_dim, cfg.d_model)),
+            "mlp_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "w_gate": dense(lk[4], (cfg.d_model, cfg.ffn)),
+            "w_up": dense(lk[5], (cfg.d_model, cfg.ffn)),
+            "w_down": dense(lk[6], (cfg.ffn, cfg.d_model)),
+        })
+    return {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "layers": layers,
+        "norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense(keys[1], (cfg.d_model, cfg.vocab)),
+    }
+
+
+def init_lora(cfg: ModelConfig, key: jax.Array, targets=LORA_TARGETS,
+              zero: bool = False) -> Lora:
+    """LoRA factors.  B starts at zero (standard), A random normal."""
+    dims = {
+        "q": (cfg.d_model, cfg.q_dim),
+        "k": (cfg.d_model, cfg.kv_dim),
+        "v": (cfg.d_model, cfg.kv_dim),
+        "o": (cfg.q_dim, cfg.d_model),
+        "gate": (cfg.d_model, cfg.ffn),
+        "up": (cfg.d_model, cfg.ffn),
+        "down": (cfg.ffn, cfg.d_model),
+    }
+    out: Lora = []
+    keys = jax.random.split(key, cfg.layers)
+    for i in range(cfg.layers):
+        tk = jax.random.split(keys[i], len(LORA_TARGETS))
+        layer = {}
+        for j, t in enumerate(LORA_TARGETS):
+            din, dout = dims[t]
+            if t in targets and not zero:
+                a = jax.random.normal(tk[j], (din, cfg.lora_rank)) / jnp.sqrt(din)
+            else:
+                a = jnp.zeros((din, cfg.lora_rank), jnp.float32)
+            layer[t] = (a, jnp.zeros((cfg.lora_rank, dout), jnp.float32))
+        out.append(layer)
+    return out
+
+
+def zero_lora(cfg: ModelConfig) -> Lora:
+    return init_lora(cfg, jax.random.PRNGKey(0), targets=(), zero=True)
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """Rotary embedding.  x: [..., T, n_heads, dh], positions: [T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(angles)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def lora_apply(x, w, ab, scale):
+    """Base matmul + LoRA delta (single stream)."""
+    a, b = ab
+    return x @ w + (x @ a) @ b * scale
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# Prefill (logical encoder)
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, lora: Lora,
+            tokens: jnp.ndarray, true_len: jnp.ndarray,
+            use_kernels: bool = False):
+    """Run the prompt through the model, producing KV cache + last logits.
+
+    With ``lora == zero_lora`` this is exactly the frozen logical encoder
+    E_base of Eq. 4 and the cache is identical for every ICaRus model.
+    Baseline mode passes the model's own adapter (cache becomes
+    model-specific, Eq. 2 with task-tuned E).
+
+    Args:
+      tokens: i32[S] padded prompt.  true_len: i32[] actual length.
+
+    Returns:
+      (k_cache f32[L,S,KV,dh], v_cache f32[L,S,KV,dh], logits f32[V])
+      logits are for position ``true_len - 1`` (the next-token logits).
+    """
+    s = tokens.shape[0]
+    scale = cfg.lora_scale
+    x = params["embed"][tokens]  # [S, d]
+    positions = jnp.arange(s)
+    k_cache = []
+    v_cache = []
+    for li, lp in enumerate(params["layers"]):
+        la = lora[li]
+        h = rmsnorm(x, lp["attn_norm"])
+        q = lora_apply(h, lp["wq"], la["q"], scale)
+        k = lora_apply(h, lp["wk"], la["k"], scale)
+        v = lora_apply(h, lp["wv"], la["v"], scale)
+        q = q.reshape(s, cfg.heads, cfg.head_dim)
+        k = k.reshape(s, cfg.kv_heads, cfg.head_dim)
+        v = v.reshape(s, cfg.kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if use_kernels:
+            attn = prefill_attention(q, k, v, true_len, cfg.kv_heads)
+        else:
+            attn = kref.prefill_attention_ref(q, k, v, true_len, cfg.kv_heads)
+        attn = attn.reshape(s, cfg.q_dim)
+        x = x + lora_apply(attn, lp["wo"], la["o"], scale)
+        h2 = rmsnorm(x, lp["mlp_norm"])
+        gate = lora_apply(h2, lp["w_gate"], la["gate"], scale)
+        up = lora_apply(h2, lp["w_up"], la["up"], scale)
+        x = x + lora_apply(silu(gate) * up, lp["w_down"], la["down"], scale)
+        k_cache.append(k)
+        v_cache.append(v)
+    xl = rmsnorm(x, params["norm"])
+    logits = xl[true_len - 1] @ params["lm_head"]
+    return jnp.stack(k_cache), jnp.stack(v_cache), logits
+
+
+# --------------------------------------------------------------------------
+# Decode — baseline (conventional fine-tuned model)
+# --------------------------------------------------------------------------
+
+def decode_baseline(cfg: ModelConfig, params: Params, lora: Lora,
+                    token: jnp.ndarray, pos: jnp.ndarray,
+                    k_cache: jnp.ndarray, v_cache: jnp.ndarray):
+    """One conventional decode step.
+
+    The adapter touches every projection including k/v, so the cache this
+    writes is *model-specific* — the reason baseline multi-model serving
+    cannot share caches.
+
+    Args:
+      token: i32[] current token.  pos: i32[] its position.
+      k_cache/v_cache: f32[L, S, KV, dh] (functional: updated copies are
+        returned; the Rust runtime keeps them device-resident).
+
+    Returns:
+      (logits f32[V], k_cache', v_cache')
+    """
+    scale = cfg.lora_scale
+    x = params["embed"][token][None, :]  # [1, d]
+    pos_arr = jnp.reshape(pos, (1,))
+    for li, lp in enumerate(params["layers"]):
+        la = lora[li]
+        h = rmsnorm(x, lp["attn_norm"])
+        q = lora_apply(h, lp["wq"], la["q"], scale)
+        k = lora_apply(h, lp["wk"], la["k"], scale)
+        v = lora_apply(h, lp["wv"], la["v"], scale)
+        q = rope(q.reshape(1, cfg.heads, cfg.head_dim), pos_arr,
+                 cfg.rope_theta)
+        k = rope(k.reshape(1, cfg.kv_heads, cfg.head_dim), pos_arr,
+                 cfg.rope_theta)
+        v = v.reshape(1, cfg.kv_heads, cfg.head_dim)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None], (li, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None], (li, pos, 0, 0))
+        # Single-stream attention == paired attention with q duplicated;
+        # reuse the reference to keep one code path.
+        q2 = jnp.concatenate([q, q], axis=0)  # [2, H, dh] — wasteful but
+        attn = kref.paired_decode_attention_ref(
+            q2, k_cache[li], v_cache[li], pos, cfg.kv_heads)[0]
+        attn = attn.reshape(1, cfg.q_dim)
+        x = x + lora_apply(attn, lp["wo"], la["o"], scale)
+        h2 = rmsnorm(x, lp["mlp_norm"])
+        gate = lora_apply(h2, lp["w_gate"], la["gate"], scale)
+        up = lora_apply(h2, lp["w_up"], la["up"], scale)
+        x = x + lora_apply(silu(gate) * up, lp["w_down"], la["down"], scale)
+    logits = rmsnorm(x[0], params["norm"]) @ params["lm_head"]
+    return logits, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Decode — ICaRus (Algorithm 3)
+# --------------------------------------------------------------------------
+
+def decode_icarus(cfg: ModelConfig, params: Params, lora: Lora,
+                  token: jnp.ndarray, pos: jnp.ndarray,
+                  k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                  use_kernels: bool = True):
+    """One ICaRus decode step (paper Algorithm 3).
+
+    Stream 0 is the frozen logical encoder: it computes this step's k/v
+    (written to the shared cache) and propagates the pure base hidden
+    state.  Stream 1 is the logical decoder: base + adapter, produces the
+    task-specific logits.  Both streams run as one stacked [2,1,d] batch
+    so base weights and KV cache are read once (ICaRusLinear + paired-
+    query attention kernels).
+
+    Returns:
+      (logits f32[V], k_cache', v_cache') — the returned cache is pure
+      base-model cache, reusable by every other ICaRus model.
+    """
+    scale = cfg.lora_scale
+    emb = params["embed"][token][None, :]
+    x = jnp.stack([emb, emb])  # [2, 1, d]
+    pos_arr = jnp.reshape(pos, (1,))
+    for li, lp in enumerate(params["layers"]):
+        la = lora[li]
+        h = rmsnorm(x, lp["attn_norm"])  # [2, 1, d]
+        if use_kernels:
+            q_pair = icarus_linear(h, lp["wq"], la["q"][0], la["q"][1], scale)
+        else:
+            q_pair = kref.icarus_linear_ref(
+                h, lp["wq"], la["q"][0], la["q"][1], scale)
+        # k/v from the encoder stream only, base weights only (Alg. 3 l.7).
+        k = h[0] @ lp["wk"]
+        v = h[0] @ lp["wv"]
+        q_pair = _rope_pair(cfg, q_pair, pos_arr)
+        k = rope(k.reshape(1, cfg.kv_heads, cfg.head_dim), pos_arr,
+                 cfg.rope_theta)
+        v = v.reshape(1, cfg.kv_heads, cfg.head_dim)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None], (li, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None], (li, pos, 0, 0))
+        if use_kernels:
+            attn = paired_decode_attention(
+                q_pair, k_cache[li], v_cache[li], pos, cfg.kv_heads)
+        else:
+            attn = kref.paired_decode_attention_ref(
+                q_pair, k_cache[li], v_cache[li], pos, cfg.kv_heads)
+        attn = attn.reshape(2, 1, cfg.q_dim)
+        if use_kernels:
+            z = icarus_linear(attn, lp["wo"], la["o"][0], la["o"][1], scale)
+            x = x + z
+            h2 = rmsnorm(x, lp["mlp_norm"])
+            gate = icarus_linear(
+                h2, lp["w_gate"], la["gate"][0], la["gate"][1], scale)
+            up = icarus_linear(h2, lp["w_up"], la["up"][0], la["up"][1], scale)
+            act = silu(gate) * up
+            x = x + icarus_linear(
+                act, lp["w_down"], la["down"][0], la["down"][1], scale)
+        else:
+            z = kref.icarus_linear_ref(
+                attn, lp["wo"], la["o"][0], la["o"][1], scale)
+            x = x + z
+            h2 = rmsnorm(x, lp["mlp_norm"])
+            gate = kref.icarus_linear_ref(
+                h2, lp["w_gate"], la["gate"][0], la["gate"][1], scale)
+            up = kref.icarus_linear_ref(
+                h2, lp["w_up"], la["up"][0], la["up"][1], scale)
+            act = silu(gate) * up
+            x = x + kref.icarus_linear_ref(
+                act, lp["w_down"], la["down"][0], la["down"][1], scale)
+    # Only the adapter stream's output is sampled (Alg. 3 l.20).
+    logits = rmsnorm(x[1, 0], params["norm"]) @ params["lm_head"]
+    return logits, k_cache, v_cache
+
+
+def _rope_pair(cfg: ModelConfig, q_pair: jnp.ndarray, pos_arr: jnp.ndarray):
+    """RoPE over the stacked [2, 1, H*dh] query pair -> [2, H, dh]."""
+    q = q_pair.reshape(2, cfg.heads, cfg.head_dim)
+    # rope expects [T, heads, dh]; treat the stream axis as T with equal
+    # positions for both streams.
+    pos2 = jnp.concatenate([pos_arr, pos_arr])
+    return rope(q, pos2, cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------
+# Full-sequence training forwards (used by train.py, never AOT-compiled)
+# --------------------------------------------------------------------------
+
+def forward_conventional(cfg: ModelConfig, params: Params, lora: Lora,
+                         tokens: jnp.ndarray) -> jnp.ndarray:
+    """Standard causal forward with LoRA on all targets.  tokens: i32[B,S].
+
+    Returns logits f32[B,S,V].
+    """
+    b, s = tokens.shape
+    scale = cfg.lora_scale
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+    causal = positions[:, None] >= positions[None, :]
+    for li, lp in enumerate(params["layers"]):
+        la = lora[li]
+        h = rmsnorm(x, lp["attn_norm"])
+        q = lora_apply(h, lp["wq"], la["q"], scale)
+        k = lora_apply(h, lp["wk"], la["k"], scale)
+        v = lora_apply(h, lp["wv"], la["v"], scale)
+        attn = _gqa_full(cfg, q, k, v, positions, causal)
+        x = x + lora_apply(attn, lp["wo"], la["o"], scale)
+        h2 = rmsnorm(x, lp["mlp_norm"])
+        gate = lora_apply(h2, lp["w_gate"], la["gate"], scale)
+        up = lora_apply(h2, lp["w_up"], la["up"], scale)
+        x = x + lora_apply(silu(gate) * up, lp["w_down"], la["down"], scale)
+    return rmsnorm(x, params["norm"]) @ params["lm_head"]
+
+
+def forward_icarus(cfg: ModelConfig, params: Params, lora: Lora,
+                   tokens: jnp.ndarray) -> jnp.ndarray:
+    """ICaRus training forward (paper §3.2).
+
+    The input is duplicated: the frozen encoder stream runs the pure base
+    model and provides K/V for every position; the decoder stream (base +
+    adapter on q,o,mlp) attends to the encoder's K/V and produces the
+    logits the loss is computed on.
+
+    Returns decoder logits f32[B,S,V].
+    """
+    b, s = tokens.shape
+    scale = cfg.lora_scale
+    e = params["embed"][tokens]   # encoder stream (frozen base)
+    d = e                         # decoder stream (base + adapter)
+    positions = jnp.arange(s)
+    causal = positions[:, None] >= positions[None, :]
+    for li, lp in enumerate(params["layers"]):
+        la = lora[li]
+        he = rmsnorm(e, lp["attn_norm"])
+        hd = rmsnorm(d, lp["attn_norm"])
+        # Encoder stream: pure base attention over its own K/V.
+        qe = he @ lp["wq"]
+        k = he @ lp["wk"]
+        v = he @ lp["wv"]
+        attn_e = _gqa_full(cfg, qe, k, v, positions, causal)
+        e2 = e + attn_e @ lp["wo"]
+        h2e = rmsnorm(e2, lp["mlp_norm"])
+        e = e2 + (silu(h2e @ lp["w_gate"]) * (h2e @ lp["w_up"])) @ lp["w_down"]
+        # Decoder stream: adapted q against the *encoder's* K/V.
+        qd = lora_apply(hd, lp["wq"], la["q"], scale)
+        attn_d = _gqa_full(cfg, qd, k, v, positions, causal)
+        d2 = d + lora_apply(attn_d, lp["wo"], la["o"], scale)
+        h2d = rmsnorm(d2, lp["mlp_norm"])
+        gate = lora_apply(h2d, lp["w_gate"], la["gate"], scale)
+        up = lora_apply(h2d, lp["w_up"], la["up"], scale)
+        d = d2 + lora_apply(silu(gate) * up, lp["w_down"], la["down"], scale)
+    return rmsnorm(d, params["norm"]) @ params["lm_head"]
+
+
+def forward_base(cfg: ModelConfig, params: Params,
+                 tokens: jnp.ndarray) -> jnp.ndarray:
+    """Pure base-model forward (pretraining / base-model evals)."""
+    return forward_conventional(cfg, params, zero_lora(cfg), tokens)
+
+
+def _gqa_full(cfg: ModelConfig, q, k, v, positions, causal):
+    """Batched full-sequence GQA attention.  q: [B,S,H*dh] etc."""
+    b, s = q.shape[:2]
+    group = cfg.heads // cfg.kv_heads
+    q = _rope_bshd(cfg, q.reshape(b, s, cfg.heads, cfg.head_dim), positions)
+    k = _rope_bshd(cfg, k.reshape(b, s, cfg.kv_heads, cfg.head_dim), positions)
+    v = v.reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    qg = q.reshape(b, s, cfg.kv_heads, group, cfg.head_dim)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k)
+    scores = scores / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    scores = jnp.where(causal[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, cfg.q_dim)
+
+
+def _rope_bshd(cfg: ModelConfig, x, positions):
+    """RoPE over [B, S, heads, dh]."""
+    b, s, h, dh = x.shape
+    x2 = x.transpose(1, 0, 2, 3).reshape(s, b * h, dh)
+    x2 = rope(x2, positions, cfg.rope_theta)
+    return x2.reshape(s, b, h, dh).transpose(1, 0, 2, 3)
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked mean next-token cross-entropy.  logits [B,S,V] vs targets
+    [B,S]; mask [B,S] selects supervised positions."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,208 @@
+"""Synthetic task families for the accuracy experiments.
+
+Substitutes for the paper's fine-tuning datasets (DESIGN.md substitution
+table): each family produces supervised (tokens, loss_mask) sequences and
+an exact-match evaluator, so we can reproduce the *comparison structure*
+of Tables 2-5: base model weak everywhere, task-specialists strong on
+their own task, conventional-LoRA vs ICaRus-LoRA head to head.
+
+  math   (MetaMathQA stand-in)  — modular arithmetic, multi-digit.
+  code   (Evol-Instruct-Code)   — bracket-language auto-closing.
+  know   (OASST1 / GPQA)        — two-hop key-value knowledge recall.
+  tool   (ToolACE / BFCL)       — function-call formatting.
+
+Evals: ``{task}`` is in-distribution, ``{task}_plus`` is the harder
+variant (more operands / deeper nesting / second hop), mirroring
+GSM8K vs GSM-Plus and HumanEval vs HumanEval+.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+# Token map (vocab 256, shared by all training configs).
+PAD, BOS, EOS, SEP, ANS = 0, 1, 2, 3, 4
+TAG_MATH, TAG_CODE, TAG_KNOW, TAG_TOOL = 5, 6, 7, 8
+OP_ADD, OP_SUB, OP_MUL, EQ = 9, 10, 11, 12
+OPEN_A, CLOSE_A, OPEN_B, CLOSE_B = 13, 14, 15, 16
+CALL, LPAR, RPAR, COMMA = 17, 18, 19, 20
+DIGIT0 = 30          # digits 30..39
+ENTITY0 = 40         # entities 40..103 (64)
+ATTR0 = 104          # attribute names 104..111 (8)
+VALUE0 = 112         # attribute values 112..175 (64)
+FUNC0 = 176          # function ids 176..191 (16)
+ARG0 = 192           # argument tokens 192..255 (64)
+
+N_ENTITY, N_ATTR, N_VALUE, N_FUNC, N_ARG = 64, 8, 64, 16, 64
+
+MOD = 10  # single-digit modular arithmetic (learnable at tiny scale)
+
+
+@dataclasses.dataclass
+class Example:
+    tokens: np.ndarray   # i32[S]
+    mask: np.ndarray     # f32[S] — 1.0 on supervised (answer) positions
+    prompt_len: int      # answer begins at this index
+    answer: List[int]
+
+
+def _digits(n: int, width: int = 2) -> List[int]:
+    """Zero-padded fixed-width digits — removes length ambiguity so the
+    exact-match evaluator measures arithmetic, not length prediction."""
+    return [DIGIT0 + int(c) for c in str(n).zfill(width)]
+
+
+def _pad(tokens: List[int], mask: List[float], seq: int) -> Example:
+    assert len(tokens) <= seq, (len(tokens), seq)
+    t = np.full(seq, PAD, np.int32)
+    m = np.zeros(seq, np.float32)
+    t[: len(tokens)] = tokens
+    m[: len(mask)] = mask
+    ans_start = next(i for i, v in enumerate(mask) if v > 0)
+    answer = tokens[ans_start:]
+    return Example(t, m, ans_start, answer)
+
+
+def _wrap(prompt: List[int], answer: List[int], seq: int) -> Example:
+    tokens = prompt + answer + [EOS]
+    mask = [0.0] * len(prompt) + [1.0] * (len(answer) + 1)
+    return _pad(tokens, mask, seq)
+
+
+# --------------------------------------------------------------------------
+# Task generators.  ``hard=True`` is the "_plus" eval variant.
+# --------------------------------------------------------------------------
+
+def gen_math(rng: np.random.Generator, seq: int, hard: bool = False) -> Example:
+    easy_ops = [(OP_ADD, lambda a, b: a + b), (OP_SUB, lambda a, b: a - b)]
+    all_ops = easy_ops + [(OP_MUL, lambda a, b: a * b)]
+    if hard:
+        # Three operands, two ops (incl. mul): compositional, GSM-Plus-ish.
+        a, b, c = (int(rng.integers(0, MOD)) for _ in range(3))
+        (o1, f1), (o2, f2) = (all_ops[int(rng.integers(3))] for _ in range(2))
+        val = f2(f1(a, b), c) % MOD
+        prompt = ([BOS, TAG_MATH] + _digits(a, 1) + [o1] + _digits(b, 1)
+                  + [o2] + _digits(c, 1) + [EQ])
+    else:
+        a, b = int(rng.integers(0, MOD)), int(rng.integers(0, MOD))
+        o, f = easy_ops[int(rng.integers(2))]
+        val = f(a, b) % MOD
+        prompt = [BOS, TAG_MATH] + _digits(a, 1) + [o] + _digits(b, 1) + [EQ]
+    return _wrap(prompt, _digits(val, 1), seq)
+
+
+def gen_code(rng: np.random.Generator, seq: int, hard: bool = False) -> Example:
+    """Auto-close a random well-prefixed bracket string (stack discipline)."""
+    depth_cap = 6 if hard else 3
+    length = int(rng.integers(4, 12 if hard else 8))
+    pairs = [(OPEN_A, CLOSE_A), (OPEN_B, CLOSE_B)]
+    stack: List[int] = []
+    body: List[int] = []
+    for _ in range(length):
+        if stack and (len(stack) >= depth_cap or rng.random() < 0.35):
+            body.append(stack.pop())
+        else:
+            o, c = pairs[int(rng.integers(2))]
+            body.append(o)
+            stack.append(c)
+    answer = list(reversed(stack)) if stack else [SEP]
+    prompt = [BOS, TAG_CODE] + body + [ANS]
+    return _wrap(prompt, answer, seq)
+
+
+class KnowledgeBase:
+    """Fixed entity->attr->value world, shared by train and eval.
+
+    Values are themselves drawn from the entity token range for half the
+    attributes, enabling the two-hop "_plus" queries (GPQA stand-in).
+    """
+
+    def __init__(self, seed: int = 7):
+        rng = np.random.default_rng(seed)
+        self.table = {}
+        for e in range(N_ENTITY):
+            self.table[e] = {}
+            for a in range(N_ATTR):
+                if a < N_ATTR // 2:
+                    self.table[e][a] = ("value", int(rng.integers(N_VALUE)))
+                else:
+                    self.table[e][a] = ("entity", int(rng.integers(N_ENTITY)))
+
+
+KB = KnowledgeBase()
+
+
+def gen_know(rng: np.random.Generator, seq: int, hard: bool = False) -> Example:
+    e = int(rng.integers(N_ENTITY))
+    if hard:
+        # Two-hop: entity --attr_e--> entity2 --attr_v--> value.
+        a1 = int(rng.integers(N_ATTR // 2, N_ATTR))
+        _, e2 = KB.table[e][a1]
+        a2 = int(rng.integers(N_ATTR // 2))
+        _, v = KB.table[e2][a2]
+        prompt = [BOS, TAG_KNOW, ENTITY0 + e, ATTR0 + a1, ATTR0 + a2, ANS]
+        answer = [VALUE0 + v]
+    else:
+        a = int(rng.integers(N_ATTR // 2))
+        _, v = KB.table[e][a]
+        prompt = [BOS, TAG_KNOW, ENTITY0 + e, ATTR0 + a, ANS]
+        answer = [VALUE0 + v]
+    return _wrap(prompt, answer, seq)
+
+
+def gen_tool(rng: np.random.Generator, seq: int, hard: bool = False) -> Example:
+    """Format a function call: echo the func id and sort its arguments."""
+    f = int(rng.integers(N_FUNC))
+    n_args = int(rng.integers(3, 6)) if hard else int(rng.integers(1, 4))
+    args = rng.choice(N_ARG, size=n_args, replace=False)
+    prompt = [BOS, TAG_TOOL, FUNC0 + f] + [ARG0 + int(a) for a in args] + [ANS]
+    out = [CALL, FUNC0 + f, LPAR]
+    for i, a in enumerate(sorted(int(x) for x in args)):
+        if i:
+            out.append(COMMA)
+        out.append(ARG0 + a)
+    out.append(RPAR)
+    return _wrap(prompt, out, seq)
+
+
+GENERATORS: Dict[str, Callable[..., Example]] = {
+    "math": gen_math,
+    "code": gen_code,
+    "know": gen_know,
+    "tool": gen_tool,
+}
+
+# Eval suites: (task generator, hard flag).  Names mirror the paper's
+# benchmarks (see module docstring).
+EVALS: Dict[str, Tuple[str, bool]] = {
+    "gsm8k": ("math", False),
+    "gsm_plus": ("math", True),
+    "heval": ("code", False),
+    "heval_plus": ("code", True),
+    "gpqa": ("know", True),
+    "know": ("know", False),
+    "bfcl": ("tool", False),
+    "bfcl_plus": ("tool", True),
+}
+
+
+def batch(task: str, rng: np.random.Generator, n: int, seq: int,
+          hard: bool = False):
+    """Generate a batch: (tokens i32[n,seq], mask f32[n,seq], examples)."""
+    exs = [GENERATORS[task](rng, seq, hard) for _ in range(n)]
+    toks = np.stack([e.tokens for e in exs])
+    mask = np.stack([e.mask for e in exs])
+    return toks, mask, exs
+
+
+def mixture_batch(rng: np.random.Generator, n: int, seq: int,
+                  tasks=("math", "code", "know", "tool")):
+    """Mixed-task batch used to pretrain the base model."""
+    exs = [GENERATORS[tasks[int(rng.integers(len(tasks)))]](rng, seq)
+           for _ in range(n)]
+    toks = np.stack([e.tokens for e in exs])
+    mask = np.stack([e.mask for e in exs])
+    return toks, mask, exs

@@ -1,0 +1,365 @@
+"""Accuracy-experiment reproduction: conventional LoRA vs ICaRus.
+
+Reproduces (on the synthetic substitutes of DESIGN.md):
+  * Fig 2 / Fig 7 — training-loss curves of conventional fine-tuning vs
+    ICaRus nearly overlap.
+  * Table 2       — ICaRus accuracy ≈ task-specific fine-tuning across
+    math / coding / knowledge, two model sizes.
+  * Table 3       — scaling across model sizes (math task).
+  * Table 4       — specialist cross-eval matrix: single specialists vs
+    multi-model vs ICaRus.
+  * Table 5       — tool-calling task on the largest training config.
+
+Pipeline: "pretrain" a base model (under-trained on a task mixture — the
+pretrained-LLM stand-in), then fine-tune per-task adapters two ways:
+conventional (LoRA on q,k,v,o,mlp — the logical encoder moves, caches are
+model-specific) and ICaRus (LoRA on q,o,mlp via ``forward_icarus`` — the
+logical encoder stays frozen, caches shared).
+
+Usage:  cd python && python -m compile.train --exp all --out-dir ../experiments
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import tasks as T
+
+
+# --------------------------------------------------------------------------
+# Minimal Adam over a pytree (no optax offline)
+# --------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vh_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (
+            m_ * mh_scale / (jnp.sqrt(v_ * vh_scale) + eps)
+            + weight_decay * p),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Pretraining the base model (the "pretrained LLM" stand-in)
+# --------------------------------------------------------------------------
+
+def pretrain_base(cfg: M.ModelConfig, steps: int, batch_size: int, seq: int,
+                  seed: int = 0, lr: float = 3e-3):
+    """Under-train the base on the task mixture: competent at the formats,
+    weak at the answers — like a pretrained LLM before task fine-tuning."""
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    zl = M.zero_lora(cfg)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+
+    def loss_fn(p, toks, mask):
+        logits = M.forward_conventional(cfg, p, zl, toks)
+        return M.cross_entropy(logits[:, :-1], toks[:, 1:], mask[:, 1:])
+
+    step = jax.jit(lambda p, o, toks, mask: _step(loss_fn, p, o, toks, mask, lr))
+    losses = []
+    for i in range(steps):
+        toks, mask, _ = T.mixture_batch(rng, batch_size, seq)
+        params, opt, loss = step(params, opt, jnp.asarray(toks),
+                                 jnp.asarray(mask))
+        losses.append(float(loss))
+    return params, losses
+
+
+def _step(loss_fn, params, opt, toks, mask, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, toks, mask)
+    params, opt = adam_update(grads, opt, params, lr)
+    return params, opt, loss
+
+
+# --------------------------------------------------------------------------
+# LoRA fine-tuning (both methods)
+# --------------------------------------------------------------------------
+
+def finetune(cfg: M.ModelConfig, params: M.Params, task: str, method: str,
+             steps: int, batch_size: int, seq: int, seed: int = 0,
+             lr: float = 1e-3):
+    """Fine-tune one task adapter.  method in {conventional, icarus}.
+
+    Returns (lora, loss_curve).  Only LoRA params receive gradients; in
+    ICaRus mode the k/v adapters additionally stay zero (frozen logical
+    encoder) and the forward is ``forward_icarus``.
+    """
+    targets = M.LORA_TARGETS if method == "conventional" else M.ICARUS_TARGETS
+    lora = M.init_lora(cfg, jax.random.PRNGKey(seed + 100), targets=targets)
+    fwd = (M.forward_conventional if method == "conventional"
+           else M.forward_icarus)
+    opt = adam_init(lora)
+    rng = np.random.default_rng(seed + 2)
+    # Mask of trainable leaves: zero out grads for non-target adapters so
+    # e.g. ICaRus never updates k/v (the logical encoder stays frozen).
+    train_mask = [
+        {t: (jnp.float32(t in targets), jnp.float32(t in targets))
+         for t in M.LORA_TARGETS}
+        for _ in range(cfg.layers)
+    ]
+
+    def loss_fn(lo, toks, mask):
+        logits = fwd(cfg, params, lo, toks)
+        return M.cross_entropy(logits[:, :-1], toks[:, 1:], mask[:, 1:])
+
+    @jax.jit
+    def step(lo, o, toks, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(lo, toks, mask)
+        grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, train_mask)
+        lo, o = adam_update(grads, o, lo, lr)
+        return lo, o, loss
+
+    losses = []
+    for i in range(steps):
+        toks, mask, _ = T.batch(task, rng, batch_size, seq)
+        lora, opt, loss = step(lora, opt, jnp.asarray(toks),
+                               jnp.asarray(mask))
+        losses.append(float(loss))
+    return lora, losses
+
+
+# --------------------------------------------------------------------------
+# Greedy free-running evaluation (exact-match accuracy)
+# --------------------------------------------------------------------------
+
+def evaluate(cfg: M.ModelConfig, params: M.Params, lora: M.Lora,
+             method: str, eval_name: str, n: int, seq: int,
+             seed: int = 1234) -> float:
+    """Free-running greedy decode; exact match of the full answer span."""
+    task, hard = T.EVALS[eval_name]
+    rng = np.random.default_rng(seed)
+    toks, _, exs = T.batch(task, rng, n, seq, hard)
+    fwd = (M.forward_icarus if method == "icarus"
+           else M.forward_conventional)
+    fwd_j = jax.jit(lambda tk: fwd(cfg, params, lora, tk))
+
+    # Teacher-forced prompt, then generate autoregressively (batched).
+    cur = np.array(toks)
+    max_ans = max(len(e.answer) for e in exs)
+    starts = np.array([e.prompt_len for e in exs])
+    for step_i in range(max_ans):
+        logits = np.asarray(fwd_j(jnp.asarray(cur)))
+        pos = starts + step_i  # position being generated
+        prev = pos - 1
+        nxt = logits[np.arange(n), prev].argmax(-1)
+        write = pos < seq
+        cur[np.arange(n)[write], pos[write]] = nxt[write]
+    correct = 0
+    for i, e in enumerate(exs):
+        span = cur[i, e.prompt_len: e.prompt_len + len(e.answer)]
+        if list(span) == e.answer:
+            correct += 1
+    return 100.0 * correct / n
+
+
+# --------------------------------------------------------------------------
+# Experiment drivers
+# --------------------------------------------------------------------------
+
+def run_all(out_dir: str, exps: List[str], steps: int, pre_steps: int,
+            batch_size: int, eval_n: int, seq: int, seed: int) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    results: Dict = {"meta": {
+        "steps": steps, "pretrain_steps": pre_steps, "batch": batch_size,
+        "eval_n": eval_n, "seq": seq, "seed": seed,
+    }}
+    bases: Dict[str, M.Params] = {}
+
+    def base_for(cfg):
+        if cfg.name not in bases:
+            t0 = time.time()
+            bases[cfg.name], _ = pretrain_base(
+                cfg, pre_steps, batch_size, seq, seed)
+            print(f"[pretrain {cfg.name}] {time.time()-t0:.1f}s")
+        return bases[cfg.name]
+
+    main_evals = ("gsm8k", "gsm_plus", "heval", "heval_plus", "gpqa")
+
+    if "fig2" in exps:
+        cfg = M.TRAIN_BASE
+        params = base_for(cfg)
+        curves = {}
+        for task in ("math", "code"):
+            for method in ("conventional", "icarus"):
+                _, losses = finetune(cfg, params, task, method, steps,
+                                     batch_size, seq, seed)
+                curves[f"{task}/{method}"] = losses
+                print(f"[fig2 {task}/{method}] final loss {losses[-1]:.4f}")
+        results["fig2"] = curves
+
+    if "table2" in exps or "table4" in exps:
+        # Train 3 specialists twice (conventional + icarus) on 2 sizes.
+        t24 = {}
+        for cfg in (M.TRAIN_SMALL, M.TRAIN_BASE):
+            params = base_for(cfg)
+            entry = {"base": {}, "specialists": {}}
+            for ev in main_evals:
+                entry["base"][ev] = evaluate(
+                    cfg, params, M.zero_lora(cfg), "conventional", ev,
+                    eval_n, seq)
+            for task in ("math", "code", "know"):
+                for method in ("conventional", "icarus"):
+                    lora, _ = finetune(cfg, params, task, method, steps,
+                                       batch_size, seq, seed)
+                    accs = {ev: evaluate(cfg, params, lora, method, ev,
+                                         eval_n, seq)
+                            for ev in main_evals}
+                    entry["specialists"][f"{task}/{method}"] = accs
+                    print(f"[table2 {cfg.name} {task}/{method}] {accs}")
+            t24[cfg.name] = entry
+        results["table2_4"] = t24
+
+    if "table3" in exps:
+        t3 = {}
+        for cfg in (M.TRAIN_TINY, M.TRAIN_SMALL, M.TRAIN_BASE):
+            params = base_for(cfg)
+            row = {}
+            for method in ("conventional", "icarus"):
+                lora, _ = finetune(cfg, params, "math", method, steps,
+                                   batch_size, seq, seed)
+                row[method] = {
+                    "gsm8k": evaluate(cfg, params, lora, method, "gsm8k",
+                                      eval_n, seq),
+                    "gsm_plus": evaluate(cfg, params, lora, method,
+                                         "gsm_plus", eval_n, seq),
+                }
+            t3[cfg.name] = row
+            print(f"[table3 {cfg.name}] {row}")
+        results["table3"] = t3
+
+    if "table5" in exps:
+        cfg = M.TRAIN_BASE
+        params = base_for(cfg)
+        t5 = {"curves": {}}
+        for method in ("conventional", "icarus"):
+            lora, losses = finetune(cfg, params, "tool", method, steps,
+                                    batch_size, seq, seed)
+            t5["curves"][method] = losses
+            t5[method] = {
+                "bfcl": evaluate(cfg, params, lora, method, "bfcl",
+                                 eval_n, seq),
+                "bfcl_plus": evaluate(cfg, params, lora, method,
+                                      "bfcl_plus", eval_n, seq),
+            }
+            print(f"[table5 {method}] {t5[method]}")
+        results["table5_fig7"] = t5
+
+    path = os.path.join(out_dir, "accuracy_results.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {path}")
+    _write_markdown(results, os.path.join(out_dir, "accuracy_results.md"))
+    return results
+
+
+def export_adapter(cfg, lora, path: str) -> None:
+    """Save a trained adapter as npz in the artifact naming convention
+    (layers.i.target.{A,B}) so the Rust runtime can serve it directly
+    (`PjrtExecutor` consumes the same key layout as `make_adapter`)."""
+    arrays = {}
+    for i, layer in enumerate(lora):
+        for t, (a, b) in layer.items():
+            arrays[f"layers.{i}.{t}.A"] = np.asarray(a)
+            arrays[f"layers.{i}.{t}.B"] = np.asarray(b)
+    np.savez(path, **arrays)
+    print(f"wrote {path}")
+
+
+def _write_markdown(results: Dict, path: str) -> None:
+    lines = ["# Accuracy experiments (paper Tables 2-5, Figs 2/7)\n"]
+    if "fig2" in results:
+        lines.append("## Fig 2 — final training losses\n")
+        for k, v in results["fig2"].items():
+            lines.append(f"- {k}: first {v[0]:.4f} -> final {v[-1]:.4f}")
+        lines.append("")
+    if "table2_4" in results:
+        for cfgname, entry in results["table2_4"].items():
+            lines.append(f"## Table 2/4 — {cfgname}\n")
+            evs = list(entry["base"].keys())
+            lines.append("| model | " + " | ".join(evs) + " |")
+            lines.append("|---|" + "---|" * len(evs))
+            lines.append("| base | " + " | ".join(
+                f"{entry['base'][e]:.1f}" for e in evs) + " |")
+            for name, accs in entry["specialists"].items():
+                lines.append(f"| {name} | " + " | ".join(
+                    f"{accs[e]:.1f}" for e in evs) + " |")
+            # Multi-model rows: route each eval to its home specialist.
+            home = {"gsm8k": "math", "gsm_plus": "math", "heval": "code",
+                    "heval_plus": "code", "gpqa": "know"}
+            for method in ("conventional", "icarus"):
+                row = [entry["specialists"][f"{home[e]}/{method}"][e]
+                       for e in evs]
+                label = ("multi-model" if method == "conventional"
+                         else "ICaRus")
+                lines.append(f"| {label} (routed) | " + " | ".join(
+                    f"{v:.1f}" for v in row) + " |")
+            lines.append("")
+    if "table3" in results:
+        lines.append("## Table 3 — model-size scaling (math)\n")
+        lines.append("| config | conv gsm8k | icarus gsm8k | conv gsm+ | icarus gsm+ |")
+        lines.append("|---|---|---|---|---|")
+        for cfgname, row in results["table3"].items():
+            lines.append(
+                f"| {cfgname} | {row['conventional']['gsm8k']:.1f} | "
+                f"{row['icarus']['gsm8k']:.1f} | "
+                f"{row['conventional']['gsm_plus']:.1f} | "
+                f"{row['icarus']['gsm_plus']:.1f} |")
+        lines.append("")
+    if "table5_fig7" in results:
+        t5 = results["table5_fig7"]
+        lines.append("## Table 5 / Fig 7 — tool calling\n")
+        for method in ("conventional", "icarus"):
+            if method in t5:
+                lines.append(
+                    f"- {method}: bfcl {t5[method]['bfcl']:.1f}, "
+                    f"bfcl_plus {t5[method]['bfcl_plus']:.1f}")
+        lines.append("")
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--exp", default="all",
+                    help="all | fig2,table2,table3,table5 (comma list)")
+    ap.add_argument("--out-dir", default="../experiments")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--pretrain-steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--eval-n", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    exps = (["fig2", "table2", "table3", "table4", "table5"]
+            if args.exp == "all" else args.exp.split(","))
+    run_all(args.out_dir, exps, args.steps, args.pretrain_steps, args.batch,
+            args.eval_n, args.seq, args.seed)
+
+
+if __name__ == "__main__":
+    main()

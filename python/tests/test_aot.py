@@ -1,0 +1,92 @@
+"""AOT pipeline tests: flatten/unflatten contracts and HLO text emission."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest  # noqa: F401
+
+from compile import aot
+from compile import model as M
+
+
+CFG = M.TRAIN_TINY  # small config so lowering is fast
+
+
+class TestFlattening:
+    def test_params_roundtrip(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(0))
+        flat = aot.flatten_params(CFG, params)
+        assert len(flat) == len(aot.param_names(CFG))
+        back = aot.unflatten_params(CFG, flat)
+        for (a, b) in zip(jax.tree_util.tree_leaves(params),
+                          jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_lora_roundtrip(self):
+        lora = M.init_lora(CFG, jax.random.PRNGKey(1))
+        flat = aot.flatten_lora(CFG, lora)
+        assert len(flat) == len(aot.lora_names(CFG))
+        back = aot.unflatten_lora(CFG, flat)
+        for (a, b) in zip(jax.tree_util.tree_leaves(lora),
+                          jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_param_names_unique_and_stable(self):
+        names = aot.param_names(CFG)
+        assert len(names) == len(set(names))
+        assert names[0] == "embed" and names[-1] == "lm_head"
+
+    def test_icarus_lora_subset_roundtrip(self):
+        """The icarus decode artifact takes only q/o/mlp adapters; k/v
+        are reconstructed as zeros (the frozen logical encoder)."""
+        lora = M.init_lora(CFG, jax.random.PRNGKey(1))
+        flat = aot.flatten_lora(CFG, lora, M.ICARUS_TARGETS)
+        names = aot.lora_names(CFG, M.ICARUS_TARGETS)
+        assert len(flat) == len(names)
+        assert not any(".k." in n or ".v." in n for n in names)
+        back = aot.unflatten_lora(CFG, flat, M.ICARUS_TARGETS)
+        for layer_in, layer_out in zip(lora, back):
+            for t in M.ICARUS_TARGETS:
+                np.testing.assert_array_equal(
+                    np.asarray(layer_in[t][0]), np.asarray(layer_out[t][0]))
+            for t in ("k", "v"):
+                assert float(jnp.abs(layer_out[t][0]).max()) == 0.0
+                assert float(jnp.abs(layer_out[t][1]).max()) == 0.0
+
+
+class TestLowering:
+    def test_decode_lowers_to_hlo_text(self, tmp_path):
+        fn = aot._decode_fn(CFG, "icarus", use_kernels=False)
+        lowered = jax.jit(fn).lower(
+            *aot._example_args(CFG, "decode", targets=M.ICARUS_TARGETS))
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "f32" in text
+        # text round-trips through a file (what rust reads)
+        p = tmp_path / "decode.hlo.txt"
+        p.write_text(text)
+        assert p.stat().st_size > 1000
+
+    def test_prefill_pads_cache_to_max_seq(self):
+        fn = aot._prefill_fn(CFG, 32, use_kernels=False)
+        params = M.init_params(CFG, jax.random.PRNGKey(0))
+        flat = aot.flatten_params(CFG, params)
+        lflat = aot.flatten_lora(CFG, M.zero_lora(CFG))
+        tokens = jnp.zeros((32,), jnp.int32)
+        kc, vc, logits = fn(tokens, jnp.int32(5), *flat, *lflat)
+        assert kc.shape == (CFG.layers, CFG.max_seq, CFG.kv_heads,
+                            CFG.head_dim)
+        assert logits.shape == (CFG.vocab,)
+        # padding region is zero
+        assert float(jnp.abs(kc[:, 32:]).max()) == 0.0
+
+    def test_build_writes_manifest(self, tmp_path):
+        manifest = aot.build(str(tmp_path), kernels="ref", configs=(CFG,),
+                             buckets=(32,))
+        m = json.loads((tmp_path / "manifest.json").read_text())
+        assert m["configs"][CFG.name]["decode_icarus"]
+        assert os.path.exists(tmp_path / m["configs"][CFG.name]["weights"])
+        assert m["configs"][CFG.name]["kv_bytes_per_token"] == \
+            CFG.kv_bytes_per_token()

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; every kernel must match ``ref.py`` to float32
+tolerance across GQA group factors, sequence lengths and block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.icarus_linear import icarus_linear
+from compile.kernels.icarus_attention import paired_decode_attention
+from compile.kernels.prefill_attention import prefill_attention
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+class TestIcarusLinear:
+    @settings(**SETTINGS)
+    @given(
+        t=st.sampled_from([1, 2, 5]),
+        d_in=st.sampled_from([16, 64, 96]),
+        d_out=st.sampled_from([32, 128, 176]),
+        r=st.sampled_from([4, 8]),
+        block_n=st.sampled_from([32, 128]),
+    )
+    def test_matches_ref(self, t, d_in, d_out, r, block_n):
+        x = rand(0, (2, t, d_in))
+        w = rand(1, (d_in, d_out))
+        a = rand(2, (d_in, r))
+        b = rand(3, (r, d_out), 0.3)
+        got = icarus_linear(x, w, a, b, 2.0, block_n=block_n)
+        want = ref.icarus_linear_ref(x, w, a, b, 2.0)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_encoder_stream_ignores_adapter(self):
+        """Stream 0 must be pure base — the frozen logical encoder."""
+        x = rand(0, (2, 1, 32))
+        w = rand(1, (32, 64))
+        a, b = rand(2, (32, 8)), rand(3, (8, 64))
+        got = icarus_linear(x, w, a, b, 2.0)
+        np.testing.assert_allclose(got[0], x[0] @ w, rtol=1e-5, atol=1e-5)
+
+    def test_zero_adapter_is_base(self):
+        x = rand(0, (2, 3, 32))
+        w = rand(1, (32, 64))
+        a = jnp.zeros((32, 8))
+        b = jnp.zeros((8, 64))
+        got = icarus_linear(x, w, a, b, 2.0)
+        want = jnp.einsum("btd,df->btf", x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestPairedDecodeAttention:
+    @settings(**SETTINGS)
+    @given(
+        h=st.sampled_from([4, 8]),
+        group=st.sampled_from([1, 2, 4]),
+        dh=st.sampled_from([8, 16]),
+        s=st.sampled_from([64, 128, 256]),
+        posfrac=st.floats(0.0, 1.0),
+        block_s=st.sampled_from([32, 64, 128]),
+    )
+    def test_matches_ref(self, h, group, dh, s, posfrac, block_s):
+        kv = max(1, h // group)
+        h = kv * group
+        pos = jnp.int32(int(posfrac * (s - 1)))
+        q = rand(0, (2, h, dh))
+        k = rand(1, (s, kv, dh))
+        v = rand(2, (s, kv, dh))
+        got = paired_decode_attention(q, k, v, pos, kv, block_s=block_s)
+        want = ref.paired_decode_attention_ref(q, k, v, pos, kv)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_masks_future_positions(self):
+        """Entries beyond pos must not leak into the output."""
+        q = rand(0, (2, 4, 8))
+        k = rand(1, (64, 2, 8))
+        v = rand(2, (64, 2, 8))
+        pos = jnp.int32(10)
+        base = paired_decode_attention(q, k, v, pos, 2)
+        k2 = k.at[11:].set(999.0)
+        v2 = v.at[11:].set(-999.0)
+        got = paired_decode_attention(q, k2, v2, pos, 2)
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+    def test_streams_share_cache_read(self):
+        """Equal queries in both streams -> identical outputs (one KV)."""
+        qs = rand(0, (1, 4, 8))
+        q = jnp.concatenate([qs, qs], axis=0)
+        k = rand(1, (32, 2, 8))
+        v = rand(2, (32, 2, 8))
+        got = paired_decode_attention(q, k, v, jnp.int32(20), 2)
+        np.testing.assert_allclose(got[0], got[1], rtol=1e-6, atol=1e-6)
+
+
+class TestPrefillAttention:
+    @settings(**SETTINGS)
+    @given(
+        s=st.sampled_from([32, 64, 128]),
+        group=st.sampled_from([1, 2]),
+        kv=st.sampled_from([2, 4]),
+        dh=st.sampled_from([8, 16]),
+        lenfrac=st.floats(0.1, 1.0),
+        block=st.sampled_from([16, 32, 64]),
+    )
+    def test_matches_ref(self, s, group, kv, dh, lenfrac, block):
+        h = kv * group
+        true_len = jnp.int32(max(1, int(lenfrac * s)))
+        q = rand(0, (s, h, dh))
+        k = rand(1, (s, kv, dh))
+        v = rand(2, (s, kv, dh))
+        got = prefill_attention(q, k, v, true_len, kv, block_q=block,
+                                block_k=block)
+        want = ref.prefill_attention_ref(q, k, v, true_len, kv)
+        tl = int(true_len)
+        np.testing.assert_allclose(got[:tl], want[:tl], rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Position i must not see keys at j > i."""
+        s, kv, dh = 32, 2, 8
+        q = rand(0, (s, 4, dh))
+        k = rand(1, (s, kv, dh))
+        v = rand(2, (s, kv, dh))
+        base = prefill_attention(q, k, v, jnp.int32(s), kv)
+        k2 = k.at[17:].add(rand(5, (s - 17, kv, dh)))
+        got = prefill_attention(q, k2, v, jnp.int32(s), kv)
+        np.testing.assert_allclose(got[:17], base[:17], rtol=1e-5, atol=1e-5)

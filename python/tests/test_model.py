@@ -1,0 +1,189 @@
+"""L2 model invariants — the properties that make ICaRus work.
+
+The critical ones:
+  * cache identity — the KV cache produced by ICaRus decode is the *base
+    model's* cache, independent of which adapter is loaded (this is the
+    entire paper);
+  * baseline divergence — a conventional adapter produces a different
+    cache (why baseline multi-model serving can't share);
+  * prefill/decode consistency with the full training forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.TRAIN_TINY
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    lora = M.init_lora(CFG, jax.random.PRNGKey(1))
+    # Give B factors real values so adapters actually do something.
+    lora = [
+        {t: (ab[0], jax.random.normal(jax.random.PRNGKey(i * 7 + j),
+                                      ab[1].shape) * 0.05)
+         for j, (t, ab) in enumerate(layer.items())}
+        for i, layer in enumerate(lora)
+    ]
+    ilora = [
+        {t: (ab if t in M.ICARUS_TARGETS
+             else (jnp.zeros_like(ab[0]), jnp.zeros_like(ab[1])))
+         for t, ab in layer.items()}
+        for layer in lora
+    ]
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (16,), 0, CFG.vocab)
+    return params, lora, ilora, tokens
+
+
+def _pad_cache(kc, vc, max_s=32):
+    shape = (CFG.layers, max_s, CFG.kv_heads, CFG.head_dim)
+    return (jnp.zeros(shape).at[:, : kc.shape[1]].set(kc),
+            jnp.zeros(shape).at[:, : vc.shape[1]].set(vc))
+
+
+class TestCacheIdentity:
+    def test_icarus_cache_is_base_cache(self, setup):
+        """Two different ICaRus adapters write byte-identical cache."""
+        params, lora, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc, vc, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        ilora2 = [
+            {t: (a * 2.0, b * -1.5) for t, (a, b) in layer.items()}
+            for layer in ilora
+        ]
+        _, k1, v1 = M.decode_icarus(CFG, params, ilora, tokens[10],
+                                    jnp.int32(10), kcp, vcp,
+                                    use_kernels=False)
+        _, k2, v2 = M.decode_icarus(CFG, params, ilora2, tokens[10],
+                                    jnp.int32(10), kcp, vcp,
+                                    use_kernels=False)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+    def test_icarus_cache_matches_base_decode(self, setup):
+        """ICaRus's written cache entry == pure base model's entry."""
+        params, lora, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc, vc, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        _, kb, vb = M.decode_baseline(CFG, params, zl, tokens[10],
+                                      jnp.int32(10), kcp, vcp)
+        _, ki, vi = M.decode_icarus(CFG, params, ilora, tokens[10],
+                                    jnp.int32(10), kcp, vcp,
+                                    use_kernels=False)
+        np.testing.assert_allclose(np.asarray(ki[:, 10]),
+                                   np.asarray(kb[:, 10]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_baseline_cache_is_model_specific(self, setup):
+        """A conventional adapter perturbs the cache — no sharing."""
+        params, lora, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc, vc, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        _, kb, _ = M.decode_baseline(CFG, params, zl, tokens[10],
+                                     jnp.int32(10), kcp, vcp)
+        _, kl, _ = M.decode_baseline(CFG, params, lora, tokens[10],
+                                     jnp.int32(10), kcp, vcp)
+        assert float(jnp.abs(kl[:, 10] - kb[:, 10]).max()) > 1e-4
+
+    def test_prefill_cache_model_specific_with_adapter(self, setup):
+        params, lora, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc0, _, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kc1, _, _ = M.prefill(CFG, params, lora, tokens, jnp.int32(10))
+        assert float(jnp.abs(kc1 - kc0).max()) > 1e-4
+
+
+class TestConsistency:
+    def test_prefill_logits_match_forward(self, setup):
+        params, _, _, tokens = setup
+        zl = M.zero_lora(CFG)
+        _, _, logits = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        full = M.forward_base(CFG, params, tokens[None])[0]
+        np.testing.assert_allclose(logits, full[9], rtol=1e-4, atol=1e-4)
+
+    def test_decode_baseline_matches_forward(self, setup):
+        params, lora, _, tokens = setup
+        kc, vc, _ = M.prefill(CFG, params, lora, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        lg, _, _ = M.decode_baseline(CFG, params, lora, tokens[10],
+                                     jnp.int32(10), kcp, vcp)
+        full = M.forward_conventional(CFG, params, lora, tokens[None])[0]
+        np.testing.assert_allclose(lg, full[10], rtol=1e-3, atol=1e-3)
+
+    def test_decode_icarus_matches_forward_icarus(self, setup):
+        params, _, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc, vc, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        lg, _, _ = M.decode_icarus(CFG, params, ilora, tokens[10],
+                                   jnp.int32(10), kcp, vcp,
+                                   use_kernels=False)
+        full = M.forward_icarus(CFG, params, ilora, tokens[None])[0]
+        np.testing.assert_allclose(lg, full[10], rtol=1e-3, atol=1e-3)
+
+    def test_kernel_path_matches_ref_path(self, setup):
+        params, _, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc, vc, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        lr_, kr, vr = M.decode_icarus(CFG, params, ilora, tokens[10],
+                                      jnp.int32(10), kcp, vcp,
+                                      use_kernels=False)
+        lk, kk, vk = M.decode_icarus(CFG, params, ilora, tokens[10],
+                                     jnp.int32(10), kcp, vcp,
+                                     use_kernels=True)
+        np.testing.assert_allclose(lk, lr_, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(kk), np.asarray(kr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_kernel_prefill_matches_ref(self, setup):
+        params, _, _, tokens = setup
+        zl = M.zero_lora(CFG)
+        kr, vr, lr_ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kk, vk, lk = M.prefill(CFG, params, zl, tokens, jnp.int32(10),
+                               use_kernels=True)
+        np.testing.assert_allclose(lk, lr_, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(kk), np.asarray(kr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_multi_step_decode_chain(self, setup):
+        """Three chained ICaRus decode steps == teacher-forced forward."""
+        params, _, ilora, tokens = setup
+        zl = M.zero_lora(CFG)
+        kc, vc, _ = M.prefill(CFG, params, zl, tokens, jnp.int32(10))
+        kcp, vcp = _pad_cache(kc, vc)
+        full = M.forward_icarus(CFG, params, ilora, tokens[None])[0]
+        for pos in (10, 11, 12):
+            lg, kcp, vcp = M.decode_icarus(
+                CFG, params, ilora, tokens[pos], jnp.int32(pos), kcp, vcp,
+                use_kernels=False)
+            np.testing.assert_allclose(lg, full[pos], rtol=1e-3, atol=2e-3)
+
+
+class TestRope:
+    def test_rope_is_rotation(self):
+        """RoPE preserves norms."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 16))
+        y = M.rope(x, jnp.arange(5), 10000.0)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+            rtol=1e-5, atol=1e-5)
+
+    def test_rope_relative_position(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 16))
+        def dot(i, j):
+            qi = M.rope(q, jnp.array([i]), 10000.0)
+            kj = M.rope(k, jnp.array([j]), 10000.0)
+            return float(jnp.sum(qi * kj))
+        assert abs(dot(3, 1) - dot(7, 5)) < 1e-4
+        assert abs(dot(3, 1) - dot(4, 1)) > 1e-6

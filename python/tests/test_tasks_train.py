@@ -1,0 +1,123 @@
+"""Task-suite and training-stack tests (accuracy-experiment substrate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import tasks as T
+from compile import train as TR
+
+
+class TestTasks:
+    @settings(max_examples=20, deadline=None)
+    @given(task=st.sampled_from(list(T.GENERATORS)), seed=st.integers(0, 999),
+           hard=st.booleans())
+    def test_examples_well_formed(self, task, seed, hard):
+        rng = np.random.default_rng(seed)
+        ex = T.GENERATORS[task](rng, 48, hard)
+        assert ex.tokens.shape == (48,)
+        assert ex.mask.shape == (48,)
+        # answer span is exactly the masked span
+        assert ex.mask[ex.prompt_len] == 1.0
+        assert ex.mask[: ex.prompt_len].sum() == 0
+        n_ans = int(ex.mask.sum())
+        assert n_ans == len(ex.answer)
+        assert ex.tokens[ex.prompt_len + n_ans - 1] == T.EOS
+        # all tokens in vocab
+        assert ex.tokens.max() < 256 and ex.tokens.min() >= 0
+
+    def test_math_is_deterministic_mod(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            ex = T.gen_math(rng, 48)
+            a = ex.tokens[2] - T.DIGIT0
+            op = ex.tokens[3]
+            b = ex.tokens[4] - T.DIGIT0
+            val = (a + b) % T.MOD if op == T.OP_ADD else (a - b) % T.MOD
+            assert ex.answer[0] == T.DIGIT0 + val
+
+    def test_code_answer_closes_brackets(self):
+        rng = np.random.default_rng(1)
+        match = {T.OPEN_A: T.CLOSE_A, T.OPEN_B: T.CLOSE_B}
+        for _ in range(50):
+            ex = T.gen_code(rng, 48)
+            body = list(ex.tokens[2: ex.prompt_len - 1])
+            stack = []
+            for t in body:
+                if t in match:
+                    stack.append(match[t])
+                else:
+                    assert stack.pop() == t
+            want = list(reversed(stack)) if stack else [T.SEP]
+            assert ex.answer[:-1] == want  # strip EOS
+
+    def test_know_two_hop_consistent_with_kb(self):
+        rng = np.random.default_rng(2)
+        for _ in range(50):
+            ex = T.gen_know(rng, 48, hard=True)
+            e = ex.tokens[2] - T.ENTITY0
+            a1 = ex.tokens[3] - T.ATTR0
+            a2 = ex.tokens[4] - T.ATTR0
+            _, e2 = T.KB.table[e][a1]
+            _, v = T.KB.table[e2][a2]
+            assert ex.answer[0] == T.VALUE0 + v
+
+    def test_tool_args_sorted(self):
+        rng = np.random.default_rng(3)
+        for _ in range(50):
+            ex = T.gen_tool(rng, 48)
+            args = [t for t in ex.answer if t >= T.ARG0]
+            assert args == sorted(args)
+
+    def test_batch_shapes(self):
+        rng = np.random.default_rng(0)
+        toks, mask, exs = T.batch("math", rng, 8, 48)
+        assert toks.shape == (8, 48) and mask.shape == (8, 48)
+        assert len(exs) == 8
+
+
+class TestTraining:
+    def test_adam_decreases_quadratic(self):
+        params = {"x": jnp.array([5.0, -3.0])}
+        opt = TR.adam_init(params)
+        for _ in range(200):
+            grads = {"x": 2 * params["x"]}
+            params, opt = TR.adam_update(grads, opt, params, 0.1,
+                                         weight_decay=0.0)
+        assert float(jnp.abs(params["x"]).max()) < 0.1
+
+    def test_icarus_finetune_never_touches_kv_adapters(self):
+        cfg = M.TRAIN_TINY
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        lora, _ = TR.finetune(cfg, params, "math", "icarus", 5, 8, 48)
+        for layer in lora:
+            for t in ("k", "v"):
+                a, b = layer[t]
+                assert float(jnp.abs(a).max()) == 0.0
+                assert float(jnp.abs(b).max()) == 0.0
+
+    def test_conventional_finetune_moves_kv_adapters(self):
+        cfg = M.TRAIN_TINY
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        lora, _ = TR.finetune(cfg, params, "math", "conventional", 5, 8, 48)
+        moved = any(float(jnp.abs(layer[t][1]).max()) > 0
+                    for layer in lora for t in ("k", "v"))
+        assert moved
+
+    def test_losses_decrease(self):
+        cfg = M.TRAIN_TINY
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        for method in ("conventional", "icarus"):
+            _, losses = TR.finetune(cfg, params, "know", method, 40, 16, 32,
+                                    lr=5e-3)
+            assert losses[-1] < losses[0]
+
+    def test_evaluate_range(self):
+        cfg = M.TRAIN_TINY
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        acc = TR.evaluate(cfg, params, M.zero_lora(cfg), "conventional",
+                          "gsm8k", 20, 48)
+        assert 0.0 <= acc <= 100.0

@@ -1,0 +1,81 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   1. prefix caching off — isolates how much of ICaRus's win is the
+//!      cross-model *prefix reuse* vs just smaller footprint;
+//!   2. sequential vs parallel logical encoder+decoder — the paper §3.3
+//!      claim that paired execution removes the naive 2x decode cost
+//!      (icarus_decode_factor 2.0 vs 1.05);
+//!   3. KV block size sweep — allocator granularity vs hit rate.
+//!
+//! Run: cargo bench --bench ablation
+
+use icarus::bench_util::{header, print_row, write_results, Point, Row, KV_BPT_SMALL};
+use icarus::config::{ServingConfig, ServingMode, WorkloadConfig};
+use icarus::engine::executor::{CostModel, SimExecutor};
+use icarus::engine::Engine;
+use icarus::json;
+use icarus::workload::generate;
+
+fn main() {
+    let mut rows = Vec::new();
+
+    println!("== Ablation 1: prefix caching on/off (icarus, N=4, qps 0.6) ==\n");
+    header();
+    for prefix_caching in [true, false] {
+        let p = Point {
+            mode: ServingMode::Icarus,
+            n_models: 4,
+            qps: 0.6,
+            prefix_caching,
+            kv_pool_bytes: 24 << 20,
+            kv_bytes_per_token: KV_BPT_SMALL,
+            ..Default::default()
+        };
+        let s = p.run();
+        let mut r = Row::from_stats(&p, &s);
+        r.label = format!("prefix={}", if prefix_caching { "on" } else { "off" });
+        print_row(&r);
+        rows.push(r);
+    }
+
+    println!("\n== Ablation 2: paired vs sequential decode (paper §3.3) ==\n");
+    header();
+    for (label, factor) in [("paired(1.05x)", 1.05), ("sequential(2.0x)", 2.0)] {
+        let mut cost = CostModel::default();
+        cost.icarus_decode_factor = factor;
+        let p = Point {
+            mode: ServingMode::Icarus,
+            n_models: 4,
+            qps: 0.6,
+            cost,
+            kv_pool_bytes: 24 << 20,
+            ..Default::default()
+        };
+        let s = p.run();
+        let mut r = Row::from_stats(&p, &s);
+        r.label = label.to_string();
+        print_row(&r);
+        rows.push(r);
+    }
+
+    println!("\n== Ablation 3: KV block size (icarus, N=4, qps 0.6) ==\n");
+    header();
+    for block_tokens in [4usize, 16, 64] {
+        let scfg = ServingConfig {
+            mode: ServingMode::Icarus,
+            kv_pool_bytes: 24 << 20,
+            block_tokens,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig { n_models: 4, qps: 0.6, n_requests: 128, ..Default::default() };
+        let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+        let s = Engine::new(scfg, KV_BPT_SMALL, 4, exec).run(generate(&wcfg));
+        let p = Point { mode: ServingMode::Icarus, n_models: 4, qps: 0.6, ..Default::default() };
+        let mut r = Row::from_stats(&p, &s);
+        r.label = format!("block={block_tokens}");
+        print_row(&r);
+        rows.push(r);
+    }
+
+    write_results("ablation", &rows, vec![("bench_kind", json::s("ablation"))]);
+}

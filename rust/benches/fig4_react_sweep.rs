@@ -1,0 +1,57 @@
+//! Fig 4 reproduction: P95 latency and throughput vs QPS under ReAct,
+//! N ∈ {2, 4, 8} LoRA models, baseline vs ICaRus (LLaMA-3.1-8B stand-in,
+//! round-robin routing, recompute eviction).
+//!
+//! Paper result (shape to reproduce): baseline P95 explodes and
+//! throughput plateaus/declines once the N-times-duplicated KV caches
+//! saturate GPU memory — earlier for larger N; ICaRus keeps scaling.
+//! Max-throughput gains: 1.4x/2.3x/3.8x; P95 gains at baseline's peak:
+//! 3.8x/5.1x/11.1x for N=2/4/8.
+//!
+//! Run: cargo bench --bench fig4_react_sweep
+
+use icarus::bench_util::{summarize_pairs, sweep, write_results, Point, KV_BPT_SMALL};
+use icarus::config::ServingMode;
+use icarus::json;
+
+fn main() {
+    let qps_list = [0.2, 0.4, 0.8, 1.5, 3.0];
+    let n_list = [2usize, 4, 8];
+    let mut points = Vec::new();
+    for &n in &n_list {
+        for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+            for &qps in &qps_list {
+                points.push(Point {
+                    mode,
+                    n_models: n,
+                    qps,
+                    kv_pool_bytes: 24 << 20,
+                    kv_bytes_per_token: KV_BPT_SMALL,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    println!("== Fig 4: ReAct, LLaMA-8B stand-in (serve-small), pool 24 MB ==\n");
+    let rows = sweep(&points);
+    summarize_pairs(&rows);
+
+    // Paper-style max-throughput comparison per N.
+    println!("\n--- max throughput per (mode, N) ---");
+    for &n in &n_list {
+        let best = |mode: ServingMode| {
+            rows.iter()
+                .filter(|r| r.mode == mode && r.n_models == n)
+                .map(|r| r.tput_tok_s)
+                .fold(0.0f64, f64::max)
+        };
+        let b = best(ServingMode::Baseline);
+        let i = best(ServingMode::Icarus);
+        println!("N={n}: baseline {b:.1} tok/s, icarus {i:.1} tok/s ({:.2}x)", i / b);
+    }
+    write_results(
+        "fig4_react_sweep",
+        &rows,
+        vec![("figure", json::s("4")), ("pattern", json::s("react"))],
+    );
+}

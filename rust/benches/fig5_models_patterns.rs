@@ -1,0 +1,55 @@
+//! Fig 5 reproduction: P95 latency and max throughput across model
+//! sizes (LLaMA-3.1-8B -> serve-small, Qwen3-14B -> serve-base) and
+//! agent patterns (ReAct, Reflexion), N = 4 models.
+//!
+//! Paper result (shape): ICaRus's advantage persists for the larger
+//! model (up to 7.4x lower latency, 3.6x higher throughput on Qwen-14B)
+//! and for Reflexion's heavier multi-turn contexts.
+//!
+//! Run: cargo bench --bench fig5_models_patterns
+
+use icarus::bench_util::{summarize_pairs, sweep, write_results, Point, KV_BPT_BASE, KV_BPT_SMALL};
+use icarus::config::{AgentPattern, ServingMode};
+use icarus::engine::executor::CostModel;
+use icarus::json;
+
+fn main() {
+    let mut all_rows = Vec::new();
+    for (model, kv_bpt, qps_list) in [
+        ("serve-small(8B)", KV_BPT_SMALL, [0.2, 0.4, 0.8, 1.5, 3.0]),
+        ("serve-base(14B)", KV_BPT_BASE, [0.1, 0.2, 0.4, 0.8, 1.5]),
+    ] {
+        for pattern in [AgentPattern::ReAct, AgentPattern::Reflexion] {
+            println!("\n== Fig 5: {model}, {} ==\n", pattern.as_str());
+            let mut points = Vec::new();
+            for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+                for &qps in &qps_list {
+                    // Larger model: proportionally larger per-token costs
+                    // (the paper's lower QPS range reflects the same).
+                    let scale = if kv_bpt == KV_BPT_BASE { 2.5 } else { 1.0 };
+                    let mut cost = CostModel::default();
+                    cost.prefill_per_token *= scale;
+                    cost.decode_base *= scale;
+                    cost.decode_per_ctx_token *= scale;
+                    points.push(Point {
+                        mode,
+                        n_models: 4,
+                        qps,
+                        pattern,
+                        kv_pool_bytes: 24 << 20,
+                        kv_bytes_per_token: kv_bpt,
+                        cost,
+                        ..Default::default()
+                    });
+                }
+            }
+            let mut rows = sweep(&points);
+            summarize_pairs(&rows);
+            for r in &mut rows {
+                r.label = format!("{model}/{}/{}", pattern.as_str(), r.label);
+            }
+            all_rows.extend(rows);
+        }
+    }
+    write_results("fig5_models_patterns", &all_rows, vec![("figure", json::s("5"))]);
+}

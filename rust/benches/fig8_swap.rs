@@ -1,0 +1,41 @@
+//! Fig 8 / Appendix E reproduction: ReAct sweep with swap-based KV
+//! eviction (4 GB swap tier) instead of recompute.
+//!
+//! Paper result (shape): ICaRus still wins (up to 12.1x lower P95, 3.8x
+//! throughput with 8 models) because it reduces KV pressure itself, so
+//! swap traffic is rarely triggered in the first place — recompute vs
+//! swap is orthogonal to cross-model sharing.
+//!
+//! Run: cargo bench --bench fig8_swap
+
+use icarus::bench_util::{summarize_pairs, sweep, write_results, Point, KV_BPT_SMALL};
+use icarus::config::{EvictionPolicy, ServingMode};
+use icarus::json;
+
+fn main() {
+    let qps_list = [0.2, 0.4, 0.8, 1.5, 3.0];
+    let mut points = Vec::new();
+    for &n in &[2usize, 4, 8] {
+        for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+            for &qps in &qps_list {
+                points.push(Point {
+                    mode,
+                    n_models: n,
+                    qps,
+                    eviction: EvictionPolicy::Swap,
+                    kv_pool_bytes: 12 << 20,
+                    kv_bytes_per_token: KV_BPT_SMALL,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    println!("== Fig 8: ReAct with swap-based eviction (4 GB swap tier, pool 12 MB) ==\n");
+    let rows = sweep(&points);
+    summarize_pairs(&rows);
+    write_results(
+        "fig8_swap",
+        &rows,
+        vec![("figure", json::s("8")), ("eviction", json::s("swap"))],
+    );
+}

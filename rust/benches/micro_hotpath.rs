@@ -1,0 +1,195 @@
+//! Hot-path microbenches (criterion is unavailable offline; this is a
+//! plain measure-loop harness with warmup + median-of-runs):
+//!
+//!   * radix prefix tree lookup/insert at depth,
+//!   * block pool alloc/release,
+//!   * engine step overhead with a zero-cost executor (pure scheduler),
+//!   * PJRT prefill/decode step times (when artifacts exist) — these
+//!     calibrate the SimExecutor cost model (EXPERIMENTS.md §Calibration).
+//!
+//! Run: cargo bench --bench micro_hotpath
+
+use std::time::Instant;
+
+use icarus::config::{ServingConfig, ServingMode, WorkloadConfig};
+use icarus::engine::executor::{CostModel, DecodeSlot, Executor, SimExecutor};
+use icarus::engine::Engine;
+use icarus::json;
+use icarus::kvcache::{BlockPool, RadixCache};
+use icarus::rng::Rng;
+use icarus::runtime::{Manifest, PjrtExecutor};
+use icarus::workload::generate;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.min(16) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    samples.sort_by(f64::total_cmp);
+    let med = samples[2];
+    println!("{name:<44} {:>12.3} µs/op", med * 1e6);
+    med
+}
+
+fn main() {
+    println!("== micro: kv cache ==\n");
+    let mut results = Vec::new();
+
+    // Radix: populate 256 contexts of 256 tokens sharing a 48-token
+    // system prefix, then time lookups.
+    let mut pool = BlockPool::new((1u64 << 30) as u64, 16, 2048);
+    let mut radix = RadixCache::new();
+    let mut rng = Rng::new(1);
+    let sys: Vec<u32> = (0..48).map(|i| i as u32).collect();
+    let mut contexts = Vec::new();
+    for i in 0..256 {
+        let mut t = sys.clone();
+        t.extend((0..208).map(|_| rng.below(1900) as u32));
+        assert!(radix.insert(&t, i, &mut pool));
+        contexts.push(t);
+    }
+    let mut idx = 0;
+    let t = bench("radix lookup (256 ctas x 256 tok)", 2000, || {
+        idx = (idx + 1) % contexts.len();
+        let m = radix.lookup(&contexts[idx]);
+        assert!(m.matched_tokens >= 208);
+    });
+    results.push(("radix_lookup_us", t * 1e6));
+
+    let mut salt = 0u32;
+    let t = bench("radix insert+evict (64 tok)", 500, || {
+        salt += 1;
+        let mut t: Vec<u32> = sys.clone();
+        t.extend((0..16).map(|i| i * 31 + salt));
+        radix.insert(&t, u64::from(salt), &mut pool);
+        radix.evict(1, &mut pool);
+    });
+    results.push(("radix_insert_evict_us", t * 1e6));
+
+    let mut pool2 = BlockPool::new(1 << 26, 16, 2048);
+    let t = bench("pool alloc+release (8 blocks)", 10_000, || {
+        let blocks = pool2.alloc(8).unwrap();
+        for b in blocks {
+            pool2.release(b);
+        }
+    });
+    results.push(("pool_alloc_release_us", t * 1e6));
+
+    println!("\n== micro: engine scheduler overhead ==\n");
+    // Zero-cost executor -> wall time below is pure L3 scheduling.
+    struct ZeroExec(SimExecutor);
+    impl Executor for ZeroExec {
+        fn prefill(
+            &mut self,
+            m: usize,
+            p: &[u32],
+            c: usize,
+            b: Option<u64>,
+        ) -> anyhow::Result<icarus::engine::executor::PrefillOut> {
+            let mut out = self.0.prefill(m, p, c, b)?;
+            out.duration = 1e-9;
+            Ok(out)
+        }
+        fn decode(&mut self, batch: &mut [DecodeSlot]) -> anyhow::Result<f64> {
+            self.0.decode(batch)?;
+            Ok(1e-9)
+        }
+        fn snapshot(&mut self, c: u64) -> u64 {
+            self.0.snapshot(c)
+        }
+        fn drop_snapshot(&mut self, s: u64) {
+            self.0.drop_snapshot(s)
+        }
+        fn swap_in_cost(&self, b: u64) -> f64 {
+            self.0.swap_in_cost(b)
+        }
+        fn mode(&self) -> ServingMode {
+            self.0.mode()
+        }
+    }
+    let wcfg = WorkloadConfig { n_models: 4, qps: 1000.0, n_requests: 64, ..Default::default() };
+    let wl = generate(&wcfg);
+    let total_tokens: usize = wl.iter().map(|w| w.total_gen_tokens()).sum();
+    let t0 = Instant::now();
+    let scfg = ServingConfig { kv_pool_bytes: 1 << 30, ..Default::default() };
+    let exec = ZeroExec(SimExecutor::new(CostModel::default(), ServingMode::Icarus));
+    let stats = Engine::new(scfg, 2048, 4, exec).run(wl);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "engine overhead: {:.2} µs/generated-token ({} tokens, {:.3}s wall)",
+        wall / total_tokens as f64 * 1e6,
+        stats.generated_tokens,
+        wall
+    );
+    results.push(("engine_overhead_us_per_token", wall / total_tokens as f64 * 1e6));
+
+    println!("\n== micro: PJRT runtime (calibration source) ==\n");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir).unwrap();
+        for config in ["serve-small", "serve-base"] {
+            if m.spec(config).is_err() {
+                continue;
+            }
+            for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+                let mut ex = PjrtExecutor::load(&m, config, mode, 1).unwrap();
+                let prompt: Vec<u32> = (0..96u32).map(|i| 32 + i % 1900).collect();
+                let t0 = Instant::now();
+                let out = ex.prefill(0, &prompt, 0, None).unwrap();
+                let prefill_t = t0.elapsed().as_secs_f64();
+                let mut slot = DecodeSlot {
+                    seq_id: 1,
+                    model_id: 0,
+                    cache: out.cache,
+                    context_len: prompt.len(),
+                    last_token: out.first_token,
+                    next_token: 0,
+                };
+                // median decode-step time over 32 steps
+                let mut times = Vec::new();
+                for _ in 0..32 {
+                    let mut b = std::slice::from_mut(&mut slot);
+                    let t0 = Instant::now();
+                    ex.decode(&mut b).unwrap();
+                    times.push(t0.elapsed().as_secs_f64());
+                    slot.context_len += 1;
+                    slot.last_token = slot.next_token;
+                }
+                times.sort_by(f64::total_cmp);
+                let med = times[times.len() / 2];
+                println!(
+                    "{config:<12} {:<9} prefill(96 tok) {:>8.2} ms   decode-step {:>8.2} ms",
+                    mode.as_str(),
+                    prefill_t * 1e3,
+                    med * 1e3
+                );
+                results.push((
+                    match (config, mode) {
+                        ("serve-small", ServingMode::Baseline) => "pjrt_small_baseline_decode_ms",
+                        ("serve-small", ServingMode::Icarus) => "pjrt_small_icarus_decode_ms",
+                        ("serve-base", ServingMode::Baseline) => "pjrt_base_baseline_decode_ms",
+                        _ => "pjrt_base_icarus_decode_ms",
+                    },
+                    med * 1e3,
+                ));
+            }
+        }
+    } else {
+        println!("(artifacts missing — run `make artifacts` for PJRT calibration)");
+    }
+
+    std::fs::create_dir_all("bench_results").ok();
+    let v = json::obj(
+        results.iter().map(|(k, v)| (*k, json::num(*v))).collect::<Vec<_>>(),
+    );
+    std::fs::write("bench_results/micro_hotpath.json", v.to_string_pretty()).unwrap();
+    println!("\nwrote bench_results/micro_hotpath.json");
+}

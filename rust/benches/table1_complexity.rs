@@ -1,0 +1,79 @@
+//! Table 1 reproduction: measured memory and prefill/decode complexity
+//! vs number of models N, baseline vs ICaRus.
+//!
+//! Paper claims:
+//!   memory   — baseline O(M + N·L_t)  vs ICaRus O(M + L_t)
+//!   prefill  — baseline O(N(M·L_t + L_t²)) vs ICaRus O(M·L_t + L_t²)
+//!   decode   — both O(M + L_t) memory traffic per token (ICaRus runs
+//!              2x compute but parallelized; factor measured separately
+//!              in the ablation bench).
+//!
+//! We drive the *same* workflow trace through both modes with an ample
+//! pool (no eviction noise) and report peak KV bytes and total
+//! uncached-prefill tokens as functions of N — the measured analogue of
+//! the table.  Run: cargo bench --bench table1_complexity
+
+use icarus::bench_util::{Point, KV_BPT_SMALL};
+use icarus::config::ServingMode;
+use icarus::json::{self, Value};
+
+fn main() {
+    println!("== Table 1: measured scaling vs N (ample pool, qps 0.4) ==\n");
+    println!(
+        "{:<10} {:>6} {:>14} {:>16} {:>16}",
+        "mode", "N", "peakKV(MB)", "prefill-tokens", "decode-tokens"
+    );
+    let mut results = Vec::new();
+    let mut mem = std::collections::BTreeMap::new();
+    let mut pre = std::collections::BTreeMap::new();
+    for &n in &[1usize, 2, 4, 8] {
+        for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+            let p = Point {
+                mode,
+                n_models: n,
+                qps: 0.4,
+                kv_pool_bytes: 1 << 30, // ample: measure pure footprint
+                kv_bytes_per_token: KV_BPT_SMALL,
+                n_requests: 64,
+                ..Default::default()
+            };
+            let s = p.run();
+            println!(
+                "{:<10} {:>6} {:>14.1} {:>16} {:>16}",
+                mode.as_str(),
+                n,
+                s.peak_kv_bytes as f64 / (1 << 20) as f64,
+                s.prefill_tokens,
+                s.generated_tokens
+            );
+            mem.insert((mode.as_str(), n), s.peak_kv_bytes as f64);
+            pre.insert((mode.as_str(), n), s.prefill_tokens as f64);
+            results.push(json::obj(vec![
+                ("mode", json::s(mode.as_str())),
+                ("n_models", json::num(n as f64)),
+                ("peak_kv_bytes", json::num(s.peak_kv_bytes as f64)),
+                ("prefill_tokens", json::num(s.prefill_tokens as f64)),
+                ("cached_prefill_tokens", json::num(s.cached_prefill_tokens as f64)),
+                ("generated_tokens", json::num(s.generated_tokens as f64)),
+            ]));
+        }
+    }
+
+    // Scaling-law check: baseline grows ~linearly in N, icarus ~flat.
+    println!("\n--- growth factors N=1 -> N=8 ---");
+    for metric in ["memory", "prefill"] {
+        let table = if metric == "memory" { &mem } else { &pre };
+        let gb = table[&("baseline", 8)] / table[&("baseline", 1)];
+        let gi = table[&("icarus", 8)] / table[&("icarus", 1)];
+        println!("{metric}: baseline x{gb:.2}, icarus x{gi:.2} (paper: ~N vs ~1)");
+    }
+
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write(
+        "bench_results/table1_complexity.json",
+        json::obj(vec![("bench", json::s("table1")), ("rows", Value::Arr(results))])
+            .to_string_pretty(),
+    )
+    .unwrap();
+    println!("\nwrote bench_results/table1_complexity.json");
+}

@@ -1,0 +1,194 @@
+//! Shared harness for the paper-reproduction benches: one function per
+//! measurement point, aligned-table printing, and JSON result dumps
+//! under `bench_results/`.
+
+use std::path::Path;
+
+use crate::config::{
+    AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
+};
+use crate::engine::executor::{CostModel, SimExecutor};
+use crate::engine::Engine;
+use crate::json::{self, Value};
+use crate::metrics::ServingStats;
+use crate::workload::generate;
+
+/// Model stand-ins: KV bytes/token of the serving configs (see
+/// `python/compile/model.py`).  serve-small plays LLaMA-3.1-8B,
+/// serve-base plays Qwen3-14B (paper Fig 5).
+pub const KV_BPT_SMALL: u64 = 2048;
+pub const KV_BPT_BASE: u64 = 8192;
+
+/// One measurement point of a sweep.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub mode: ServingMode,
+    pub n_models: usize,
+    pub qps: f64,
+    pub pattern: AgentPattern,
+    pub routing: Routing,
+    pub eviction: EvictionPolicy,
+    pub kv_pool_bytes: u64,
+    pub kv_bytes_per_token: u64,
+    pub n_requests: usize,
+    pub seed: u64,
+    pub prefix_caching: bool,
+    pub cost: CostModel,
+}
+
+impl Default for Point {
+    fn default() -> Self {
+        Point {
+            mode: ServingMode::Icarus,
+            n_models: 4,
+            qps: 0.4,
+            pattern: AgentPattern::ReAct,
+            routing: Routing::RoundRobin,
+            eviction: EvictionPolicy::Recompute,
+            kv_pool_bytes: 24 << 20,
+            kv_bytes_per_token: KV_BPT_SMALL,
+            n_requests: 128,
+            seed: 0,
+            prefix_caching: true,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+impl Point {
+    pub fn run(&self) -> ServingStats {
+        let scfg = ServingConfig {
+            mode: self.mode,
+            kv_pool_bytes: self.kv_pool_bytes,
+            eviction: self.eviction,
+            prefix_caching: self.prefix_caching,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            pattern: self.pattern,
+            n_models: self.n_models,
+            qps: self.qps,
+            n_requests: self.n_requests,
+            routing: self.routing,
+            seed: self.seed,
+            ..Default::default()
+        };
+        let exec = SimExecutor::new(self.cost.clone(), self.mode);
+        Engine::new(scfg, self.kv_bytes_per_token, self.n_models, exec).run(generate(&wcfg))
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}/N={}/qps={:.2}", self.mode.as_str(), self.n_models, self.qps)
+    }
+}
+
+/// Result row: the numbers the paper's figures plot.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub mode: ServingMode,
+    pub n_models: usize,
+    pub qps: f64,
+    pub p95_s: f64,
+    pub p50_s: f64,
+    pub tput_tok_s: f64,
+    pub hit_rate: f64,
+    pub peak_kv_mb: f64,
+    pub preemptions: u64,
+    pub evictions: u64,
+}
+
+impl Row {
+    pub fn from_stats(p: &Point, s: &ServingStats) -> Row {
+        let tl = s.turn_latency.as_ref().unwrap();
+        Row {
+            label: p.label(),
+            mode: p.mode,
+            n_models: p.n_models,
+            qps: p.qps,
+            p95_s: tl.p95(),
+            p50_s: tl.p50(),
+            tput_tok_s: s.throughput_tok_s(),
+            hit_rate: s.cache_hit_rate(),
+            peak_kv_mb: s.peak_kv_bytes as f64 / (1 << 20) as f64,
+            preemptions: s.preemptions,
+            evictions: s.evictions,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("mode", json::s(self.mode.as_str())),
+            ("n_models", json::num(self.n_models as f64)),
+            ("qps", json::num(self.qps)),
+            ("p95_s", json::num(self.p95_s)),
+            ("p50_s", json::num(self.p50_s)),
+            ("tput_tok_s", json::num(self.tput_tok_s)),
+            ("hit_rate", json::num(self.hit_rate)),
+            ("peak_kv_mb", json::num(self.peak_kv_mb)),
+            ("preemptions", json::num(self.preemptions as f64)),
+            ("evictions", json::num(self.evictions as f64)),
+        ])
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<28} {:>8} {:>8} {:>12} {:>8} {:>10} {:>8} {:>8}",
+        "point", "p95(s)", "p50(s)", "tput(tok/s)", "hit", "peakKV(MB)", "preempt", "evict"
+    );
+}
+
+pub fn print_row(r: &Row) {
+    println!(
+        "{:<28} {:>8.3} {:>8.3} {:>12.1} {:>8.3} {:>10.1} {:>8} {:>8}",
+        r.label, r.p95_s, r.p50_s, r.tput_tok_s, r.hit_rate, r.peak_kv_mb, r.preemptions,
+        r.evictions
+    );
+}
+
+/// Run a sweep and collect rows (printing as it goes).
+pub fn sweep(points: &[Point]) -> Vec<Row> {
+    header();
+    let mut rows = Vec::new();
+    for p in points {
+        let stats = p.run();
+        let row = Row::from_stats(p, &stats);
+        print_row(&row);
+        rows.push(row);
+    }
+    rows
+}
+
+/// Write rows as JSON under bench_results/<name>.json.
+pub fn write_results(name: &str, rows: &[Row], extra: Vec<(&str, Value)>) {
+    let dir = Path::new("bench_results");
+    std::fs::create_dir_all(dir).ok();
+    let mut obj = vec![
+        ("bench", json::s(name)),
+        ("rows", Value::Arr(rows.iter().map(Row::to_json).collect())),
+    ];
+    obj.extend(extra);
+    let v = json::obj(obj);
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, v.to_string_pretty()).expect("write results");
+    println!("\nwrote {}", path.display());
+}
+
+/// Speedup summary between paired baseline/icarus rows (same N & qps).
+pub fn summarize_pairs(rows: &[Row]) {
+    println!("\n--- ICaRus vs baseline (same N, qps) ---");
+    for r in rows.iter().filter(|r| r.mode == ServingMode::Icarus) {
+        if let Some(b) = rows.iter().find(|b| {
+            b.mode == ServingMode::Baseline && b.n_models == r.n_models && b.qps == r.qps
+        }) {
+            println!(
+                "N={} qps={:.2}: p95 {:.1}x lower, tput {:.2}x higher",
+                r.n_models,
+                r.qps,
+                if r.p95_s > 0.0 { b.p95_s / r.p95_s } else { f64::INFINITY },
+                if b.tput_tok_s > 0.0 { r.tput_tok_s / b.tput_tok_s } else { f64::INFINITY },
+            );
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Configuration types for the serving engine, workload generator and
+//! benchmark sweeps.  Everything round-trips through the in-repo JSON so
+//! benches can dump exact run configs alongside results.
+
+use crate::json::{self, Value};
+
+/// How KV caches are namespaced across the N task-specialized models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingMode {
+    /// Conventional multi-model: each adapter has its own cache namespace;
+    /// identical prompts are prefilled and stored once *per model*.
+    Baseline,
+    /// ICaRus: one shared namespace; all adapters reuse the logical
+    /// encoder's cache.
+    Icarus,
+}
+
+impl ServingMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServingMode::Baseline => "baseline",
+            ServingMode::Icarus => "icarus",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "baseline" => Ok(ServingMode::Baseline),
+            "icarus" => Ok(ServingMode::Icarus),
+            other => anyhow::bail!("unknown serving mode: {other}"),
+        }
+    }
+}
+
+/// What happens to a victim's blocks when the pool is full (paper §4.3
+/// vs Appendix E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Drop the cache; the sequence re-prefills when rescheduled.
+    Recompute,
+    /// Copy blocks to a host-side swap tier (bounded) and restore later.
+    Swap,
+}
+
+impl EvictionPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EvictionPolicy::Recompute => "recompute",
+            EvictionPolicy::Swap => "swap",
+        }
+    }
+}
+
+/// Serving engine configuration (the vLLM-equivalent knobs).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub mode: ServingMode,
+    /// Simulated GPU memory budget for the KV pool, in bytes.  This is
+    /// the A100-80GB stand-in: the eviction dynamics the paper measures
+    /// depend on footprint/budget ratios, which this controls.
+    pub kv_pool_bytes: u64,
+    /// Tokens per KV block (vLLM uses 16).
+    pub block_tokens: usize,
+    /// Max sequences decoded per engine step.
+    pub max_batch: usize,
+    /// Max prefill tokens admitted per engine step.
+    pub max_prefill_tokens: usize,
+    pub eviction: EvictionPolicy,
+    /// Swap tier capacity in bytes (Appendix E uses 4 GB).
+    pub swap_bytes: u64,
+    /// Enable per-namespace prefix caching (on in both systems; the
+    /// ablation bench turns it off).
+    pub prefix_caching: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            mode: ServingMode::Icarus,
+            kv_pool_bytes: 64 << 20,
+            block_tokens: 16,
+            max_batch: 16,
+            max_prefill_tokens: 2048,
+            eviction: EvictionPolicy::Recompute,
+            swap_bytes: 4 << 30,
+            prefix_caching: true,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("mode", json::s(self.mode.as_str())),
+            ("kv_pool_bytes", json::num(self.kv_pool_bytes as f64)),
+            ("block_tokens", json::num(self.block_tokens as f64)),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("max_prefill_tokens", json::num(self.max_prefill_tokens as f64)),
+            ("eviction", json::s(self.eviction.as_str())),
+            ("swap_bytes", json::num(self.swap_bytes as f64)),
+            ("prefix_caching", Value::Bool(self.prefix_caching)),
+        ])
+    }
+}
+
+/// Agentic pattern driving the multi-turn workflow (paper §4.1/A.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentPattern {
+    /// Thought -> Act -> Observation cycles.
+    ReAct,
+    /// ReAct plus self-evaluation turns and episodic memory growth.
+    Reflexion,
+}
+
+impl AgentPattern {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AgentPattern::ReAct => "react",
+            AgentPattern::Reflexion => "reflexion",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "react" => Ok(AgentPattern::ReAct),
+            "reflexion" => Ok(AgentPattern::Reflexion),
+            other => anyhow::bail!("unknown agent pattern: {other}"),
+        }
+    }
+}
+
+/// How successive turns of a workflow are routed across the N models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Paper §4.3: turn k goes to model k mod N.
+    RoundRobin,
+    /// Appendix F: one hot model gets `hot_p`, the rest share the
+    /// remainder, order randomized.
+    Skewed { hot_p_percent: u8 },
+}
+
+impl Routing {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "round_robin",
+            Routing::Skewed { .. } => "skewed",
+        }
+    }
+}
+
+/// Workload generator configuration (HotPotQA-agent stand-in; A.2.3).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub pattern: AgentPattern,
+    /// Number of task-specialized models (LoRA adapters), N in the paper.
+    pub n_models: usize,
+    /// Offered load in workflows per second.
+    pub qps: f64,
+    /// Total workflows in the run (paper fixes 128).
+    pub n_requests: usize,
+    pub routing: Routing,
+    /// Mean initial prompt tokens (shared prefix: question + instructions).
+    pub prompt_mean: f64,
+    pub prompt_std: f64,
+    /// Turns per workflow (thought/act/obs cycles).
+    pub turns_min: u64,
+    pub turns_max: u64,
+    /// Mean generated tokens per turn.
+    pub output_mean: f64,
+    pub output_std: f64,
+    /// Observation tokens appended after each tool call.
+    pub obs_mean: f64,
+    pub obs_std: f64,
+    /// Tool-execution latency between turns (seconds) — while an agent
+    /// waits on its tool, its context sits in the cache aging toward
+    /// eviction (this is what makes recompute-vs-swap matter).
+    pub think_mean: f64,
+    pub think_std: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            pattern: AgentPattern::ReAct,
+            n_models: 4,
+            qps: 0.4,
+            n_requests: 128,
+            routing: Routing::RoundRobin,
+            prompt_mean: 96.0,
+            prompt_std: 24.0,
+            turns_min: 2,
+            turns_max: 5,
+            output_mean: 48.0,
+            output_std: 16.0,
+            obs_mean: 24.0,
+            obs_std: 8.0,
+            think_mean: 1.5,
+            think_std: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("pattern", json::s(self.pattern.as_str())),
+            ("n_models", json::num(self.n_models as f64)),
+            ("qps", json::num(self.qps)),
+            ("n_requests", json::num(self.n_requests as f64)),
+            ("routing", json::s(self.routing.as_str())),
+            ("prompt_mean", json::num(self.prompt_mean)),
+            ("turns_max", json::num(self.turns_max as f64)),
+            ("output_mean", json::num(self.output_mean)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in [ServingMode::Baseline, ServingMode::Icarus] {
+            assert_eq!(ServingMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(ServingMode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn pattern_roundtrip() {
+        for p in [AgentPattern::ReAct, AgentPattern::Reflexion] {
+            assert_eq!(AgentPattern::parse(p.as_str()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let s = ServingConfig::default();
+        assert!(s.kv_pool_bytes > 0 && s.block_tokens > 0);
+        let w = WorkloadConfig::default();
+        assert!(w.turns_min <= w.turns_max);
+        assert!(w.qps > 0.0);
+    }
+
+    #[test]
+    fn json_dump_contains_mode() {
+        let s = ServingConfig::default().to_json();
+        assert_eq!(s.get("mode").unwrap().as_str(), Some("icarus"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Per-sequence and per-workflow runtime state inside the engine.
+
+use crate::engine::executor::SnapshotId;
+use crate::workload::Workflow;
+
+/// A turn waiting for admission.
+#[derive(Debug)]
+pub struct PendingTurn {
+    pub wf_idx: usize,
+    pub turn_idx: usize,
+    /// When this turn became runnable (workflow arrival or previous turn
+    /// completion) — the latency clock starts here.
+    pub ready_at: f64,
+    /// Full context to prefill: accumulated workflow context (+ obs).
+    pub prompt: Vec<u32>,
+    /// Tokens still to generate (smaller than the spec's gen_len if the
+    /// turn was preempted mid-decode and restarted).
+    pub remaining_gen: usize,
+    /// Set when the turn lost its cache to preemption (recompute path) —
+    /// its re-prefilled tokens count as recomputation in the stats.
+    pub was_preempted: bool,
+    /// Live cache parked in the swap tier by a swap-mode preemption:
+    /// (handle, bytes).  Restored on re-admission without recompute.
+    pub swapped: Option<(SnapshotId, u64)>,
+}
+
+/// A sequence currently in the decode batch.
+#[derive(Debug)]
+pub struct RunningSeq {
+    pub seq_id: u64,
+    pub wf_idx: usize,
+    pub turn_idx: usize,
+    pub model_id: usize,
+    /// Prompt this turn was prefilled with.
+    pub prompt: Vec<u32>,
+    /// Tokens generated so far this turn.
+    pub generated: Vec<u32>,
+    pub remaining_gen: usize,
+    /// Live cache handle (functional: replaced every decode step).
+    pub cache: SnapshotId,
+    /// Prompt tokens served from the prefix cache at admission.
+    pub cached_tokens: usize,
+    pub ready_at: f64,
+    /// Admission order (preemption victims are picked newest-first).
+    pub admitted_at: f64,
+}
+
+impl RunningSeq {
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    pub fn full_context(&self) -> Vec<u32> {
+        let mut out = self.prompt.clone();
+        out.extend_from_slice(&self.generated);
+        out
+    }
+}
+
+/// Workflow progress tracking.
+#[derive(Debug)]
+pub struct WfState {
+    pub spec: Workflow,
+    /// Accumulated context: prompt + per-turn (generated + obs).
+    pub context: Vec<u32>,
+    pub next_turn: usize,
+    pub done: bool,
+}
+
+impl WfState {
+    pub fn new(spec: Workflow) -> Self {
+        let context = spec.prompt.clone();
+        WfState { spec, context, next_turn: 0, done: false }
+    }
+}

@@ -1,0 +1,478 @@
+//! The KV cache manager: block pool + per-namespace prefix trees +
+//! swap tier + per-sequence ownership.
+//!
+//! This is where the two serving modes differ (and the *only* place —
+//! scheduler, executor and workloads are identical for both, so the
+//! benches measure exactly the paper's variable):
+//!
+//!   * `Baseline`:  namespace per model.  N models serving the same
+//!     workflow keep N copies of every context and re-prefill identical
+//!     prompts per model — memory O(M + N·L_t) (paper Table 1).
+//!   * `Icarus`:    single namespace.  One copy, cross-model prefix
+//!     hits — memory O(M + L_t).
+
+use std::collections::HashMap;
+
+use crate::config::{EvictionPolicy, ServingConfig, ServingMode};
+
+use super::block::{BlockId, BlockPool};
+use super::radix::{Match, RadixCache};
+use super::swap::SwapTier;
+
+/// Outcome of trying to admit / grow a sequence.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Alloc {
+    Ok(Admission),
+    /// Pool exhausted even after eviction: caller must preempt a running
+    /// sequence (or queue the request).
+    NoSpace,
+}
+
+#[derive(Debug, PartialEq, Eq, Default)]
+pub struct Admission {
+    /// Prompt tokens covered by the prefix cache (no prefill needed).
+    pub cached_tokens: usize,
+    /// Engine payload (cache snapshot id) for the matched prefix and the
+    /// token count that snapshot covers.
+    pub snapshot: Option<(u64, usize)>,
+    /// Snapshot ids whose radix nodes were evicted to make room — the
+    /// engine must drop the corresponding device buffers.
+    pub dropped_snapshots: Vec<u64>,
+    /// Bytes restored from the swap tier for this admission (the engine
+    /// charges PCIe time for them).
+    pub swap_in_bytes: u64,
+}
+
+#[derive(Debug)]
+struct SeqState {
+    namespace: usize,
+    /// Blocks owned exclusively by this sequence (uncached portion).
+    own_blocks: Vec<BlockId>,
+    /// Pinned prefix match (shared blocks).
+    pinned: Option<Match>,
+    /// Total tokens currently resident for this sequence.
+    tokens: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct ManagerStats {
+    pub evicted_blocks: u64,
+    pub failed_inserts: u64,
+    pub preempted_tokens: u64,
+    pub swap_rejected: u64,
+}
+
+pub struct KvCacheManager {
+    pub pool: BlockPool,
+    trees: Vec<RadixCache>,
+    seqs: HashMap<u64, SeqState>,
+    mode: ServingMode,
+    eviction: EvictionPolicy,
+    pub swap: SwapTier,
+    prefix_caching: bool,
+    /// Bytes per token of KV cache — pricing evictions for swap.
+    kv_bytes_per_token: u64,
+    pub stats: ManagerStats,
+}
+
+impl KvCacheManager {
+    pub fn new(cfg: &ServingConfig, kv_bytes_per_token: u64, n_models: usize) -> Self {
+        let n_trees = match cfg.mode {
+            ServingMode::Baseline => n_models,
+            ServingMode::Icarus => 1,
+        };
+        KvCacheManager {
+            pool: BlockPool::new(cfg.kv_pool_bytes, cfg.block_tokens, kv_bytes_per_token),
+            trees: (0..n_trees).map(|_| RadixCache::new()).collect(),
+            seqs: HashMap::new(),
+            mode: cfg.mode,
+            eviction: cfg.eviction,
+            swap: SwapTier::new(cfg.swap_bytes),
+            prefix_caching: cfg.prefix_caching,
+            kv_bytes_per_token,
+            stats: ManagerStats::default(),
+        }
+    }
+
+    /// Cache namespace for a model: ICaRus collapses all models to 0.
+    pub fn namespace_of(&self, model_id: usize) -> usize {
+        match self.mode {
+            ServingMode::Baseline => model_id,
+            ServingMode::Icarus => 0,
+        }
+    }
+
+    pub fn mode(&self) -> ServingMode {
+        self.mode
+    }
+
+    pub fn active_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Evict from this namespace's tree (then others) until `want`
+    /// blocks are free or nothing is evictable.  Dropped snapshot ids
+    /// are returned; under Swap policy they are parked in the swap tier
+    /// when it has room (engine restores them later), otherwise dropped.
+    fn make_room(&mut self, want: usize, namespace: usize) -> Vec<u64> {
+        let mut dropped_all = Vec::new();
+        let order: Vec<usize> = std::iter::once(namespace)
+            .chain((0..self.trees.len()).filter(|&t| t != namespace))
+            .collect();
+        for t in order {
+            if self.pool.free_blocks() >= want {
+                break;
+            }
+            let need = want - self.pool.free_blocks();
+            if self.eviction == EvictionPolicy::Swap {
+                // Swap-mode: free blocks but keep contexts matchable;
+                // the engine's snapshot handles act as the host copy.
+                // Bounded by the swap tier's byte budget.
+                let room = (self.swap.free() / self.pool.block_bytes) as usize;
+                let to_swap = need.min(room);
+                if to_swap > 0 {
+                    let freed = self.trees[t].evict_swap(to_swap, &mut self.pool);
+                    self.stats.evicted_blocks += freed as u64;
+                    let ok = self.swap.swap_out(freed as u64 * self.pool.block_bytes);
+                    debug_assert!(ok, "room was checked");
+                }
+                if self.pool.free_blocks() >= want {
+                    continue;
+                }
+                self.stats.swap_rejected += 1; // tier full: hard-evict rest
+            }
+            let need = want.saturating_sub(self.pool.free_blocks());
+            let (freed, dropped) = self.trees[t].evict(need, &mut self.pool);
+            self.stats.evicted_blocks += freed as u64;
+            dropped_all.extend(dropped);
+        }
+        dropped_all
+    }
+
+    /// Admit a sequence: match its prompt against the prefix cache, pin
+    /// the match, and allocate blocks for the uncached remainder.
+    pub fn begin_sequence(&mut self, seq_id: u64, model_id: usize, prompt: &[u32]) -> Alloc {
+        assert!(!self.seqs.contains_key(&seq_id), "duplicate seq {seq_id}");
+        let ns = self.namespace_of(model_id);
+        let m = if self.prefix_caching {
+            self.trees[ns].lookup(prompt)
+        } else {
+            Match { matched_tokens: 0, path: vec![], payload: None, swapped_nodes: vec![] }
+        };
+        let uncached = prompt.len() - m.matched_tokens;
+        // Pin the matched path *before* making room so eviction can
+        // neither drop nor swap it between lookup and use.
+        self.trees[ns].pin(&m, &mut self.pool);
+        // Blocks needed: the uncached remainder plus re-materializing any
+        // matched blocks currently parked in the swap tier.
+        let restore_blocks = m.swapped_nodes.len();
+        let need = self.pool.blocks_for_tokens(uncached) + restore_blocks;
+        let mut dropped = Vec::new();
+        if self.pool.free_blocks() < need {
+            dropped = self.make_room(need, ns);
+        }
+        if self.pool.free_blocks() < need {
+            self.trees[ns].unpin(&m, &mut self.pool);
+            return Alloc::NoSpace;
+        }
+        let mut swap_in_bytes = 0;
+        if restore_blocks > 0 {
+            let restored = self.trees[ns].restore(&m.swapped_nodes, &mut self.pool);
+            debug_assert_eq!(restored, restore_blocks, "free space was checked");
+            swap_in_bytes = restored as u64 * self.pool.block_bytes;
+            self.swap.swap_in(swap_in_bytes);
+        }
+        let Some(own) = self.pool.alloc(self.pool.blocks_for_tokens(uncached)) else {
+            self.trees[ns].unpin(&m, &mut self.pool);
+            return Alloc::NoSpace;
+        };
+        let adm = Admission {
+            cached_tokens: m.matched_tokens,
+            snapshot: m.payload,
+            dropped_snapshots: dropped,
+            swap_in_bytes,
+        };
+        self.seqs.insert(
+            seq_id,
+            SeqState { namespace: ns, own_blocks: own, pinned: Some(m), tokens: prompt.len() },
+        );
+        Alloc::Ok(adm)
+    }
+
+    /// Grow a sequence by `n` decoded tokens, allocating blocks on
+    /// boundary crossings.  `NoSpace` -> the scheduler must preempt.
+    pub fn append_tokens(&mut self, seq_id: u64, n: usize) -> Alloc {
+        let ns;
+        let need;
+        {
+            let st = self.seqs.get(&seq_id).expect("unknown seq");
+            ns = st.namespace;
+            let pinned_tokens = st.pinned.as_ref().map_or(0, |m| m.matched_tokens);
+            let have = pinned_tokens / self.pool.block_tokens + st.own_blocks.len();
+            let want_total = self.pool.blocks_for_tokens(st.tokens + n);
+            need = want_total.saturating_sub(have);
+        }
+        let mut dropped = Vec::new();
+        if need > 0 && self.pool.free_blocks() < need {
+            dropped = self.make_room(need, ns);
+        }
+        if need > 0 {
+            let Some(mut blocks) = self.pool.alloc(need) else {
+                return Alloc::NoSpace;
+            };
+            let st = self.seqs.get_mut(&seq_id).unwrap();
+            st.own_blocks.append(&mut blocks);
+        }
+        let st = self.seqs.get_mut(&seq_id).unwrap();
+        st.tokens += n;
+        Alloc::Ok(Admission {
+            cached_tokens: 0,
+            snapshot: None,
+            dropped_snapshots: dropped,
+            swap_in_bytes: 0,
+        })
+    }
+
+    /// Finish a sequence: release its resources and (optionally) publish
+    /// its full context into the prefix cache under `snapshot` so later
+    /// turns — from any model in ICaRus mode — hit it.
+    pub fn finish_sequence(
+        &mut self,
+        seq_id: u64,
+        full_context: &[u32],
+        snapshot: Option<u64>,
+    ) -> Vec<u64> {
+        let st = self.seqs.remove(&seq_id).expect("unknown seq");
+        if let Some(m) = &st.pinned {
+            self.trees[st.namespace].unpin(m, &mut self.pool);
+        }
+        for b in st.own_blocks {
+            self.pool.release(b);
+        }
+        let mut dropped = Vec::new();
+        if self.prefix_caching {
+            if let Some(snap) = snapshot {
+                let need = self.pool.blocks_for_tokens(
+                    (full_context.len() / self.pool.block_tokens) * self.pool.block_tokens,
+                );
+                if self.pool.free_blocks() < need {
+                    dropped = self.make_room(need, st.namespace);
+                }
+                if !self.trees[st.namespace].insert(full_context, snap, &mut self.pool) {
+                    self.stats.failed_inserts += 1;
+                    dropped.push(snap); // engine should drop the snapshot
+                }
+            }
+        } else if let Some(snap) = snapshot {
+            dropped.push(snap);
+        }
+        dropped
+    }
+
+    /// Preempt a running sequence: all its resources are released; under
+    /// `Recompute` its tokens will be re-prefilled on resume.
+    pub fn preempt(&mut self, seq_id: u64) -> usize {
+        let st = self.seqs.remove(&seq_id).expect("unknown seq");
+        if let Some(m) = &st.pinned {
+            self.trees[st.namespace].unpin(m, &mut self.pool);
+        }
+        for b in st.own_blocks {
+            self.pool.release(b);
+        }
+        self.stats.preempted_tokens += st.tokens as u64;
+        st.tokens
+    }
+
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.kv_bytes_per_token
+    }
+
+    /// Total resident cache tokens across namespaces (diagnostics).
+    pub fn resident_blocks(&self) -> usize {
+        self.pool.used()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: ServingMode, pool_blocks: u64) -> ServingConfig {
+        ServingConfig {
+            mode,
+            kv_pool_bytes: pool_blocks * 16 * 64,
+            block_tokens: 16,
+            ..Default::default()
+        }
+    }
+
+    fn prompt(n: usize, salt: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + salt).collect()
+    }
+
+    #[test]
+    fn icarus_shares_across_models() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 256), 64, 4);
+        let p = prompt(64, 0);
+        // model 0 serves the context and publishes it
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        m.finish_sequence(1, &p, Some(42));
+        // model 3 now hits the same cache — the paper's headline
+        match m.begin_sequence(2, 3, &p) {
+            Alloc::Ok(adm) => {
+                assert_eq!(adm.cached_tokens, 64);
+                assert_eq!(adm.snapshot, Some((42, 64)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn baseline_does_not_share_across_models() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Baseline, 256), 64, 4);
+        let p = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        m.finish_sequence(1, &p, Some(42));
+        match m.begin_sequence(2, 3, &p) {
+            Alloc::Ok(adm) => assert_eq!(adm.cached_tokens, 0),
+            other => panic!("{other:?}"),
+        }
+        // but the same model does share
+        match m.begin_sequence(3, 0, &p) {
+            Alloc::Ok(adm) => assert_eq!(adm.cached_tokens, 64),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn baseline_memory_is_n_times_icarus() {
+        let p = prompt(128, 0);
+        let mut usage = Vec::new();
+        for mode in [ServingMode::Icarus, ServingMode::Baseline] {
+            let mut m = KvCacheManager::new(&cfg(mode, 1024), 64, 4);
+            for model in 0..4 {
+                let sid = model as u64;
+                assert!(matches!(m.begin_sequence(sid, model, &p), Alloc::Ok(_)));
+                m.finish_sequence(sid, &p, Some(sid));
+            }
+            usage.push(m.pool.used());
+        }
+        assert_eq!(usage[1], 4 * usage[0], "Table 1: O(M+N*Lt) vs O(M+Lt)");
+    }
+
+    #[test]
+    fn eviction_frees_space_for_new_sequences() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 8), 64, 1);
+        let p1 = prompt(64, 0); // 4 blocks
+        assert!(matches!(m.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        m.finish_sequence(1, &p1, Some(1));
+        assert_eq!(m.pool.used(), 4);
+        // second distinct prompt needs 8 blocks -> must evict p1's tree
+        let p2 = prompt(128, 900);
+        match m.begin_sequence(2, 0, &p2) {
+            Alloc::Ok(adm) => {
+                assert_eq!(adm.cached_tokens, 0);
+                assert!(adm.dropped_snapshots.contains(&1));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(m.stats.evicted_blocks >= 4);
+    }
+
+    #[test]
+    fn no_space_when_pinned_everywhere() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 4), 64, 1);
+        let p1 = prompt(64, 0); // takes all 4 blocks, active (pinned via own)
+        assert!(matches!(m.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        let p2 = prompt(32, 500);
+        assert_eq!(m.begin_sequence(2, 0, &p2), Alloc::NoSpace);
+        // preempting seq 1 releases space
+        assert_eq!(m.preempt(1), 64);
+        assert!(matches!(m.begin_sequence(2, 0, &p2), Alloc::Ok(_)));
+    }
+
+    #[test]
+    fn append_allocates_on_block_boundary() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 16), 64, 1);
+        let p = prompt(16, 0); // exactly 1 block
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        assert_eq!(m.pool.used(), 1);
+        for _ in 0..16 {
+            assert!(matches!(m.append_tokens(1, 1), Alloc::Ok(_)));
+        }
+        assert_eq!(m.pool.used(), 2, "crossed one boundary");
+    }
+
+    #[test]
+    fn finish_releases_everything_without_snapshot() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 16), 64, 1);
+        let p = prompt(48, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        m.finish_sequence(1, &p, None);
+        assert_eq!(m.pool.used(), 0);
+    }
+
+    #[test]
+    fn prefix_hit_pins_against_eviction() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 8), 64, 1);
+        let p = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        m.finish_sequence(1, &p, Some(9));
+        // active hit
+        let adm = match m.begin_sequence(2, 0, &p) {
+            Alloc::Ok(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(adm.cached_tokens, 64);
+        // new prompt that would need the whole pool cannot evict pinned
+        let p2 = prompt(128, 700);
+        assert_eq!(m.begin_sequence(3, 0, &p2), Alloc::NoSpace);
+    }
+
+    #[test]
+    fn swap_policy_preserves_matchability() {
+        let mut c = cfg(ServingMode::Icarus, 8);
+        c.eviction = EvictionPolicy::Swap;
+        let mut m = KvCacheManager::new(&c, 64, 1);
+        let p1 = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        m.finish_sequence(1, &p1, Some(5));
+        // Force p1's blocks out to the swap tier.
+        let p2 = prompt(128, 300);
+        match m.begin_sequence(2, 0, &p2) {
+            Alloc::Ok(adm) => {
+                assert!(adm.dropped_snapshots.is_empty(), "swapped, not dropped");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(m.swap.swap_outs > 0);
+        assert!(m.swap.used() > 0);
+        m.preempt(2);
+        // p1 is still matchable; admitting it restores from swap and
+        // charges swap-in bytes.
+        match m.begin_sequence(3, 0, &p1) {
+            Alloc::Ok(adm) => {
+                assert_eq!(adm.cached_tokens, 64);
+                assert_eq!(adm.snapshot, Some((5, 64)));
+                assert!(adm.swap_in_bytes > 0, "restore must charge PCIe");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(m.swap.swap_ins > 0);
+    }
+
+    #[test]
+    fn disabled_prefix_caching_never_hits() {
+        let mut c = cfg(ServingMode::Icarus, 256);
+        c.prefix_caching = false;
+        let mut m = KvCacheManager::new(&c, 64, 1);
+        let p = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        let dropped = m.finish_sequence(1, &p, Some(3));
+        assert_eq!(dropped, vec![3], "snapshot dropped immediately");
+        match m.begin_sequence(2, 0, &p) {
+            Alloc::Ok(adm) => assert_eq!(adm.cached_tokens, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Paged KV-cache management (the policy layer of the serving system).
+//!
+//! Layout mirrors vLLM: a block pool under a (simulated-GPU) byte budget,
+//! per-namespace radix prefix trees, LRU eviction with recompute or swap,
+//! and per-sequence block ownership.  `KvCacheManager` is the façade the
+//! scheduler talks to; `ServingMode` decides whether all models share one
+//! namespace (ICaRus) or get one each (baseline).
+
+pub mod block;
+pub mod manager;
+pub mod radix;
+pub mod swap;
+
+pub use block::{BlockId, BlockPool};
+pub use manager::{Admission, Alloc, KvCacheManager};
+pub use radix::{Match, RadixCache};
+pub use swap::SwapTier;

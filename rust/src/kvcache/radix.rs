@@ -1,0 +1,452 @@
+//! Radix (block-granular trie) prefix cache, one tree per namespace.
+//!
+//! Mirrors vLLM/SGLang prefix caching: completed contexts are inserted
+//! at block granularity; new prompts walk the trie to find the longest
+//! cached prefix.  Nodes carry an opaque `payload` the engine uses to
+//! locate the device-side cache snapshot for the matched context.
+//!
+//! In ICaRus mode every model shares namespace 0 — a context produced
+//! while serving model A is a cache hit for model B (the paper's
+//! cross-model prefix caching).  In baseline mode each model gets its own
+//! tree and re-prefills identical prompts (the paper's Fig 1a problem).
+
+use std::collections::HashMap;
+
+use super::block::{BlockId, BlockPool};
+
+pub type NodeId = usize;
+
+#[derive(Debug)]
+struct Node {
+    /// Token span this node covers (exactly one block, except the root).
+    tokens: Vec<u32>,
+    block: Option<BlockId>,
+    children: HashMap<u32, Vec<NodeId>>, // first token -> candidates
+    parent: Option<NodeId>,
+    /// Sequences currently pinning this node (prefix in active use).
+    pins: u32,
+    last_access: u64,
+    /// Opaque engine payload (cache snapshot id) covering the context
+    /// from the root through this node.
+    payload: Option<u64>,
+    /// Block released to the pool but context preserved in the swap
+    /// tier — still matchable; a hit must re-allocate and swap in.
+    swapped: bool,
+    dead: bool,
+}
+
+/// Result of a prefix match.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Match {
+    /// Total prompt tokens covered by cached blocks.
+    pub matched_tokens: usize,
+    /// Node ids along the matched path (for pin/unpin).
+    pub path: Vec<NodeId>,
+    /// Deepest payload on the path and the token count it covers.
+    pub payload: Option<(u64, usize)>,
+    /// Nodes on the path whose blocks live in the swap tier — the
+    /// manager must re-allocate + swap them in before use.
+    pub swapped_nodes: Vec<NodeId>,
+}
+
+#[derive(Debug)]
+pub struct RadixCache {
+    nodes: Vec<Node>,
+    root: NodeId,
+    clock: u64,
+    /// Number of resident (block-holding, live) nodes.
+    resident: usize,
+}
+
+impl Default for RadixCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixCache {
+    pub fn new() -> Self {
+        let root = Node {
+            tokens: Vec::new(),
+            block: None,
+            children: HashMap::new(),
+            parent: None,
+            pins: 0,
+            last_access: 0,
+            payload: None,
+            swapped: false,
+            dead: false,
+        };
+        RadixCache { nodes: vec![root], root: 0, clock: 0, resident: 0 }
+    }
+
+    pub fn resident_nodes(&self) -> usize {
+        self.resident
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached prefix of `prompt` (block-aligned).  Touches the
+    /// path for LRU purposes but does not pin it.
+    pub fn lookup(&mut self, prompt: &[u32]) -> Match {
+        let now = self.tick();
+        let mut cur = self.root;
+        let mut matched = 0usize;
+        let mut path = Vec::new();
+        let mut payload = None;
+        let mut swapped_nodes = Vec::new();
+        loop {
+            let rest = &prompt[matched..];
+            if rest.is_empty() {
+                break;
+            }
+            let Some(cands) = self.nodes[cur].children.get(&rest[0]) else {
+                break;
+            };
+            let mut next = None;
+            for &c in cands {
+                let n = &self.nodes[c];
+                if !n.dead && rest.len() >= n.tokens.len() && rest[..n.tokens.len()] == n.tokens[..] {
+                    next = Some(c);
+                    break;
+                }
+            }
+            let Some(c) = next else { break };
+            matched += self.nodes[c].tokens.len();
+            self.nodes[c].last_access = now;
+            path.push(c);
+            if self.nodes[c].swapped {
+                swapped_nodes.push(c);
+            }
+            if let Some(p) = self.nodes[c].payload {
+                payload = Some((p, matched));
+            }
+            cur = c;
+        }
+        Match { matched_tokens: matched, path, payload, swapped_nodes }
+    }
+
+    /// Pin every node on a matched path so an active sequence's prefix
+    /// can't be evicted underneath it.  Pins are advisory counters that
+    /// `evict`/`evict_swap` respect; block refcounts stay owned by the
+    /// tree alone (a node's residency may legitimately change between
+    /// pin and unpin via the swap tier, so pins must not alias them).
+    pub fn pin(&mut self, m: &Match, _pool: &mut BlockPool) {
+        for &n in &m.path {
+            self.nodes[n].pins += 1;
+        }
+    }
+
+    pub fn unpin(&mut self, m: &Match, _pool: &mut BlockPool) {
+        for &n in &m.path {
+            debug_assert!(self.nodes[n].pins > 0);
+            self.nodes[n].pins -= 1;
+        }
+    }
+
+    /// Insert a completed context.  Only full blocks are cached.  Blocks
+    /// for the uncached portion are allocated from the pool (returns
+    /// false and inserts nothing on pool exhaustion — callers should
+    /// evict and retry or skip caching).  `payload` is attached to the
+    /// deepest inserted/matched node.
+    pub fn insert(
+        &mut self,
+        tokens: &[u32],
+        payload: u64,
+        pool: &mut BlockPool,
+    ) -> bool {
+        let block_tokens = pool.block_tokens;
+        let full = (tokens.len() / block_tokens) * block_tokens;
+        let m = self.lookup(&tokens[..full]);
+        let mut cur = *m.path.last().unwrap_or(&self.root);
+        let mut off = m.matched_tokens;
+        debug_assert_eq!(off % block_tokens, 0);
+        let needed = (full - off) / block_tokens;
+        if pool.free_blocks() < needed {
+            return false;
+        }
+        let now = self.tick();
+        while off < full {
+            let span = &tokens[off..off + block_tokens];
+            let block = pool.alloc(1).expect("checked free_blocks")[0];
+            let id = self.nodes.len();
+            self.nodes.push(Node {
+                tokens: span.to_vec(),
+                block: Some(block),
+                children: HashMap::new(),
+                parent: Some(cur),
+                pins: 0,
+                last_access: now,
+                payload: None,
+                swapped: false,
+                dead: false,
+            });
+            self.nodes[cur].children.entry(span[0]).or_default().push(id);
+            self.resident += 1;
+            cur = id;
+            off += block_tokens;
+        }
+        if cur != self.root {
+            self.nodes[cur].payload = Some(payload);
+            self.nodes[cur].last_access = now;
+        }
+        true
+    }
+
+    /// Evict up to `want` unpinned leaf blocks, least-recently-used
+    /// first.  Returns (blocks_freed, payloads_of_dropped_nodes) so the
+    /// engine can drop the matching cache snapshots (or swap them out).
+    pub fn evict(&mut self, want: usize, pool: &mut BlockPool) -> (usize, Vec<u64>) {
+        let mut freed = 0;
+        let mut dropped = Vec::new();
+        while freed < want {
+            // Scan for the LRU evictable leaf.  O(nodes) per eviction;
+            // fine at simulation scale (see micro_kvcache bench).
+            let mut victim: Option<(u64, NodeId)> = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if n.dead || i == self.root || n.pins > 0 || n.block.is_none() {
+                    continue;
+                }
+                let has_live_children =
+                    n.children.values().flatten().any(|&c| !self.nodes[c].dead);
+                if has_live_children {
+                    continue;
+                }
+                if victim.map_or(true, |(t, _)| n.last_access < t) {
+                    victim = Some((n.last_access, i));
+                }
+            }
+            let Some((_, v)) = victim else { break };
+            let node = &mut self.nodes[v];
+            node.dead = true;
+            if let Some(b) = node.block.take() {
+                pool.release(b);
+                freed += 1;
+                self.resident -= 1;
+            }
+            if let Some(p) = node.payload.take() {
+                dropped.push(p);
+            }
+            // Also drop payloads that are now unreachable snapshots on
+            // interior nodes?  No: interior payloads remain valid (they
+            // cover shorter prefixes still resident).
+            let parent = self.nodes[v].parent;
+            if let Some(p) = parent {
+                let first = self.nodes[v].tokens[0];
+                if let Some(list) = self.nodes[p].children.get_mut(&first) {
+                    list.retain(|&c| c != v);
+                }
+            }
+        }
+        (freed, dropped)
+    }
+
+    /// Swap-mode eviction: free up to `want` unpinned leaf blocks but
+    /// keep the nodes matchable (context preserved in the swap tier).
+    /// Returns blocks freed.  Payloads are NOT dropped — the engine's
+    /// snapshot handles stay alive, acting as the host-side copy.
+    pub fn evict_swap(&mut self, want: usize, pool: &mut BlockPool) -> usize {
+        let mut freed = 0;
+        while freed < want {
+            let mut victim: Option<(u64, NodeId)> = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if n.dead || i == self.root || n.pins > 0 || n.block.is_none() {
+                    continue;
+                }
+                // Leaf-first among block-holding nodes: children that
+                // still hold blocks pin their ancestors in place.
+                let has_resident_children = n
+                    .children
+                    .values()
+                    .flatten()
+                    .any(|&c| !self.nodes[c].dead && self.nodes[c].block.is_some());
+                if has_resident_children {
+                    continue;
+                }
+                if victim.map_or(true, |(t, _)| n.last_access < t) {
+                    victim = Some((n.last_access, i));
+                }
+            }
+            let Some((_, v)) = victim else { break };
+            let node = &mut self.nodes[v];
+            if let Some(b) = node.block.take() {
+                pool.release(b);
+                freed += 1;
+                self.resident -= 1;
+            }
+            node.swapped = true;
+        }
+        freed
+    }
+
+    /// Restore swapped nodes on a matched path: re-allocate one block
+    /// per node and clear the swapped flag.  All-or-nothing; returns
+    /// the number of blocks restored (0 if the pool lacks room).
+    pub fn restore(&mut self, nodes: &[NodeId], pool: &mut BlockPool) -> usize {
+        if pool.free_blocks() < nodes.len() {
+            return 0;
+        }
+        for &n in nodes {
+            debug_assert!(self.nodes[n].swapped && self.nodes[n].block.is_none());
+            let b = pool.alloc(1).expect("checked free_blocks")[0];
+            self.nodes[n].block = Some(b);
+            self.nodes[n].swapped = false;
+            self.resident += 1;
+        }
+        nodes.len()
+    }
+
+    /// Drop everything unpinned (used on engine reset between runs).
+    pub fn clear(&mut self, pool: &mut BlockPool) -> Vec<u64> {
+        let (_, dropped) = self.evict(usize::MAX - 1, pool);
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> BlockPool {
+        BlockPool::new(1024 * 16 * 64, 16, 64) // 1024 blocks of 16 tokens
+    }
+
+    fn toks(n: usize, salt: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 7 + salt).collect()
+    }
+
+    #[test]
+    fn miss_on_empty() {
+        let mut r = RadixCache::new();
+        let m = r.lookup(&toks(32, 0));
+        assert_eq!(m.matched_tokens, 0);
+        assert!(m.path.is_empty());
+    }
+
+    #[test]
+    fn insert_then_full_hit() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let t = toks(48, 0);
+        assert!(r.insert(&t, 99, &mut p));
+        assert_eq!(p.used(), 3);
+        let m = r.lookup(&t);
+        assert_eq!(m.matched_tokens, 48);
+        assert_eq!(m.payload, Some((99, 48)));
+    }
+
+    #[test]
+    fn partial_block_not_cached() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let t = toks(40, 0); // 2.5 blocks -> 2 cached
+        assert!(r.insert(&t, 1, &mut p));
+        assert_eq!(p.used(), 2);
+        let m = r.lookup(&t);
+        assert_eq!(m.matched_tokens, 32);
+    }
+
+    #[test]
+    fn shared_prefix_single_storage() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let a = toks(32, 0);
+        let mut b = a.clone();
+        b.extend(toks(16, 500)); // same first 32, diverges after
+        assert!(r.insert(&a, 1, &mut p));
+        let before = p.used();
+        assert!(r.insert(&b, 2, &mut p));
+        assert_eq!(p.used(), before + 1, "only divergent block allocated");
+        let m = r.lookup(&b);
+        assert_eq!(m.matched_tokens, 48);
+        assert_eq!(m.payload, Some((2, 48)));
+    }
+
+    #[test]
+    fn payload_nearest_on_partial_match() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let a = toks(32, 0);
+        assert!(r.insert(&a, 7, &mut p));
+        // prompt extends beyond cached context
+        let mut b = a.clone();
+        b.extend(toks(20, 900));
+        let m = r.lookup(&b);
+        assert_eq!(m.matched_tokens, 32);
+        assert_eq!(m.payload, Some((7, 32)));
+    }
+
+    #[test]
+    fn pinned_blocks_survive_eviction() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let a = toks(32, 0);
+        let b = toks(32, 1000);
+        assert!(r.insert(&a, 1, &mut p));
+        assert!(r.insert(&b, 2, &mut p));
+        let m = r.lookup(&a);
+        r.pin(&m, &mut p);
+        let (freed, dropped) = r.evict(100, &mut p);
+        assert_eq!(freed, 2, "only b's two blocks evictable");
+        assert_eq!(dropped, vec![2]);
+        let m2 = r.lookup(&a);
+        assert_eq!(m2.matched_tokens, 32);
+        r.unpin(&m, &mut p);
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_first() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let a = toks(32, 0);
+        let b = toks(32, 1000);
+        assert!(r.insert(&a, 1, &mut p));
+        assert!(r.insert(&b, 2, &mut p));
+        let _ = r.lookup(&a); // touch a — b becomes LRU
+        let (freed, dropped) = r.evict(1, &mut p);
+        assert_eq!(freed, 1);
+        assert!(dropped.is_empty() || dropped == vec![2]);
+        // a still fully matchable
+        assert_eq!(r.lookup(&a).matched_tokens, 32);
+    }
+
+    #[test]
+    fn evict_leaf_then_parent() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let t = toks(48, 0);
+        assert!(r.insert(&t, 1, &mut p));
+        let (freed, _) = r.evict(3, &mut p);
+        assert_eq!(freed, 3);
+        assert_eq!(p.used(), 0);
+        assert_eq!(r.lookup(&t).matched_tokens, 0);
+    }
+
+    #[test]
+    fn insert_fails_cleanly_when_pool_full() {
+        let mut r = RadixCache::new();
+        let mut p = BlockPool::new(2 * 16 * 64, 16, 64); // 2 blocks
+        assert!(r.insert(&toks(32, 0), 1, &mut p));
+        assert!(!r.insert(&toks(32, 999), 2, &mut p));
+        assert_eq!(p.used(), 2);
+    }
+
+    #[test]
+    fn pin_unpin_balances_refcounts() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let t = toks(32, 0);
+        assert!(r.insert(&t, 1, &mut p));
+        let used = p.used();
+        let m = r.lookup(&t);
+        r.pin(&m, &mut p);
+        r.unpin(&m, &mut p);
+        assert_eq!(p.used(), used);
+        // now evictable
+        let (freed, _) = r.evict(10, &mut p);
+        assert_eq!(freed, 2);
+    }
+}

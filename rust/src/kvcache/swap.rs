@@ -1,0 +1,88 @@
+//! Host-side swap tier accounting (paper Appendix E).
+//!
+//! When the eviction policy is `Swap`, victim cache bytes move to a
+//! bounded host buffer instead of being dropped; restoring charges
+//! simulated PCIe time in the executor cost model.  This module tracks
+//! occupancy and traffic; it holds no data (the engine keeps snapshot
+//! handles alive while swapped).
+
+#[derive(Debug)]
+pub struct SwapTier {
+    capacity: u64,
+    used: u64,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+}
+
+impl SwapTier {
+    pub fn new(capacity: u64) -> Self {
+        SwapTier { capacity, used: 0, swap_outs: 0, swap_ins: 0, bytes_out: 0, bytes_in: 0 }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Reserve space for an evicted context; false -> must drop instead.
+    pub fn swap_out(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        self.swap_outs += 1;
+        self.bytes_out += bytes;
+        true
+    }
+
+    /// Bring a context back; the space is released.
+    pub fn swap_in(&mut self, bytes: u64) {
+        debug_assert!(self.used >= bytes);
+        self.used = self.used.saturating_sub(bytes);
+        self.swap_ins += 1;
+        self.bytes_in += bytes;
+    }
+
+    /// Discard a swapped context without restoring it.
+    pub fn discard(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_in_roundtrip() {
+        let mut s = SwapTier::new(100);
+        assert!(s.swap_out(60));
+        assert_eq!(s.free(), 40);
+        s.swap_in(60);
+        assert_eq!(s.used(), 0);
+        assert_eq!(s.swap_outs, 1);
+        assert_eq!(s.swap_ins, 1);
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        let mut s = SwapTier::new(100);
+        assert!(s.swap_out(80));
+        assert!(!s.swap_out(30));
+        assert_eq!(s.used(), 80);
+    }
+
+    #[test]
+    fn discard_frees_without_counting_in() {
+        let mut s = SwapTier::new(100);
+        assert!(s.swap_out(50));
+        s.discard(50);
+        assert_eq!(s.used(), 0);
+        assert_eq!(s.swap_ins, 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # ICaRus — Identical Cache Reuse for Efficient Multi Model Inference
+//!
+//! Rust + JAX + Pallas reproduction of the ICaRus serving system
+//! (Woo, Kil, et al., 2026).  Multiple task-specialized models share one
+//! KV cache because only the frozen logical encoder (the base model)
+//! ever writes cache entries; task adapters live purely in the logical
+//! decoder.
+//!
+//! Three layers (see DESIGN.md):
+//!   * L1 — Pallas kernels (paired-query attention, fused ICaRusLinear),
+//!     authored in `python/compile/kernels/`, verified against jnp
+//!     oracles, AOT-lowered into the HLO artifacts.
+//!   * L2 — the JAX transformer (`python/compile/model.py`), lowered once
+//!     to HLO text per serving config.
+//!   * L3 — this crate: the multi-model serving engine (paged KV cache,
+//!     cross-model prefix caching, continuous batching, agentic workload
+//!     drivers) plus the PJRT runtime that executes the artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! python invocation; the `icarus` binary is self-contained afterwards.
+
+pub mod bench_util;
+pub mod config;
+pub mod engine;
+pub mod json;
+pub mod kvcache;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod tokenizer;
+pub mod trace;
+pub mod workload;
+
+pub use config::{AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig};
+pub use engine::executor::{CostModel, Executor, SimExecutor};
+pub use engine::Engine;
+pub use kvcache::KvCacheManager;
+pub use metrics::ServingStats;

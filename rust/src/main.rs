@@ -1,0 +1,203 @@
+//! `icarus` — CLI for the ICaRus multi-model serving engine.
+//!
+//! Subcommands:
+//!   serve  — run one workload configuration and print serving stats.
+//!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
+//!   info   — show artifact manifest details.
+//!
+//! Examples:
+//!   icarus serve --mode icarus --models 4 --qps 0.4 --executor sim
+//!   icarus serve --executor pjrt --config serve-small --requests 8
+//!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
+
+use anyhow::{anyhow, Result};
+
+use icarus::config::{
+    AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
+};
+use icarus::engine::executor::{CostModel, SimExecutor};
+use icarus::engine::Engine;
+use icarus::runtime::{Manifest, PjrtExecutor};
+use icarus::workload::generate;
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {}", argv[i]))?;
+            let v = argv.get(i + 1).ok_or_else(|| anyhow!("missing value for --{k}"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn serving_config(a: &Args) -> Result<ServingConfig> {
+    Ok(ServingConfig {
+        mode: ServingMode::parse(a.get("mode").unwrap_or("icarus"))?,
+        kv_pool_bytes: a.u64("kv-pool-mb", 64)? << 20,
+        block_tokens: a.usize("block-tokens", 16)?,
+        max_batch: a.usize("max-batch", 16)?,
+        max_prefill_tokens: a.usize("max-prefill-tokens", 2048)?,
+        eviction: match a.get("eviction").unwrap_or("recompute") {
+            "recompute" => EvictionPolicy::Recompute,
+            "swap" => EvictionPolicy::Swap,
+            other => anyhow::bail!("unknown eviction policy {other}"),
+        },
+        swap_bytes: a.u64("swap-mb", 4096)? << 20,
+        prefix_caching: a.get("prefix-caching").unwrap_or("on") != "off",
+    })
+}
+
+fn workload_config(a: &Args) -> Result<WorkloadConfig> {
+    Ok(WorkloadConfig {
+        pattern: AgentPattern::parse(a.get("pattern").unwrap_or("react"))?,
+        n_models: a.usize("models", 4)?,
+        qps: a.f64("qps", 0.4)?,
+        n_requests: a.usize("requests", 128)?,
+        routing: match a.get("routing").unwrap_or("round_robin") {
+            "round_robin" => Routing::RoundRobin,
+            "skewed" => Routing::Skewed { hot_p_percent: a.u64("hot-p", 50)? as u8 },
+            other => anyhow::bail!("unknown routing {other}"),
+        },
+        seed: a.u64("seed", 0)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let scfg = serving_config(a)?;
+    let wcfg = workload_config(a)?;
+    let workload = generate(&wcfg);
+    let stats = match a.get("executor").unwrap_or("sim") {
+        "sim" => {
+            // serve-small KV bytes/token unless overridden.
+            let kv_bpt = a.u64("kv-bytes-per-token", 2048)?;
+            let exec = SimExecutor::new(CostModel::default(), scfg.mode);
+            Engine::new(scfg.clone(), kv_bpt, wcfg.n_models, exec).run(workload)
+        }
+        "pjrt" => {
+            let dir = a.get("artifacts").unwrap_or("artifacts");
+            let config = a.get("config").unwrap_or("serve-small");
+            let manifest = Manifest::load(dir)?;
+            let kv_bpt = manifest.spec(config)?.kv_bytes_per_token;
+            let exec = PjrtExecutor::load(&manifest, config, scfg.mode, wcfg.n_models)?;
+            Engine::new(scfg.clone(), kv_bpt, wcfg.n_models, exec).run(workload)
+        }
+        other => anyhow::bail!("unknown executor {other}"),
+    };
+    let out = icarus::json::obj(vec![
+        ("serving", scfg.to_json()),
+        ("workload", wcfg.to_json()),
+        ("stats", stats.to_json()),
+    ]);
+    println!("{}", out.to_string_pretty());
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let scfg = serving_config(a)?;
+    let mut wcfg = workload_config(a)?;
+    let qps_list: Vec<f64> = a
+        .get("qps-list")
+        .unwrap_or("0.2,0.4,0.6,0.8")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad qps {s}")))
+        .collect::<Result<_>>()?;
+    let kv_bpt = a.u64("kv-bytes-per-token", 2048)?;
+    println!("mode={} models={} pattern={}", scfg.mode.as_str(), wcfg.n_models, wcfg.pattern.as_str());
+    println!("{:>6} {:>10} {:>10} {:>12} {:>10}", "qps", "p95(s)", "p50(s)", "tput(tok/s)", "hit-rate");
+    for &qps in &qps_list {
+        wcfg.qps = qps;
+        let exec = SimExecutor::new(CostModel::default(), scfg.mode);
+        let stats = Engine::new(scfg.clone(), kv_bpt, wcfg.n_models, exec).run(generate(&wcfg));
+        let tl = stats.turn_latency.as_ref().unwrap();
+        println!(
+            "{:>6.2} {:>10.3} {:>10.3} {:>12.1} {:>10.3}",
+            qps,
+            tl.p95(),
+            tl.p50(),
+            stats.throughput_tok_s(),
+            stats.cache_hit_rate()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let dir = a.get("artifacts").unwrap_or("artifacts");
+    let m = Manifest::load(dir)?;
+    println!("artifacts: {} (kernels={})", m.dir.display(), m.kernels);
+    for (name, spec) in &m.configs {
+        println!(
+            "  {name}: d={} L={} H={}/{} dh={} ffn={} vocab={} max_seq={} params={} kv={}B/token",
+            spec.d_model,
+            spec.layers,
+            spec.heads,
+            spec.kv_heads,
+            spec.head_dim,
+            spec.ffn,
+            spec.vocab,
+            spec.max_seq,
+            spec.param_count,
+            spec.kv_bytes_per_token
+        );
+        println!("    prefill buckets: {:?}", spec.prefill.keys().collect::<Vec<_>>());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            eprintln!("usage: icarus <serve|sweep|info> [--flag value ...]");
+            std::process::exit(2);
+        }
+    };
+    let args = Args::parse(rest)?;
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("unknown command {other}; expected serve|sweep|info");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Serving metrics: streaming latency histograms (P50/P95/P99),
+//! throughput counters and memory gauges — what the paper's figures plot.
+
+/// Log-bucketed latency histogram.  Buckets are exponential with ~3%
+/// resolution, covering 1µs .. ~1.2h, so P95 extraction is O(buckets)
+/// and recording is O(1) with no allocation on the hot path.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BUCKETS: usize = 768;
+const GROWTH: f64 = 1.03;
+const BASE: f64 = 1e-6; // seconds
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; BUCKETS], total: 0, sum: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= BASE {
+            return 0;
+        }
+        let idx = (v / BASE).ln() / GROWTH.ln();
+        (idx as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.counts[Self::bucket(seconds)] += 1;
+        self.total += 1;
+        self.sum += seconds;
+        self.min = self.min.min(seconds);
+        self.max = self.max.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile in [0,1] -> seconds (upper edge of the containing bucket).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return BASE * GROWTH.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Counters a serving run accumulates; the benches print these as the
+/// paper's figure rows.
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    /// End-to-end request latency (submit -> final token).
+    pub request_latency: Option<Histogram>,
+    /// Per-turn latency (turn submit -> turn done) — what Fig 4 reports.
+    pub turn_latency: Option<Histogram>,
+    pub time_to_first_token: Option<Histogram>,
+    pub completed_requests: u64,
+    pub completed_turns: u64,
+    pub generated_tokens: u64,
+    pub prefill_tokens: u64,
+    /// Prefill tokens that were served from prefix cache instead.
+    pub cached_prefill_tokens: u64,
+    /// Tokens recomputed because their cache was evicted.
+    pub recomputed_tokens: u64,
+    pub evictions: u64,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    pub preemptions: u64,
+    /// Peak KV pool usage in bytes (the memory-explosion signal).
+    pub peak_kv_bytes: u64,
+    pub wall_seconds: f64,
+}
+
+impl ServingStats {
+    pub fn new() -> Self {
+        ServingStats {
+            request_latency: Some(Histogram::new()),
+            turn_latency: Some(Histogram::new()),
+            time_to_first_token: Some(Histogram::new()),
+            ..Default::default()
+        }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_seconds
+        }
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.completed_requests as f64 / self.wall_seconds
+        }
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.prefill_tokens + self.cached_prefill_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.cached_prefill_tokens as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::{num, obj};
+        let h = |h: &Option<Histogram>| {
+            let h = h.as_ref().expect("stats built with new()");
+            obj(vec![
+                ("p50", num(h.p50())),
+                ("p95", num(h.p95())),
+                ("p99", num(h.p99())),
+                ("mean", num(h.mean())),
+                ("max", num(h.max())),
+                ("count", num(h.count() as f64)),
+            ])
+        };
+        obj(vec![
+            ("request_latency", h(&self.request_latency)),
+            ("turn_latency", h(&self.turn_latency)),
+            ("ttft", h(&self.time_to_first_token)),
+            ("completed_requests", num(self.completed_requests as f64)),
+            ("completed_turns", num(self.completed_turns as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("prefill_tokens", num(self.prefill_tokens as f64)),
+            ("cached_prefill_tokens", num(self.cached_prefill_tokens as f64)),
+            ("recomputed_tokens", num(self.recomputed_tokens as f64)),
+            ("evictions", num(self.evictions as f64)),
+            ("swap_outs", num(self.swap_outs as f64)),
+            ("swap_ins", num(self.swap_ins as f64)),
+            ("preemptions", num(self.preemptions as f64)),
+            ("peak_kv_bytes", num(self.peak_kv_bytes as f64)),
+            ("throughput_tok_s", num(self.throughput_tok_s())),
+            ("cache_hit_rate", num(self.cache_hit_rate())),
+            ("wall_seconds", num(self.wall_seconds)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        assert!(h.p99() <= h.max() * 1.04);
+    }
+
+    #[test]
+    fn p95_accuracy() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 1s uniform
+        }
+        let p95 = h.p95();
+        assert!((p95 - 0.95).abs() / 0.95 < 0.05, "p95 {}", p95);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        h.record(1.0);
+        h.record(3.0);
+        assert_eq!(h.mean(), 2.0);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.p95(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(0.1);
+        b.record(0.2);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_json_has_keys() {
+        let mut s = ServingStats::new();
+        s.generated_tokens = 10;
+        s.wall_seconds = 2.0;
+        let v = s.to_json();
+        assert_eq!(v.get("generated_tokens").unwrap().as_u64(), Some(10));
+        assert_eq!(v.get("throughput_tok_s").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn hit_rate() {
+        let mut s = ServingStats::new();
+        s.prefill_tokens = 25;
+        s.cached_prefill_tokens = 75;
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,192 @@
+//! AOT artifact manifest: what `python -m compile.aot` wrote and how to
+//! call it (argument orders, shapes, file names).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Value;
+
+/// One serving config's artifacts + architecture numbers.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub kv_bytes_per_token: u64,
+    pub param_count: u64,
+    pub weights_file: String,
+    /// npz key order matching the artifact's flat parameter arguments.
+    pub param_names: Vec<String>,
+    /// Flat LoRA argument names (layers.i.target.{A,B}) — the baseline
+    /// decode / prefill artifact argument order.
+    pub lora_names: Vec<String>,
+    /// Subset taken by the ICaRus decode artifact (no k/v: the logical
+    /// encoder is frozen, so jax prunes those parameters).
+    pub lora_names_icarus: Vec<String>,
+    /// Prefill bucket length -> artifact file.
+    pub prefill: BTreeMap<usize, String>,
+    pub decode_baseline: String,
+    pub decode_icarus: String,
+}
+
+impl ModelSpec {
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill.keys().copied().find(|&b| b >= len)
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub kernels: String,
+    pub configs: BTreeMap<String, ModelSpec>,
+}
+
+fn get_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key).and_then(Value::as_usize).ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = Value::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let kernels = v
+            .get("kernels")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let mut configs = BTreeMap::new();
+        let cfgs = v.get("configs").and_then(Value::as_obj).ok_or_else(|| anyhow!("no configs"))?;
+        for (name, c) in cfgs {
+            let mut prefill = BTreeMap::new();
+            if let Some(p) = c.get("prefill").and_then(Value::as_obj) {
+                for (bucket, file) in p {
+                    prefill.insert(
+                        bucket.parse::<usize>().context("bucket key")?,
+                        file.as_str().ok_or_else(|| anyhow!("bad prefill file"))?.to_string(),
+                    );
+                }
+            }
+            let names = |key: &str| -> Result<Vec<String>> {
+                Ok(c.get(key)
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow!("missing {key}"))?
+                    .iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect())
+            };
+            configs.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    vocab: get_usize(c, "vocab")?,
+                    d_model: get_usize(c, "d_model")?,
+                    layers: get_usize(c, "layers")?,
+                    heads: get_usize(c, "heads")?,
+                    kv_heads: get_usize(c, "kv_heads")?,
+                    head_dim: get_usize(c, "head_dim")?,
+                    ffn: get_usize(c, "ffn")?,
+                    max_seq: get_usize(c, "max_seq")?,
+                    lora_rank: get_usize(c, "lora_rank")?,
+                    lora_alpha: c
+                        .get("lora_alpha")
+                        .and_then(Value::as_f64)
+                        .ok_or_else(|| anyhow!("lora_alpha"))?,
+                    kv_bytes_per_token: get_usize(c, "kv_bytes_per_token")? as u64,
+                    param_count: get_usize(c, "param_count")? as u64,
+                    weights_file: c
+                        .get("weights")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("weights"))?
+                        .to_string(),
+                    param_names: names("param_names")?,
+                    lora_names: names("lora_names")?,
+                    lora_names_icarus: names("lora_names_icarus")
+                        .unwrap_or_default(),
+                    prefill,
+                    decode_baseline: c
+                        .get("decode_baseline")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("decode_baseline"))?
+                        .to_string(),
+                    decode_icarus: c
+                        .get("decode_icarus")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("decode_icarus"))?
+                        .to_string(),
+                },
+            );
+        }
+        Ok(Manifest { dir, kernels, configs })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ModelSpec> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config {name} not in manifest ({:?})", self.configs.keys()))
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> String {
+        r#"{
+          "kernels": "pallas",
+          "configs": {
+            "serve-small": {
+              "vocab": 2048, "d_model": 128, "layers": 4, "heads": 8,
+              "kv_heads": 4, "head_dim": 16, "ffn": 352, "max_seq": 1024,
+              "lora_rank": 8, "lora_alpha": 16.0,
+              "kv_bytes_per_token": 2048, "param_count": 1000000,
+              "weights": "weights_serve-small.npz",
+              "param_names": ["embed", "norm"],
+              "lora_names": ["layers.0.q.A"],
+              "lora_names_icarus": ["layers.0.q.A"],
+              "prefill": {"32": "p32.hlo.txt", "128": "p128.hlo.txt"},
+              "decode_baseline": "db.hlo.txt",
+              "decode_icarus": "di.hlo.txt"
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_bucket_selection() {
+        let dir = std::env::temp_dir().join(format!("icarus_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let s = m.spec("serve-small").unwrap();
+        assert_eq!(s.layers, 4);
+        assert_eq!(s.bucket_for(10), Some(32));
+        assert_eq!(s.bucket_for(33), Some(128));
+        assert_eq!(s.bucket_for(1000), None);
+        assert_eq!(s.kv_dim(), 64);
+        assert!(m.spec("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime: AOT artifact loading + PJRT execution (the xla crate).
+//!
+//! `Manifest` describes what `make artifacts` produced; `PjrtExecutor`
+//! implements the engine's `Executor` trait over the compiled HLO.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ModelSpec};
+pub use pjrt::{PjrtExecutor, PjrtStats};

@@ -1,0 +1,479 @@
+//! PJRT executor: loads the AOT HLO-text artifacts and runs real
+//! prefill/decode on the request path (python is long gone by now).
+//!
+//! Cache representation: the published `xla` crate (0.1.6 / xla_extension
+//! 0.5.1) returns a tuple-rooted computation as ONE tuple buffer and has
+//! no buffer-level untuple, so cache state round-trips through host
+//! `Literal`s between steps (on the CPU PJRT client the "device" is host
+//! memory, so these are memcpys; see EXPERIMENTS.md §Perf for the
+//! measured cost and DESIGN.md for the TPU story).  Base weights and
+//! LoRA adapters are uploaded once and stay device-resident across steps
+//! (§Perf iteration 2: re-uploading them per step dominated decode).
+//!
+//! Snapshot ids map to `Rc<CacheLits>`: publishing a prefix-cache
+//! snapshot is a refcount bump, not a copy.
+
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::ServingMode;
+use crate::engine::executor::{DecodeSlot, Executor, PrefillOut, SnapshotId};
+use crate::rng::Rng;
+
+use super::manifest::{Manifest, ModelSpec};
+
+/// K/V cache literals for one context ([L, max_seq, KV, dh] f32 each).
+pub struct CacheLits {
+    pub k: Literal,
+    pub v: Literal,
+}
+
+pub struct PjrtExecutor {
+    client: PjRtClient,
+    spec: ModelSpec,
+    mode: ServingMode,
+    prefill_exes: BTreeMap<usize, PjRtLoadedExecutable>,
+    decode_exe: PjRtLoadedExecutable,
+    /// Base weights in artifact argument order, resident as device
+    /// buffers (uploaded once — re-uploading ~5 MB of literals per
+    /// decode step costs more than the step's compute; §Perf).
+    weights: Vec<PjRtBuffer>,
+    /// Backing literals for `weights` — BufferFromHostLiteral copies
+    /// asynchronously, so the source must outlive the executor.
+    _weights_backing: Vec<Literal>,
+    /// Per-model LoRA buffers in artifact argument order.
+    adapters: Vec<Vec<PjRtBuffer>>,
+    /// All-zero adapter — ICaRus prefill must be pure logical encoder.
+    zero_adapter: Vec<PjRtBuffer>,
+    /// Indices into the full adapter list forming the ICaRus decode
+    /// artifact's argument subset (jax prunes the unused k/v params).
+    icarus_lora_idx: Vec<usize>,
+    snapshots: HashMap<SnapshotId, Rc<CacheLits>>,
+    next_id: SnapshotId,
+    pub swap_bandwidth: f64,
+    pub stats: PjrtStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct PjrtStats {
+    pub prefill_calls: u64,
+    pub prefill_secs: f64,
+    pub decode_calls: u64,
+    pub decode_slots: u64,
+    pub decode_secs: f64,
+    pub suffix_decode_tokens: u64,
+}
+
+fn compile(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+}
+
+fn argmax(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+impl PjrtExecutor {
+    /// Load artifacts for `config` and build `n_models` LoRA adapters.
+    ///
+    /// Adapter values are deterministic pseudo-random per model id —
+    /// serving behaviour depends on their shape/motion, not their
+    /// training state; trained adapters from `compile/train.py` can be
+    /// dropped in via the same npz path.
+    pub fn load(
+        manifest: &Manifest,
+        config: &str,
+        mode: ServingMode,
+        n_models: usize,
+    ) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let spec = manifest.spec(config)?.clone();
+
+        let mut prefill_exes = BTreeMap::new();
+        for (&bucket, file) in &spec.prefill {
+            prefill_exes.insert(bucket, compile(&client, &manifest.path(file))?);
+        }
+        let decode_file = match mode {
+            ServingMode::Baseline => &spec.decode_baseline,
+            ServingMode::Icarus => &spec.decode_icarus,
+        };
+        let decode_exe = compile(&client, &manifest.path(decode_file))?;
+
+        // Load weights as literals, then upload once.  (Not
+        // `PjRtBuffer::read_npz`: the 0.1.6 crate's raw-bytes path maps
+        // ElementType to the wrong PrimitiveType id and produces
+        // wrongly-typed buffers.)
+        let loaded = Literal::read_npz(manifest.path(&spec.weights_file), &())
+            .map_err(|e| anyhow!("weights npz: {e}"))?;
+        let mut by_name: HashMap<String, Literal> = loaded.into_iter().collect();
+        let mut weights = Vec::with_capacity(spec.param_names.len());
+        let mut weights_backing = Vec::with_capacity(spec.param_names.len());
+        for name in &spec.param_names {
+            let lit =
+                by_name.remove(name).ok_or_else(|| anyhow!("weights npz missing {name}"))?;
+            weights.push(
+                client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("weight upload {name}: {e}"))?,
+            );
+            // The copy is async (kImmutableUntilTransferCompletes is not
+            // what the wrapper uses); keep the literal alive.
+            weights_backing.push(lit);
+        }
+
+        let adapters = (0..n_models)
+            .map(|m| Self::make_adapter(&client, &spec, m as u64, false))
+            .collect::<Result<Vec<_>>>()?;
+        let zero_adapter = Self::make_adapter(&client, &spec, 0, true)?;
+        let icarus_lora_idx = spec
+            .lora_names_icarus
+            .iter()
+            .map(|n| {
+                spec.lora_names
+                    .iter()
+                    .position(|x| x == n)
+                    .ok_or_else(|| anyhow!("icarus lora name {n} not in lora_names"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(PjrtExecutor {
+            client,
+            spec,
+            mode,
+            prefill_exes,
+            decode_exe,
+            weights,
+            _weights_backing: weights_backing,
+            adapters,
+            zero_adapter,
+            icarus_lora_idx,
+            snapshots: HashMap::new(),
+            next_id: 1,
+            swap_bandwidth: 16.0e9,
+            stats: PjrtStats::default(),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn live_snapshots(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Replace model `model_id`'s adapter with trained LoRA factors from
+    /// an npz written by `compile.train.export_adapter` (same
+    /// `layers.<i>.<target>.{A,B}` key convention as the artifacts).
+    pub fn load_adapter_npz(
+        &mut self,
+        model_id: usize,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<()> {
+        anyhow::ensure!(model_id < self.adapters.len(), "model {model_id} out of range");
+        let loaded = Literal::read_npz(path.as_ref(), &())
+            .map_err(|e| anyhow!("adapter npz: {e}"))?;
+        let mut by_name: HashMap<String, Literal> = loaded.into_iter().collect();
+        let mut bufs = Vec::with_capacity(self.spec.lora_names.len());
+        let mut backing = Vec::new();
+        for name in &self.spec.lora_names {
+            let lit = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow!("adapter npz missing {name}"))?;
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("adapter upload {name}: {e}"))?,
+            );
+            backing.push(lit);
+        }
+        self.adapters[model_id] = bufs;
+        self._weights_backing.extend(backing); // keep async-copy sources alive
+        Ok(())
+    }
+
+    /// Deterministic LoRA literals for model `id` in artifact order.
+    /// k/v adapters are always zero (the logical encoder is frozen; the
+    /// baseline artifact *does* read them, so zeroing keeps the two
+    /// modes' caches comparable in tests while q/o/mlp still differ).
+    fn make_adapter(
+        client: &PjRtClient,
+        spec: &ModelSpec,
+        id: u64,
+        all_zero: bool,
+    ) -> Result<Vec<PjRtBuffer>> {
+        let mut rng = Rng::new((0x1ca2u64 << 32) | id);
+        let d = spec.d_model;
+        let (h, kvd, f, r) =
+            (spec.heads * spec.head_dim, spec.kv_dim(), spec.ffn, spec.lora_rank);
+        let dims_of = |target: &str| -> (usize, usize) {
+            match target {
+                "q" => (d, h),
+                "k" | "v" => (d, kvd),
+                "o" => (h, d),
+                "gate" | "up" => (d, f),
+                "down" => (f, d),
+                other => panic!("unknown lora target {other}"),
+            }
+        };
+        let mut out = Vec::with_capacity(spec.lora_names.len());
+        for name in &spec.lora_names {
+            // name = layers.<i>.<target>.<A|B>
+            let parts: Vec<&str> = name.split('.').collect();
+            let target = parts[parts.len() - 2];
+            let ab = parts[parts.len() - 1];
+            let (din, dout) = dims_of(target);
+            let dims = if ab == "A" { [din, r] } else { [r, dout] };
+            let n: usize = dims.iter().product();
+            let zero = all_zero || matches!(target, "k" | "v");
+            let data: Vec<f32> = (0..n)
+                .map(|_| if zero { 0.0 } else { (rng.f64() as f32 - 0.5) * 0.02 })
+                .collect();
+            out.push(
+                client
+                    .buffer_from_host_buffer(&data, &dims, None)
+                    .map_err(|e| anyhow!("adapter buffer: {e}"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    fn insert_snapshot(&mut self, lits: Rc<CacheLits>) -> SnapshotId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.snapshots.insert(id, lits);
+        id
+    }
+
+    fn adapter_for(&self, model_id: usize, prefill: bool) -> &Vec<PjRtBuffer> {
+        if prefill && self.mode == ServingMode::Icarus {
+            // ICaRus prefill is the pure logical encoder: any adapter
+            // would leak into hidden states and thus into k/v of later
+            // layers, breaking cache identity across models.
+            &self.zero_adapter
+        } else {
+            &self.adapters[model_id]
+        }
+    }
+
+    /// One decode-artifact call: (token, pos, cache) -> (token', cache').
+    fn decode_once(
+        &mut self,
+        model_id: usize,
+        token: u32,
+        pos: usize,
+        cache: &CacheLits,
+    ) -> Result<(u32, CacheLits)> {
+        // Scalars go through buffer_from_host_buffer: it copies
+        // synchronously (kImmutableOnlyDuringCall), unlike the literal
+        // path whose async copy would race a temporary's drop.
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&[token as i32], &[], None)
+            .map_err(|e| anyhow!("token buf: {e}"))?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(&[pos as i32], &[], None)
+            .map_err(|e| anyhow!("pos buf: {e}"))?;
+        // Safe with the async literal path: `cache` is kept alive by the
+        // caller's Rc until after the output transfer below forces the
+        // whole chain (copy -> execute -> readback) to completion.
+        let k_buf = self
+            .client
+            .buffer_from_host_literal(None, &cache.k)
+            .map_err(|e| anyhow!("k buf: {e}"))?;
+        let v_buf = self
+            .client
+            .buffer_from_host_literal(None, &cache.v)
+            .map_err(|e| anyhow!("v buf: {e}"))?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(4 + self.weights.len() + self.adapters[model_id].len());
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.extend(self.weights.iter());
+        let adapter = self.adapter_for(model_id, false);
+        match self.mode {
+            ServingMode::Baseline => args.extend(adapter.iter()),
+            ServingMode::Icarus => {
+                args.extend(self.icarus_lora_idx.iter().map(|&i| &adapter[i]))
+            }
+        }
+        let result =
+            self.decode_exe.execute_b(&args).map_err(|e| anyhow!("decode execute: {e}"))?;
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("no output"))?;
+        let tuple = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("output transfer: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        let mut it = tuple.into_iter();
+        let logits = it.next().ok_or_else(|| anyhow!("logits"))?;
+        let k = it.next().ok_or_else(|| anyhow!("k"))?;
+        let v = it.next().ok_or_else(|| anyhow!("v"))?;
+        let tok = argmax(&logits.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?);
+        Ok((tok, CacheLits { k, v }))
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn prefill(
+        &mut self,
+        model_id: usize,
+        prompt: &[u32],
+        cached_tokens: usize,
+        base: Option<SnapshotId>,
+    ) -> Result<PrefillOut> {
+        let t0 = Instant::now();
+        self.stats.prefill_calls += 1;
+        anyhow::ensure!(
+            prompt.len() < self.spec.max_seq,
+            "prompt {} exceeds max_seq {}",
+            prompt.len(),
+            self.spec.max_seq
+        );
+        let (cache_id, first) = if let Some(base_id) = base.filter(|_| cached_tokens > 0) {
+            // Suffix encode: the logical encoder (decode artifact)
+            // extends the snapshot's cache over the uncached tokens.
+            let snap = self
+                .snapshots
+                .get(&base_id)
+                .ok_or_else(|| anyhow!("unknown snapshot {base_id}"))?
+                .clone();
+            let mut cache: Rc<CacheLits> = snap;
+            let mut next = 0u32;
+            for pos in cached_tokens..prompt.len() {
+                let (tok, new_cache) =
+                    self.decode_once(model_id, prompt[pos], pos, &cache)?;
+                next = tok;
+                cache = Rc::new(new_cache);
+                self.stats.suffix_decode_tokens += 1;
+            }
+            (self.insert_snapshot(cache), next)
+        } else {
+            // Fresh bucketized prefill.  Prompts longer than the largest
+            // bucket (e.g. a recompute-preempted turn whose context has
+            // grown) prefill the largest bucket and suffix-encode the
+            // remainder through the decode artifact.
+            let max_bucket = *self.spec.prefill.keys().last().expect("no buckets");
+            let head_len = prompt.len().min(max_bucket);
+            let bucket = self
+                .spec
+                .bucket_for(head_len)
+                .ok_or_else(|| anyhow!("prompt {} exceeds buckets", prompt.len()))?;
+            let mut toks = vec![0i32; bucket];
+            for (i, &t) in prompt[..head_len].iter().enumerate() {
+                toks[i] = t as i32;
+            }
+            let tok_buf = self
+                .client
+                .buffer_from_host_buffer(&toks, &[bucket], None)
+                .map_err(|e| anyhow!("{e}"))?;
+            let len_buf = self
+                .client
+                .buffer_from_host_buffer(&[head_len as i32], &[], None)
+                .map_err(|e| anyhow!("{e}"))?;
+            let mut args: Vec<&PjRtBuffer> =
+                Vec::with_capacity(2 + self.weights.len() + self.zero_adapter.len());
+            args.push(&tok_buf);
+            args.push(&len_buf);
+            args.extend(self.weights.iter());
+            args.extend(self.adapter_for(model_id, true).iter());
+            let exe = &self.prefill_exes[&bucket];
+            let result = exe.execute_b(&args).map_err(|e| anyhow!("prefill execute: {e}"))?;
+            let out = result
+                .into_iter()
+                .next()
+                .and_then(|r| r.into_iter().next())
+                .ok_or_else(|| anyhow!("no output"))?;
+            let tuple = out
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e}"))?
+                .to_tuple()
+                .map_err(|e| anyhow!("{e}"))?;
+            let mut it = tuple.into_iter();
+            let k = it.next().context("k")?;
+            let v = it.next().context("v")?;
+            let logits = it.next().context("logits")?;
+            let mut tok = argmax(&logits.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?);
+            let mut cache = Rc::new(CacheLits { k, v });
+            // Overflow beyond the largest bucket: logical encoder
+            // extends the cache token by token.
+            for pos in head_len..prompt.len() {
+                let (t, new_cache) = self.decode_once(model_id, prompt[pos], pos, &cache)?;
+                tok = t;
+                cache = Rc::new(new_cache);
+                self.stats.suffix_decode_tokens += 1;
+            }
+            (self.insert_snapshot(cache), tok)
+        };
+        let dur = t0.elapsed().as_secs_f64();
+        self.stats.prefill_secs += dur;
+        Ok(PrefillOut { duration: dur, cache: cache_id, first_token: first })
+    }
+
+    fn decode(&mut self, batch: &mut [DecodeSlot]) -> Result<f64> {
+        let t0 = Instant::now();
+        self.stats.decode_calls += 1;
+        self.stats.decode_slots += batch.len() as u64;
+        for slot in batch.iter_mut() {
+            anyhow::ensure!(
+                slot.context_len < self.spec.max_seq,
+                "context {} at max_seq {}",
+                slot.context_len,
+                self.spec.max_seq
+            );
+            let cache = self
+                .snapshots
+                .get(&slot.cache)
+                .ok_or_else(|| anyhow!("unknown cache {}", slot.cache))?
+                .clone();
+            let (tok, new_cache) =
+                self.decode_once(slot.model_id, slot.last_token, slot.context_len, &cache)?;
+            slot.next_token = tok;
+            // Replace the live handle; published snapshots sharing the
+            // old Rc stay alive through their own ids.
+            self.snapshots.insert(slot.cache, Rc::new(new_cache));
+        }
+        let dur = t0.elapsed().as_secs_f64();
+        self.stats.decode_secs += dur;
+        Ok(dur)
+    }
+
+    fn snapshot(&mut self, cache: SnapshotId) -> SnapshotId {
+        let lits = self.snapshots.get(&cache).expect("snapshot of unknown cache").clone();
+        self.insert_snapshot(lits)
+    }
+
+    fn drop_snapshot(&mut self, snap: SnapshotId) {
+        self.snapshots.remove(&snap);
+    }
+
+    fn swap_in_cost(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.swap_bandwidth
+    }
+
+    fn mode(&self) -> ServingMode {
+        self.mode
+    }
+}

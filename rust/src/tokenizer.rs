@@ -1,0 +1,103 @@
+//! Deterministic synthetic tokenizer.
+//!
+//! The serving stack needs a text<->token bridge for the examples and
+//! workload generator.  Real tokenizers (BPE) are out of scope — the
+//! models are trained on synthetic token streams anyway — so this hashes
+//! whitespace-separated words into the model's vocab deterministically
+//! (same word -> same id, stable across runs and processes).
+
+/// Ids below this are reserved (PAD/BOS/EOS/... mirror python tasks.py).
+pub const RESERVED: u32 = 32;
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: u32) -> Self {
+        assert!(vocab > RESERVED * 2, "vocab too small: {vocab}");
+        Tokenizer { vocab }
+    }
+
+    pub fn vocab(&self) -> u32 {
+        self.vocab
+    }
+
+    fn hash_word(&self, w: &str) -> u32 {
+        // FNV-1a, folded into the non-reserved id range.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in w.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        RESERVED + (h % (self.vocab - RESERVED) as u64) as u32
+    }
+
+    /// Encode text as BOS + word tokens (no EOS — callers append).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = vec![BOS];
+        out.extend(text.split_whitespace().map(|w| self.hash_word(w)));
+        out
+    }
+
+    /// Decode is lossy by construction; emits `w<id>` placeholders.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| match t {
+                PAD => "<pad>".to_string(),
+                BOS => "<s>".to_string(),
+                EOS => "</s>".to_string(),
+                SEP => "<sep>".to_string(),
+                t if t < RESERVED => format!("<r{t}>"),
+                t => format!("w{t}"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stable() {
+        let t = Tokenizer::new(2048);
+        assert_eq!(t.encode("hello world"), t.encode("hello world"));
+        let ids = t.encode("hello hello");
+        assert_eq!(ids[1], ids[2]);
+        assert_eq!(ids[0], BOS);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = Tokenizer::new(128);
+        for w in ["a", "bb", "ccc", "zq", "🦀"] {
+            let id = t.encode(w)[1];
+            assert!((RESERVED..128).contains(&id));
+        }
+    }
+
+    #[test]
+    fn different_words_usually_differ() {
+        let t = Tokenizer::new(4096);
+        let a = t.encode("alpha")[1];
+        let b = t.encode("beta")[1];
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn decode_roundtrip_shape() {
+        let t = Tokenizer::new(2048);
+        let ids = t.encode("x y z");
+        let s = t.decode(&ids);
+        assert!(s.starts_with("<s> w"));
+        assert_eq!(s.split(' ').count(), 4);
+    }
+}

@@ -1,0 +1,181 @@
+//! Serving-trace record / replay.
+//!
+//! A run's per-turn timeline (admission, prefill, completion, cache
+//! hits) serialized to JSON — useful for debugging scheduler decisions,
+//! for regression-diffing two engine versions on an identical workload,
+//! and for feeding external analysis (the paper's figures are latency
+//! distributions over exactly these events).
+
+use crate::json::{self, Value};
+
+/// One turn-level event in a serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TurnEvent {
+    pub wf_id: u64,
+    pub turn_idx: usize,
+    pub model_id: usize,
+    pub ready_at: f64,
+    pub completed_at: f64,
+    pub prompt_tokens: usize,
+    pub cached_tokens: usize,
+    pub generated_tokens: usize,
+}
+
+impl TurnEvent {
+    pub fn latency(&self) -> f64 {
+        self.completed_at - self.ready_at
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("wf", json::num(self.wf_id as f64)),
+            ("turn", json::num(self.turn_idx as f64)),
+            ("model", json::num(self.model_id as f64)),
+            ("ready_at", json::num(self.ready_at)),
+            ("completed_at", json::num(self.completed_at)),
+            ("prompt_tokens", json::num(self.prompt_tokens as f64)),
+            ("cached_tokens", json::num(self.cached_tokens as f64)),
+            ("generated_tokens", json::num(self.generated_tokens as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Option<TurnEvent> {
+        Some(TurnEvent {
+            wf_id: v.get("wf")?.as_u64()?,
+            turn_idx: v.get("turn")?.as_usize()?,
+            model_id: v.get("model")?.as_usize()?,
+            ready_at: v.get("ready_at")?.as_f64()?,
+            completed_at: v.get("completed_at")?.as_f64()?,
+            prompt_tokens: v.get("prompt_tokens")?.as_usize()?,
+            cached_tokens: v.get("cached_tokens")?.as_usize()?,
+            generated_tokens: v.get("generated_tokens")?.as_usize()?,
+        })
+    }
+}
+
+/// Append-only trace of one serving run.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TurnEvent>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    pub fn record(&mut self, e: TurnEvent) {
+        self.events.push(e);
+    }
+
+    /// P-quantile of turn latency across the trace.
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        let mut lats: Vec<f64> = self.events.iter().map(TurnEvent::latency).collect();
+        lats.sort_by(f64::total_cmp);
+        let idx = ((lats.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        lats[idx]
+    }
+
+    /// Per-model turn counts (routing-skew verification).
+    pub fn per_model_counts(&self) -> Vec<(usize, usize)> {
+        let mut counts: std::collections::BTreeMap<usize, usize> = Default::default();
+        for e in &self.events {
+            *counts.entry(e.model_id).or_default() += 1;
+        }
+        counts.into_iter().collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![(
+            "events",
+            Value::Arr(self.events.iter().map(TurnEvent::to_json).collect()),
+        )])
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("trace: {e}"))?;
+        let events = v
+            .get("events")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace: no events"))?
+            .iter()
+            .filter_map(TurnEvent::from_json)
+            .collect();
+        Ok(Trace { events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(wf: u64, lat: f64, model: usize) -> TurnEvent {
+        TurnEvent {
+            wf_id: wf,
+            turn_idx: 0,
+            model_id: model,
+            ready_at: 1.0,
+            completed_at: 1.0 + lat,
+            prompt_tokens: 10,
+            cached_tokens: 4,
+            generated_tokens: 8,
+        }
+    }
+
+    #[test]
+    fn quantiles() {
+        let mut t = Trace::new();
+        for i in 1..=100 {
+            t.record(ev(i, i as f64 * 0.01, 0));
+        }
+        assert!((t.latency_quantile(0.5) - 0.5).abs() < 0.02);
+        assert!((t.latency_quantile(0.95) - 0.95).abs() < 0.02);
+        assert_eq!(Trace::new().latency_quantile(0.95), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Trace::new();
+        t.record(ev(1, 0.5, 2));
+        t.record(ev(2, 0.7, 3));
+        let v = t.to_json();
+        let parsed = Value::parse(&v.to_string()).unwrap();
+        let back: Vec<TurnEvent> = parsed
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(TurnEvent::from_json)
+            .collect();
+        assert_eq!(back, t.events);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut t = Trace::new();
+        t.record(ev(1, 0.5, 0));
+        let path = std::env::temp_dir().join(format!("icarus_trace_{}.json", std::process::id()));
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.events, t.events);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn per_model_counts() {
+        let mut t = Trace::new();
+        t.record(ev(1, 0.1, 0));
+        t.record(ev(2, 0.1, 0));
+        t.record(ev(3, 0.1, 1));
+        assert_eq!(t.per_model_counts(), vec![(0, 2), (1, 1)]);
+    }
+}

@@ -1,0 +1,276 @@
+//! Agentic workload generation (HotPotQA-agent stand-in, paper A.2.3).
+//!
+//! A *workflow* is one multi-turn agent episode (e.g. answering one
+//! HotPotQA question).  Each turn sends the full accumulated context to
+//! one of the N task-specialized models, generates `gen_len` tokens
+//! (thought + action), then a tool observation is appended.  Arrivals
+//! are Poisson at the configured QPS; routing is round-robin (§4.3) or
+//! random-skewed (Appendix F).  Reflexion episodes append a
+//! self-evaluation turn after each trial and carry an episodic-memory
+//! suffix, growing context faster.
+
+use crate::config::{AgentPattern, Routing, WorkloadConfig};
+use crate::rng::Rng;
+
+/// One turn of a workflow, as planned by the generator.
+#[derive(Debug, Clone)]
+pub struct TurnSpec {
+    /// Model (LoRA adapter) this turn is routed to.
+    pub model_id: usize,
+    /// Tokens to generate this turn.
+    pub gen_len: usize,
+    /// Observation tokens appended to the context after the turn.
+    pub obs: Vec<u32>,
+    /// Tool-execution latency before this turn becomes runnable
+    /// (seconds) — ReAct's act->observation gap.  0 for the first turn.
+    pub think_s: f64,
+    /// True for Reflexion's self-evaluation turns.
+    pub is_reflection: bool,
+}
+
+/// One agent episode.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub id: u64,
+    /// Arrival time (seconds from run start).
+    pub arrival: f64,
+    /// Initial prompt: question + system/tool instructions.
+    pub prompt: Vec<u32>,
+    pub turns: Vec<TurnSpec>,
+}
+
+impl Workflow {
+    pub fn total_gen_tokens(&self) -> usize {
+        self.turns.iter().map(|t| t.gen_len).sum()
+    }
+}
+
+/// Unique-ish content tokens so distinct workflows don't alias in the
+/// prefix cache, while all workflows share a common system prefix (as
+/// real agent prompts do).
+fn content_tokens(rng: &mut Rng, n: usize) -> Vec<u32> {
+    (0..n).map(|_| 32 + rng.below(1900) as u32).collect()
+}
+
+/// A fixed system prompt shared by every workflow (instructions + tool
+/// schema) — the classic prefix-caching opportunity.
+pub fn system_prefix(len: usize) -> Vec<u32> {
+    (0..len).map(|i| 32 + ((i as u32 * 2654435761) % 1900)).collect()
+}
+
+pub const SYSTEM_PREFIX_LEN: usize = 48;
+
+pub fn generate(cfg: &WorkloadConfig) -> Vec<Workflow> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut arrival = 0.0f64;
+    let sys = system_prefix(SYSTEM_PREFIX_LEN);
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests {
+        arrival += rng.exp(cfg.qps);
+        let prompt_len = rng.len_sample(cfg.prompt_mean, cfg.prompt_std, 8, 4096) as usize;
+        let mut prompt = sys.clone();
+        prompt.extend(content_tokens(&mut rng, prompt_len));
+
+        let trials = rng.range(cfg.turns_min, cfg.turns_max) as usize;
+        let mut turns = Vec::new();
+        let order = plan_routing(&mut rng, cfg, trials * 2 + 2);
+        let mut slot = 0;
+        for _trial in 0..trials {
+            let gen_len =
+                rng.len_sample(cfg.output_mean, cfg.output_std, 4, 512) as usize;
+            let obs_len = rng.len_sample(cfg.obs_mean, cfg.obs_std, 2, 256) as usize;
+            turns.push(TurnSpec {
+                model_id: order[slot],
+                gen_len,
+                obs: content_tokens(&mut rng, obs_len),
+                think_s: if turns.is_empty() {
+                    0.0
+                } else {
+                    rng.gaussian(cfg.think_mean, cfg.think_std).max(0.0)
+                },
+                is_reflection: false,
+            });
+            slot += 1;
+            if cfg.pattern == AgentPattern::Reflexion {
+                // Self-evaluation turn: short verdict + episodic memory
+                // appended to the context (grows the shared prefix).
+                let refl_len =
+                    rng.len_sample(cfg.output_mean * 0.5, cfg.output_std * 0.5, 4, 256) as usize;
+                let memory =
+                    rng.len_sample(cfg.obs_mean * 1.5, cfg.obs_std, 4, 256) as usize;
+                turns.push(TurnSpec {
+                    model_id: order[slot],
+                    gen_len: refl_len,
+                    obs: content_tokens(&mut rng, memory),
+                    think_s: rng.gaussian(cfg.think_mean * 0.3, cfg.think_std * 0.3).max(0.0),
+                    is_reflection: true,
+                });
+                slot += 1;
+            }
+        }
+        out.push(Workflow { id: id as u64, arrival, prompt, turns });
+    }
+    out
+}
+
+/// Model id per turn slot.
+fn plan_routing(rng: &mut Rng, cfg: &WorkloadConfig, slots: usize) -> Vec<usize> {
+    match cfg.routing {
+        Routing::RoundRobin => {
+            let start = rng.below(cfg.n_models as u64) as usize;
+            (0..slots).map(|k| (start + k) % cfg.n_models).collect()
+        }
+        Routing::Skewed { hot_p_percent } => {
+            // Appendix F: one hot agent takes hot_p% of turns; the rest
+            // share the remainder uniformly, order randomized.
+            let hot = rng.below(cfg.n_models as u64) as usize;
+            let p = hot_p_percent as f64 / 100.0;
+            (0..slots)
+                .map(|_| {
+                    if cfg.n_models == 1 || rng.bool(p) {
+                        hot
+                    } else {
+                        let mut m = rng.below(cfg.n_models as u64 - 1) as usize;
+                        if m >= hot {
+                            m += 1;
+                        }
+                        m
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn cfg() -> WorkloadConfig {
+        WorkloadConfig { n_requests: 64, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate(&cfg());
+        let b = generate(&cfg());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.turns.len(), y.turns.len());
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_close() {
+        let mut c = cfg();
+        c.n_requests = 2000;
+        c.qps = 2.0;
+        let wf = generate(&c);
+        let mut prev = 0.0;
+        for w in &wf {
+            assert!(w.arrival >= prev);
+            prev = w.arrival;
+        }
+        let rate = wf.len() as f64 / prev;
+        assert!((rate - 2.0).abs() < 0.2, "rate {rate}");
+    }
+
+    #[test]
+    fn all_share_system_prefix() {
+        let wf = generate(&cfg());
+        let sys = system_prefix(SYSTEM_PREFIX_LEN);
+        for w in &wf {
+            assert_eq!(&w.prompt[..SYSTEM_PREFIX_LEN], &sys[..]);
+        }
+        // but bodies differ
+        assert_ne!(wf[0].prompt, wf[1].prompt);
+    }
+
+    #[test]
+    fn round_robin_cycles_models() {
+        let mut c = cfg();
+        c.n_models = 4;
+        c.turns_min = 4;
+        c.turns_max = 4;
+        let wf = generate(&c);
+        for w in &wf {
+            let ids: Vec<usize> = w.turns.iter().map(|t| t.model_id).collect();
+            for k in 1..ids.len() {
+                assert_eq!(ids[k], (ids[k - 1] + 1) % 4);
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_routing_respects_hot_probability() {
+        let mut c = cfg();
+        c.n_models = 8;
+        c.n_requests = 400;
+        c.routing = Routing::Skewed { hot_p_percent: 50 };
+        let wf = generate(&c);
+        let mut counts = vec![0usize; 8];
+        let mut total = 0;
+        for w in &wf {
+            for t in &w.turns {
+                counts[t.model_id] += 1;
+                total += 1;
+            }
+        }
+        let hot = *counts.iter().max().unwrap() as f64 / total as f64;
+        // per-workflow hot agent varies; global distribution flattens,
+        // but every model must be used and no single model exceeds ~65%.
+        assert!(counts.iter().all(|&c| c > 0));
+        assert!(hot < 0.65, "hot share {hot}");
+    }
+
+    #[test]
+    fn reflexion_has_reflection_turns_and_more_of_them() {
+        let mut c = cfg();
+        c.pattern = AgentPattern::Reflexion;
+        let wf_r = generate(&c);
+        let c2 = cfg();
+        let wf_a = generate(&c2);
+        let avg_r: f64 =
+            wf_r.iter().map(|w| w.turns.len()).sum::<usize>() as f64 / wf_r.len() as f64;
+        let avg_a: f64 =
+            wf_a.iter().map(|w| w.turns.len()).sum::<usize>() as f64 / wf_a.len() as f64;
+        assert!(avg_r > avg_a * 1.8, "{avg_r} vs {avg_a}");
+        assert!(wf_r.iter().any(|w| w.turns.iter().any(|t| t.is_reflection)));
+    }
+
+    #[test]
+    fn think_time_zero_for_first_turn_only() {
+        let wf = generate(&cfg());
+        for w in &wf {
+            assert_eq!(w.turns[0].think_s, 0.0);
+            for t in &w.turns[1..] {
+                assert!(t.think_s >= 0.0);
+            }
+        }
+        // with the default config, later turns mostly have latency
+        let any_positive = wf
+            .iter()
+            .flat_map(|w| &w.turns[1..])
+            .any(|t| t.think_s > 0.5);
+        assert!(any_positive);
+    }
+
+    #[test]
+    fn token_ranges_valid() {
+        let wf = generate(&cfg());
+        for w in &wf {
+            for &t in &w.prompt {
+                assert!((32..2048).contains(&t));
+            }
+            for turn in &w.turns {
+                assert!(turn.gen_len >= 4);
+                for &t in &turn.obs {
+                    assert!((32..2048).contains(&t));
+                }
+            }
+        }
+    }
+}
