@@ -1,7 +1,12 @@
-//! Hot-path microbenches (criterion is unavailable offline; this is a
-//! plain measure-loop harness with warmup + median-of-runs):
+//! Hot-path microbenches (criterion is unavailable offline; this uses
+//! `bench_util::measure`, a plain measure-loop with warmup +
+//! median-of-runs):
 //!
 //!   * radix prefix tree lookup/insert at depth,
+//!   * radix churn (insert/lookup/evict cycles) at 1k vs 10k resident
+//!     nodes — the eviction-complexity check: with the heap-based
+//!     evictable-leaf index the per-op cost stays ~flat as residency
+//!     grows, where the old per-block arena scan scaled linearly,
 //!   * block pool alloc/release,
 //!   * engine step overhead with a zero-cost executor (pure scheduler),
 //!   * PJRT prefill/decode step times (when artifacts exist) — these
@@ -11,6 +16,7 @@
 
 use std::time::Instant;
 
+use icarus::bench_util::measure;
 use icarus::config::{ServingConfig, ServingMode, WorkloadConfig};
 use icarus::engine::executor::{CostModel, DecodeSlot, Executor, SimExecutor};
 use icarus::engine::Engine;
@@ -20,23 +26,37 @@ use icarus::rng::Rng;
 use icarus::runtime::{Manifest, PjrtExecutor};
 use icarus::workload::generate;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
-    // warmup
-    for _ in 0..iters.min(16) {
-        f();
+/// Steady-state churn at a fixed resident node count: one op = insert a
+/// fresh 4-block context, look it up, evict 4 LRU blocks.  Returns
+/// seconds per op.
+fn radix_churn(resident_target: usize) -> f64 {
+    const BLOCK_TOKENS: usize = 16;
+    const BLOCKS_PER_CTX: usize = 4;
+    const CTX_TOKENS: usize = BLOCKS_PER_CTX * BLOCK_TOKENS;
+    let pool_bytes = (resident_target as u64 + 64) * BLOCK_TOKENS as u64 * 2048;
+    let mut pool = BlockPool::new(pool_bytes, BLOCK_TOKENS, 2048);
+    let mut radix = RadixCache::new();
+    let mut rng = Rng::new(11);
+    for i in 0..resident_target / BLOCKS_PER_CTX {
+        let t: Vec<u32> = (0..CTX_TOKENS).map(|_| rng.below(1 << 20) as u32).collect();
+        assert!(radix.insert(&t, i as u64, &mut pool));
     }
-    let mut samples = Vec::with_capacity(5);
-    for _ in 0..5 {
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            f();
-        }
-        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
-    }
-    samples.sort_by(f64::total_cmp);
-    let med = samples[2];
-    println!("{name:<44} {:>12.3} µs/op", med * 1e6);
-    med
+    assert!(radix.resident_nodes() + BLOCKS_PER_CTX >= resident_target);
+    let mut salt = 0u64;
+    measure(
+        &format!("radix churn ins+lookup+evict @{:>6} nodes", radix.resident_nodes()),
+        2000,
+        || {
+            salt += 1;
+            let t: Vec<u32> = (0..CTX_TOKENS as u64)
+                .map(|i| ((salt << 8).wrapping_add(i.wrapping_mul(2_654_435_761))) as u32)
+                .collect();
+            radix.insert(&t, salt, &mut pool);
+            let m = radix.lookup(&t);
+            assert!(m.matched_tokens >= CTX_TOKENS);
+            radix.evict(BLOCKS_PER_CTX, &mut pool);
+        },
+    )
 }
 
 fn main() {
@@ -45,7 +65,7 @@ fn main() {
 
     // Radix: populate 256 contexts of 256 tokens sharing a 48-token
     // system prefix, then time lookups.
-    let mut pool = BlockPool::new((1u64 << 30) as u64, 16, 2048);
+    let mut pool = BlockPool::new(1u64 << 30, 16, 2048);
     let mut radix = RadixCache::new();
     let mut rng = Rng::new(1);
     let sys: Vec<u32> = (0..48).map(|i| i as u32).collect();
@@ -57,7 +77,7 @@ fn main() {
         contexts.push(t);
     }
     let mut idx = 0;
-    let t = bench("radix lookup (256 ctas x 256 tok)", 2000, || {
+    let t = measure("radix lookup (256 ctxs x 256 tok)", 2000, || {
         idx = (idx + 1) % contexts.len();
         let m = radix.lookup(&contexts[idx]);
         assert!(m.matched_tokens >= 208);
@@ -65,7 +85,7 @@ fn main() {
     results.push(("radix_lookup_us", t * 1e6));
 
     let mut salt = 0u32;
-    let t = bench("radix insert+evict (64 tok)", 500, || {
+    let t = measure("radix insert+evict (64 tok)", 500, || {
         salt += 1;
         let mut t: Vec<u32> = sys.clone();
         t.extend((0..16).map(|i| i * 31 + salt));
@@ -74,8 +94,20 @@ fn main() {
     });
     results.push(("radix_insert_evict_us", t * 1e6));
 
+    // Churn at scale: eviction cost must not grow with residency.
+    let churn_1k = radix_churn(1_000);
+    let churn_10k = radix_churn(10_000);
+    println!(
+        "churn scaling 1k -> 10k resident nodes: {:.2}x per op (the old \
+         per-block arena scan scaled ~10x here)",
+        churn_10k / churn_1k
+    );
+    results.push(("radix_churn_1k_us", churn_1k * 1e6));
+    results.push(("radix_churn_10k_us", churn_10k * 1e6));
+    results.push(("radix_churn_scaling_10x_nodes", churn_10k / churn_1k));
+
     let mut pool2 = BlockPool::new(1 << 26, 16, 2048);
-    let t = bench("pool alloc+release (8 blocks)", 10_000, || {
+    let t = measure("pool alloc+release (8 blocks)", 10_000, || {
         let blocks = pool2.alloc(8).unwrap();
         for b in blocks {
             pool2.release(b);

@@ -1,8 +1,10 @@
 //! Shared harness for the paper-reproduction benches: one function per
-//! measurement point, aligned-table printing, and JSON result dumps
-//! under `bench_results/`.
+//! measurement point, aligned-table printing, JSON result dumps under
+//! `bench_results/`, and a criterion-free measure loop (criterion is
+//! unavailable offline).
 
 use std::path::Path;
+use std::time::Instant;
 
 use crate::config::{
     AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
@@ -12,6 +14,26 @@ use crate::engine::Engine;
 use crate::json::{self, Value};
 use crate::metrics::ServingStats;
 use crate::workload::generate;
+
+/// Plain measure loop: warmup, then median of 5 timed runs of `iters`
+/// calls.  Prints an aligned row and returns seconds per call.
+pub fn measure<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    for _ in 0..iters.min(16) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    samples.sort_by(f64::total_cmp);
+    let med = samples[2];
+    println!("{name:<44} {:>12.3} µs/op", med * 1e6);
+    med
+}
 
 /// Model stand-ins: KV bytes/token of the serving configs (see
 /// `python/compile/model.py`).  serve-small plays LLaMA-3.1-8B,

@@ -92,7 +92,22 @@ impl<E: Executor> Engine<E> {
         self.run_inner(workload)
     }
 
+    /// Like `run`, but borrows the engine so post-run state (the KV
+    /// manager, the executor) stays inspectable — used by tests and
+    /// diagnostics to assert that nothing leaked past the run.
+    pub fn run_in_place(&mut self, workload: Vec<Workflow>) -> ServingStats {
+        self.run_inner(workload)
+    }
+
     fn run_inner(&mut self, workload: Vec<Workflow>) -> ServingStats {
+        // Engines are single-use: the clock, sequence ids and KV/prefix
+        // state are not reset between runs, so a second run would report
+        // corrupted stats.  `run`/`run_traced` enforce this by consuming
+        // self; `run_in_place` must enforce it explicitly.
+        assert!(
+            self.wfs.is_empty() && self.now == 0.0,
+            "Engine::run/run_in_place is single-use; build a fresh Engine per run"
+        );
         let mut idx: Vec<usize> = (0..workload.len()).collect();
         idx.sort_by(|&a, &b| workload[a].arrival.total_cmp(&workload[b].arrival));
         self.wfs = workload.into_iter().map(WfState::new).collect();
@@ -149,12 +164,16 @@ impl<E: Executor> Engine<E> {
                 break;
             }
             self.future.pop_front();
-            let wf = &self.wfs[w];
+            let wf = &mut self.wfs[w];
+            // Park the context in the turn (wf.context goes empty) so
+            // the buffer stays uniquely owned and later appends are
+            // zero-copy; finish_turn re-derives it from the prompt.
+            let prompt = std::mem::take(&mut wf.context);
             self.waiting.push_back(PendingTurn {
                 wf_idx: w,
                 turn_idx: 0,
                 ready_at: wf.spec.arrival,
-                prompt: wf.context.clone(),
+                prompt,
                 remaining_gen: wf.spec.turns[0].gen_len,
                 was_preempted: false,
                 swapped: None,
@@ -236,9 +255,8 @@ impl<E: Executor> Engine<E> {
                         .as_mut()
                         .unwrap()
                         .record((self.now - turn.ready_at).max(0.0));
-                    let mut turn = turn;
                     turn.remaining_gen = turn.remaining_gen.saturating_sub(1);
-                    let mut seq = RunningSeq {
+                    let seq = RunningSeq {
                         seq_id,
                         wf_idx: turn.wf_idx,
                         turn_idx: turn.turn_idx,
@@ -258,7 +276,7 @@ impl<E: Executor> Engine<E> {
                     if let Alloc::NoSpace = self.kv.append_tokens(seq_id, 1) {
                         self.kv.preempt(seq.seq_id);
                         self.stats.preemptions += 1;
-                        self.requeue_preempted(&mut seq);
+                        self.requeue_preempted(seq);
                         continue;
                     }
                     self.running.push(seq);
@@ -304,29 +322,32 @@ impl<E: Executor> Engine<E> {
         });
     }
 
-    fn requeue_preempted(&mut self, victim: &mut RunningSeq) {
-        let ctx = victim.full_context();
+    fn requeue_preempted(&mut self, victim: RunningSeq) {
+        let cache = victim.cache;
+        let context_len = victim.context_len();
         let mut turn = PendingTurn {
             wf_idx: victim.wf_idx,
             turn_idx: victim.turn_idx,
             ready_at: victim.ready_at,
-            prompt: ctx,
             remaining_gen: victim.remaining_gen,
             was_preempted: true,
             swapped: None,
+            // Restart prompt = prompt + generated-so-far; appends in
+            // place (the victim owns its buffer), no context copy.
+            prompt: victim.into_context(),
         };
         match self.cfg.eviction {
             EvictionPolicy::Recompute => {
-                self.exec.drop_snapshot(victim.cache);
+                self.exec.drop_snapshot(cache);
             }
             EvictionPolicy::Swap => {
-                let bytes = victim.context_len() as u64 * self.kv.kv_bytes_per_token();
+                let bytes = context_len as u64 * self.kv.kv_bytes_per_token();
                 if self.kv.swap.swap_out(bytes) {
-                    turn.swapped = Some((victim.cache, bytes));
+                    turn.swapped = Some((cache, bytes));
                     turn.was_preempted = false;
                 } else {
                     self.kv.stats.swap_rejected += 1;
-                    self.exec.drop_snapshot(victim.cache);
+                    self.exec.drop_snapshot(cache);
                 }
             }
         }
@@ -352,10 +373,10 @@ impl<E: Executor> Engine<E> {
                 Alloc::NoSpace => {
                     if !self.preempt_other(i) {
                         // This sequence itself is the victim.
-                        let mut victim = self.running.swap_remove(i);
+                        let victim = self.running.swap_remove(i);
                         self.kv.preempt(victim.seq_id);
                         self.stats.preemptions += 1;
-                        self.requeue_preempted(&mut victim);
+                        self.requeue_preempted(victim);
                     }
                 }
             }
@@ -408,10 +429,10 @@ impl<E: Executor> Engine<E> {
         else {
             return false;
         };
-        let mut victim = self.running.swap_remove(pos);
+        let victim = self.running.swap_remove(pos);
         self.kv.preempt(victim.seq_id);
         self.stats.preemptions += 1;
-        self.requeue_preempted(&mut victim);
+        self.requeue_preempted(victim);
         true
     }
 
@@ -434,30 +455,35 @@ impl<E: Executor> Engine<E> {
             .as_mut()
             .unwrap()
             .record((self.now - seq.ready_at).max(0.0));
+        let seq_id = seq.seq_id;
+        let wf_idx = seq.wf_idx;
+        let turn_idx = seq.turn_idx;
+        let cache = seq.cache;
         // Publish the full turn context so the workflow's next turn
-        // (possibly on another model) hits the prefix cache.
-        let full = seq.full_context();
-        let snap = self.exec.snapshot(seq.cache);
-        let dropped = self.kv.finish_sequence(seq.seq_id, &full, Some(snap));
+        // (possibly on another model) hits the prefix cache.  The append
+        // happens in place — the sequence owns the context buffer.
+        let full = seq.into_context();
+        let snap = self.exec.snapshot(cache);
+        let dropped = self.kv.finish_sequence(seq_id, &full, Some(snap));
         self.drop_snapshots(&dropped);
 
-        let wf = &mut self.wfs[seq.wf_idx];
-        let spec_turn = &wf.spec.turns[seq.turn_idx];
-        wf.context = full;
-        wf.context.extend_from_slice(&spec_turn.obs);
-        wf.next_turn = seq.turn_idx + 1;
+        let wf = &mut self.wfs[wf_idx];
+        let spec_turn = &wf.spec.turns[turn_idx];
+        // Context for the next turn: append the tool observation, again
+        // in place (`full` is the sole owner after finish_sequence).
+        let ctx = full.extended(&spec_turn.obs);
+        wf.next_turn = turn_idx + 1;
         if wf.next_turn < wf.spec.turns.len() {
             let next = &wf.spec.turns[wf.next_turn];
             let gen = next.gen_len;
             let ready_at = self.now + next.think_s;
-            let prompt = wf.context.clone();
-            let wf_idx = seq.wf_idx;
-            let turn_idx = wf.next_turn;
             let turn = PendingTurn {
                 wf_idx,
-                turn_idx,
+                turn_idx: wf.next_turn,
                 ready_at,
-                prompt,
+                // The pending turn owns the context (wf.context stays
+                // empty until the workflow's final turn completes).
+                prompt: ctx,
                 remaining_gen: gen,
                 was_preempted: false,
                 swapped: None,
@@ -468,6 +494,7 @@ impl<E: Executor> Engine<E> {
                 self.waiting.push_back(turn);
             }
         } else {
+            wf.context = ctx; // final context retained for inspection
             wf.done = true;
             self.stats.completed_requests += 1;
             let arrival = wf.spec.arrival;
@@ -648,24 +675,16 @@ mod tests {
         let wcfg = WorkloadConfig { n_requests: 16, ..Default::default() };
         let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
         let mut engine = Engine::new(scfg, 2048, 4, exec);
-        let wl = generate(&wcfg);
-        // run consumes engine; replicate minimal loop assertions via stats
-        let kv_active_after = {
-            let stats = {
-                let e = std::mem::replace(&mut engine, {
-                    let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
-                    Engine::new(
-                        ServingConfig { kv_pool_bytes: 16 << 20, ..Default::default() },
-                        2048,
-                        4,
-                        exec,
-                    )
-                });
-                e.run(wl)
-            };
-            assert_eq!(stats.completed_requests, 16);
-            0
-        };
-        assert_eq!(kv_active_after, 0);
+        let stats = engine.run_in_place(generate(&wcfg));
+        assert_eq!(stats.completed_requests, 16);
+        // Every admitted sequence must have been finished or preempted:
+        // the KV manager's per-sequence bookkeeping drains to zero.
+        assert_eq!(engine.kv().active_sequences(), 0, "leaked sequences");
+        // The only blocks still resident belong to the prefix cache.
+        assert_eq!(
+            engine.kv().resident_blocks(),
+            engine.kv().resident_cache_blocks(),
+            "blocks owned by dead sequences"
+        );
     }
 }

@@ -1,6 +1,12 @@
 //! Per-sequence and per-workflow runtime state inside the engine.
+//!
+//! Contexts are [`TokenBuf`]s: the workflow hands its accumulated
+//! context to the pending turn, the turn hands it to the running
+//! sequence, and `finish_turn` appends the generated tokens + tool
+//! observation in place — no O(context) copies on the per-turn hot path.
 
 use crate::engine::executor::SnapshotId;
+use crate::tokens::TokenBuf;
 use crate::workload::Workflow;
 
 /// A turn waiting for admission.
@@ -12,7 +18,8 @@ pub struct PendingTurn {
     /// completion) — the latency clock starts here.
     pub ready_at: f64,
     /// Full context to prefill: accumulated workflow context (+ obs).
-    pub prompt: Vec<u32>,
+    /// Shared buffer; admission passes a borrowed slice downward.
+    pub prompt: TokenBuf,
     /// Tokens still to generate (smaller than the spec's gen_len if the
     /// turn was preempted mid-decode and restarted).
     pub remaining_gen: usize,
@@ -31,8 +38,9 @@ pub struct RunningSeq {
     pub wf_idx: usize,
     pub turn_idx: usize,
     pub model_id: usize,
-    /// Prompt this turn was prefilled with.
-    pub prompt: Vec<u32>,
+    /// Prompt this turn was prefilled with (shared with nobody in the
+    /// steady state — the workflow parked its context here).
+    pub prompt: TokenBuf,
     /// Tokens generated so far this turn.
     pub generated: Vec<u32>,
     pub remaining_gen: usize,
@@ -50,10 +58,11 @@ impl RunningSeq {
         self.prompt.len() + self.generated.len()
     }
 
-    pub fn full_context(&self) -> Vec<u32> {
-        let mut out = self.prompt.clone();
-        out.extend_from_slice(&self.generated);
-        out
+    /// Prompt + generated tokens, consuming the sequence's buffers.
+    /// Appends in place when the prompt is uniquely owned (the normal
+    /// case); only a genuinely shared buffer is copied.
+    pub fn into_context(self) -> TokenBuf {
+        self.prompt.extended(&self.generated)
     }
 }
 
@@ -61,8 +70,11 @@ impl RunningSeq {
 #[derive(Debug)]
 pub struct WfState {
     pub spec: Workflow,
-    /// Accumulated context: prompt + per-turn (generated + obs).
-    pub context: Vec<u32>,
+    /// Accumulated context: prompt + per-turn (generated + obs).  While
+    /// a turn for this workflow is pending or running, the context is
+    /// parked in that turn (this field is empty) so the buffer stays
+    /// uniquely owned and per-turn appends never copy.
+    pub context: TokenBuf,
     pub next_turn: usize,
     pub done: bool,
 }

@@ -20,12 +20,19 @@ pub enum Value {
     Obj(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Value {
     pub fn parse(s: &str) -> Result<Value, ParseError> {
@@ -389,7 +396,10 @@ mod tests {
     fn parse_nested() {
         let v = Value::parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
         assert_eq!(v.at(&["a"]).unwrap().as_arr().unwrap().len(), 3);
-        assert_eq!(v.at(&["a"]).unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str(), Some("c"));
+        assert_eq!(
+            v.at(&["a"]).unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str(),
+            Some("c")
+        );
         assert_eq!(v.get("d"), Some(&Value::Null));
     }
 

@@ -9,6 +9,29 @@
 
 pub type BlockId = u32;
 
+/// Chain-hash seed for the root of a prefix tree (FNV-1a offset basis).
+pub const ROOT_HASH: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Rolling per-block hash: the prefix-cache index key for one block of
+/// tokens, chained on the parent block's hash (vLLM-style block
+/// hashing).  Equal prefixes produce equal chains; the radix tree treats
+/// equal hashes as candidates and falls back to token comparison, so
+/// collisions cost a compare, never correctness.
+pub fn hash_block(parent: u64, span: &[u32]) -> u64 {
+    // FNV-1a over the tokens, seeded by the parent chain value...
+    let mut h = parent ^ 0x9e37_79b9_7f4a_7c15;
+    for &t in span {
+        h ^= u64::from(t);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // ...with a splitmix64 finalizer so the HashMap sees well-mixed keys.
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
 /// Fixed-capacity block pool with refcounted blocks and a free list.
 #[derive(Debug)]
 pub struct BlockPool {
@@ -182,5 +205,19 @@ mod tests {
         assert_eq!(p.blocks_for_tokens(16), 1);
         assert_eq!(p.blocks_for_tokens(17), 2);
         assert_eq!(p.blocks_for_tokens(0), 0);
+    }
+
+    #[test]
+    fn block_hash_chains_and_separates() {
+        let a: Vec<u32> = (0..16).collect();
+        let b: Vec<u32> = (1..17).collect();
+        // Deterministic.
+        assert_eq!(hash_block(ROOT_HASH, &a), hash_block(ROOT_HASH, &a));
+        // Content-sensitive.
+        assert_ne!(hash_block(ROOT_HASH, &a), hash_block(ROOT_HASH, &b));
+        // Chain-sensitive: same block under different parents differs.
+        let p1 = hash_block(ROOT_HASH, &a);
+        let p2 = hash_block(ROOT_HASH, &b);
+        assert_ne!(hash_block(p1, &a), hash_block(p2, &a));
     }
 }

@@ -83,7 +83,7 @@ impl KvCacheManager {
         };
         KvCacheManager {
             pool: BlockPool::new(cfg.kv_pool_bytes, cfg.block_tokens, kv_bytes_per_token),
-            trees: (0..n_trees).map(|_| RadixCache::new()).collect(),
+            trees: (0..n_trees).map(|_| RadixCache::with_block_tokens(cfg.block_tokens)).collect(),
             seqs: HashMap::new(),
             mode: cfg.mode,
             eviction: cfg.eviction,
@@ -290,6 +290,14 @@ impl KvCacheManager {
     /// Total resident cache tokens across namespaces (diagnostics).
     pub fn resident_blocks(&self) -> usize {
         self.pool.used()
+    }
+
+    /// Blocks held by the prefix trees themselves (one per resident
+    /// node) — the pool remainder is owned by active sequences, so
+    /// `resident_blocks() == resident_cache_blocks()` iff no sequence
+    /// state leaked.
+    pub fn resident_cache_blocks(&self) -> usize {
+        self.trees.iter().map(RadixCache::resident_nodes).sum()
     }
 }
 

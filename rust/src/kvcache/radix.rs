@@ -9,23 +9,54 @@
 //! while serving model A is a cache hit for model B (the paper's
 //! cross-model prefix caching).  In baseline mode each model gets its own
 //! tree and re-prefills identical prompts (the paper's Fig 1a problem).
+//!
+//! Hot-path layout (production scale; `benches/micro_hotpath.rs` has the
+//! radix-churn numbers):
+//!
+//!   * Children are indexed by `(parent, rolling block hash)` in one
+//!     flat `HashMap` — a lookup is O(blocks) hash probes, with token
+//!     comparison only to reject hash collisions (vLLM-style block
+//!     hashing instead of per-node candidate scans).
+//!   * Eviction candidates live in lazily-invalidated min-heaps keyed on
+//!     `(last_access, creation order)`, maintained incrementally on
+//!     insert/touch/pin/unpin/evict — evicting one block is O(log n),
+//!     not an O(nodes) arena scan per block.
+//!   * Dead nodes are recycled through a free list, so long-running
+//!     churn does not grow the arena without bound.
+//!
+//! Victim selection is bit-identical to the naive scan (least
+//! `last_access` first, creation order as the tie-break), which
+//! `tests/property_invariants.rs` checks differentially against a
+//! reference model.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
-use super::block::{BlockId, BlockPool};
+use super::block::{hash_block, BlockId, BlockPool, ROOT_HASH};
 
 pub type NodeId = usize;
 
+/// Lazily-invalidated eviction-heap entry: `(last_access, creation seq,
+/// node)`.  An entry is stale (and discarded on pop) unless the node's
+/// current `last_access`/`seq` still match.
+type HeapEntry = Reverse<(u64, u64, NodeId)>;
+
 #[derive(Debug)]
 struct Node {
-    /// Token span this node covers (exactly one block, except the root).
-    tokens: Vec<u32>,
+    /// Token span this node covers (exactly one block; empty for the
+    /// root and for free-listed slots).
+    span: Box<[u32]>,
+    /// Rolling hash chain from the root through this span — the child
+    /// index key under `parent`.
+    hash: u64,
     block: Option<BlockId>,
-    children: HashMap<u32, Vec<NodeId>>, // first token -> candidates
     parent: Option<NodeId>,
     /// Sequences currently pinning this node (prefix in active use).
     pins: u32,
     last_access: u64,
+    /// Creation order (never recycled): eviction tie-break, and the
+    /// staleness check that makes free-list slot reuse safe.
+    seq: u64,
     /// Opaque engine payload (cache snapshot id) covering the context
     /// from the root through this node.
     payload: Option<u64>,
@@ -33,6 +64,10 @@ struct Node {
     /// tier — still matchable; a hit must re-allocate and swap in.
     swapped: bool,
     dead: bool,
+    /// Live (non-dead) children, resident or swapped.
+    live_children: u32,
+    /// Live children currently holding a block.
+    resident_children: u32,
 }
 
 /// Result of a prefix match.
@@ -52,10 +87,22 @@ pub struct Match {
 #[derive(Debug)]
 pub struct RadixCache {
     nodes: Vec<Node>,
+    /// Flat child index: `(parent, chain hash)` -> children with that
+    /// hash.  More than one entry only on a hash collision.
+    children: HashMap<(NodeId, u64), Vec<NodeId>>,
+    /// Recycled node slots.
+    free_list: Vec<NodeId>,
+    /// Evictable-leaf heap for `evict` (no live children).
+    evict_heap: BinaryHeap<HeapEntry>,
+    /// Evictable-leaf heap for `evict_swap` (no block-holding children).
+    swap_heap: BinaryHeap<HeapEntry>,
     root: NodeId,
     clock: u64,
+    next_seq: u64,
     /// Number of resident (block-holding, live) nodes.
     resident: usize,
+    /// Tokens per block; 0 until learned from the pool on first insert.
+    block_tokens: usize,
 }
 
 impl Default for RadixCache {
@@ -65,23 +112,54 @@ impl Default for RadixCache {
 }
 
 impl RadixCache {
-    pub fn new() -> Self {
+    /// Tree with a known block size (hash-chain granularity).
+    pub fn with_block_tokens(block_tokens: usize) -> Self {
         let root = Node {
-            tokens: Vec::new(),
+            span: Box::default(),
+            hash: ROOT_HASH,
             block: None,
-            children: HashMap::new(),
             parent: None,
             pins: 0,
             last_access: 0,
+            seq: 0,
             payload: None,
             swapped: false,
             dead: false,
+            live_children: 0,
+            resident_children: 0,
         };
-        RadixCache { nodes: vec![root], root: 0, clock: 0, resident: 0 }
+        RadixCache {
+            nodes: vec![root],
+            children: HashMap::new(),
+            free_list: Vec::new(),
+            evict_heap: BinaryHeap::new(),
+            swap_heap: BinaryHeap::new(),
+            root: 0,
+            clock: 0,
+            next_seq: 1,
+            resident: 0,
+            block_tokens,
+        }
+    }
+
+    /// Tree that learns its block size from the pool on first insert.
+    pub fn new() -> Self {
+        Self::with_block_tokens(0)
     }
 
     pub fn resident_nodes(&self) -> usize {
         self.resident
+    }
+
+    /// Arena slots allocated (live + free-listed) — diagnostics for the
+    /// free list; stays bounded under insert/evict churn.
+    pub fn arena_len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Free-listed (recyclable) arena slots.
+    pub fn free_nodes(&self) -> usize {
+        self.free_list.len()
     }
 
     fn tick(&mut self) -> u64 {
@@ -89,44 +167,109 @@ impl RadixCache {
         self.clock
     }
 
+    /// Push `id` into whichever eviction heaps it currently qualifies
+    /// for.  Called whenever a node's key or eligibility may have
+    /// changed; stale entries are discarded on pop.
+    fn reindex(&mut self, id: NodeId) {
+        let n = &self.nodes[id];
+        if n.dead || id == self.root || n.pins != 0 || n.block.is_none() {
+            return;
+        }
+        let entry = Reverse((n.last_access, n.seq, id));
+        let hard = n.live_children == 0;
+        let swap = n.resident_children == 0;
+        if hard {
+            self.evict_heap.push(entry);
+        }
+        if swap {
+            self.swap_heap.push(entry);
+        }
+        if hard || swap {
+            self.maybe_compact();
+        }
+    }
+
+    /// Bound lazy-heap garbage: when a heap outgrows a small multiple of
+    /// the arena, rebuild both from current state (amortized O(1)/op).
+    fn maybe_compact(&mut self) {
+        let cap = 64 + 4 * self.nodes.len();
+        if self.evict_heap.len() <= cap && self.swap_heap.len() <= cap {
+            return;
+        }
+        self.evict_heap.clear();
+        self.swap_heap.clear();
+        for id in 0..self.nodes.len() {
+            let n = &self.nodes[id];
+            if n.dead || id == self.root || n.pins != 0 || n.block.is_none() {
+                continue;
+            }
+            let entry = Reverse((n.last_access, n.seq, id));
+            if n.live_children == 0 {
+                self.evict_heap.push(entry);
+            }
+            if n.resident_children == 0 {
+                self.swap_heap.push(entry);
+            }
+        }
+    }
+
+    /// Pop the LRU evictable leaf (hard eviction when `swap` is false,
+    /// swap-tier eviction otherwise), discarding stale entries.
+    fn pop_victim(&mut self, swap: bool) -> Option<NodeId> {
+        loop {
+            let heap = if swap { &mut self.swap_heap } else { &mut self.evict_heap };
+            let Reverse((ts, seq, id)) = heap.pop()?;
+            let n = &self.nodes[id];
+            let current = !n.dead && n.seq == seq && n.last_access == ts;
+            let eligible = current
+                && n.pins == 0
+                && n.block.is_some()
+                && if swap { n.resident_children == 0 } else { n.live_children == 0 };
+            if eligible {
+                return Some(id);
+            }
+        }
+    }
+
     /// Longest cached prefix of `prompt` (block-aligned).  Touches the
     /// path for LRU purposes but does not pin it.
     pub fn lookup(&mut self, prompt: &[u32]) -> Match {
         let now = self.tick();
+        let mut m = Match {
+            matched_tokens: 0,
+            path: Vec::new(),
+            payload: None,
+            swapped_nodes: Vec::new(),
+        };
+        let bt = self.block_tokens;
+        if bt == 0 {
+            return m; // nothing inserted yet
+        }
         let mut cur = self.root;
-        let mut matched = 0usize;
-        let mut path = Vec::new();
-        let mut payload = None;
-        let mut swapped_nodes = Vec::new();
-        loop {
-            let rest = &prompt[matched..];
-            if rest.is_empty() {
-                break;
-            }
-            let Some(cands) = self.nodes[cur].children.get(&rest[0]) else {
-                break;
+        let mut hash = ROOT_HASH;
+        while m.matched_tokens + bt <= prompt.len() {
+            let span = &prompt[m.matched_tokens..m.matched_tokens + bt];
+            hash = hash_block(hash, span);
+            let next = match self.children.get(&(cur, hash)) {
+                // Token comparison only as the collision guard.
+                Some(cands) => cands.iter().copied().find(|&c| self.nodes[c].span[..] == span[..]),
+                None => None,
             };
-            let mut next = None;
-            for &c in cands {
-                let n = &self.nodes[c];
-                if !n.dead && rest.len() >= n.tokens.len() && rest[..n.tokens.len()] == n.tokens[..] {
-                    next = Some(c);
-                    break;
-                }
-            }
             let Some(c) = next else { break };
-            matched += self.nodes[c].tokens.len();
-            self.nodes[c].last_access = now;
-            path.push(c);
-            if self.nodes[c].swapped {
-                swapped_nodes.push(c);
+            m.matched_tokens += bt;
+            m.path.push(c);
+            let n = &mut self.nodes[c];
+            n.last_access = now;
+            if n.swapped {
+                m.swapped_nodes.push(c);
             }
-            if let Some(p) = self.nodes[c].payload {
-                payload = Some((p, matched));
+            if let Some(p) = n.payload {
+                m.payload = Some((p, m.matched_tokens));
             }
+            self.reindex(c); // LRU key changed
             cur = c;
         }
-        Match { matched_tokens: matched, path, payload, swapped_nodes }
+        m
     }
 
     /// Pin every node on a matched path so an active sequence's prefix
@@ -144,6 +287,45 @@ impl RadixCache {
         for &n in &m.path {
             debug_assert!(self.nodes[n].pins > 0);
             self.nodes[n].pins -= 1;
+            // Dropping the last pin can re-expose an evictable leaf.
+            self.reindex(n);
+        }
+    }
+
+    fn alloc_node(
+        &mut self,
+        span: &[u32],
+        hash: u64,
+        parent: NodeId,
+        block: BlockId,
+        now: u64,
+    ) -> NodeId {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let node = Node {
+            span: span.into(),
+            hash,
+            block: Some(block),
+            parent: Some(parent),
+            pins: 0,
+            last_access: now,
+            seq,
+            payload: None,
+            swapped: false,
+            dead: false,
+            live_children: 0,
+            resident_children: 0,
+        };
+        match self.free_list.pop() {
+            Some(id) => {
+                debug_assert!(self.nodes[id].dead);
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
         }
     }
 
@@ -152,94 +334,111 @@ impl RadixCache {
     /// false and inserts nothing on pool exhaustion — callers should
     /// evict and retry or skip caching).  `payload` is attached to the
     /// deepest inserted/matched node.
-    pub fn insert(
-        &mut self,
-        tokens: &[u32],
-        payload: u64,
-        pool: &mut BlockPool,
-    ) -> bool {
-        let block_tokens = pool.block_tokens;
-        let full = (tokens.len() / block_tokens) * block_tokens;
+    pub fn insert(&mut self, tokens: &[u32], payload: u64, pool: &mut BlockPool) -> bool {
+        if self.block_tokens == 0 {
+            self.block_tokens = pool.block_tokens;
+        }
+        debug_assert_eq!(self.block_tokens, pool.block_tokens, "one pool per tree");
+        let bt = self.block_tokens;
+        let full = (tokens.len() / bt) * bt;
         let m = self.lookup(&tokens[..full]);
         let mut cur = *m.path.last().unwrap_or(&self.root);
         let mut off = m.matched_tokens;
-        debug_assert_eq!(off % block_tokens, 0);
-        let needed = (full - off) / block_tokens;
+        debug_assert_eq!(off % bt, 0);
+        let needed = (full - off) / bt;
         if pool.free_blocks() < needed {
             return false;
         }
         let now = self.tick();
+        let mut hash = if cur == self.root { ROOT_HASH } else { self.nodes[cur].hash };
         while off < full {
-            let span = &tokens[off..off + block_tokens];
+            let span = &tokens[off..off + bt];
+            hash = hash_block(hash, span);
             let block = pool.alloc(1).expect("checked free_blocks")[0];
-            let id = self.nodes.len();
-            self.nodes.push(Node {
-                tokens: span.to_vec(),
-                block: Some(block),
-                children: HashMap::new(),
-                parent: Some(cur),
-                pins: 0,
-                last_access: now,
-                payload: None,
-                swapped: false,
-                dead: false,
-            });
-            self.nodes[cur].children.entry(span[0]).or_default().push(id);
+            let id = self.alloc_node(span, hash, cur, block, now);
+            self.children.entry((cur, hash)).or_default().push(id);
+            let parent = &mut self.nodes[cur];
+            parent.live_children += 1;
+            parent.resident_children += 1;
             self.resident += 1;
+            self.reindex(id); // fresh leaf: immediately evictable
             cur = id;
-            off += block_tokens;
+            off += bt;
         }
         if cur != self.root {
+            // NOTE: a fully-matched re-insert overwrites an existing
+            // payload without reporting the displaced snapshot id, so the
+            // engine never drops that snapshot (pre-existing behavior,
+            // kept for bit-identical semantics with the reference model).
             self.nodes[cur].payload = Some(payload);
             self.nodes[cur].last_access = now;
+            self.reindex(cur);
         }
         true
+    }
+
+    /// Kill one evictable leaf: release its block, collect its payload,
+    /// unlink it from the child index and recycle the slot.  Returns the
+    /// number of blocks freed (1 for a validated hard victim).
+    fn kill_node(&mut self, v: NodeId, pool: &mut BlockPool, dropped: &mut Vec<u64>) -> usize {
+        let node = &mut self.nodes[v];
+        debug_assert!(!node.dead && node.live_children == 0 && node.pins == 0);
+        node.dead = true;
+        node.span = Box::default();
+        let mut freed = 0;
+        if let Some(b) = node.block.take() {
+            pool.release(b);
+            freed = 1;
+            self.resident -= 1;
+        }
+        if let Some(p) = node.payload.take() {
+            dropped.push(p);
+        }
+        // Payloads on surviving ancestors stay valid: they cover shorter
+        // prefixes that are still resident.
+        let parent = node.parent;
+        let hash = node.hash;
+        if let Some(p) = parent {
+            if let Some(list) = self.children.get_mut(&(p, hash)) {
+                list.retain(|&c| c != v);
+                if list.is_empty() {
+                    self.children.remove(&(p, hash));
+                }
+            }
+            let pn = &mut self.nodes[p];
+            pn.live_children -= 1;
+            if freed == 1 {
+                pn.resident_children -= 1;
+            }
+            // The parent may have just become an evictable leaf.
+            self.reindex(p);
+        }
+        self.free_list.push(v);
+        freed
     }
 
     /// Evict up to `want` unpinned leaf blocks, least-recently-used
     /// first.  Returns (blocks_freed, payloads_of_dropped_nodes) so the
     /// engine can drop the matching cache snapshots (or swap them out).
+    /// O(log nodes) per evicted block via the evictable-leaf heap.
     pub fn evict(&mut self, want: usize, pool: &mut BlockPool) -> (usize, Vec<u64>) {
         let mut freed = 0;
         let mut dropped = Vec::new();
         while freed < want {
-            // Scan for the LRU evictable leaf.  O(nodes) per eviction;
-            // fine at simulation scale (see micro_kvcache bench).
-            let mut victim: Option<(u64, NodeId)> = None;
-            for (i, n) in self.nodes.iter().enumerate() {
-                if n.dead || i == self.root || n.pins > 0 || n.block.is_none() {
-                    continue;
-                }
-                let has_live_children =
-                    n.children.values().flatten().any(|&c| !self.nodes[c].dead);
-                if has_live_children {
-                    continue;
-                }
-                if victim.map_or(true, |(t, _)| n.last_access < t) {
-                    victim = Some((n.last_access, i));
-                }
-            }
-            let Some((_, v)) = victim else { break };
-            let node = &mut self.nodes[v];
-            node.dead = true;
-            if let Some(b) = node.block.take() {
-                pool.release(b);
-                freed += 1;
-                self.resident -= 1;
-            }
-            if let Some(p) = node.payload.take() {
-                dropped.push(p);
-            }
-            // Also drop payloads that are now unreachable snapshots on
-            // interior nodes?  No: interior payloads remain valid (they
-            // cover shorter prefixes still resident).
-            let parent = self.nodes[v].parent;
-            if let Some(p) = parent {
-                let first = self.nodes[v].tokens[0];
-                if let Some(list) = self.nodes[p].children.get_mut(&first) {
-                    list.retain(|&c| c != v);
-                }
-            }
+            let Some(v) = self.pop_victim(false) else { break };
+            freed += self.kill_node(v, pool, &mut dropped);
+        }
+        (freed, dropped)
+    }
+
+    /// Evict every unpinned resident node (used on engine reset between
+    /// runs).  The explicit drain-all entry point — `evict` with a large
+    /// `want` would also work, but intent beats sentinel values.
+    pub fn evict_all(&mut self, pool: &mut BlockPool) -> (usize, Vec<u64>) {
+        let mut freed = 0;
+        let mut dropped = Vec::new();
+        while let Some(v) = self.pop_victim(false) {
+            freed += self.kill_node(v, pool, &mut dropped);
         }
         (freed, dropped)
     }
@@ -248,36 +447,24 @@ impl RadixCache {
     /// keep the nodes matchable (context preserved in the swap tier).
     /// Returns blocks freed.  Payloads are NOT dropped — the engine's
     /// snapshot handles stay alive, acting as the host-side copy.
+    /// Leaf-first among block-holding nodes: children that still hold
+    /// blocks pin their ancestors in place.
     pub fn evict_swap(&mut self, want: usize, pool: &mut BlockPool) -> usize {
         let mut freed = 0;
         while freed < want {
-            let mut victim: Option<(u64, NodeId)> = None;
-            for (i, n) in self.nodes.iter().enumerate() {
-                if n.dead || i == self.root || n.pins > 0 || n.block.is_none() {
-                    continue;
-                }
-                // Leaf-first among block-holding nodes: children that
-                // still hold blocks pin their ancestors in place.
-                let has_resident_children = n
-                    .children
-                    .values()
-                    .flatten()
-                    .any(|&c| !self.nodes[c].dead && self.nodes[c].block.is_some());
-                if has_resident_children {
-                    continue;
-                }
-                if victim.map_or(true, |(t, _)| n.last_access < t) {
-                    victim = Some((n.last_access, i));
-                }
-            }
-            let Some((_, v)) = victim else { break };
+            let Some(v) = self.pop_victim(true) else { break };
             let node = &mut self.nodes[v];
-            if let Some(b) = node.block.take() {
-                pool.release(b);
-                freed += 1;
-                self.resident -= 1;
-            }
+            let b = node.block.take().expect("victim validated as resident");
+            pool.release(b);
             node.swapped = true;
+            let parent = node.parent;
+            freed += 1;
+            self.resident -= 1;
+            if let Some(p) = parent {
+                self.nodes[p].resident_children -= 1;
+                // The parent may have just become swap-evictable.
+                self.reindex(p);
+            }
         }
         freed
     }
@@ -289,20 +476,26 @@ impl RadixCache {
         if pool.free_blocks() < nodes.len() {
             return 0;
         }
-        for &n in nodes {
-            debug_assert!(self.nodes[n].swapped && self.nodes[n].block.is_none());
+        for &v in nodes {
+            debug_assert!(self.nodes[v].swapped && self.nodes[v].block.is_none());
             let b = pool.alloc(1).expect("checked free_blocks")[0];
-            self.nodes[n].block = Some(b);
-            self.nodes[n].swapped = false;
+            let node = &mut self.nodes[v];
+            node.block = Some(b);
+            node.swapped = false;
+            let parent = node.parent;
             self.resident += 1;
+            if let Some(p) = parent {
+                self.nodes[p].resident_children += 1;
+            }
+            // Back in the resident set: eligible for eviction again.
+            self.reindex(v);
         }
         nodes.len()
     }
 
     /// Drop everything unpinned (used on engine reset between runs).
     pub fn clear(&mut self, pool: &mut BlockPool) -> Vec<u64> {
-        let (_, dropped) = self.evict(usize::MAX - 1, pool);
-        dropped
+        self.evict_all(pool).1
     }
 }
 
@@ -448,5 +641,65 @@ mod tests {
         // now evictable
         let (freed, _) = r.evict(10, &mut p);
         assert_eq!(freed, 2);
+    }
+
+    #[test]
+    fn evict_all_drains_everything_unpinned() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        for salt in 0..8 {
+            assert!(r.insert(&toks(48, salt * 100), u64::from(salt), &mut p));
+        }
+        let pinned = toks(48, 0);
+        let m = r.lookup(&pinned);
+        r.pin(&m, &mut p);
+        let (freed, dropped) = r.evict_all(&mut p);
+        assert_eq!(freed, 7 * 3, "everything but the pinned chain");
+        assert_eq!(dropped.len(), 7);
+        assert_eq!(r.lookup(&pinned).matched_tokens, 48);
+        r.unpin(&m, &mut p);
+        let dropped = r.clear(&mut p);
+        assert_eq!(dropped, vec![0]);
+        assert_eq!(p.used(), 0);
+        assert_eq!(r.resident_nodes(), 0);
+    }
+
+    #[test]
+    fn free_list_recycles_dead_nodes() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        // Warm up with one resident context, then churn many times its
+        // size through insert/evict: the arena must not grow per cycle.
+        assert!(r.insert(&toks(64, 1), 1, &mut p));
+        for salt in 0..200u32 {
+            assert!(r.insert(&toks(32, 10_000 + salt * 64), u64::from(salt), &mut p));
+            let (freed, _) = r.evict(2, &mut p);
+            assert_eq!(freed, 2);
+        }
+        assert!(
+            r.arena_len() <= 1 + 4 + 2 + 2,
+            "arena grew to {} slots under steady churn",
+            r.arena_len()
+        );
+        assert_eq!(r.resident_nodes(), p.used());
+    }
+
+    #[test]
+    fn lru_order_across_many_inserts() {
+        // Eviction drains strictly in last-touch order when untouched.
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        for salt in 0..6u32 {
+            assert!(r.insert(&toks(16, 1000 * (salt + 1)), u64::from(salt), &mut p));
+        }
+        let mut order = Vec::new();
+        loop {
+            let (freed, dropped) = r.evict(1, &mut p);
+            if freed == 0 {
+                break;
+            }
+            order.extend(dropped);
+        }
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
     }
 }

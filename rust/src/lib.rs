@@ -28,6 +28,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod tokenizer;
+pub mod tokens;
 pub mod trace;
 pub mod workload;
 
@@ -36,3 +37,4 @@ pub use engine::executor::{CostModel, Executor, SimExecutor};
 pub use engine::Engine;
 pub use kvcache::KvCacheManager;
 pub use metrics::ServingStats;
+pub use tokens::TokenBuf;

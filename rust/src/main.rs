@@ -139,8 +139,16 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| anyhow!("bad qps {s}")))
         .collect::<Result<_>>()?;
     let kv_bpt = a.u64("kv-bytes-per-token", 2048)?;
-    println!("mode={} models={} pattern={}", scfg.mode.as_str(), wcfg.n_models, wcfg.pattern.as_str());
-    println!("{:>6} {:>10} {:>10} {:>12} {:>10}", "qps", "p95(s)", "p50(s)", "tput(tok/s)", "hit-rate");
+    println!(
+        "mode={} models={} pattern={}",
+        scfg.mode.as_str(),
+        wcfg.n_models,
+        wcfg.pattern.as_str()
+    );
+    println!(
+        "{:>6} {:>10} {:>10} {:>12} {:>10}",
+        "qps", "p95(s)", "p50(s)", "tput(tok/s)", "hit-rate"
+    );
     for &qps in &qps_list {
         wcfg.qps = qps;
         let exec = SimExecutor::new(CostModel::default(), scfg.mode);

@@ -64,8 +64,9 @@ fn get_usize(v: &Value, key: &str) -> Result<usize> {
 impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let v = Value::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
         let kernels = v
             .get("kernels")

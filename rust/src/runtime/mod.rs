@@ -2,8 +2,18 @@
 //!
 //! `Manifest` describes what `make artifacts` produced; `PjrtExecutor`
 //! implements the engine's `Executor` trait over the compiled HLO.
+//!
+//! The real PJRT executor needs the `xla` PJRT bindings, which are not
+//! available in the offline build; it is gated behind the `pjrt` cargo
+//! feature.  Without the feature a stub with the same public surface is
+//! compiled whose `load` fails, so every caller (CLI, benches, examples)
+//! still builds and degrades gracefully at runtime.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use manifest::{Manifest, ModelSpec};

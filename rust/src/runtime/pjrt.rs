@@ -1,6 +1,10 @@
 //! PJRT executor: loads the AOT HLO-text artifacts and runs real
 //! prefill/decode on the request path (python is long gone by now).
 //!
+//! Compiled only with the `pjrt` cargo feature (needs the `xla` PJRT
+//! bindings, which are not vendored in the offline build); the default
+//! build substitutes `pjrt_stub.rs`, whose `load` fails at runtime.
+//!
 //! Cache representation: the published `xla` crate (0.1.6 / xla_extension
 //! 0.5.1) returns a tuple-rooted computation as ONE tuple buffer and has
 //! no buffer-level untuple, so cache state round-trips through host

@@ -1,0 +1,86 @@
+//! Stub PJRT executor, compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public surface of `pjrt.rs` (the parts the CLI, benches,
+//! examples and tests call) so the crate builds without the `xla` PJRT
+//! bindings.  `load` always fails; since that is the only constructor,
+//! every other method is statically unreachable.
+
+use anyhow::{bail, Result};
+
+use crate::config::ServingMode;
+use crate::engine::executor::{DecodeSlot, Executor, PrefillOut, SnapshotId};
+
+use super::manifest::{Manifest, ModelSpec};
+
+/// Mirror of `pjrt::PjrtStats` (all zeros; never populated in the stub).
+#[derive(Debug, Default, Clone)]
+pub struct PjrtStats {
+    pub prefill_calls: u64,
+    pub prefill_secs: f64,
+    pub decode_calls: u64,
+    pub decode_slots: u64,
+    pub decode_secs: f64,
+    pub suffix_decode_tokens: u64,
+}
+
+/// Unconstructable stand-in for the real executor.
+pub struct PjrtExecutor {
+    mode: ServingMode,
+    pub stats: PjrtStats,
+}
+
+impl PjrtExecutor {
+    pub fn load(
+        _manifest: &Manifest,
+        _config: &str,
+        _mode: ServingMode,
+        _n_models: usize,
+    ) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the `pjrt` \
+             feature (the xla PJRT bindings are not vendored). Rebuild with \
+             `cargo build --features pjrt` after adding the xla dependency, or \
+             use `--executor sim`."
+        )
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    pub fn live_snapshots(&self) -> usize {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn prefill(
+        &mut self,
+        _model_id: usize,
+        _prompt: &[u32],
+        _cached_tokens: usize,
+        _base: Option<SnapshotId>,
+    ) -> Result<PrefillOut> {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    fn decode(&mut self, _batch: &mut [DecodeSlot]) -> Result<f64> {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    fn snapshot(&mut self, _cache: SnapshotId) -> SnapshotId {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    fn drop_snapshot(&mut self, _snap: SnapshotId) {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    fn swap_in_cost(&self, _bytes: u64) -> f64 {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    fn mode(&self) -> ServingMode {
+        self.mode
+    }
+}

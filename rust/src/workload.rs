@@ -11,6 +11,7 @@
 
 use crate::config::{AgentPattern, Routing, WorkloadConfig};
 use crate::rng::Rng;
+use crate::tokens::TokenBuf;
 
 /// One turn of a workflow, as planned by the generator.
 #[derive(Debug, Clone)]
@@ -34,8 +35,10 @@ pub struct Workflow {
     pub id: u64,
     /// Arrival time (seconds from run start).
     pub arrival: f64,
-    /// Initial prompt: question + system/tool instructions.
-    pub prompt: Vec<u32>,
+    /// Initial prompt: question + system/tool instructions.  A shared
+    /// buffer: the engine seeds the workflow context from it with an
+    /// O(1) clone (see `tokens::TokenBuf`).
+    pub prompt: TokenBuf,
     pub turns: Vec<TurnSpec>,
 }
 
@@ -108,7 +111,7 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Workflow> {
                 slot += 1;
             }
         }
-        out.push(Workflow { id: id as u64, arrival, prompt, turns });
+        out.push(Workflow { id: id as u64, arrival, prompt: prompt.into(), turns });
     }
     out
 }
@@ -262,7 +265,7 @@ mod tests {
     fn token_ranges_valid() {
         let wf = generate(&cfg());
         for w in &wf {
-            for &t in &w.prompt {
+            for &t in w.prompt.iter() {
                 assert!((32..2048).contains(&t));
             }
             for turn in &w.turns {

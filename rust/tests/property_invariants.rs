@@ -1,6 +1,13 @@
 //! Randomized property tests (in-repo proptest substitute: seeded op
 //! sequences over many iterations, shrink-free but reproducible — the
 //! failing seed is printed by the assertion message).
+//!
+//! Includes a differential test driving the optimized `RadixCache`
+//! (hash-indexed children, heap-based incremental eviction, node
+//! recycling) against a naive reference model with the pre-optimization
+//! semantics (per-node token vecs, full-scan LRU eviction): matched
+//! token counts, eviction victim order and payload drops must be
+//! bit-identical at every step.
 
 use icarus::config::{
     AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
@@ -10,6 +17,246 @@ use icarus::engine::Engine;
 use icarus::kvcache::{Alloc, BlockPool, KvCacheManager, RadixCache};
 use icarus::rng::Rng;
 use icarus::workload::generate;
+
+mod reference {
+    //! Naive radix model: a faithful port of the pre-optimization
+    //! implementation (linear child-candidate scans, O(nodes) full scan
+    //! per evicted block, no node recycling).  Deliberately simple — it
+    //! is the spec the optimized structure must match move for move.
+
+    use std::collections::HashMap;
+
+    use icarus::kvcache::{BlockId, BlockPool};
+
+    struct Node {
+        tokens: Vec<u32>,
+        block: Option<BlockId>,
+        children: HashMap<u32, Vec<usize>>, // first token -> candidates
+        parent: Option<usize>,
+        pins: u32,
+        last_access: u64,
+        payload: Option<u64>,
+        swapped: bool,
+        dead: bool,
+    }
+
+    pub struct RefMatch {
+        pub matched_tokens: usize,
+        pub path: Vec<usize>,
+        pub payload: Option<(u64, usize)>,
+        pub swapped_nodes: Vec<usize>,
+    }
+
+    pub struct RefRadix {
+        nodes: Vec<Node>,
+        root: usize,
+        clock: u64,
+        resident: usize,
+    }
+
+    impl RefRadix {
+        pub fn new() -> Self {
+            let root = Node {
+                tokens: Vec::new(),
+                block: None,
+                children: HashMap::new(),
+                parent: None,
+                pins: 0,
+                last_access: 0,
+                payload: None,
+                swapped: false,
+                dead: false,
+            };
+            RefRadix { nodes: vec![root], root: 0, clock: 0, resident: 0 }
+        }
+
+        pub fn resident_nodes(&self) -> usize {
+            self.resident
+        }
+
+        fn tick(&mut self) -> u64 {
+            self.clock += 1;
+            self.clock
+        }
+
+        pub fn lookup(&mut self, prompt: &[u32]) -> RefMatch {
+            let now = self.tick();
+            let mut cur = self.root;
+            let mut matched = 0usize;
+            let mut path = Vec::new();
+            let mut payload = None;
+            let mut swapped_nodes = Vec::new();
+            loop {
+                let rest = &prompt[matched..];
+                if rest.is_empty() {
+                    break;
+                }
+                let Some(cands) = self.nodes[cur].children.get(&rest[0]) else {
+                    break;
+                };
+                let mut next = None;
+                for &c in cands {
+                    let n = &self.nodes[c];
+                    if !n.dead
+                        && rest.len() >= n.tokens.len()
+                        && rest[..n.tokens.len()] == n.tokens[..]
+                    {
+                        next = Some(c);
+                        break;
+                    }
+                }
+                let Some(c) = next else { break };
+                matched += self.nodes[c].tokens.len();
+                self.nodes[c].last_access = now;
+                path.push(c);
+                if self.nodes[c].swapped {
+                    swapped_nodes.push(c);
+                }
+                if let Some(p) = self.nodes[c].payload {
+                    payload = Some((p, matched));
+                }
+                cur = c;
+            }
+            RefMatch { matched_tokens: matched, path, payload, swapped_nodes }
+        }
+
+        pub fn pin(&mut self, m: &RefMatch) {
+            for &n in &m.path {
+                self.nodes[n].pins += 1;
+            }
+        }
+
+        pub fn unpin(&mut self, m: &RefMatch) {
+            for &n in &m.path {
+                self.nodes[n].pins -= 1;
+            }
+        }
+
+        pub fn insert(&mut self, tokens: &[u32], payload: u64, pool: &mut BlockPool) -> bool {
+            let block_tokens = pool.block_tokens;
+            let full = (tokens.len() / block_tokens) * block_tokens;
+            let m = self.lookup(&tokens[..full]);
+            let mut cur = *m.path.last().unwrap_or(&self.root);
+            let mut off = m.matched_tokens;
+            let needed = (full - off) / block_tokens;
+            if pool.free_blocks() < needed {
+                return false;
+            }
+            let now = self.tick();
+            while off < full {
+                let span = &tokens[off..off + block_tokens];
+                let block = pool.alloc(1).expect("checked free_blocks")[0];
+                let id = self.nodes.len();
+                self.nodes.push(Node {
+                    tokens: span.to_vec(),
+                    block: Some(block),
+                    children: HashMap::new(),
+                    parent: Some(cur),
+                    pins: 0,
+                    last_access: now,
+                    payload: None,
+                    swapped: false,
+                    dead: false,
+                });
+                self.nodes[cur].children.entry(span[0]).or_default().push(id);
+                self.resident += 1;
+                cur = id;
+                off += block_tokens;
+            }
+            if cur != self.root {
+                self.nodes[cur].payload = Some(payload);
+                self.nodes[cur].last_access = now;
+            }
+            true
+        }
+
+        pub fn evict(&mut self, want: usize, pool: &mut BlockPool) -> (usize, Vec<u64>) {
+            let mut freed = 0;
+            let mut dropped = Vec::new();
+            while freed < want {
+                // O(nodes) scan for the LRU evictable leaf.
+                let mut victim: Option<(u64, usize)> = None;
+                for (i, n) in self.nodes.iter().enumerate() {
+                    if n.dead || i == self.root || n.pins > 0 || n.block.is_none() {
+                        continue;
+                    }
+                    let has_live_children =
+                        n.children.values().flatten().any(|&c| !self.nodes[c].dead);
+                    if has_live_children {
+                        continue;
+                    }
+                    if victim.map_or(true, |(t, _)| n.last_access < t) {
+                        victim = Some((n.last_access, i));
+                    }
+                }
+                let Some((_, v)) = victim else { break };
+                let node = &mut self.nodes[v];
+                node.dead = true;
+                if let Some(b) = node.block.take() {
+                    pool.release(b);
+                    freed += 1;
+                    self.resident -= 1;
+                }
+                if let Some(p) = node.payload.take() {
+                    dropped.push(p);
+                }
+                let parent = self.nodes[v].parent;
+                if let Some(p) = parent {
+                    let first = self.nodes[v].tokens[0];
+                    if let Some(list) = self.nodes[p].children.get_mut(&first) {
+                        list.retain(|&c| c != v);
+                    }
+                }
+            }
+            (freed, dropped)
+        }
+
+        pub fn evict_swap(&mut self, want: usize, pool: &mut BlockPool) -> usize {
+            let mut freed = 0;
+            while freed < want {
+                let mut victim: Option<(u64, usize)> = None;
+                for (i, n) in self.nodes.iter().enumerate() {
+                    if n.dead || i == self.root || n.pins > 0 || n.block.is_none() {
+                        continue;
+                    }
+                    let has_resident_children = n
+                        .children
+                        .values()
+                        .flatten()
+                        .any(|&c| !self.nodes[c].dead && self.nodes[c].block.is_some());
+                    if has_resident_children {
+                        continue;
+                    }
+                    if victim.map_or(true, |(t, _)| n.last_access < t) {
+                        victim = Some((n.last_access, i));
+                    }
+                }
+                let Some((_, v)) = victim else { break };
+                let node = &mut self.nodes[v];
+                if let Some(b) = node.block.take() {
+                    pool.release(b);
+                    freed += 1;
+                    self.resident -= 1;
+                }
+                node.swapped = true;
+            }
+            freed
+        }
+
+        pub fn restore(&mut self, nodes: &[usize], pool: &mut BlockPool) -> usize {
+            if pool.free_blocks() < nodes.len() {
+                return 0;
+            }
+            for &n in nodes {
+                let b = pool.alloc(1).expect("checked free_blocks")[0];
+                self.nodes[n].block = Some(b);
+                self.nodes[n].swapped = false;
+                self.resident += 1;
+            }
+            nodes.len()
+        }
+    }
+}
 
 /// Pool invariant: used + free == capacity, refcounts balanced, no
 /// double-free under arbitrary alloc/retain/release interleavings.
@@ -231,6 +478,133 @@ fn prop_engine_conservation() {
         let expected_turns: u64 = generate(&wcfg).iter().map(|w| w.turns.len() as u64).sum();
         assert_eq!(stats.completed_turns, expected_turns, "seed {seed}");
         assert!(stats.wall_seconds.is_finite() && stats.wall_seconds > 0.0);
+    }
+}
+
+/// Differential check of the optimized radix cache against the naive
+/// reference model: random insert/lookup/pin/unpin/evict/swap/restore
+/// sequences must produce identical matched-token counts, eviction
+/// victim order (observed through dropped-payload order), payload drops
+/// and residency at every step.
+#[test]
+fn prop_radix_differential_vs_reference() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let mut pool_a = BlockPool::new(96 * 16 * 64, 16, 64);
+        let mut pool_b = BlockPool::new(96 * 16 * 64, 16, 64);
+        let mut opt = RadixCache::new();
+        let mut refm = reference::RefRadix::new();
+        let mut corpus: Vec<Vec<u32>> = Vec::new();
+        let mut pins: Vec<(icarus::kvcache::Match, reference::RefMatch)> = Vec::new();
+        for step in 0..300u64 {
+            match rng.below(10) {
+                0..=2 => {
+                    // Insert, often sharing a prefix with the corpus.
+                    let base = if !corpus.is_empty() && rng.bool(0.5) {
+                        let i = rng.below(corpus.len() as u64) as usize;
+                        let cut = rng.below(corpus[i].len() as u64 + 1) as usize;
+                        corpus[i][..cut].to_vec()
+                    } else {
+                        Vec::new()
+                    };
+                    let extra = rng.range(1, 72) as usize;
+                    let mut t = base;
+                    t.extend((0..extra).map(|_| rng.below(600) as u32));
+                    let a = opt.insert(&t, step, &mut pool_a);
+                    let b = refm.insert(&t, step, &mut pool_b);
+                    assert_eq!(a, b, "seed {seed} step {step}: insert admissibility");
+                    if a {
+                        corpus.push(t);
+                    }
+                }
+                3..=4 if !corpus.is_empty() => {
+                    // Lookup: exact, extended past the cached part, or a
+                    // truncated prefix.
+                    let i = rng.below(corpus.len() as u64) as usize;
+                    let mut t = corpus[i].clone();
+                    if rng.bool(0.3) {
+                        t.extend((0..rng.range(1, 24)).map(|_| rng.below(600) as u32));
+                    }
+                    if rng.bool(0.2) {
+                        t.truncate(rng.below(t.len() as u64 + 1) as usize);
+                    }
+                    let ma = opt.lookup(&t);
+                    let mb = refm.lookup(&t);
+                    assert_eq!(ma.matched_tokens, mb.matched_tokens, "seed {seed} step {step}");
+                    assert_eq!(ma.payload, mb.payload, "seed {seed} step {step}");
+                    assert_eq!(
+                        ma.swapped_nodes.len(),
+                        mb.swapped_nodes.len(),
+                        "seed {seed} step {step}"
+                    );
+                }
+                5 if !corpus.is_empty() => {
+                    // Pin a matched path in both models.
+                    let i = rng.below(corpus.len() as u64) as usize;
+                    let t = corpus[i].clone();
+                    let ma = opt.lookup(&t);
+                    let mb = refm.lookup(&t);
+                    assert_eq!(ma.matched_tokens, mb.matched_tokens, "seed {seed} step {step}");
+                    opt.pin(&ma, &mut pool_a);
+                    refm.pin(&mb);
+                    pins.push((ma, mb));
+                }
+                6 if !pins.is_empty() => {
+                    let i = rng.below(pins.len() as u64) as usize;
+                    let (ma, mb) = pins.swap_remove(i);
+                    opt.unpin(&ma, &mut pool_a);
+                    refm.unpin(&mb);
+                }
+                7 => {
+                    let want = rng.range(1, 12) as usize;
+                    let (fa, da) = opt.evict(want, &mut pool_a);
+                    let (fb, db) = refm.evict(want, &mut pool_b);
+                    assert_eq!(fa, fb, "seed {seed} step {step}: blocks freed");
+                    assert_eq!(da, db, "seed {seed} step {step}: victim/drop order");
+                }
+                8 => {
+                    let want = rng.range(1, 8) as usize;
+                    let fa = opt.evict_swap(want, &mut pool_a);
+                    let fb = refm.evict_swap(want, &mut pool_b);
+                    assert_eq!(fa, fb, "seed {seed} step {step}: swap-evicted");
+                }
+                9 if !corpus.is_empty() => {
+                    // Restore a swapped path, manager-style.
+                    let i = rng.below(corpus.len() as u64) as usize;
+                    let t = corpus[i].clone();
+                    let ma = opt.lookup(&t);
+                    let mb = refm.lookup(&t);
+                    assert_eq!(
+                        ma.swapped_nodes.len(),
+                        mb.swapped_nodes.len(),
+                        "seed {seed} step {step}"
+                    );
+                    if !ma.swapped_nodes.is_empty() {
+                        let ra = opt.restore(&ma.swapped_nodes, &mut pool_a);
+                        let rb = refm.restore(&mb.swapped_nodes, &mut pool_b);
+                        assert_eq!(ra, rb, "seed {seed} step {step}: restored");
+                    }
+                }
+                _ => {}
+            }
+            assert_eq!(
+                opt.resident_nodes(),
+                refm.resident_nodes(),
+                "seed {seed} step {step}: residency"
+            );
+            assert_eq!(pool_a.used(), pool_b.used(), "seed {seed} step {step}: pool usage");
+        }
+        // Unpin everything and drain: the full victim order must match
+        // (optimized drain-all vs the reference's large-want evict).
+        for (ma, mb) in pins.drain(..) {
+            opt.unpin(&ma, &mut pool_a);
+            refm.unpin(&mb);
+        }
+        let (fa, da) = opt.evict_all(&mut pool_a);
+        let (fb, db) = refm.evict(usize::MAX - 1, &mut pool_b);
+        assert_eq!(fa, fb, "seed {seed}: final drain");
+        assert_eq!(da, db, "seed {seed}: final drop order");
+        assert_eq!(pool_a.used(), pool_b.used(), "seed {seed}: final pool usage");
     }
 }
 
