@@ -6,7 +6,7 @@ is streamed through VMEM **once** per output block and applied to the
 stacked [2, T, d_in] activation as a single batched matmul (MXU-friendly).
 Only the decoder stream receives the low-rank adapter delta.
 
-TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks d_out in
+TPU mapping (see README.md §Substitutions): the grid walks d_out in
 ``block_n`` tiles; each program holds one W tile + the full A/B adapter in
 VMEM. Weight-read amplification vs a single model is exactly 1.0 — the
 paper's memory-traffic claim. Runs under ``interpret=True`` on CPU.

@@ -99,7 +99,7 @@ class ModelConfig:
 
 
 # Serving configs (AOT-compiled to artifacts).  Sizes are the paper's
-# LLaMA-8B / Qwen-14B stand-ins (see DESIGN.md substitution table).
+# LLaMA-8B / Qwen-14B stand-ins (see README.md §Substitutions).
 SERVE_SMALL = ModelConfig(
     name="serve-small", vocab=2048, d_model=128, layers=4, heads=8,
     kv_heads=4, head_dim=16, ffn=352, max_seq=1024,

@@ -1,6 +1,6 @@
 """Synthetic task families for the accuracy experiments.
 
-Substitutes for the paper's fine-tuning datasets (DESIGN.md substitution
+Substitutes for the paper's fine-tuning datasets (README.md §Substitutions
 table): each family produces supervised (tokens, loss_mask) sequences and
 an exact-match evaluator, so we can reproduce the *comparison structure*
 of Tables 2-5: base model weak everywhere, task-specialists strong on

@@ -1,6 +1,6 @@
 """Accuracy-experiment reproduction: conventional LoRA vs ICaRus.
 
-Reproduces (on the synthetic substitutes of DESIGN.md):
+Reproduces (on the synthetic substitutes of README.md §Substitutions):
   * Fig 2 / Fig 7 — training-loss curves of conventional fine-tuning vs
     ICaRus nearly overlap.
   * Table 2       — ICaRus accuracy ≈ task-specific fine-tuning across

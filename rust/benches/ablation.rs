@@ -1,4 +1,4 @@
-//! Ablation benches for the design choices DESIGN.md calls out:
+//! Ablation benches for the repo's key design choices:
 //!
 //!   1. prefix caching off — isolates how much of ICaRus's win is the
 //!      cross-model *prefix reuse* vs just smaller footprint;

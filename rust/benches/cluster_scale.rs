@@ -1,0 +1,134 @@
+//! Cluster scaling bench: what the multi-replica layer buys.
+//!
+//! Three measurements:
+//!
+//!   1. Parallel sweep wall-clock — the same fixed 16-point grid (a
+//!      Fig 4-style row) swept with 1/2/4/8 worker threads.  Points
+//!      are independent seeded sims, so the rows are bit-identical;
+//!      only the wall clock shrinks (near-linearly until points
+//!      outnumber cores).
+//!   2. Replica scaling — one overloaded workload served by a cluster
+//!      of R ∈ {1, 2, 4, 8} replicas: merged P95 falls and delivered
+//!      throughput rises as the per-replica arrival rate drops.
+//!   3. Routing policies — the same cluster at R = 4 under
+//!      round_robin / least_loaded / hash_prefix workflow routing.
+//!
+//! Run: cargo bench --bench cluster_scale
+
+use std::time::Instant;
+
+use icarus::bench_util::{sweep_parallel, Point, KV_BPT_SMALL};
+use icarus::cluster::Cluster;
+use icarus::config::{ClusterRouting, ServingConfig, ServingMode, WorkloadConfig};
+use icarus::engine::executor::CostModel;
+use icarus::json::{self, Value};
+use icarus::workload::generate;
+
+fn main() {
+    let mut results: Vec<(String, Value)> = Vec::new();
+
+    // -- 1: parallel sweep wall-clock ------------------------------------
+    let mut points = Vec::new();
+    for mode in [ServingMode::Baseline, ServingMode::Icarus] {
+        for &qps in &[0.2, 0.4, 0.8, 1.5] {
+            for &n in &[4usize, 8] {
+                points.push(Point {
+                    mode,
+                    n_models: n,
+                    qps,
+                    kv_pool_bytes: 24 << 20,
+                    kv_bytes_per_token: KV_BPT_SMALL,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    println!("== 1: parallel sweep wall-clock ({} points) ==", points.len());
+    let mut base_wall = 0.0;
+    for &threads in &[1usize, 2, 4, 8] {
+        println!("\n-- threads={threads} --");
+        let t0 = Instant::now();
+        let rows = sweep_parallel(&points, threads);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(rows.len(), points.len());
+        if threads == 1 {
+            base_wall = wall;
+        }
+        println!(
+            "threads={threads}: {wall:.2}s wall, {:.2}x vs 1 thread",
+            base_wall / wall
+        );
+        results.push((format!("sweep_wall_s_threads_{threads}"), json::num(wall)));
+        results.push((format!("sweep_speedup_threads_{threads}"), json::num(base_wall / wall)));
+    }
+
+    // -- 2: replica scaling of one overloaded workload --------------------
+    let wcfg = WorkloadConfig {
+        n_models: 8,
+        qps: 4.0,
+        n_requests: 256,
+        seed: 17,
+        ..Default::default()
+    };
+    let workload = generate(&wcfg);
+    println!("\n== 2: replica scaling (8 models, qps 4.0, 256 workflows, 32 MB/replica) ==\n");
+    println!("{:>9} {:>10} {:>10} {:>14} {:>10}", "replicas", "p95(s)", "p50(s)", "tput(tok/s)", "hit-rate");
+    for &r in &[1usize, 2, 4, 8] {
+        let scfg = ServingConfig {
+            replicas: r,
+            kv_pool_bytes: 32 << 20,
+            ..Default::default()
+        };
+        let out = Cluster::new(scfg, KV_BPT_SMALL, wcfg.n_models)
+            .run_sim(CostModel::default(), workload.clone());
+        let tl = out.merged.turn_latency.as_ref().unwrap();
+        println!(
+            "{:>9} {:>10.3} {:>10.3} {:>14.1} {:>10.3}",
+            r,
+            tl.p95(),
+            tl.p50(),
+            out.merged.throughput_tok_s(),
+            out.merged.cache_hit_rate()
+        );
+        results.push((format!("cluster_p95_s_r{r}"), json::num(tl.p95())));
+        results.push((format!("cluster_tput_tok_s_r{r}"), json::num(out.merged.throughput_tok_s())));
+    }
+
+    // -- 3: routing policies at R = 4 -------------------------------------
+    println!("\n== 3: routing policies (4 replicas, same workload) ==\n");
+    println!("{:>14} {:>10} {:>14} {:>10} {:>18}", "routing", "p95(s)", "tput(tok/s)", "hit-rate", "wf-per-replica");
+    for routing in [
+        ClusterRouting::RoundRobin,
+        ClusterRouting::LeastLoaded,
+        ClusterRouting::HashPrefix,
+    ] {
+        let scfg = ServingConfig {
+            replicas: 4,
+            cluster_routing: routing,
+            kv_pool_bytes: 32 << 20,
+            ..Default::default()
+        };
+        let out = Cluster::new(scfg, KV_BPT_SMALL, wcfg.n_models)
+            .run_sim(CostModel::default(), workload.clone());
+        let tl = out.merged.turn_latency.as_ref().unwrap();
+        let counts: Vec<u64> = out.per_replica.iter().map(|s| s.completed_requests).collect();
+        println!(
+            "{:>14} {:>10.3} {:>14.1} {:>10.3} {:>18}",
+            routing.as_str(),
+            tl.p95(),
+            out.merged.throughput_tok_s(),
+            out.merged.cache_hit_rate(),
+            format!("{counts:?}")
+        );
+        results.push((format!("routing_{}_p95_s", routing.as_str()), json::num(tl.p95())));
+        results.push((
+            format!("routing_{}_hit_rate", routing.as_str()),
+            json::num(out.merged.cache_hit_rate()),
+        ));
+    }
+
+    std::fs::create_dir_all("bench_results").ok();
+    let v = json::obj(results.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    std::fs::write("bench_results/cluster_scale.json", v.to_string_pretty()).unwrap();
+    println!("\nwrote bench_results/cluster_scale.json");
+}

@@ -35,26 +35,39 @@ pub fn measure<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     med
 }
 
-/// Model stand-ins: KV bytes/token of the serving configs (see
-/// `python/compile/model.py`).  serve-small plays LLaMA-3.1-8B,
-/// serve-base plays Qwen3-14B (paper Fig 5).
+/// KV bytes/token of the `serve-small` config: the LLaMA-3.1-8B
+/// stand-in (see `python/compile/model.py`).
 pub const KV_BPT_SMALL: u64 = 2048;
+/// KV bytes/token of the `serve-base` config: the Qwen3-14B stand-in
+/// (paper Fig 5).
 pub const KV_BPT_BASE: u64 = 8192;
 
 /// One measurement point of a sweep.
 #[derive(Debug, Clone)]
 pub struct Point {
+    /// Cache-namespacing mode under test.
     pub mode: ServingMode,
+    /// Number of task-specialized models, N in the paper.
     pub n_models: usize,
+    /// Offered load in workflows per second.
     pub qps: f64,
+    /// Agentic pattern driving the workload.
     pub pattern: AgentPattern,
+    /// Turn-to-model routing inside each workflow.
     pub routing: Routing,
+    /// Eviction policy under memory pressure.
     pub eviction: EvictionPolicy,
+    /// Simulated KV pool budget in bytes.
     pub kv_pool_bytes: u64,
+    /// KV cache cost per token (model-size stand-in).
     pub kv_bytes_per_token: u64,
+    /// Workflows per run.
     pub n_requests: usize,
+    /// Workload seed.
     pub seed: u64,
+    /// Prefix caching on/off (the ablation's variable).
     pub prefix_caching: bool,
+    /// Simulator cost model.
     pub cost: CostModel,
 }
 
@@ -78,6 +91,7 @@ impl Default for Point {
 }
 
 impl Point {
+    /// Run this point's full sim and return its stats.
     pub fn run(&self) -> ServingStats {
         let scfg = ServingConfig {
             mode: self.mode,
@@ -99,6 +113,7 @@ impl Point {
         Engine::new(scfg, self.kv_bytes_per_token, self.n_models, exec).run(generate(&wcfg))
     }
 
+    /// Short `mode/N/qps` tag for table rows.
     pub fn label(&self) -> String {
         format!("{}/N={}/qps={:.2}", self.mode.as_str(), self.n_models, self.qps)
     }
@@ -107,20 +122,32 @@ impl Point {
 /// Result row: the numbers the paper's figures plot.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Point label (see [`Point::label`]).
     pub label: String,
+    /// Mode the point ran under.
     pub mode: ServingMode,
+    /// N models of the point.
     pub n_models: usize,
+    /// Offered QPS of the point.
     pub qps: f64,
+    /// P95 turn latency in seconds.
     pub p95_s: f64,
+    /// P50 turn latency in seconds.
     pub p50_s: f64,
+    /// Generated-token throughput per second.
     pub tput_tok_s: f64,
+    /// Prefix-cache hit rate over prompt tokens.
     pub hit_rate: f64,
+    /// Peak KV pool usage in MB.
     pub peak_kv_mb: f64,
+    /// Sequences preempted under pressure.
     pub preemptions: u64,
+    /// Blocks evicted from the prefix cache.
     pub evictions: u64,
 }
 
 impl Row {
+    /// Extract a figure row from a finished run.
     pub fn from_stats(p: &Point, s: &ServingStats) -> Row {
         let tl = s.turn_latency.as_ref().unwrap();
         Row {
@@ -138,6 +165,7 @@ impl Row {
         }
     }
 
+    /// Dump the row for results files.
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("mode", json::s(self.mode.as_str())),
@@ -154,6 +182,7 @@ impl Row {
     }
 }
 
+/// Print the aligned column header matching [`print_row`].
 pub fn header() {
     println!(
         "{:<28} {:>8} {:>8} {:>12} {:>8} {:>10} {:>8} {:>8}",
@@ -161,6 +190,7 @@ pub fn header() {
     );
 }
 
+/// Print one aligned result row.
 pub fn print_row(r: &Row) {
     println!(
         "{:<28} {:>8.3} {:>8.3} {:>12.1} {:>8.3} {:>10.1} {:>8} {:>8}",
@@ -178,6 +208,63 @@ pub fn sweep(points: &[Point]) -> Vec<Row> {
         let row = Row::from_stats(p, &stats);
         print_row(&row);
         rows.push(row);
+    }
+    rows
+}
+
+/// Evaluate `f(0..n)` on `threads` scoped worker threads pulling from a
+/// shared work queue (so unevenly-priced items self-balance instead of
+/// serializing on one worker) and return the results in index order.
+/// Indices are independent work items, so parallelism changes wall
+/// clock only, never results.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let threads = threads.clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            handles.push(s.spawn(move || {
+                let mut out = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    out.push((i, f(i)));
+                }
+                out
+            }));
+        }
+        for h in handles {
+            for (i, v) in h.join().expect("worker thread panicked") {
+                results[i] = Some(v);
+            }
+        }
+    });
+    results.into_iter().map(|r| r.expect("every index covered")).collect()
+}
+
+/// Run a sweep with its points spread across `threads` worker threads,
+/// then print the rows in point order.  Every point is an independent
+/// seeded sim, so the rows are bit-identical to [`sweep`]'s — only the
+/// wall clock changes (near-linearly, until points outnumber cores;
+/// `benches/cluster_scale.rs` measures the scaling).
+pub fn sweep_parallel(points: &[Point], threads: usize) -> Vec<Row> {
+    let rows = par_map(points.len(), threads, |i| {
+        let p = &points[i];
+        Row::from_stats(p, &p.run())
+    });
+    header();
+    for r in &rows {
+        print_row(r);
     }
     rows
 }

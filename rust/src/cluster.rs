@@ -1,0 +1,389 @@
+//! Multi-replica cluster serving: shard one workload across R engine
+//! replicas and reconcile their stats.
+//!
+//! One [`Engine`] is single-threaded by design (a discrete-event loop
+//! whose virtual clock advances by executor-reported durations).  The
+//! cluster layer is how the system scales past one core: R replicas,
+//! each on its own OS thread with its own [`KvCacheManager`] and KV
+//! pool, serve disjoint shards of the workflow stream.  Workflows — not
+//! turns — are the sharding unit: every turn of a workflow revisits its
+//! accumulated context, so splitting a workflow across replicas would
+//! forfeit exactly the intra-workflow prefix reuse ICaRus exists to
+//! exploit.
+//!
+//! Routing ([`ClusterRouting`]) is pluggable:
+//!
+//!   * `RoundRobin` — workflow k to replica k mod R; uniform count.
+//!   * `LeastLoaded` — greedy assignment on estimated token footprint
+//!     (prompt + planned generation + observations); evens out skewed
+//!     workflow sizes.
+//!   * `HashPrefix` — hash the leading prompt blocks with the same
+//!     rolling block hash the radix prefix cache uses, so workflows
+//!     opening with the same context land on the replica that already
+//!     holds that cache: the cluster-level analogue of ICaRus's
+//!     cross-model reuse.  The hash spans up to
+//!     [`HASH_PREFIX_BLOCKS`] blocks rather than only the first:
+//!     real agent prompts open with a system preamble shared by *all*
+//!     workflows, and hashing only that block would degenerate to
+//!     routing every workflow to one replica.
+//!
+//! Clock reconciliation: each replica runs its own virtual timeline
+//! with the original absolute arrival times, so per-replica stats are
+//! directly comparable.  [`ServingStats::merge`] folds them into
+//! cluster-level P50/P95/P99 (exact histogram merges), total
+//! throughput, wall clock = slowest replica, and KV footprint = sum of
+//! the per-replica pools.
+//!
+//! [`KvCacheManager`]: crate::kvcache::KvCacheManager
+
+use std::thread;
+
+use crate::config::{ClusterRouting, ServingConfig};
+use crate::engine::executor::{CostModel, Executor, SimExecutor};
+use crate::engine::Engine;
+use crate::json::{self, Value};
+use crate::kvcache::block::{hash_block, ROOT_HASH};
+use crate::metrics::ServingStats;
+use crate::trace::{Trace, TurnEvent};
+use crate::workload::Workflow;
+
+/// Prompt blocks covered by `HashPrefix` routing.  Wide enough to reach
+/// past a shared system preamble (48 tokens at the default 16-token
+/// blocks) into the first workflow-specific block, narrow enough that
+/// workflows sharing a meaningful opening context still collide.
+pub const HASH_PREFIX_BLOCKS: usize = 4;
+
+/// Replica index for every workflow in `workload`, under `routing`.
+///
+/// Pure function of the workload (not of arrival timing beyond its
+/// order), so a cluster run is as reproducible as the single-engine
+/// run: same seed, same assignment, same per-replica timelines.
+pub fn assign_replicas(
+    workload: &[Workflow],
+    replicas: usize,
+    routing: ClusterRouting,
+    block_tokens: usize,
+) -> Vec<usize> {
+    let r = replicas.max(1);
+    match routing {
+        ClusterRouting::RoundRobin => (0..workload.len()).map(|i| i % r).collect(),
+        ClusterRouting::LeastLoaded => {
+            let mut loads = vec![0u64; r];
+            workload
+                .iter()
+                .map(|wf| {
+                    let est = wf.prompt.len() as u64
+                        + wf.turns.iter().map(|t| (t.gen_len + t.obs.len()) as u64).sum::<u64>();
+                    let dst = (0..r).min_by_key(|&i| loads[i]).expect("r >= 1");
+                    loads[dst] += est;
+                    dst
+                })
+                .collect()
+        }
+        ClusterRouting::HashPrefix => workload
+            .iter()
+            .map(|wf| {
+                let span = &wf.prompt[..wf.prompt.len().min(block_tokens * HASH_PREFIX_BLOCKS)];
+                let mut h = ROOT_HASH;
+                for chunk in span.chunks(block_tokens.max(1)) {
+                    h = hash_block(h, chunk);
+                }
+                (h % r as u64) as usize
+            })
+            .collect(),
+    }
+}
+
+/// Outcome of a cluster run: reconciled cluster-level stats plus the
+/// per-replica breakdown.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// Cluster-level stats (see [`ServingStats::merge`] for semantics).
+    pub merged: ServingStats,
+    /// Each replica's own run stats, indexed by replica id.
+    pub per_replica: Vec<ServingStats>,
+}
+
+impl ClusterStats {
+    fn from_replicas(per_replica: Vec<ServingStats>) -> ClusterStats {
+        let mut merged = ServingStats::new();
+        for s in &per_replica {
+            merged.merge(s);
+        }
+        ClusterStats { merged, per_replica }
+    }
+
+    /// Merged stats plus the per-replica breakdown, for results files.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("replicas", json::num(self.per_replica.len() as f64)),
+            ("stats", self.merged.to_json()),
+            (
+                "per_replica",
+                Value::Arr(self.per_replica.iter().map(ServingStats::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// A fixed fleet of engine replicas serving sharded workloads.
+///
+/// Construction is cheap (no threads are held between runs); each call
+/// to a `run_*` method spawns one OS thread per replica, runs every
+/// shard to completion and reconciles the results.
+///
+/// ```
+/// use icarus::cluster::Cluster;
+/// use icarus::config::ServingConfig;
+/// use icarus::engine::executor::CostModel;
+/// use icarus::config::WorkloadConfig;
+/// use icarus::workload::generate;
+///
+/// let scfg = ServingConfig { replicas: 2, ..Default::default() };
+/// let wl = generate(&WorkloadConfig { n_requests: 8, ..Default::default() });
+/// let out = Cluster::new(scfg, 2048, 4).run_sim(CostModel::default(), wl);
+/// assert_eq!(out.merged.completed_requests, 8);
+/// assert_eq!(out.per_replica.len(), 2);
+/// ```
+pub struct Cluster {
+    scfg: ServingConfig,
+    kv_bytes_per_token: u64,
+    n_models: usize,
+}
+
+impl Cluster {
+    /// A cluster of `scfg.replicas` engines, each configured exactly
+    /// like the single engine `Engine::new(scfg, ..)` would be.
+    pub fn new(scfg: ServingConfig, kv_bytes_per_token: u64, n_models: usize) -> Self {
+        Cluster { scfg, kv_bytes_per_token, n_models }
+    }
+
+    /// Number of replicas this cluster runs (at least 1).
+    pub fn replicas(&self) -> usize {
+        self.scfg.replicas.max(1)
+    }
+
+    fn shard(&self, workload: Vec<Workflow>) -> Vec<Vec<Workflow>> {
+        let r = self.replicas();
+        let assignment =
+            assign_replicas(&workload, r, self.scfg.cluster_routing, self.scfg.block_tokens);
+        let mut shards: Vec<Vec<Workflow>> = (0..r).map(|_| Vec::new()).collect();
+        for (wf, &rep) in workload.into_iter().zip(&assignment) {
+            shards[rep].push(wf);
+        }
+        shards
+    }
+
+    /// Spawn one scoped thread per shard, build a fresh engine on each
+    /// with `factory`, drive it with `run`, and join the results in
+    /// replica order.  The one place replica threads are constructed —
+    /// traced and untraced runs differ only in the closure they pass.
+    fn run_replicas<T, E, F, G>(&self, factory: F, workload: Vec<Workflow>, run: G) -> Vec<T>
+    where
+        T: Send,
+        E: Executor,
+        F: Fn() -> E + Sync,
+        G: Fn(Engine<E>, Vec<Workflow>) -> T + Sync,
+    {
+        let shards = self.shard(workload);
+        thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|shard| {
+                    let factory = &factory;
+                    let run = &run;
+                    s.spawn(move || {
+                        let engine = Engine::new(
+                            self.scfg.clone(),
+                            self.kv_bytes_per_token,
+                            self.n_models,
+                            factory(),
+                        );
+                        run(engine, shard)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
+        })
+    }
+
+    /// Run the workload across the replica fleet, building one executor
+    /// per replica with `factory`.  Blocks until every replica drains.
+    pub fn run_with<E, F>(&self, factory: F, workload: Vec<Workflow>) -> ClusterStats
+    where
+        E: Executor,
+        F: Fn() -> E + Sync,
+    {
+        ClusterStats::from_replicas(self.run_replicas(factory, workload, |e, w| e.run(w)))
+    }
+
+    /// Like [`Cluster::run_with`], but each replica also records a
+    /// per-turn trace; the merged trace is reconciled into one global
+    /// completion-ordered timeline.
+    pub fn run_with_traced<E, F>(
+        &self,
+        factory: F,
+        workload: Vec<Workflow>,
+    ) -> (ClusterStats, Trace)
+    where
+        E: Executor,
+        F: Fn() -> E + Sync,
+    {
+        let outcomes = self.run_replicas(factory, workload, |e, w| e.run_traced(w));
+        let mut per_replica = Vec::with_capacity(outcomes.len());
+        let mut events: Vec<TurnEvent> = Vec::new();
+        for (stats, trace) in outcomes {
+            per_replica.push(stats);
+            events.extend(trace.events);
+        }
+        // Reconcile the per-replica virtual clocks into one timeline.
+        // The sort is stable, so a single replica's trace (already in
+        // completion order) passes through unchanged.
+        events.sort_by(|a, b| a.completed_at.total_cmp(&b.completed_at));
+        (ClusterStats::from_replicas(per_replica), Trace { events })
+    }
+
+    /// Run with one [`SimExecutor`] per replica — the configuration the
+    /// sweep benches use.
+    pub fn run_sim(&self, cost: CostModel, workload: Vec<Workflow>) -> ClusterStats {
+        let mode = self.scfg.mode;
+        self.run_with(move || SimExecutor::new(cost.clone(), mode), workload)
+    }
+
+    /// Traced variant of [`Cluster::run_sim`].
+    pub fn run_sim_traced(
+        &self,
+        cost: CostModel,
+        workload: Vec<Workflow>,
+    ) -> (ClusterStats, Trace) {
+        let mode = self.scfg.mode;
+        self.run_with_traced(move || SimExecutor::new(cost.clone(), mode), workload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ServingMode, WorkloadConfig};
+    use crate::workload::generate;
+
+    fn workload(n: usize, qps: f64, seed: u64) -> Vec<Workflow> {
+        generate(&WorkloadConfig { n_requests: n, qps, seed, ..Default::default() })
+    }
+
+    #[test]
+    fn replicas_1_bit_identical_to_single_engine() {
+        let wl = workload(32, 0.8, 21);
+        let scfg = ServingConfig { replicas: 1, ..Default::default() };
+
+        let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+        let (single, single_trace) =
+            Engine::new(scfg.clone(), 2048, 4, exec).run_traced(wl.clone());
+
+        let cluster = Cluster::new(scfg, 2048, 4);
+        let (out, trace) = cluster.run_sim_traced(CostModel::default(), wl);
+        assert_eq!(out.merged, single, "merged stats must be bit-identical");
+        assert_eq!(out.per_replica.len(), 1);
+        assert_eq!(out.per_replica[0], single);
+        assert_eq!(trace.events, single_trace.events, "trace must be bit-identical");
+    }
+
+    #[test]
+    fn all_workflows_complete_across_replicas() {
+        for routing in [
+            ClusterRouting::RoundRobin,
+            ClusterRouting::LeastLoaded,
+            ClusterRouting::HashPrefix,
+        ] {
+            let scfg =
+                ServingConfig { replicas: 4, cluster_routing: routing, ..Default::default() };
+            let cluster = Cluster::new(scfg, 2048, 4);
+            let out = cluster.run_sim(CostModel::default(), workload(64, 1.0, 3));
+            assert_eq!(out.merged.completed_requests, 64, "{routing:?}");
+            assert_eq!(out.per_replica.len(), 4);
+            let sum: u64 = out.per_replica.iter().map(|s| s.completed_requests).sum();
+            assert_eq!(sum, 64);
+        }
+    }
+
+    #[test]
+    fn round_robin_assignment_cycles() {
+        let wl = workload(10, 1.0, 0);
+        let a = assign_replicas(&wl, 3, ClusterRouting::RoundRobin, 16);
+        assert_eq!(a, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_loaded_uses_every_replica_and_balances() {
+        let wl = workload(64, 1.0, 7);
+        let a = assign_replicas(&wl, 4, ClusterRouting::LeastLoaded, 16);
+        let mut loads = vec![0u64; 4];
+        for (wf, &rep) in wl.iter().zip(&a) {
+            loads[rep] += wf.prompt.len() as u64
+                + wf.turns.iter().map(|t| (t.gen_len + t.obs.len()) as u64).sum::<u64>();
+        }
+        assert!(loads.iter().all(|&l| l > 0), "every replica used: {loads:?}");
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        assert!(max / min < 1.5, "estimated load imbalance: {loads:?}");
+    }
+
+    #[test]
+    fn hash_prefix_is_deterministic_and_prefix_keyed() {
+        let wl = workload(48, 1.0, 9);
+        let a = assign_replicas(&wl, 4, ClusterRouting::HashPrefix, 16);
+        let b = assign_replicas(&wl, 4, ClusterRouting::HashPrefix, 16);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&r| r < 4));
+        // Two workflows with identical leading blocks land together.
+        let mut wl2 = wl.clone();
+        wl2[1].prompt = wl[0].prompt.clone();
+        let c = assign_replicas(&wl2, 4, ClusterRouting::HashPrefix, 16);
+        assert_eq!(c[0], c[1], "identical prefixes colocate");
+        // The synthetic workload's unique bodies must spread the fleet
+        // (i.e. the hash reaches past the shared 48-token preamble).
+        let used: std::collections::BTreeSet<usize> = a.into_iter().collect();
+        assert!(used.len() > 1, "hash-prefix routing degenerated to one replica");
+    }
+
+    #[test]
+    fn replicas_cut_tail_latency_under_pressure() {
+        // Baseline mode, 8 models, small pool: one engine thrashes its
+        // KV pool and queues; four replicas each see a quarter of the
+        // load with a full pool of their own.
+        let wcfg = WorkloadConfig {
+            n_models: 8,
+            qps: 2.0,
+            n_requests: 96,
+            seed: 5,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let mk = |replicas: usize| {
+            let scfg = ServingConfig {
+                mode: ServingMode::Baseline,
+                replicas,
+                kv_pool_bytes: 16 << 20,
+                ..Default::default()
+            };
+            Cluster::new(scfg, 2048, 8).run_sim(CostModel::default(), wl.clone())
+        };
+        let r1 = mk(1);
+        let r4 = mk(4);
+        assert_eq!(r4.merged.completed_requests, r1.merged.completed_requests);
+        let p1 = r1.merged.turn_latency.as_ref().unwrap().p95();
+        let p4 = r4.merged.turn_latency.as_ref().unwrap().p95();
+        assert!(p4 < p1, "4 replicas should cut P95 under load: {p4} vs {p1}");
+        // The fleet's memory footprint is additive.
+        assert!(r4.merged.peak_kv_bytes >= r1.merged.peak_kv_bytes);
+    }
+
+    #[test]
+    fn merged_wall_clock_is_slowest_replica() {
+        let scfg = ServingConfig { replicas: 3, ..Default::default() };
+        let cluster = Cluster::new(scfg, 2048, 4);
+        let out = cluster.run_sim(CostModel::default(), workload(48, 1.0, 13));
+        let max_wall = out.per_replica.iter().map(|s| s.wall_seconds).fold(0.0f64, f64::max);
+        assert_eq!(out.merged.wall_seconds, max_wall);
+    }
+}

@@ -16,6 +16,7 @@ pub enum ServingMode {
 }
 
 impl ServingMode {
+    /// CLI / JSON spelling of the mode.
     pub fn as_str(self) -> &'static str {
         match self {
             ServingMode::Baseline => "baseline",
@@ -23,6 +24,7 @@ impl ServingMode {
         }
     }
 
+    /// Inverse of [`ServingMode::as_str`].
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "baseline" => Ok(ServingMode::Baseline),
@@ -43,6 +45,7 @@ pub enum EvictionPolicy {
 }
 
 impl EvictionPolicy {
+    /// CLI / JSON spelling of the policy.
     pub fn as_str(self) -> &'static str {
         match self {
             EvictionPolicy::Recompute => "recompute",
@@ -51,9 +54,51 @@ impl EvictionPolicy {
     }
 }
 
+/// How the cluster layer assigns workflows to engine replicas (see
+/// `cluster::Cluster`).  All turns of a workflow stay on one replica —
+/// the workflow's accumulated context is what the prefix cache reuses,
+/// so splitting a workflow across replicas would forfeit every
+/// intra-workflow cache hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterRouting {
+    /// Workflow k (in arrival order) goes to replica k mod R.
+    RoundRobin,
+    /// Greedy least-estimated-work assignment: each workflow lands on
+    /// the replica with the smallest accumulated token footprint
+    /// (prompt + planned generation + observations).
+    LeastLoaded,
+    /// Prefix-affinity: hash the leading prompt blocks so workflows
+    /// sharing an opening context land on the replica that already
+    /// holds that cache — the cluster-level analogue of ICaRus's
+    /// cross-model reuse.
+    HashPrefix,
+}
+
+impl ClusterRouting {
+    /// CLI / JSON spelling of the policy.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ClusterRouting::RoundRobin => "round_robin",
+            ClusterRouting::LeastLoaded => "least_loaded",
+            ClusterRouting::HashPrefix => "hash_prefix",
+        }
+    }
+
+    /// Inverse of [`ClusterRouting::as_str`].
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "round_robin" => Ok(ClusterRouting::RoundRobin),
+            "least_loaded" => Ok(ClusterRouting::LeastLoaded),
+            "hash_prefix" => Ok(ClusterRouting::HashPrefix),
+            other => anyhow::bail!("unknown cluster routing: {other}"),
+        }
+    }
+}
+
 /// Serving engine configuration (the vLLM-equivalent knobs).
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
+    /// Cache-namespacing mode: the paper's baseline-vs-ICaRus variable.
     pub mode: ServingMode,
     /// Simulated GPU memory budget for the KV pool, in bytes.  This is
     /// the A100-80GB stand-in: the eviction dynamics the paper measures
@@ -65,12 +110,21 @@ pub struct ServingConfig {
     pub max_batch: usize,
     /// Max prefill tokens admitted per engine step.
     pub max_prefill_tokens: usize,
+    /// What happens to a victim's blocks when the pool is full.
     pub eviction: EvictionPolicy,
     /// Swap tier capacity in bytes (Appendix E uses 4 GB).
     pub swap_bytes: u64,
     /// Enable per-namespace prefix caching (on in both systems; the
     /// ablation bench turns it off).
     pub prefix_caching: bool,
+    /// Engine replicas the cluster layer shards across.  1 (the
+    /// default) is plain single-engine serving; each extra replica gets
+    /// its own OS thread, `KvCacheManager` and KV pool of
+    /// `kv_pool_bytes`.
+    pub replicas: usize,
+    /// Workflow-to-replica assignment policy (ignored for `replicas`
+    /// = 1).
+    pub cluster_routing: ClusterRouting,
 }
 
 impl Default for ServingConfig {
@@ -84,11 +138,14 @@ impl Default for ServingConfig {
             eviction: EvictionPolicy::Recompute,
             swap_bytes: 4 << 30,
             prefix_caching: true,
+            replicas: 1,
+            cluster_routing: ClusterRouting::RoundRobin,
         }
     }
 }
 
 impl ServingConfig {
+    /// Dump the exact run configuration for results files.
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("mode", json::s(self.mode.as_str())),
@@ -99,6 +156,8 @@ impl ServingConfig {
             ("eviction", json::s(self.eviction.as_str())),
             ("swap_bytes", json::num(self.swap_bytes as f64)),
             ("prefix_caching", Value::Bool(self.prefix_caching)),
+            ("replicas", json::num(self.replicas as f64)),
+            ("cluster_routing", json::s(self.cluster_routing.as_str())),
         ])
     }
 }
@@ -113,6 +172,7 @@ pub enum AgentPattern {
 }
 
 impl AgentPattern {
+    /// CLI / JSON spelling of the pattern.
     pub fn as_str(self) -> &'static str {
         match self {
             AgentPattern::ReAct => "react",
@@ -120,6 +180,7 @@ impl AgentPattern {
         }
     }
 
+    /// Inverse of [`AgentPattern::as_str`].
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "react" => Ok(AgentPattern::ReAct),
@@ -136,10 +197,14 @@ pub enum Routing {
     RoundRobin,
     /// Appendix F: one hot model gets `hot_p`, the rest share the
     /// remainder, order randomized.
-    Skewed { hot_p_percent: u8 },
+    Skewed {
+        /// Share of turns (in percent) routed to the hot model.
+        hot_p_percent: u8,
+    },
 }
 
 impl Routing {
+    /// CLI / JSON spelling of the policy.
     pub fn as_str(self) -> &'static str {
         match self {
             Routing::RoundRobin => "round_robin",
@@ -151,6 +216,7 @@ impl Routing {
 /// Workload generator configuration (HotPotQA-agent stand-in; A.2.3).
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
+    /// Agentic pattern driving each workflow's turn structure.
     pub pattern: AgentPattern,
     /// Number of task-specialized models (LoRA adapters), N in the paper.
     pub n_models: usize,
@@ -158,24 +224,31 @@ pub struct WorkloadConfig {
     pub qps: f64,
     /// Total workflows in the run (paper fixes 128).
     pub n_requests: usize,
+    /// How successive turns are routed across the N models.
     pub routing: Routing,
     /// Mean initial prompt tokens (shared prefix: question + instructions).
     pub prompt_mean: f64,
+    /// Std dev of initial prompt tokens.
     pub prompt_std: f64,
-    /// Turns per workflow (thought/act/obs cycles).
+    /// Minimum turns per workflow (thought/act/obs cycles).
     pub turns_min: u64,
+    /// Maximum turns per workflow.
     pub turns_max: u64,
     /// Mean generated tokens per turn.
     pub output_mean: f64,
+    /// Std dev of generated tokens per turn.
     pub output_std: f64,
     /// Observation tokens appended after each tool call.
     pub obs_mean: f64,
+    /// Std dev of observation tokens.
     pub obs_std: f64,
     /// Tool-execution latency between turns (seconds) — while an agent
     /// waits on its tool, its context sits in the cache aging toward
     /// eviction (this is what makes recompute-vs-swap matter).
     pub think_mean: f64,
+    /// Std dev of tool-execution latency.
     pub think_std: f64,
+    /// Workload generator seed; runs are bit-reproducible per seed.
     pub seed: u64,
 }
 
@@ -203,6 +276,7 @@ impl Default for WorkloadConfig {
 }
 
 impl WorkloadConfig {
+    /// Dump the exact workload configuration for results files.
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("pattern", json::s(self.pattern.as_str())),
@@ -238,9 +312,22 @@ mod tests {
     }
 
     #[test]
+    fn cluster_routing_roundtrip() {
+        for r in [
+            ClusterRouting::RoundRobin,
+            ClusterRouting::LeastLoaded,
+            ClusterRouting::HashPrefix,
+        ] {
+            assert_eq!(ClusterRouting::parse(r.as_str()).unwrap(), r);
+        }
+        assert!(ClusterRouting::parse("nope").is_err());
+    }
+
+    #[test]
     fn defaults_sane() {
         let s = ServingConfig::default();
         assert!(s.kv_pool_bytes > 0 && s.block_tokens > 0);
+        assert_eq!(s.replicas, 1, "plain single-engine serving by default");
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);

@@ -22,6 +22,7 @@ pub type SnapshotId = u64;
 /// Result of a prefill call.
 #[derive(Debug)]
 pub struct PrefillOut {
+    /// Seconds the prefill took (measured or modeled).
     pub duration: f64,
     /// Live cache handle for the new sequence.
     pub cache: SnapshotId,
@@ -32,7 +33,9 @@ pub struct PrefillOut {
 /// One running sequence's slot in a decode batch.
 #[derive(Debug)]
 pub struct DecodeSlot {
+    /// Sequence this slot belongs to.
     pub seq_id: u64,
+    /// LoRA adapter the sequence is served by.
     pub model_id: usize,
     /// Live cache handle (replaced by the executor on each step).
     pub cache: SnapshotId,
@@ -44,6 +47,7 @@ pub struct DecodeSlot {
     pub next_token: u32,
 }
 
+/// The engine's only way to touch model compute (see the module docs).
 pub trait Executor {
     /// Encode `prompt[cached_tokens..]` on top of `base` (the snapshot
     /// covering the cached prefix, if any) and return a live cache +
@@ -119,11 +123,14 @@ impl Default for CostModel {
 }
 
 impl CostModel {
+    /// Modeled seconds to prefill `n_tokens` uncached tokens.
     pub fn prefill_time(&self, n_tokens: usize) -> f64 {
         let n = n_tokens as f64;
         self.prefill_base + self.prefill_per_token * n + self.prefill_per_token2 * n * n
     }
 
+    /// Modeled seconds for one decode step over a batch with the given
+    /// per-sequence context lengths.
     pub fn decode_time(&self, ctx_lens: &[usize], mode: ServingMode) -> f64 {
         let ctx: usize = ctx_lens.iter().sum();
         let t = self.decode_base
@@ -144,23 +151,32 @@ pub struct SimExecutor {
     mode: ServingMode,
     next_snapshot: SnapshotId,
     live_snapshots: u64,
+    /// Call counters for the run.
     pub stats: SimStats,
 }
 
+/// Call counters the sim executor accumulates.
 #[derive(Debug, Default, Clone)]
 pub struct SimStats {
+    /// Prefill invocations.
     pub prefill_calls: u64,
+    /// Uncached tokens actually prefilled.
     pub prefill_tokens: u64,
+    /// Decode steps executed.
     pub decode_steps: u64,
+    /// Total sequence-slots across decode steps.
     pub decode_slots: u64,
+    /// Snapshot handles released.
     pub dropped_snapshots: u64,
 }
 
 impl SimExecutor {
+    /// Executor charging `cost` under `mode`'s decode model.
     pub fn new(cost: CostModel, mode: ServingMode) -> Self {
         SimExecutor { cost, mode, next_snapshot: 1, live_snapshots: 0, stats: SimStats::default() }
     }
 
+    /// Snapshot handles currently alive (leak check for tests).
     pub fn live_snapshots(&self) -> u64 {
         self.live_snapshots
     }

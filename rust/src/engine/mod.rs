@@ -30,6 +30,9 @@ use crate::workload::Workflow;
 use executor::{DecodeSlot, Executor, PrefillOut};
 use sequence::{PendingTurn, RunningSeq, WfState};
 
+/// The single-threaded continuous-batching serving engine (see the
+/// module docs for the event loop; `cluster::Cluster` shards workloads
+/// across several of these).
 pub struct Engine<E: Executor> {
     cfg: ServingConfig,
     exec: E,
@@ -48,6 +51,8 @@ pub struct Engine<E: Executor> {
 }
 
 impl<E: Executor> Engine<E> {
+    /// Engine over `exec`, with a fresh KV manager sized by `cfg`.
+    /// Panics if `cfg.mode` and the executor's mode disagree.
     pub fn new(cfg: ServingConfig, kv_bytes_per_token: u64, n_models: usize, exec: E) -> Self {
         assert_eq!(cfg.mode, exec.mode(), "engine/executor mode mismatch");
         let kv = KvCacheManager::new(&cfg, kv_bytes_per_token, n_models);
@@ -79,10 +84,12 @@ impl<E: Executor> Engine<E> {
         (stats, self.trace.take().unwrap_or_default())
     }
 
+    /// The engine's KV cache manager (post-run inspection).
     pub fn kv(&self) -> &KvCacheManager {
         &self.kv
     }
 
+    /// The engine's executor (post-run inspection).
     pub fn executor(&self) -> &E {
         &self.exec
     }

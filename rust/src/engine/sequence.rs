@@ -12,7 +12,9 @@ use crate::workload::Workflow;
 /// A turn waiting for admission.
 #[derive(Debug)]
 pub struct PendingTurn {
+    /// Index of the owning workflow in the engine's `wfs`.
     pub wf_idx: usize,
+    /// Turn position within the workflow's spec.
     pub turn_idx: usize,
     /// When this turn became runnable (workflow arrival or previous turn
     /// completion) — the latency clock starts here.
@@ -34,26 +36,33 @@ pub struct PendingTurn {
 /// A sequence currently in the decode batch.
 #[derive(Debug)]
 pub struct RunningSeq {
+    /// Engine-unique sequence id (the KV manager's key).
     pub seq_id: u64,
+    /// Index of the owning workflow in the engine's `wfs`.
     pub wf_idx: usize,
+    /// Turn position within the workflow's spec.
     pub turn_idx: usize,
+    /// LoRA adapter this turn is routed to.
     pub model_id: usize,
     /// Prompt this turn was prefilled with (shared with nobody in the
     /// steady state — the workflow parked its context here).
     pub prompt: TokenBuf,
     /// Tokens generated so far this turn.
     pub generated: Vec<u32>,
+    /// Tokens still to generate this turn.
     pub remaining_gen: usize,
     /// Live cache handle (functional: replaced every decode step).
     pub cache: SnapshotId,
     /// Prompt tokens served from the prefix cache at admission.
     pub cached_tokens: usize,
+    /// When the turn became runnable (the latency clock's start).
     pub ready_at: f64,
     /// Admission order (preemption victims are picked newest-first).
     pub admitted_at: f64,
 }
 
 impl RunningSeq {
+    /// Prompt plus generated tokens currently resident.
     pub fn context_len(&self) -> usize {
         self.prompt.len() + self.generated.len()
     }
@@ -69,17 +78,21 @@ impl RunningSeq {
 /// Workflow progress tracking.
 #[derive(Debug)]
 pub struct WfState {
+    /// The generator-planned workflow this state tracks.
     pub spec: Workflow,
     /// Accumulated context: prompt + per-turn (generated + obs).  While
     /// a turn for this workflow is pending or running, the context is
     /// parked in that turn (this field is empty) so the buffer stays
     /// uniquely owned and per-turn appends never copy.
     pub context: TokenBuf,
+    /// Next turn index to enqueue.
     pub next_turn: usize,
+    /// True once every turn has retired.
     pub done: bool,
 }
 
 impl WfState {
+    /// Fresh state with the context seeded from the prompt (O(1) clone).
     pub fn new(spec: Workflow) -> Self {
         let context = spec.prompt.clone();
         WfState { spec, context, next_turn: 0, done: false }

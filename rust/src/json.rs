@@ -12,17 +12,26 @@ use std::fmt;
 /// deterministic — handy for golden tests and diffable results files.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64; whole values serialize without a dot).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object with deterministically ordered keys.
     Obj(BTreeMap<String, Value>),
 }
 
+/// Parse failure: where in the input and why.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable reason.
     pub msg: String,
 }
 
@@ -35,6 +44,7 @@ impl std::fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl Value {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Value, ParseError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -48,6 +58,7 @@ impl Value {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Object member by key (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -55,6 +66,7 @@ impl Value {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -62,6 +74,7 @@ impl Value {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -69,14 +82,17 @@ impl Value {
         }
     }
 
+    /// The numeric value truncated to u64, if this is a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -84,6 +100,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -91,6 +108,7 @@ impl Value {
         }
     }
 
+    /// The members, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Some(m),
@@ -107,6 +125,7 @@ impl Value {
         Some(cur)
     }
 
+    /// Serialize with two-space indentation (diffable results files).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
@@ -191,19 +210,22 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Convenience builders for result emission.
+/// Convenience builder: an object from (key, value) pairs.
 pub fn obj(entries: Vec<(&str, Value)>) -> Value {
     Value::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Convenience builder: a number value.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// Convenience builder: a string value.
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }
 
+/// Convenience builder: an array value.
 pub fn arr(v: Vec<Value>) -> Value {
     Value::Arr(v)
 }

@@ -4,9 +4,11 @@
 //! device buffers managed by the runtime), but every cache byte in the
 //! system is represented by a block here, so admission, eviction and the
 //! paper's memory-explosion dynamics (Fig 4b) are governed by this
-//! budget.  Substitution note (DESIGN.md): the budget stands in for the
-//! A100's 80 GB; what matters is the footprint/budget ratio.
+//! budget.  Substitution note (README.md §Substitutions): the budget
+//! stands in for the A100's 80 GB; what matters is the
+//! footprint/budget ratio.
 
+/// Index of a block in the pool's refcount table.
 pub type BlockId = u32;
 
 /// Chain-hash seed for the root of a prefix tree (FNV-1a offset basis).
@@ -62,26 +64,32 @@ impl BlockPool {
         }
     }
 
+    /// Total blocks the byte budget affords.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Blocks currently allocated (refcount > 0).
     pub fn used(&self) -> usize {
         self.used
     }
 
+    /// Blocks currently free.
     pub fn free_blocks(&self) -> usize {
         self.capacity - self.used
     }
 
+    /// High-water mark of allocated blocks.
     pub fn peak_used(&self) -> usize {
         self.peak_used
     }
 
+    /// High-water mark in bytes (the memory-explosion signal).
     pub fn peak_bytes(&self) -> u64 {
         self.peak_used as u64 * self.block_bytes
     }
 
+    /// Current usage in bytes.
     pub fn used_bytes(&self) -> u64 {
         self.used as u64 * self.block_bytes
     }
@@ -125,6 +133,7 @@ impl BlockPool {
         }
     }
 
+    /// Current refcount of `id` (0 = free).
     pub fn refcount(&self, id: BlockId) -> u32 {
         self.refcount[id as usize]
     }

@@ -22,12 +22,14 @@ use super::swap::SwapTier;
 /// Outcome of trying to admit / grow a sequence.
 #[derive(Debug, PartialEq, Eq)]
 pub enum Alloc {
+    /// Admitted; the payload says what the prefix cache covered.
     Ok(Admission),
     /// Pool exhausted even after eviction: caller must preempt a running
     /// sequence (or queue the request).
     NoSpace,
 }
 
+/// What an admission found in (and evicted from) the cache.
 #[derive(Debug, PartialEq, Eq, Default)]
 pub struct Admission {
     /// Prompt tokens covered by the prefix cache (no prefill needed).
@@ -54,28 +56,40 @@ struct SeqState {
     tokens: usize,
 }
 
+/// Cache-policy counters the manager accumulates during a run.
 #[derive(Debug, Default)]
 pub struct ManagerStats {
+    /// Blocks evicted from the prefix trees.
     pub evicted_blocks: u64,
+    /// Prefix-cache publishes that failed for lack of pool space.
     pub failed_inserts: u64,
+    /// Tokens released by preemptions.
     pub preempted_tokens: u64,
+    /// Evictions that wanted to swap but found the tier full.
     pub swap_rejected: u64,
 }
 
+/// The façade the scheduler talks to: block pool + per-namespace prefix
+/// trees + swap tier + per-sequence ownership (see the module docs).
 pub struct KvCacheManager {
+    /// The block pool every cache byte is accounted against.
     pub pool: BlockPool,
     trees: Vec<RadixCache>,
     seqs: HashMap<u64, SeqState>,
     mode: ServingMode,
     eviction: EvictionPolicy,
+    /// Host-side swap tier (used by the `Swap` eviction policy).
     pub swap: SwapTier,
     prefix_caching: bool,
     /// Bytes per token of KV cache — pricing evictions for swap.
     kv_bytes_per_token: u64,
+    /// Cache-policy counters for the run.
     pub stats: ManagerStats,
 }
 
 impl KvCacheManager {
+    /// Manager sized by `cfg`'s pool budget, with one prefix tree per
+    /// namespace (N for baseline, 1 for ICaRus).
     pub fn new(cfg: &ServingConfig, kv_bytes_per_token: u64, n_models: usize) -> Self {
         let n_trees = match cfg.mode {
             ServingMode::Baseline => n_models,
@@ -102,10 +116,12 @@ impl KvCacheManager {
         }
     }
 
+    /// Cache-namespacing mode this manager was built with.
     pub fn mode(&self) -> ServingMode {
         self.mode
     }
 
+    /// Sequences currently holding pool resources.
     pub fn active_sequences(&self) -> usize {
         self.seqs.len()
     }
@@ -283,6 +299,7 @@ impl KvCacheManager {
         st.tokens
     }
 
+    /// KV cache cost per token this manager prices evictions with.
     pub fn kv_bytes_per_token(&self) -> u64 {
         self.kv_bytes_per_token
     }

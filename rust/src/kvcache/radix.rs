@@ -34,6 +34,7 @@ use std::collections::{BinaryHeap, HashMap};
 
 use super::block::{hash_block, BlockId, BlockPool, ROOT_HASH};
 
+/// Index of a node in the tree's arena (recycled through a free list).
 pub type NodeId = usize;
 
 /// Lazily-invalidated eviction-heap entry: `(last_access, creation seq,
@@ -84,6 +85,8 @@ pub struct Match {
     pub swapped_nodes: Vec<NodeId>,
 }
 
+/// Block-granular prefix trie for one cache namespace (see the module
+/// docs for the hot-path layout).
 #[derive(Debug)]
 pub struct RadixCache {
     nodes: Vec<Node>,
@@ -147,6 +150,7 @@ impl RadixCache {
         Self::with_block_tokens(0)
     }
 
+    /// Live nodes currently holding a block (one block each).
     pub fn resident_nodes(&self) -> usize {
         self.resident
     }
@@ -283,6 +287,7 @@ impl RadixCache {
         }
     }
 
+    /// Release the pins [`RadixCache::pin`] took on a matched path.
     pub fn unpin(&mut self, m: &Match, _pool: &mut BlockPool) {
         for &n in &m.path {
             debug_assert!(self.nodes[n].pins > 0);

@@ -6,25 +6,33 @@
 //! occupancy and traffic; it holds no data (the engine keeps snapshot
 //! handles alive while swapped).
 
+/// Bounded host-side swap space: occupancy + traffic accounting.
 #[derive(Debug)]
 pub struct SwapTier {
     capacity: u64,
     used: u64,
+    /// Contexts moved out to the tier.
     pub swap_outs: u64,
+    /// Contexts restored from the tier.
     pub swap_ins: u64,
+    /// Total bytes swapped out.
     pub bytes_out: u64,
+    /// Total bytes swapped back in.
     pub bytes_in: u64,
 }
 
 impl SwapTier {
+    /// An empty tier with `capacity` bytes of host space.
     pub fn new(capacity: u64) -> Self {
         SwapTier { capacity, used: 0, swap_outs: 0, swap_ins: 0, bytes_out: 0, bytes_in: 0 }
     }
 
+    /// Bytes currently parked in the tier.
     pub fn used(&self) -> u64 {
         self.used
     }
 
+    /// Bytes of remaining tier capacity.
     pub fn free(&self) -> u64 {
         self.capacity - self.used
     }

@@ -6,7 +6,7 @@
 //! ever writes cache entries; task adapters live purely in the logical
 //! decoder.
 //!
-//! Three layers (see DESIGN.md):
+//! Three layers (see README.md §Architecture):
 //!   * L1 — Pallas kernels (paired-query attention, fused ICaRusLinear),
 //!     authored in `python/compile/kernels/`, verified against jnp
 //!     oracles, AOT-lowered into the HLO artifacts.
@@ -14,12 +14,21 @@
 //!     to HLO text per serving config.
 //!   * L3 — this crate: the multi-model serving engine (paged KV cache,
 //!     cross-model prefix caching, continuous batching, agentic workload
-//!     drivers) plus the PJRT runtime that executes the artifacts.
+//!     drivers), the multi-replica cluster layer that shards workflow
+//!     streams across engines, and the PJRT runtime that executes the
+//!     artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation; the `icarus` binary is self-contained afterwards.
+//!
+//! Reproduction docs: EXPERIMENTS.md maps every paper figure to the
+//! bench that regenerates it and records how the simulator is
+//! calibrated against the real PJRT runtime.
+
+#![warn(missing_docs)]
 
 pub mod bench_util;
+pub mod cluster;
 pub mod config;
 pub mod engine;
 pub mod json;
@@ -32,7 +41,11 @@ pub mod tokens;
 pub mod trace;
 pub mod workload;
 
-pub use config::{AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig};
+pub use cluster::{Cluster, ClusterStats};
+pub use config::{
+    AgentPattern, ClusterRouting, EvictionPolicy, Routing, ServingConfig, ServingMode,
+    WorkloadConfig,
+};
 pub use engine::executor::{CostModel, Executor, SimExecutor};
 pub use engine::Engine;
 pub use kvcache::KvCacheManager;

@@ -2,21 +2,39 @@
 //!
 //! Subcommands:
 //!   serve  — run one workload configuration and print serving stats.
+//!            `--replicas R` shards the workload across R engine
+//!            replicas (own thread + KV pool each, sim executor only);
+//!            `--cluster-routing` picks the workflow-to-replica policy.
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
+//!            `--threads T` runs the sweep points across T worker
+//!            threads (near-linear wall-clock speedup for the grids;
+//!            `--replicas` is accepted as a fallback spelling).  Each
+//!            point is a plain single-engine run either way — threads
+//!            change wall clock, never the numbers.
 //!   info   — show artifact manifest details.
+//!
+//! Both serve and sweep accept `--json out.json` to write the results
+//! machine-readably alongside the stdout report.
 //!
 //! Examples:
 //!   icarus serve --mode icarus --models 4 --qps 0.4 --executor sim
 //!   icarus serve --executor pjrt --config serve-small --requests 8
+//!   icarus serve --replicas 4 --cluster-routing least_loaded --qps 2.0
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
+//!   icarus sweep --threads 4 --json sweep.json
 
 use anyhow::{anyhow, Result};
 
+use icarus::bench_util::par_map;
+use icarus::cluster::Cluster;
 use icarus::config::{
-    AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
+    AgentPattern, ClusterRouting, EvictionPolicy, Routing, ServingConfig, ServingMode,
+    WorkloadConfig,
 };
 use icarus::engine::executor::{CostModel, SimExecutor};
 use icarus::engine::Engine;
+use icarus::json::{self, Value};
+use icarus::metrics::ServingStats;
 use icarus::runtime::{Manifest, PjrtExecutor};
 use icarus::workload::generate;
 
@@ -80,6 +98,8 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         },
         swap_bytes: a.u64("swap-mb", 4096)? << 20,
         prefix_caching: a.get("prefix-caching").unwrap_or("on") != "off",
+        replicas: a.usize("replicas", 1)?,
+        cluster_routing: ClusterRouting::parse(a.get("cluster-routing").unwrap_or("round_robin"))?,
     })
 }
 
@@ -99,18 +119,41 @@ fn workload_config(a: &Args) -> Result<WorkloadConfig> {
     })
 }
 
+/// Write `text` to `--json <path>` when the flag is present.
+fn write_json_flag(a: &Args, text: &str) -> Result<()> {
+    if let Some(path) = a.get("json") {
+        std::fs::write(path, text)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
     let scfg = serving_config(a)?;
     let wcfg = workload_config(a)?;
     let workload = generate(&wcfg);
+    let mut per_replica_json = None;
     let stats = match a.get("executor").unwrap_or("sim") {
         "sim" => {
             // serve-small KV bytes/token unless overridden.
             let kv_bpt = a.u64("kv-bytes-per-token", 2048)?;
-            let exec = SimExecutor::new(CostModel::default(), scfg.mode);
-            Engine::new(scfg.clone(), kv_bpt, wcfg.n_models, exec).run(workload)
+            // The cluster path with --replicas 1 is bit-identical to a
+            // plain single-engine run (pinned by cluster::tests), so
+            // sim serving always goes through it.
+            let cluster = Cluster::new(scfg.clone(), kv_bpt, wcfg.n_models);
+            let out = cluster.run_sim(CostModel::default(), workload);
+            if scfg.replicas > 1 {
+                per_replica_json = Some(Value::Arr(
+                    out.per_replica.iter().map(ServingStats::to_json).collect(),
+                ));
+            }
+            out.merged
         }
         "pjrt" => {
+            anyhow::ensure!(
+                scfg.replicas <= 1,
+                "--replicas > 1 needs --executor sim (one PJRT runtime instance per process)"
+            );
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let config = a.get("config").unwrap_or("serve-small");
             let manifest = Manifest::load(dir)?;
@@ -120,18 +163,42 @@ fn cmd_serve(a: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown executor {other}"),
     };
-    let out = icarus::json::obj(vec![
+    let mut entries = vec![
         ("serving", scfg.to_json()),
         ("workload", wcfg.to_json()),
         ("stats", stats.to_json()),
-    ]);
-    println!("{}", out.to_string_pretty());
-    Ok(())
+    ];
+    if let Some(pr) = per_replica_json {
+        entries.push(("per_replica", pr));
+    }
+    let text = json::obj(entries).to_string_pretty();
+    println!("{text}");
+    write_json_flag(a, &text)
+}
+
+/// Run one single-engine sim point per QPS value, spread across
+/// `threads` workers.  Results come back in `qps_list` order regardless
+/// of which worker ran which point (each point is an independent seeded
+/// sim, so parallel execution changes wall-clock only, never the
+/// numbers).
+fn run_sweep_points(
+    scfg: &ServingConfig,
+    wcfg: &WorkloadConfig,
+    qps_list: &[f64],
+    kv_bpt: u64,
+    threads: usize,
+) -> Vec<ServingStats> {
+    par_map(qps_list.len(), threads, |i| {
+        let mut w = wcfg.clone();
+        w.qps = qps_list[i];
+        let exec = SimExecutor::new(CostModel::default(), scfg.mode);
+        Engine::new(scfg.clone(), kv_bpt, w.n_models, exec).run(generate(&w))
+    })
 }
 
 fn cmd_sweep(a: &Args) -> Result<()> {
     let scfg = serving_config(a)?;
-    let mut wcfg = workload_config(a)?;
+    let wcfg = workload_config(a)?;
     let qps_list: Vec<f64> = a
         .get("qps-list")
         .unwrap_or("0.2,0.4,0.6,0.8")
@@ -139,20 +206,26 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| anyhow!("bad qps {s}")))
         .collect::<Result<_>>()?;
     let kv_bpt = a.u64("kv-bytes-per-token", 2048)?;
+    // Sweep points are independent single-engine runs; `--threads` only
+    // parallelizes them.  `--replicas` is accepted as a fallback so the
+    // serve/sweep flag sets stay interchangeable, but it does NOT build
+    // a cluster per point (the numbers would be incomparable with
+    // `serve --replicas R` otherwise — see the JSON dump below).
+    let threads = a.usize("threads", scfg.replicas)?.clamp(1, qps_list.len().max(1));
     println!(
-        "mode={} models={} pattern={}",
+        "mode={} models={} pattern={} threads={}",
         scfg.mode.as_str(),
         wcfg.n_models,
-        wcfg.pattern.as_str()
+        wcfg.pattern.as_str(),
+        threads
     );
+    let stats_list = run_sweep_points(&scfg, &wcfg, &qps_list, kv_bpt, threads);
     println!(
         "{:>6} {:>10} {:>10} {:>12} {:>10}",
         "qps", "p95(s)", "p50(s)", "tput(tok/s)", "hit-rate"
     );
-    for &qps in &qps_list {
-        wcfg.qps = qps;
-        let exec = SimExecutor::new(CostModel::default(), scfg.mode);
-        let stats = Engine::new(scfg.clone(), kv_bpt, wcfg.n_models, exec).run(generate(&wcfg));
+    let mut points = Vec::new();
+    for (&qps, stats) in qps_list.iter().zip(&stats_list) {
         let tl = stats.turn_latency.as_ref().unwrap();
         println!(
             "{:>6.2} {:>10.3} {:>10.3} {:>12.1} {:>10.3}",
@@ -162,8 +235,20 @@ fn cmd_sweep(a: &Args) -> Result<()> {
             stats.throughput_tok_s(),
             stats.cache_hit_rate()
         );
+        points.push(json::obj(vec![("qps", json::num(qps)), ("stats", stats.to_json())]));
     }
-    Ok(())
+    // Every sweep point runs on a plain single engine — here --replicas
+    // only sizes the worker-thread pool — so the dumped config must say
+    // replicas=1, with the thread count recorded separately.
+    let point_scfg = ServingConfig { replicas: 1, ..scfg };
+    let text = json::obj(vec![
+        ("serving", point_scfg.to_json()),
+        ("threads", json::num(threads as f64)),
+        ("workload", wcfg.to_json()),
+        ("points", Value::Arr(points)),
+    ])
+    .to_string_pretty();
+    write_json_flag(a, &text)
 }
 
 fn cmd_info(a: &Args) -> Result<()> {

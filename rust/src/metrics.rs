@@ -4,7 +4,21 @@
 /// Log-bucketed latency histogram.  Buckets are exponential with ~3%
 /// resolution, covering 1µs .. ~1.2h, so P95 extraction is O(buckets)
 /// and recording is O(1) with no allocation on the hot path.
-#[derive(Debug, Clone)]
+///
+/// Histograms merge exactly: bucket counts are position-wise sums, so
+/// merging per-replica histograms yields bit-identical counts and
+/// quantile buckets to recording every sample into one instance (the
+/// property `tests/property_invariants.rs` checks).
+///
+/// ```
+/// use icarus::metrics::Histogram;
+/// let mut h = Histogram::new();
+/// h.record(0.25);
+/// h.record(0.75);
+/// assert_eq!(h.count(), 2);
+/// assert!((h.mean() - 0.5).abs() < 1e-9);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     counts: Vec<u64>,
     total: u64,
@@ -24,6 +38,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Histogram { counts: vec![0; BUCKETS], total: 0, sum: 0.0, min: f64::INFINITY, max: 0.0 }
     }
@@ -36,6 +51,7 @@ impl Histogram {
         (idx as usize).min(BUCKETS - 1)
     }
 
+    /// Record one latency sample, in seconds.
     pub fn record(&mut self, seconds: f64) {
         self.counts[Self::bucket(seconds)] += 1;
         self.total += 1;
@@ -44,10 +60,12 @@ impl Histogram {
         self.max = self.max.max(seconds);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Exact mean of the recorded samples (tracked outside the buckets).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -56,6 +74,7 @@ impl Histogram {
         }
     }
 
+    /// Largest recorded sample (0 when empty).
     pub fn max(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -80,18 +99,24 @@ impl Histogram {
         self.max
     }
 
+    /// Median latency in seconds.
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
     }
 
+    /// 95th-percentile latency in seconds (the paper's headline metric).
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
 
+    /// 99th-percentile latency in seconds.
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
 
+    /// Fold `other`'s samples into this histogram.  Exact: bucket
+    /// counts add position-wise, so quantiles of the merge equal the
+    /// quantiles of recording all samples into one instance.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
@@ -105,31 +130,47 @@ impl Histogram {
 
 /// Counters a serving run accumulates; the benches print these as the
 /// paper's figure rows.
-#[derive(Debug, Clone, Default)]
+///
+/// Stats from sharded (multi-replica) runs recombine through
+/// [`ServingStats::merge`]: counters add, histograms merge exactly, the
+/// wall clock reconciles to the slowest replica and the peak KV
+/// footprint to the sum of the per-replica pools.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServingStats {
     /// End-to-end request latency (submit -> final token).
     pub request_latency: Option<Histogram>,
     /// Per-turn latency (turn submit -> turn done) — what Fig 4 reports.
     pub turn_latency: Option<Histogram>,
+    /// Latency from a turn becoming runnable to its first token.
     pub time_to_first_token: Option<Histogram>,
+    /// Workflows that ran every turn to completion.
     pub completed_requests: u64,
+    /// Turns retired across all workflows.
     pub completed_turns: u64,
+    /// Tokens produced by decode steps.
     pub generated_tokens: u64,
+    /// Prompt tokens actually prefilled (cache misses).
     pub prefill_tokens: u64,
     /// Prefill tokens that were served from prefix cache instead.
     pub cached_prefill_tokens: u64,
     /// Tokens recomputed because their cache was evicted.
     pub recomputed_tokens: u64,
+    /// Blocks evicted from the prefix cache.
     pub evictions: u64,
+    /// Contexts moved out to the host swap tier.
     pub swap_outs: u64,
+    /// Contexts restored from the host swap tier.
     pub swap_ins: u64,
+    /// Running sequences preempted under memory pressure.
     pub preemptions: u64,
     /// Peak KV pool usage in bytes (the memory-explosion signal).
     pub peak_kv_bytes: u64,
+    /// Simulated (or measured) seconds from run start to last retirement.
     pub wall_seconds: f64,
 }
 
 impl ServingStats {
+    /// Fresh stats with live (empty) histograms.
     pub fn new() -> Self {
         ServingStats {
             request_latency: Some(Histogram::new()),
@@ -139,6 +180,42 @@ impl ServingStats {
         }
     }
 
+    /// Fold the stats of another (sharded) run into this one.
+    ///
+    /// Counters and histograms accumulate exactly.  Two fields have
+    /// cluster semantics rather than plain sums: `wall_seconds` becomes
+    /// the max (replicas run concurrently, so the cluster finishes with
+    /// its slowest member) and `peak_kv_bytes` the sum (each replica
+    /// owns a full KV pool, so cluster footprint is additive).  Merging
+    /// one run into `ServingStats::new()` reproduces that run exactly —
+    /// the `--replicas 1` bit-identity the cluster tests pin down.
+    pub fn merge(&mut self, other: &ServingStats) {
+        let hist = |dst: &mut Option<Histogram>, src: &Option<Histogram>| {
+            if let Some(src) = src {
+                match dst {
+                    Some(dst) => dst.merge(src),
+                    None => *dst = Some(src.clone()),
+                }
+            }
+        };
+        hist(&mut self.request_latency, &other.request_latency);
+        hist(&mut self.turn_latency, &other.turn_latency);
+        hist(&mut self.time_to_first_token, &other.time_to_first_token);
+        self.completed_requests += other.completed_requests;
+        self.completed_turns += other.completed_turns;
+        self.generated_tokens += other.generated_tokens;
+        self.prefill_tokens += other.prefill_tokens;
+        self.cached_prefill_tokens += other.cached_prefill_tokens;
+        self.recomputed_tokens += other.recomputed_tokens;
+        self.evictions += other.evictions;
+        self.swap_outs += other.swap_outs;
+        self.swap_ins += other.swap_ins;
+        self.preemptions += other.preemptions;
+        self.peak_kv_bytes += other.peak_kv_bytes;
+        self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+    }
+
+    /// Generated tokens per wall-clock second.
     pub fn throughput_tok_s(&self) -> f64 {
         if self.wall_seconds <= 0.0 {
             0.0
@@ -147,6 +224,7 @@ impl ServingStats {
         }
     }
 
+    /// Completed workflows per wall-clock second.
     pub fn requests_per_s(&self) -> f64 {
         if self.wall_seconds <= 0.0 {
             0.0
@@ -155,6 +233,7 @@ impl ServingStats {
         }
     }
 
+    /// Fraction of prompt tokens served from the prefix cache.
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.prefill_tokens + self.cached_prefill_tokens;
         if total == 0 {
@@ -164,6 +243,7 @@ impl ServingStats {
         }
     }
 
+    /// Dump every counter plus derived rates for results files.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::{num, obj};
         let h = |h: &Option<Histogram>| {
@@ -249,6 +329,40 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!((a.mean() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_merge_semantics() {
+        let mut a = ServingStats::new();
+        a.completed_requests = 3;
+        a.peak_kv_bytes = 100;
+        a.wall_seconds = 5.0;
+        a.turn_latency.as_mut().unwrap().record(0.1);
+        let mut b = ServingStats::new();
+        b.completed_requests = 4;
+        b.peak_kv_bytes = 50;
+        b.wall_seconds = 9.0;
+        b.turn_latency.as_mut().unwrap().record(0.3);
+        a.merge(&b);
+        assert_eq!(a.completed_requests, 7);
+        assert_eq!(a.peak_kv_bytes, 150, "cluster footprint is additive");
+        assert_eq!(a.wall_seconds, 9.0, "cluster finishes with its slowest replica");
+        assert_eq!(a.turn_latency.as_ref().unwrap().count(), 2);
+    }
+
+    #[test]
+    fn merge_into_fresh_is_identity() {
+        let mut s = ServingStats::new();
+        s.completed_requests = 5;
+        s.generated_tokens = 123;
+        s.wall_seconds = 2.5;
+        s.peak_kv_bytes = 77;
+        s.request_latency.as_mut().unwrap().record(0.4);
+        s.turn_latency.as_mut().unwrap().record(0.2);
+        s.time_to_first_token.as_mut().unwrap().record(0.01);
+        let mut merged = ServingStats::new();
+        merged.merge(&s);
+        assert_eq!(merged, s);
     }
 
     #[test]

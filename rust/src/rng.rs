@@ -20,6 +20,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Generator seeded via splitmix64 (any seed, including 0, is fine).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -37,6 +38,7 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -67,6 +69,7 @@ impl Rng {
         lo + self.below(hi - lo + 1)
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }

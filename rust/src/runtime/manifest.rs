@@ -11,19 +11,33 @@ use crate::json::Value;
 /// One serving config's artifacts + architecture numbers.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Config name (e.g. `serve-small`).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model (residual-stream) width.
     pub d_model: usize,
+    /// Transformer layers.
     pub layers: usize,
+    /// Query heads.
     pub heads: usize,
+    /// KV heads (GQA when < `heads`).
     pub kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// FFN hidden width.
     pub ffn: usize,
+    /// Longest supported context.
     pub max_seq: usize,
+    /// LoRA adapter rank.
     pub lora_rank: usize,
+    /// LoRA scaling factor.
     pub lora_alpha: f64,
+    /// KV cache cost per token (all layers, K+V).
     pub kv_bytes_per_token: u64,
+    /// Total base-model parameters.
     pub param_count: u64,
+    /// npz file holding the base weights.
     pub weights_file: String,
     /// npz key order matching the artifact's flat parameter arguments.
     pub param_names: Vec<String>,
@@ -35,7 +49,9 @@ pub struct ModelSpec {
     pub lora_names_icarus: Vec<String>,
     /// Prefill bucket length -> artifact file.
     pub prefill: BTreeMap<usize, String>,
+    /// Baseline decode artifact file.
     pub decode_baseline: String,
+    /// ICaRus (paired-execution) decode artifact file.
     pub decode_icarus: String,
 }
 
@@ -45,15 +61,20 @@ impl ModelSpec {
         self.prefill.keys().copied().find(|&b| b >= len)
     }
 
+    /// Per-layer KV width (KV heads x head dim).
     pub fn kv_dim(&self) -> usize {
         self.kv_heads * self.head_dim
     }
 }
 
+/// The artifact directory's index: what `make artifacts` produced.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Kernel lowering path the artifacts were built with (pallas/ref).
     pub kernels: String,
+    /// Serving configs by name.
     pub configs: BTreeMap<String, ModelSpec>,
 }
 
@@ -62,6 +83,7 @@ fn get_usize(v: &Value, key: &str) -> Result<usize> {
 }
 
 impl Manifest {
+    /// Read and validate `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
@@ -138,12 +160,14 @@ impl Manifest {
         Ok(Manifest { dir, kernels, configs })
     }
 
+    /// The named config's spec, or an error listing what exists.
     pub fn spec(&self, name: &str) -> Result<&ModelSpec> {
         self.configs
             .get(name)
             .ok_or_else(|| anyhow!("config {name} not in manifest ({:?})", self.configs.keys()))
     }
 
+    /// Absolute path of an artifact file named in the manifest.
     pub fn path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }

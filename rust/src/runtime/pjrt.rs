@@ -10,7 +10,8 @@
 //! no buffer-level untuple, so cache state round-trips through host
 //! `Literal`s between steps (on the CPU PJRT client the "device" is host
 //! memory, so these are memcpys; see EXPERIMENTS.md §Perf for the
-//! measured cost and DESIGN.md for the TPU story).  Base weights and
+//! measured cost and README.md §Substitutions for the TPU story).
+//! Base weights and
 //! LoRA adapters are uploaded once and stay device-resident across steps
 //! (§Perf iteration 2: re-uploading them per step dominated decode).
 //!
@@ -32,10 +33,14 @@ use super::manifest::{Manifest, ModelSpec};
 
 /// K/V cache literals for one context ([L, max_seq, KV, dh] f32 each).
 pub struct CacheLits {
+    /// Key cache literal.
     pub k: Literal,
+    /// Value cache literal.
     pub v: Literal,
 }
 
+/// Executor over the AOT HLO artifacts on the PJRT CPU client (see the
+/// module docs for the cache representation).
 pub struct PjrtExecutor {
     client: PjRtClient,
     spec: ModelSpec,
@@ -58,17 +63,26 @@ pub struct PjrtExecutor {
     icarus_lora_idx: Vec<usize>,
     snapshots: HashMap<SnapshotId, Rc<CacheLits>>,
     next_id: SnapshotId,
+    /// Modeled host<->device bandwidth for swap restores (bytes/sec).
     pub swap_bandwidth: f64,
+    /// Call/time counters for the run.
     pub stats: PjrtStats,
 }
 
+/// Call/time counters the PJRT executor accumulates.
 #[derive(Debug, Default, Clone)]
 pub struct PjrtStats {
+    /// Prefill invocations.
     pub prefill_calls: u64,
+    /// Wall seconds spent in prefill.
     pub prefill_secs: f64,
+    /// Decode steps executed.
     pub decode_calls: u64,
+    /// Total sequence-slots across decode steps.
     pub decode_slots: u64,
+    /// Wall seconds spent in decode.
     pub decode_secs: f64,
+    /// Tokens decoded to catch a snapshot up to a deeper cached prefix.
     pub suffix_decode_tokens: u64,
 }
 
@@ -169,14 +183,17 @@ impl PjrtExecutor {
         })
     }
 
+    /// The model spec the executor was loaded for.
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
     }
 
+    /// Cache handles currently alive (leak check for tests).
     pub fn live_snapshots(&self) -> usize {
         self.snapshots.len()
     }
 
+    /// The underlying PJRT client.
     pub fn client(&self) -> &PjRtClient {
         &self.client
     }

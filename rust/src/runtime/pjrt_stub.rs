@@ -15,21 +15,30 @@ use super::manifest::{Manifest, ModelSpec};
 /// Mirror of `pjrt::PjrtStats` (all zeros; never populated in the stub).
 #[derive(Debug, Default, Clone)]
 pub struct PjrtStats {
+    /// Prefill invocations.
     pub prefill_calls: u64,
+    /// Wall seconds spent in prefill.
     pub prefill_secs: f64,
+    /// Decode steps executed.
     pub decode_calls: u64,
+    /// Total sequence-slots across decode steps.
     pub decode_slots: u64,
+    /// Wall seconds spent in decode.
     pub decode_secs: f64,
+    /// Tokens decoded to catch a snapshot up to a deeper cached prefix.
     pub suffix_decode_tokens: u64,
 }
 
 /// Unconstructable stand-in for the real executor.
 pub struct PjrtExecutor {
     mode: ServingMode,
+    /// Mirror of the real executor's counters (never populated).
     pub stats: PjrtStats,
 }
 
 impl PjrtExecutor {
+    /// Always fails: the `pjrt` feature (and the `xla` dependency) is
+    /// required for the real runtime.
     pub fn load(
         _manifest: &Manifest,
         _config: &str,
@@ -44,10 +53,12 @@ impl PjrtExecutor {
         )
     }
 
+    /// Mirror of the real executor's accessor (statically unreachable).
     pub fn spec(&self) -> &ModelSpec {
         unreachable!("stub PjrtExecutor cannot be constructed")
     }
 
+    /// Mirror of the real executor's accessor (statically unreachable).
     pub fn live_snapshots(&self) -> usize {
         unreachable!("stub PjrtExecutor cannot be constructed")
     }

@@ -8,22 +8,30 @@
 
 /// Ids below this are reserved (PAD/BOS/EOS/... mirror python tasks.py).
 pub const RESERVED: u32 = 32;
+/// Padding token id.
 pub const PAD: u32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 1;
+/// End-of-sequence token id.
 pub const EOS: u32 = 2;
+/// Separator token id.
 pub const SEP: u32 = 3;
 
+/// Deterministic word-hashing tokenizer (see the module docs).
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
     vocab: u32,
 }
 
 impl Tokenizer {
+    /// Tokenizer for a `vocab`-sized model (must clear the reserved
+    /// range with room to spare).
     pub fn new(vocab: u32) -> Self {
         assert!(vocab > RESERVED * 2, "vocab too small: {vocab}");
         Tokenizer { vocab }
     }
 
+    /// Vocabulary size this tokenizer maps into.
     pub fn vocab(&self) -> u32 {
         self.vocab
     }

@@ -25,6 +25,7 @@ pub struct TokenBuf {
 }
 
 impl TokenBuf {
+    /// An empty buffer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -34,14 +35,17 @@ impl TokenBuf {
         TokenBuf { len: v.len(), data: Arc::new(v) }
     }
 
+    /// The visible tokens as a slice.
     pub fn as_slice(&self) -> &[u32] {
         &self.data[..self.len]
     }
 
+    /// Number of visible tokens.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the view holds no tokens.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -68,6 +72,7 @@ impl TokenBuf {
         TokenBuf { len: v.len(), data: Arc::new(v) }
     }
 
+    /// Copy the visible tokens into an owned vector.
     pub fn to_vec(&self) -> Vec<u32> {
         self.as_slice().to_vec()
     }

@@ -11,21 +11,31 @@ use crate::json::{self, Value};
 /// One turn-level event in a serving run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TurnEvent {
+    /// Workflow the turn belongs to.
     pub wf_id: u64,
+    /// Turn position within the workflow.
     pub turn_idx: usize,
+    /// Model (LoRA adapter) the turn was routed to.
     pub model_id: usize,
+    /// When the turn became runnable.
     pub ready_at: f64,
+    /// When the turn retired.
     pub completed_at: f64,
+    /// Prompt tokens the turn was admitted with.
     pub prompt_tokens: usize,
+    /// Prompt tokens served from the prefix cache.
     pub cached_tokens: usize,
+    /// Tokens the turn generated.
     pub generated_tokens: usize,
 }
 
 impl TurnEvent {
+    /// Turn latency in seconds (ready to retired).
     pub fn latency(&self) -> f64 {
         self.completed_at - self.ready_at
     }
 
+    /// Serialize the event for trace files.
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("wf", json::num(self.wf_id as f64)),
@@ -39,6 +49,7 @@ impl TurnEvent {
         ])
     }
 
+    /// Inverse of [`TurnEvent::to_json`] (None on malformed input).
     pub fn from_json(v: &Value) -> Option<TurnEvent> {
         Some(TurnEvent {
             wf_id: v.get("wf")?.as_u64()?,
@@ -56,14 +67,18 @@ impl TurnEvent {
 /// Append-only trace of one serving run.
 #[derive(Debug, Default)]
 pub struct Trace {
+    /// Events in recording order (completion order within one engine;
+    /// cluster runs reconcile replica traces into completion order).
     pub events: Vec<TurnEvent>,
 }
 
 impl Trace {
+    /// An empty trace.
     pub fn new() -> Self {
         Trace::default()
     }
 
+    /// Append one event.
     pub fn record(&mut self, e: TurnEvent) {
         self.events.push(e);
     }
@@ -88,6 +103,7 @@ impl Trace {
         counts.into_iter().collect()
     }
 
+    /// Serialize the whole trace.
     pub fn to_json(&self) -> Value {
         json::obj(vec![(
             "events",
@@ -95,10 +111,12 @@ impl Trace {
         )])
     }
 
+    /// Write the trace to `path` as pretty JSON.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())
     }
 
+    /// Read a trace previously written by [`Trace::save`].
     pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Trace> {
         let text = std::fs::read_to_string(path)?;
         let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("trace: {e}"))?;

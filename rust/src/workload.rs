@@ -32,6 +32,7 @@ pub struct TurnSpec {
 /// One agent episode.
 #[derive(Debug, Clone)]
 pub struct Workflow {
+    /// Stable workflow id (generation order).
     pub id: u64,
     /// Arrival time (seconds from run start).
     pub arrival: f64,
@@ -39,10 +40,12 @@ pub struct Workflow {
     /// buffer: the engine seeds the workflow context from it with an
     /// O(1) clone (see `tokens::TokenBuf`).
     pub prompt: TokenBuf,
+    /// The planned turns, in execution order.
     pub turns: Vec<TurnSpec>,
 }
 
 impl Workflow {
+    /// Tokens this workflow will generate across all its turns.
     pub fn total_gen_tokens(&self) -> usize {
         self.turns.iter().map(|t| t.gen_len).sum()
     }
@@ -61,8 +64,10 @@ pub fn system_prefix(len: usize) -> Vec<u32> {
     (0..len).map(|i| 32 + ((i as u32 * 2654435761) % 1900)).collect()
 }
 
+/// Tokens of shared system prefix every workflow opens with.
 pub const SYSTEM_PREFIX_LEN: usize = 48;
 
+/// Generate the full workload `cfg` describes (deterministic per seed).
 pub fn generate(cfg: &WorkloadConfig) -> Vec<Workflow> {
     let mut rng = Rng::new(cfg.seed);
     let mut arrival = 0.0f64;

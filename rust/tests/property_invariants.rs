@@ -625,3 +625,91 @@ fn prop_snapshot_handles_bounded() {
     let stats = engine.run(generate(&wcfg));
     assert!(stats.completed_turns > 0);
 }
+
+/// Stats aggregation: recording random latency samples sharded across R
+/// `ServingStats` instances and merging them must yield the same
+/// histogram counts and percentile buckets as recording every sample
+/// into one instance (histogram merge is position-wise bucket addition,
+/// so this is exact, not approximate).
+#[test]
+fn prop_stats_merge_matches_single_instance() {
+    use icarus::metrics::ServingStats;
+    for seed in 0..16u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let shards = 1 + rng.below(8) as usize;
+        let samples = 50 + rng.below(400) as usize;
+        let mut single = ServingStats::new();
+        let mut parts: Vec<ServingStats> = (0..shards).map(|_| ServingStats::new()).collect();
+        for _ in 0..samples {
+            // Latencies spanning the histogram's full dynamic range.
+            let lat = 1e-6 * (10f64).powf(rng.f64() * 6.0);
+            let shard = rng.below(shards as u64) as usize;
+            single.turn_latency.as_mut().unwrap().record(lat);
+            single.request_latency.as_mut().unwrap().record(lat * 2.0);
+            single.generated_tokens += 1;
+            let p = &mut parts[shard];
+            p.turn_latency.as_mut().unwrap().record(lat);
+            p.request_latency.as_mut().unwrap().record(lat * 2.0);
+            p.generated_tokens += 1;
+        }
+        let mut merged = ServingStats::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        for (a, b) in [
+            (&merged.turn_latency, &single.turn_latency),
+            (&merged.request_latency, &single.request_latency),
+        ] {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            // Bucket counts are integers: counts and every percentile
+            // bucket must match exactly.
+            assert_eq!(a.count(), b.count(), "seed {seed}");
+            for q in [0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                assert_eq!(a.quantile(q), b.quantile(q), "seed {seed} q {q}");
+            }
+            assert_eq!(a.max(), b.max(), "seed {seed}");
+            // The mean is an f64 accumulator; summation order differs
+            // between the sharded and single paths, so compare within
+            // float tolerance rather than bitwise.
+            assert!(
+                (a.mean() - b.mean()).abs() <= 1e-12 * b.mean().abs().max(1.0),
+                "seed {seed}: mean {} vs {}",
+                a.mean(),
+                b.mean()
+            );
+        }
+        assert_eq!(merged.generated_tokens, single.generated_tokens, "seed {seed}");
+    }
+}
+
+/// A cluster with one replica is the single engine: same `ServingStats`
+/// bit for bit, same trace — across random modes, loads and seeds.
+#[test]
+fn prop_cluster_replicas_one_bit_identical() {
+    use icarus::cluster::Cluster;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(11_000 + seed);
+        let mode = if rng.bool(0.5) { ServingMode::Icarus } else { ServingMode::Baseline };
+        let scfg = ServingConfig {
+            mode,
+            kv_pool_bytes: (16 + rng.below(48)) << 20,
+            replicas: 1,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            n_models: 1 + rng.below(6) as usize,
+            qps: 0.3 + rng.f64(),
+            n_requests: 20,
+            seed: 100 + seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let exec = SimExecutor::new(CostModel::default(), mode);
+        let (single, single_trace) =
+            Engine::new(scfg.clone(), 2048, wcfg.n_models, exec).run_traced(wl.clone());
+        let (out, trace) =
+            Cluster::new(scfg, 2048, wcfg.n_models).run_sim_traced(CostModel::default(), wl);
+        assert_eq!(out.merged, single, "seed {seed}: stats must be bit-identical");
+        assert_eq!(trace.events, single_trace.events, "seed {seed}: trace must match");
+    }
+}
