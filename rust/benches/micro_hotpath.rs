@@ -130,6 +130,13 @@ fn main() {
             out.duration = 1e-9;
             Ok(out)
         }
+        fn prefill_chunk(
+            &mut self,
+            chunk: &mut icarus::engine::executor::ChunkSlot<'_>,
+        ) -> anyhow::Result<f64> {
+            self.0.prefill_chunk(chunk)?;
+            Ok(1e-9)
+        }
         fn decode(&mut self, batch: &mut [DecodeSlot]) -> anyhow::Result<f64> {
             self.0.decode(batch)?;
             Ok(1e-9)

@@ -1,0 +1,115 @@
+//! Scheduler-subsystem sweep: admission policy × prefill-chunk size ×
+//! QPS under a long-prompt agentic workload (EXPERIMENTS.md
+//! §Scheduling).
+//!
+//! What this demonstrates:
+//!   * chunked prefill removes head-of-line blocking — at fixed FCFS
+//!     order, splitting long prompts into fused-step chunks cuts P95
+//!     turn latency and collapses inter-token-latency spikes;
+//!   * admission order matters independently — `cache_aware` (probe
+//!     the radix index, admit the hottest context first) and `sjf`
+//!     (shortest remaining prefill first) reorder around long cold
+//!     prompts, compounding with chunking.
+//!
+//! Results land in bench_results/sched_policies.json and, machine-
+//! readably for the perf trajectory, BENCH_sched_policies.json at the
+//! repo root (CI runs this at smoke scale and uploads the artifact).
+//!
+//! Run: cargo bench --bench sched_policies  [-- --smoke]
+
+use icarus::bench_util::{sweep, write_results, Point, Row, KV_BPT_SMALL};
+use icarus::config::{SchedPolicy, ServingMode};
+use icarus::json::{self, Value};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (qps_list, n_requests, chunks): (&[f64], usize, &[usize]) = if smoke {
+        (&[0.8], 24, &[0, 256])
+    } else {
+        (&[0.4, 0.8, 1.5], 96, &[0, 256, 1024])
+    };
+    let policies = [SchedPolicy::Fcfs, SchedPolicy::CacheAware, SchedPolicy::Sjf];
+
+    let mut points = Vec::new();
+    for &policy in &policies {
+        for &chunk in chunks {
+            for &qps in qps_list {
+                points.push(Point {
+                    mode: ServingMode::Icarus,
+                    n_models: 4,
+                    qps,
+                    n_requests,
+                    // Long-prompt regime: mean 1.6k tokens, heavy tail to
+                    // 4k — atomic prefills of these stall whole seconds.
+                    prompt_mean: 1600.0,
+                    prompt_std: 800.0,
+                    kv_pool_bytes: 256 << 20,
+                    kv_bytes_per_token: KV_BPT_SMALL,
+                    sched_policy: policy,
+                    prefill_chunk: chunk,
+                    seed: 11,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    println!(
+        "== Scheduler sweep: policy x chunk x QPS, long prompts (mean 1.6k tok), \
+         ICaRus N=4, pool 256 MB{} ==\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+    let rows = sweep(&points);
+
+    // The acceptance comparison: chunked vs unchunked FCFS at each QPS.
+    let find = |policy: SchedPolicy, chunk: usize, qps: f64| -> Option<&Row> {
+        points
+            .iter()
+            .zip(&rows)
+            .find(|(p, _)| p.sched_policy == policy && p.prefill_chunk == chunk && p.qps == qps)
+            .map(|(_, r)| r)
+    };
+    println!("\n--- chunked prefill vs atomic (FCFS) ---");
+    let mut comparisons = Vec::new();
+    for &qps in qps_list {
+        let Some(atomic) = find(SchedPolicy::Fcfs, 0, qps) else { continue };
+        for &chunk in chunks.iter().filter(|&&c| c > 0) {
+            let Some(chunked) = find(SchedPolicy::Fcfs, chunk, qps) else { continue };
+            let speedup = if chunked.p95_s > 0.0 { atomic.p95_s / chunked.p95_s } else { 0.0 };
+            println!(
+                "qps={qps:.2} chunk={chunk}: p95 {:.3}s -> {:.3}s ({speedup:.2}x lower)",
+                atomic.p95_s, chunked.p95_s
+            );
+            comparisons.push(json::obj(vec![
+                ("qps", json::num(qps)),
+                ("chunk", json::num(chunk as f64)),
+                ("p95_atomic_s", json::num(atomic.p95_s)),
+                ("p95_chunked_s", json::num(chunked.p95_s)),
+                ("p95_speedup", json::num(speedup)),
+            ]));
+        }
+    }
+    println!("\n--- best policy per QPS (chunk fixed to the smallest enabled) ---");
+    let chunk = chunks.iter().copied().find(|&c| c > 0).unwrap_or(0);
+    for &qps in qps_list {
+        let mut best: Option<(&Row, SchedPolicy)> = None;
+        for &policy in &policies {
+            if let Some(r) = find(policy, chunk, qps) {
+                if best.is_none_or(|(b, _)| r.p95_s < b.p95_s) {
+                    best = Some((r, policy));
+                }
+            }
+        }
+        if let Some((r, policy)) = best {
+            println!("qps={qps:.2}: {} (p95 {:.3}s)", policy.as_str(), r.p95_s);
+        }
+    }
+    write_results(
+        "sched_policies",
+        &rows,
+        vec![
+            ("workload", json::s("react long-prompt (mean 1600, std 800)")),
+            ("smoke", Value::Bool(smoke)),
+            ("fcfs_chunked_vs_atomic", Value::Arr(comparisons)),
+        ],
+    );
+}

@@ -7,7 +7,8 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::config::{
-    AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
+    AgentPattern, EvictionPolicy, Routing, SchedPolicy, ServingConfig, ServingMode,
+    WorkloadConfig,
 };
 use crate::engine::executor::{CostModel, SimExecutor};
 use crate::engine::Engine;
@@ -67,6 +68,15 @@ pub struct Point {
     pub seed: u64,
     /// Prefix caching on/off (the ablation's variable).
     pub prefix_caching: bool,
+    /// Admission-scheduling policy (`benches/sched_policies.rs` sweeps
+    /// this).
+    pub sched_policy: SchedPolicy,
+    /// Chunked-prefill chunk size; 0 = atomic prefill.
+    pub prefill_chunk: usize,
+    /// Mean initial prompt tokens (long-prompt sweeps raise this).
+    pub prompt_mean: f64,
+    /// Std dev of initial prompt tokens.
+    pub prompt_std: f64,
     /// Simulator cost model.
     pub cost: CostModel,
 }
@@ -85,6 +95,10 @@ impl Default for Point {
             n_requests: 128,
             seed: 0,
             prefix_caching: true,
+            sched_policy: SchedPolicy::Fcfs,
+            prefill_chunk: 0,
+            prompt_mean: 96.0,
+            prompt_std: 24.0,
             cost: CostModel::default(),
         }
     }
@@ -98,6 +112,8 @@ impl Point {
             kv_pool_bytes: self.kv_pool_bytes,
             eviction: self.eviction,
             prefix_caching: self.prefix_caching,
+            sched_policy: self.sched_policy,
+            prefill_chunk: self.prefill_chunk,
             ..Default::default()
         };
         let wcfg = WorkloadConfig {
@@ -107,15 +123,27 @@ impl Point {
             n_requests: self.n_requests,
             routing: self.routing,
             seed: self.seed,
+            prompt_mean: self.prompt_mean,
+            prompt_std: self.prompt_std,
             ..Default::default()
         };
         let exec = SimExecutor::new(self.cost.clone(), self.mode);
         Engine::new(scfg, self.kv_bytes_per_token, self.n_models, exec).run(generate(&wcfg))
     }
 
-    /// Short `mode/N/qps` tag for table rows.
+    /// Short `mode/N/qps` tag for table rows, extended with the
+    /// scheduling policy and chunk size when they differ from the
+    /// defaults (so policy sweeps stay distinguishable).
     pub fn label(&self) -> String {
-        format!("{}/N={}/qps={:.2}", self.mode.as_str(), self.n_models, self.qps)
+        let mut s = format!("{}/N={}/qps={:.2}", self.mode.as_str(), self.n_models, self.qps);
+        if self.sched_policy != SchedPolicy::Fcfs {
+            s.push('/');
+            s.push_str(self.sched_policy.as_str());
+        }
+        if self.prefill_chunk > 0 {
+            s.push_str(&format!("/chunk={}", self.prefill_chunk));
+        }
+        s
     }
 }
 
@@ -130,6 +158,10 @@ pub struct Row {
     pub n_models: usize,
     /// Offered QPS of the point.
     pub qps: f64,
+    /// Admission-scheduling policy of the point.
+    pub sched_policy: SchedPolicy,
+    /// Chunked-prefill chunk size of the point (0 = atomic).
+    pub prefill_chunk: usize,
     /// P95 turn latency in seconds.
     pub p95_s: f64,
     /// P50 turn latency in seconds.
@@ -155,6 +187,8 @@ impl Row {
             mode: p.mode,
             n_models: p.n_models,
             qps: p.qps,
+            sched_policy: p.sched_policy,
+            prefill_chunk: p.prefill_chunk,
             p95_s: tl.p95(),
             p50_s: tl.p50(),
             tput_tok_s: s.throughput_tok_s(),
@@ -171,6 +205,8 @@ impl Row {
             ("mode", json::s(self.mode.as_str())),
             ("n_models", json::num(self.n_models as f64)),
             ("qps", json::num(self.qps)),
+            ("sched_policy", json::s(self.sched_policy.as_str())),
+            ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("p95_s", json::num(self.p95_s)),
             ("p50_s", json::num(self.p50_s)),
             ("tput_tok_s", json::num(self.tput_tok_s)),
@@ -269,7 +305,10 @@ pub fn sweep_parallel(points: &[Point], threads: usize) -> Vec<Row> {
     rows
 }
 
-/// Write rows as JSON under bench_results/<name>.json.
+/// Write rows as JSON under bench_results/<name>.json, and mirror them
+/// machine-readably to `BENCH_<name>.json` at the repository root —
+/// keyed by bench name, each row carrying P50/P95/throughput — so the
+/// perf trajectory is tracked in-tree (CI uploads these as artifacts).
 pub fn write_results(name: &str, rows: &[Row], extra: Vec<(&str, Value)>) {
     let dir = Path::new("bench_results");
     std::fs::create_dir_all(dir).ok();
@@ -282,6 +321,16 @@ pub fn write_results(name: &str, rows: &[Row], extra: Vec<(&str, Value)>) {
     let path = dir.join(format!("{name}.json"));
     std::fs::write(&path, v.to_string_pretty()).expect("write results");
     println!("\nwrote {}", path.display());
+    // The crate lives in <repo>/rust, so the repo root is one up from
+    // the manifest dir (compile-time constant: benches build in-tree).
+    // Best-effort: a relocated binary or read-only checkout must not
+    // turn an otherwise-successful sweep into a nonzero exit.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let bench_path = root.join(format!("BENCH_{name}.json"));
+    match std::fs::write(&bench_path, v.to_string_pretty()) {
+        Ok(()) => println!("wrote {}", bench_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", bench_path.display()),
+    }
 }
 
 /// Speedup summary between paired baseline/icarus rows (same N & qps).

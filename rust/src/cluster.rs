@@ -347,6 +347,30 @@ mod tests {
     }
 
     #[test]
+    fn sched_policy_and_chunking_thread_through_replicas() {
+        use crate::config::SchedPolicy;
+        for policy in [SchedPolicy::Fcfs, SchedPolicy::CacheAware, SchedPolicy::Sjf] {
+            let scfg = ServingConfig {
+                replicas: 3,
+                sched_policy: policy,
+                prefill_chunk: 128,
+                ..Default::default()
+            };
+            let cluster = Cluster::new(scfg, 2048, 4);
+            let out = cluster.run_sim(CostModel::default(), workload(48, 1.0, 17));
+            assert_eq!(out.merged.completed_requests, 48, "{policy:?}");
+            assert!(
+                out.merged.prefill_chunks > 0,
+                "{policy:?}: every replica must run chunked prefill"
+            );
+            assert!(
+                out.per_replica.iter().all(|s| s.prefill_chunks > 0),
+                "{policy:?}: chunk counts must come from every replica"
+            );
+        }
+    }
+
+    #[test]
     fn replicas_cut_tail_latency_under_pressure() {
         // Baseline mode, 8 models, small pool: one engine thrashes its
         // KV pool and queues; four replicas each see a quarter of the

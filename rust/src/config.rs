@@ -34,6 +34,46 @@ impl ServingMode {
     }
 }
 
+/// Admission-scheduling policy: which waiting turn the engine admits
+/// next and how the per-step prefill budget is charged (see the `sched`
+/// module for the policy implementations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// First-come-first-served, pinned bit-identical to the
+    /// pre-scheduler engine (including its conservative whole-prompt
+    /// budget estimate) by a differential property test.
+    Fcfs,
+    /// Highest probed prefix-cache coverage first: turns whose context
+    /// is already resident (ICaRus cross-model hits) jump the queue and
+    /// charge the budget only with their probed-uncached suffix.
+    CacheAware,
+    /// Shortest-remaining-prefill first (probed-uncached tokens); the
+    /// classic SJF tail-latency policy, with the same probe-accurate
+    /// budget accounting as `CacheAware`.
+    Sjf,
+}
+
+impl SchedPolicy {
+    /// CLI / JSON spelling of the policy.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedPolicy::Fcfs => "fcfs",
+            SchedPolicy::CacheAware => "cache_aware",
+            SchedPolicy::Sjf => "sjf",
+        }
+    }
+
+    /// Inverse of [`SchedPolicy::as_str`].
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fcfs" => Ok(SchedPolicy::Fcfs),
+            "cache_aware" => Ok(SchedPolicy::CacheAware),
+            "sjf" => Ok(SchedPolicy::Sjf),
+            other => anyhow::bail!("unknown sched policy: {other}"),
+        }
+    }
+}
+
 /// What happens to a victim's blocks when the pool is full (paper §4.3
 /// vs Appendix E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,8 +148,19 @@ pub struct ServingConfig {
     pub block_tokens: usize,
     /// Max sequences decoded per engine step.
     pub max_batch: usize,
-    /// Max prefill tokens admitted per engine step.
+    /// Max prefill tokens admitted per engine step.  With chunked
+    /// prefill enabled this is also the per-step budget shared by all
+    /// in-flight prefill chunks.
     pub max_prefill_tokens: usize,
+    /// Admission-scheduling policy (see [`SchedPolicy`]).
+    pub sched_policy: SchedPolicy,
+    /// Chunked-prefill chunk size in tokens per sequence per engine
+    /// step; 0 (the default) disables chunking and prefills each prompt
+    /// atomically at admission, exactly like the pre-scheduler engine.
+    /// When enabled, prompt encoding is split into chunks co-scheduled
+    /// with the decode batch in fused steps, so one long prompt can no
+    /// longer stall every running sequence (head-of-line blocking).
+    pub prefill_chunk: usize,
     /// What happens to a victim's blocks when the pool is full.
     pub eviction: EvictionPolicy,
     /// Swap tier capacity in bytes (Appendix E uses 4 GB).
@@ -135,6 +186,8 @@ impl Default for ServingConfig {
             block_tokens: 16,
             max_batch: 16,
             max_prefill_tokens: 2048,
+            sched_policy: SchedPolicy::Fcfs,
+            prefill_chunk: 0,
             eviction: EvictionPolicy::Recompute,
             swap_bytes: 4 << 30,
             prefix_caching: true,
@@ -153,6 +206,8 @@ impl ServingConfig {
             ("block_tokens", json::num(self.block_tokens as f64)),
             ("max_batch", json::num(self.max_batch as f64)),
             ("max_prefill_tokens", json::num(self.max_prefill_tokens as f64)),
+            ("sched_policy", json::s(self.sched_policy.as_str())),
+            ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("eviction", json::s(self.eviction.as_str())),
             ("swap_bytes", json::num(self.swap_bytes as f64)),
             ("prefix_caching", Value::Bool(self.prefix_caching)),
@@ -312,6 +367,14 @@ mod tests {
     }
 
     #[test]
+    fn sched_policy_roundtrip() {
+        for p in [SchedPolicy::Fcfs, SchedPolicy::CacheAware, SchedPolicy::Sjf] {
+            assert_eq!(SchedPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(SchedPolicy::parse("nope").is_err());
+    }
+
+    #[test]
     fn cluster_routing_roundtrip() {
         for r in [
             ClusterRouting::RoundRobin,
@@ -328,6 +391,8 @@ mod tests {
         let s = ServingConfig::default();
         assert!(s.kv_pool_bytes > 0 && s.block_tokens > 0);
         assert_eq!(s.replicas, 1, "plain single-engine serving by default");
+        assert_eq!(s.sched_policy, SchedPolicy::Fcfs, "legacy-pinned policy by default");
+        assert_eq!(s.prefill_chunk, 0, "atomic prefill by default");
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);

@@ -30,6 +30,45 @@ pub struct PrefillOut {
     pub first_token: u32,
 }
 
+/// One sequence's partial-prefill slot in a fused engine step: encode
+/// `tokens` (= `prompt[start..start + tokens.len()]`) on top of the
+/// partial cache built by earlier chunks (or fork from `base` on the
+/// first chunk).  The final chunk (`start + tokens.len() ==
+/// prompt_len`) also produces the turn's first generated token.
+#[derive(Debug)]
+pub struct ChunkSlot<'a> {
+    /// Sequence this chunk belongs to.
+    pub seq_id: u64,
+    /// LoRA adapter the sequence is served by.
+    pub model_id: usize,
+    /// The chunk's tokens: a window of the sequence's prompt.
+    pub tokens: &'a [u32],
+    /// Absolute position of `tokens[0]` in the prompt.
+    pub start: usize,
+    /// Full prompt length; the chunk is final iff it reaches it.
+    pub prompt_len: usize,
+    /// Snapshot covering `prompt[..start]` via the prefix cache, used
+    /// only when `cache` is `None` (first chunk of a cache-hit prompt).
+    pub base: Option<SnapshotId>,
+    /// In: partial cache from prior chunks (`None` on the first chunk).
+    /// Out: the partial cache covering the prompt through this chunk.
+    pub cache: Option<SnapshotId>,
+    /// Out: first generated token, set only by the final chunk.
+    pub first_token: Option<u32>,
+}
+
+impl ChunkSlot<'_> {
+    /// One past the last prompt position this chunk encodes.
+    pub fn end(&self) -> usize {
+        self.start + self.tokens.len()
+    }
+
+    /// True when this chunk completes the prompt.
+    pub fn is_final(&self) -> bool {
+        self.end() == self.prompt_len
+    }
+}
+
 /// One running sequence's slot in a decode batch.
 #[derive(Debug)]
 pub struct DecodeSlot {
@@ -61,9 +100,40 @@ pub trait Executor {
         base: Option<SnapshotId>,
     ) -> anyhow::Result<PrefillOut>;
 
+    /// Encode one prefill chunk (see [`ChunkSlot`]) as a standalone
+    /// call, updating the slot's partial cache (and `first_token` when
+    /// final).  Returns the chunk duration.  [`Executor::fused_step`]
+    /// is the scheduler-facing entry point; this is the per-chunk
+    /// building block it composes.
+    fn prefill_chunk(&mut self, chunk: &mut ChunkSlot<'_>) -> anyhow::Result<f64>;
+
     /// One decode step for the whole batch.  Fills `next_token` and
     /// updates each slot's `cache`; returns the step duration.
     fn decode(&mut self, batch: &mut [DecodeSlot]) -> anyhow::Result<f64>;
+
+    /// One fused engine step: run the prefill `chunks` co-scheduled
+    /// with the decode `batch` and return the combined step duration.
+    /// The default composes [`Executor::prefill_chunk`] and
+    /// [`Executor::decode`] additively (what a measured backend wants);
+    /// `SimExecutor` overrides it with a fused cost model in which the
+    /// chunk's launch overhead is absorbed by the decode step it
+    /// piggybacks on and only the `CostModel::chunk_overlap` fraction
+    /// of chunk compute is exposed (memory-bound decode batches leave
+    /// compute units idle for prefill FLOPs to fill).
+    fn fused_step(
+        &mut self,
+        chunks: &mut [ChunkSlot<'_>],
+        batch: &mut [DecodeSlot],
+    ) -> anyhow::Result<f64> {
+        let mut dur = 0.0;
+        for c in chunks.iter_mut() {
+            dur += self.prefill_chunk(c)?;
+        }
+        if !batch.is_empty() {
+            dur += self.decode(batch)?;
+        }
+        Ok(dur)
+    }
 
     /// Snapshot a live cache so it can be shared immutably (published to
     /// the prefix cache).  Cheap in both implementations (buffers are
@@ -103,6 +173,12 @@ pub struct CostModel {
     /// §3.3: ~1.0 because streams are parallelized and memory-bound;
     /// 2.0 would be the unoptimized sequential encoder+decoder).
     pub icarus_decode_factor: f64,
+    /// Fraction of a co-scheduled prefill chunk's compute that is
+    /// *exposed* on top of the decode step it rides on (Sarathi-style
+    /// piggybacking: decode batches are memory-bound, so chunk FLOPs
+    /// largely fill otherwise-idle compute units).  1.0 = no overlap
+    /// (purely additive); chunk-only steps always pay full compute.
+    pub chunk_overlap: f64,
     /// Host<->device bandwidth for swap restores (bytes/sec).
     pub swap_bandwidth: f64,
 }
@@ -117,6 +193,7 @@ impl Default for CostModel {
             decode_per_seq: 0.6e-3,
             decode_per_ctx_token: 1.5e-6,
             icarus_decode_factor: 1.05,
+            chunk_overlap: 0.4,
             swap_bandwidth: 16.0e9,
         }
     }
@@ -127,6 +204,17 @@ impl CostModel {
     pub fn prefill_time(&self, n_tokens: usize) -> f64 {
         let n = n_tokens as f64;
         self.prefill_base + self.prefill_per_token * n + self.prefill_per_token2 * n * n
+    }
+
+    /// Modeled seconds of compute (no launch overhead) to encode prompt
+    /// positions `[start, end)` given that `[0, start)` is already in
+    /// the cache.  The quadratic attention term telescopes: summing
+    /// `chunk_time` over a chunking of `[0, n)` equals the quadratic +
+    /// linear parts of [`CostModel::prefill_time`]`(n)`, so chunking
+    /// redistributes compute across steps without discounting it.
+    pub fn chunk_time(&self, start: usize, end: usize) -> f64 {
+        let (s, e) = (start as f64, end as f64);
+        self.prefill_per_token * (e - s) + self.prefill_per_token2 * (e * e - s * s)
     }
 
     /// Modeled seconds for one decode step over a batch with the given
@@ -162,6 +250,8 @@ pub struct SimStats {
     pub prefill_calls: u64,
     /// Uncached tokens actually prefilled.
     pub prefill_tokens: u64,
+    /// Prefill chunks encoded (chunked-prefill path).
+    pub prefill_chunk_calls: u64,
     /// Decode steps executed.
     pub decode_steps: u64,
     /// Total sequence-slots across decode steps.
@@ -186,6 +276,25 @@ impl SimExecutor {
         self.next_snapshot += 1;
         self.live_snapshots += 1;
         id
+    }
+
+    /// Chunk bookkeeping shared by `prefill_chunk` and `fused_step`:
+    /// counters, partial-cache handle, final-chunk token.  Returns the
+    /// chunk's modeled compute seconds (no launch overhead).
+    fn apply_chunk(&mut self, c: &mut ChunkSlot<'_>) -> f64 {
+        self.stats.prefill_chunk_calls += 1;
+        self.stats.prefill_tokens += c.tokens.len() as u64;
+        if c.cache.is_none() {
+            c.cache = Some(self.fresh());
+        }
+        if c.is_final() {
+            // Same token the atomic prefill path fabricates, so a
+            // chunked and an unchunked run of one prompt agree on the
+            // generated stream (only timing differs).
+            c.first_token =
+                Some(Self::synth_token(c.model_id, c.prompt_len as u64, c.prompt_len));
+        }
+        self.cost.chunk_time(c.start, c.end())
     }
 
     /// Deterministic pseudo-token for (model, seq, pos).
@@ -216,6 +325,35 @@ impl Executor for SimExecutor {
             cache: self.fresh(),
             first_token: Self::synth_token(model_id, prompt.len() as u64, prompt.len()),
         })
+    }
+
+    fn prefill_chunk(&mut self, chunk: &mut ChunkSlot<'_>) -> anyhow::Result<f64> {
+        let compute = self.apply_chunk(chunk);
+        // A standalone chunk pays its own launch overhead; fused steps
+        // absorb it into the decode launch (see `fused_step`).
+        Ok(self.cost.prefill_base + compute)
+    }
+
+    fn fused_step(
+        &mut self,
+        chunks: &mut [ChunkSlot<'_>],
+        batch: &mut [DecodeSlot],
+    ) -> anyhow::Result<f64> {
+        let mut compute = 0.0;
+        for c in chunks.iter_mut() {
+            compute += self.apply_chunk(c);
+        }
+        if !batch.is_empty() {
+            // Co-scheduled: one launch covers both, and only the
+            // `chunk_overlap` fraction of chunk compute is exposed on
+            // top of the memory-bound decode step (see `CostModel`).
+            Ok(self.cost.chunk_overlap * compute + self.decode(batch)?)
+        } else if !chunks.is_empty() {
+            // Nothing to hide behind: full compute plus the launch.
+            Ok(self.cost.prefill_base + compute)
+        } else {
+            Ok(0.0)
+        }
     }
 
     fn decode(&mut self, batch: &mut [DecodeSlot]) -> anyhow::Result<f64> {
@@ -296,6 +434,104 @@ mod tests {
         ex.drop_snapshot(s);
         ex.drop_snapshot(p.cache);
         assert_eq!(ex.live_snapshots(), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_compute_telescopes() {
+        // Summing chunk_time over any chunking of [0, n) must equal the
+        // non-constant part of prefill_time(n).
+        let c = CostModel::default();
+        let n = 1000usize;
+        let whole = c.prefill_time(n) - c.prefill_base;
+        for step in [64usize, 256, 1000] {
+            let mut sum = 0.0;
+            let mut s = 0;
+            while s < n {
+                let e = (s + step).min(n);
+                sum += c.chunk_time(s, e);
+                s = e;
+            }
+            assert!((sum - whole).abs() < 1e-9, "step {step}: {sum} vs {whole}");
+        }
+    }
+
+    #[test]
+    fn chunk_sequence_builds_cache_and_final_token() {
+        let mut ex = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+        let prompt: Vec<u32> = (0..100).collect();
+        let mut cache = None;
+        let mut first = None;
+        let mut s = 0;
+        while s < prompt.len() {
+            let e = (s + 40).min(prompt.len());
+            let mut slot = ChunkSlot {
+                seq_id: 1,
+                model_id: 0,
+                tokens: &prompt[s..e],
+                start: s,
+                prompt_len: prompt.len(),
+                base: None,
+                cache,
+                first_token: None,
+            };
+            let d = ex.prefill_chunk(&mut slot).unwrap();
+            assert!(d > 0.0);
+            cache = slot.cache;
+            first = slot.first_token;
+            s = e;
+        }
+        let cache = cache.expect("chunks built a cache");
+        assert_eq!(ex.live_snapshots(), 1, "one partial cache handle");
+        let expect = SimExecutor::synth_token(0, prompt.len() as u64, prompt.len());
+        assert_eq!(first, Some(expect), "final chunk produced the first token");
+        ex.drop_snapshot(cache);
+        assert_eq!(ex.live_snapshots(), 0);
+    }
+
+    #[test]
+    fn fused_step_absorbs_chunk_launch_overhead() {
+        let c = CostModel::default();
+        let mut ex = SimExecutor::new(c.clone(), ServingMode::Baseline);
+        let prompt: Vec<u32> = (0..64).collect();
+        let mut chunk = [ChunkSlot {
+            seq_id: 7,
+            model_id: 0,
+            tokens: &prompt[..32],
+            start: 0,
+            prompt_len: prompt.len(),
+            base: None,
+            cache: None,
+            first_token: None,
+        }];
+        let mut batch = vec![DecodeSlot {
+            seq_id: 1,
+            model_id: 0,
+            cache: 1,
+            context_len: 10,
+            last_token: 5,
+            next_token: 0,
+        }];
+        let fused = ex.fused_step(&mut chunk, &mut batch).unwrap();
+        let expect =
+            c.chunk_overlap * c.chunk_time(0, 32) + c.decode_time(&[10], ServingMode::Baseline);
+        assert!((fused - expect).abs() < 1e-12, "{fused} vs {expect}");
+        assert!(batch[0].next_token >= 32, "decode ran in the fused step");
+        assert!(chunk[0].cache.is_some(), "chunk opened a partial cache");
+        // A chunk-only step has nothing to hide behind: full compute.
+        let prompt2: Vec<u32> = (0..64).collect();
+        let mut solo = [ChunkSlot {
+            seq_id: 8,
+            model_id: 0,
+            tokens: &prompt2[..32],
+            start: 0,
+            prompt_len: prompt2.len(),
+            base: None,
+            cache: None,
+            first_token: None,
+        }];
+        let alone = ex.fused_step(&mut solo, &mut []).unwrap();
+        let expect_alone = c.prefill_base + c.chunk_time(0, 32);
+        assert!((alone - expect_alone).abs() < 1e-12, "{alone} vs {expect_alone}");
     }
 
     #[test]

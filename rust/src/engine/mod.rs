@@ -3,15 +3,25 @@
 //! Single-threaded discrete-event design: virtual time advances by the
 //! durations the executor reports (measured wall time for PJRT, cost
 //! model for sim), so the identical scheduler / KV-manager code path is
-//! exercised in both.  Per iteration (one "engine step", vLLM-style
-//! prefill-first):
+//! exercised in both.  The engine is a thin driver: *what* to admit and
+//! in which order is decided by the pluggable scheduling policy in
+//! `crate::sched` (which also owns the waiting/delayed/running queues);
+//! the engine supplies the mechanics.  Per iteration (one "engine
+//! step"):
 //!
 //!   1. surface newly-arrived workflows as pending turns;
-//!   2. admit pending turns while the KV pool and batch have room
-//!      (prefix-cache lookup -> pin -> prefill the uncached suffix);
-//!      on `NoSpace`, preempt the newest running sequence (recompute or
-//!      swap per config) and retry, else leave queued;
-//!   3. run one decode step for the running batch;
+//!   2. admit turns the scheduler picks while the KV pool and batch
+//!      have room (prefix-cache lookup -> pin -> prefill the uncached
+//!      suffix); on `NoSpace`, preempt the newest running sequence
+//!      (recompute or swap per config) and retry, else leave queued;
+//!   3. run one step: with chunked prefill disabled, prefills happen
+//!      atomically at admission and the step is one decode over the
+//!      running batch (the pre-scheduler behavior, bit-identical under
+//!      the `Fcfs` policy); with `prefill_chunk > 0`, the step is a
+//!      *fused* step — up to `max_prefill_tokens` of prompt encoding,
+//!      bounded per sequence by `prefill_chunk`, co-scheduled with the
+//!      decode batch so one long prompt no longer stalls every running
+//!      sequence (no head-of-line blocking on the time axis);
 //!   4. retire finished turns: publish their context to the prefix cache
 //!      (cross-model-visible in ICaRus mode), record latency, enqueue
 //!      the workflow's next turn.
@@ -24,11 +34,12 @@ use std::collections::VecDeque;
 use crate::config::{EvictionPolicy, ServingConfig};
 use crate::kvcache::{Alloc, KvCacheManager};
 use crate::metrics::ServingStats;
+use crate::sched::{self, CacheProbe, Queues, Scheduler};
 use crate::trace::{Trace, TurnEvent};
 use crate::workload::Workflow;
 
-use executor::{DecodeSlot, Executor, PrefillOut};
-use sequence::{PendingTurn, RunningSeq, WfState};
+use executor::{ChunkSlot, DecodeSlot, Executor, PrefillOut};
+use sequence::{PendingTurn, PrefillState, RunningSeq, WfState};
 
 /// The single-threaded continuous-batching serving engine (see the
 /// module docs for the event loop; `cluster::Cluster` shards workloads
@@ -37,36 +48,37 @@ pub struct Engine<E: Executor> {
     cfg: ServingConfig,
     exec: E,
     kv: KvCacheManager,
+    /// Admission policy (built from `cfg.sched_policy`).
+    sched: Box<dyn Scheduler>,
     now: f64,
     next_seq_id: u64,
     wfs: Vec<WfState>,
     /// Workflows not yet arrived (indices into wfs, ascending arrival).
     future: VecDeque<usize>,
-    waiting: VecDeque<PendingTurn>,
-    /// Turns whose tool call (think time) has not finished yet.
-    delayed: Vec<PendingTurn>,
-    running: Vec<RunningSeq>,
+    /// Scheduler-owned turn queues (waiting / delayed / running).
+    q: Queues,
     stats: ServingStats,
     trace: Option<Trace>,
 }
 
 impl<E: Executor> Engine<E> {
-    /// Engine over `exec`, with a fresh KV manager sized by `cfg`.
+    /// Engine over `exec`, with a fresh KV manager sized by `cfg` and
+    /// the scheduling policy `cfg.sched_policy` selects.
     /// Panics if `cfg.mode` and the executor's mode disagree.
     pub fn new(cfg: ServingConfig, kv_bytes_per_token: u64, n_models: usize, exec: E) -> Self {
         assert_eq!(cfg.mode, exec.mode(), "engine/executor mode mismatch");
         let kv = KvCacheManager::new(&cfg, kv_bytes_per_token, n_models);
+        let sched = sched::make(cfg.sched_policy);
         Engine {
             cfg,
             exec,
             kv,
+            sched,
             now: 0.0,
             next_seq_id: 1,
             wfs: Vec::new(),
             future: VecDeque::new(),
-            waiting: VecDeque::new(),
-            delayed: Vec::new(),
-            running: Vec::new(),
+            q: Queues::new(),
             stats: ServingStats::new(),
             trace: None,
         }
@@ -122,16 +134,12 @@ impl<E: Executor> Engine<E> {
 
         loop {
             self.surface_arrivals();
-            self.surface_delayed();
-            if self.waiting.is_empty() && self.running.is_empty() {
+            self.q.surface_delayed(self.now);
+            if self.q.waiting.is_empty() && self.q.running.is_empty() {
                 // Idle: jump to the next arrival or tool completion.
                 let next_arrival =
                     self.future.front().map(|&w| self.wfs[w].spec.arrival);
-                let next_ready = self
-                    .delayed
-                    .iter()
-                    .map(|t| t.ready_at)
-                    .min_by(f64::total_cmp);
+                let next_ready = self.q.next_ready();
                 match [next_arrival, next_ready].into_iter().flatten().min_by(f64::total_cmp) {
                     Some(t) => {
                         self.now = self.now.max(t);
@@ -140,29 +148,30 @@ impl<E: Executor> Engine<E> {
                     None => break,
                 }
             }
+            self.stats
+                .queue_depth
+                .as_mut()
+                .unwrap()
+                .record(self.q.waiting.len() as f64);
             self.admit();
-            self.decode_step();
+            if self.cfg.prefill_chunk == 0 {
+                self.decode_step();
+            } else {
+                self.chunked_step();
+            }
+            // Admission/growth attempts that failed with NoSpace may
+            // still have evicted prefix-cache payloads (the failure
+            // does not undo the eviction); release their handles.
+            let orphaned = self.kv.take_orphaned();
+            self.drop_snapshots(&orphaned);
         }
+        debug_assert!(self.q.is_drained(), "queues must drain by end of run");
         self.stats.wall_seconds = self.now;
         self.stats.peak_kv_bytes = self.kv.pool.peak_bytes();
         self.stats.swap_outs = self.kv.swap.swap_outs;
         self.stats.swap_ins = self.kv.swap.swap_ins;
         self.stats.evictions = self.kv.stats.evicted_blocks;
         std::mem::replace(&mut self.stats, ServingStats::new())
-    }
-
-    /// Move turns whose tool latency has elapsed into the run queue.
-    fn surface_delayed(&mut self) {
-        let now = self.now;
-        let mut i = 0;
-        while i < self.delayed.len() {
-            if self.delayed[i].ready_at <= now {
-                let t = self.delayed.swap_remove(i);
-                self.waiting.push_back(t);
-            } else {
-                i += 1;
-            }
-        }
     }
 
     fn surface_arrivals(&mut self) {
@@ -176,9 +185,10 @@ impl<E: Executor> Engine<E> {
             // the buffer stays uniquely owned and later appends are
             // zero-copy; finish_turn re-derives it from the prompt.
             let prompt = std::mem::take(&mut wf.context);
-            self.waiting.push_back(PendingTurn {
+            self.q.waiting.push_back(PendingTurn {
                 wf_idx: w,
                 turn_idx: 0,
+                model_id: wf.spec.turns[0].model_id,
                 ready_at: wf.spec.arrival,
                 prompt,
                 remaining_gen: wf.spec.turns[0].gen_len,
@@ -188,21 +198,25 @@ impl<E: Executor> Engine<E> {
         }
     }
 
-    /// Admit pending turns, prefill-first, until batch/pool/token limits.
+    /// Admit turns in the order the scheduling policy picks, until the
+    /// batch, KV pool or prefill-budget limits are hit.
     fn admit(&mut self) {
         let mut prefill_budget = self.cfg.max_prefill_tokens;
         // Bound one admission round to the initial queue length so
         // requeued (preempted) turns cannot cycle within a single round.
-        let mut attempts = self.waiting.len();
-        while self.running.len() < self.cfg.max_batch && attempts > 0 {
+        let mut attempts = self.q.waiting.len();
+        while self.q.running.len() < self.cfg.max_batch && attempts > 0 {
             attempts -= 1;
-            let Some(turn) = self.waiting.front() else { break };
-            let uncached_upper = turn.prompt.len(); // worst case
-            if uncached_upper > prefill_budget && prefill_budget < self.cfg.max_prefill_tokens {
+            let probe = CacheProbe::new(&self.kv);
+            let Some(pick) = self.sched.pick_next(&self.q.waiting, &probe) else { break };
+            let idx = pick.idx;
+            if pick.uncached_estimate > prefill_budget
+                && prefill_budget < self.cfg.max_prefill_tokens
+            {
                 break; // budget partially consumed; try next step
             }
-            let mut turn = self.waiting.pop_front().unwrap();
-            let model_id = self.wfs[turn.wf_idx].spec.turns[turn.turn_idx].model_id;
+            let mut turn = self.q.waiting.remove(idx).expect("pick_next index in range");
+            let model_id = turn.model_id;
             let seq_id = self.next_seq_id;
 
             // Swap-restored turns: their whole context is still cached
@@ -223,7 +237,7 @@ impl<E: Executor> Engine<E> {
                         // by ping-ponging two swapped turns).
                         turn.swapped = Some((handle, bytes));
                         self.check_admissible_when_idle(&turn);
-                        self.waiting.push_front(turn);
+                        self.q.waiting.insert(idx, turn);
                         break;
                     }
                 }
@@ -246,55 +260,114 @@ impl<E: Executor> Engine<E> {
                     // the executor must recompute from the snapshot tip.
                     let cached = cached.min(adm.cached_tokens);
                     let uncached = turn.prompt.len() - cached;
+                    // The budget settles against the real admission
+                    // outcome regardless of the policy's estimate.
                     prefill_budget = prefill_budget.saturating_sub(uncached);
-                    let PrefillOut { duration, cache, first_token } = self
-                        .exec
-                        .prefill(model_id, &turn.prompt, cached, base)
-                        .expect("prefill failed");
-                    self.now += duration;
                     self.stats.prefill_tokens += uncached as u64;
                     self.stats.cached_prefill_tokens += cached as u64;
                     if turn.was_preempted {
                         self.stats.recomputed_tokens += uncached as u64;
                     }
-                    self.stats
-                        .time_to_first_token
-                        .as_mut()
-                        .unwrap()
-                        .record((self.now - turn.ready_at).max(0.0));
-                    turn.remaining_gen = turn.remaining_gen.saturating_sub(1);
-                    let seq = RunningSeq {
-                        seq_id,
-                        wf_idx: turn.wf_idx,
-                        turn_idx: turn.turn_idx,
-                        model_id,
-                        prompt: turn.prompt,
-                        generated: vec![first_token],
-                        remaining_gen: turn.remaining_gen,
-                        cache,
-                        cached_tokens: cached,
-                        ready_at: turn.ready_at,
-                        admitted_at: self.now,
-                    };
-                    // The prefill's first token occupies one slot; under
-                    // extreme pressure the freshly-admitted sequence is
-                    // itself preempted (its prefill is not wasted under
-                    // swap; under recompute it re-prefills later).
-                    if let Alloc::NoSpace = self.kv.append_tokens(seq_id, 1) {
-                        self.kv.preempt(seq.seq_id);
-                        self.stats.preemptions += 1;
-                        self.requeue_preempted(seq);
-                        continue;
+                    if self.cfg.prefill_chunk == 0 {
+                        self.admit_atomic(turn, seq_id, model_id, cached, base);
+                    } else {
+                        self.admit_chunked(turn, seq_id, model_id, cached, base);
                     }
-                    self.running.push(seq);
                 }
                 Alloc::NoSpace => {
                     self.check_admissible_when_idle(&turn);
-                    self.waiting.push_front(turn);
+                    self.q.waiting.insert(idx, turn);
                     break;
                 }
             }
         }
+    }
+
+    /// Pre-scheduler admission tail: prefill the whole uncached suffix
+    /// in one executor call, charged to the clock before anything else
+    /// runs (the head-of-line behavior chunked prefill removes).
+    fn admit_atomic(
+        &mut self,
+        mut turn: PendingTurn,
+        seq_id: u64,
+        model_id: usize,
+        cached: usize,
+        base: Option<u64>,
+    ) {
+        let PrefillOut { duration, cache, first_token } = self
+            .exec
+            .prefill(model_id, &turn.prompt, cached, base)
+            .expect("prefill failed");
+        self.now += duration;
+        self.stats
+            .time_to_first_token
+            .as_mut()
+            .unwrap()
+            .record((self.now - turn.ready_at).max(0.0));
+        turn.remaining_gen = turn.remaining_gen.saturating_sub(1);
+        let seq = RunningSeq {
+            seq_id,
+            wf_idx: turn.wf_idx,
+            turn_idx: turn.turn_idx,
+            model_id,
+            prompt: turn.prompt,
+            generated: vec![first_token],
+            remaining_gen: turn.remaining_gen,
+            cache,
+            cached_tokens: cached,
+            ready_at: turn.ready_at,
+            admitted_at: self.now,
+            last_token_at: self.now,
+            prefill: None,
+        };
+        // The prefill's first token occupies one slot; under extreme
+        // pressure the freshly-admitted sequence is itself preempted
+        // (its prefill is not wasted under swap; under recompute it
+        // re-prefills later).
+        match self.kv.append_tokens(seq_id, 1) {
+            Alloc::Ok(adm) => {
+                self.drop_snapshots(&adm.dropped_snapshots);
+                self.q.running.push(seq);
+            }
+            Alloc::NoSpace => {
+                self.kv.preempt(seq.seq_id);
+                self.stats.preemptions += 1;
+                self.requeue_preempted(seq);
+            }
+        }
+    }
+
+    /// Chunked admission tail: allocate KV for the whole prompt (as the
+    /// atomic path does) but defer the encoding — the sequence joins
+    /// the running set in the prefilling phase and contributes chunks
+    /// to subsequent fused steps.
+    fn admit_chunked(
+        &mut self,
+        turn: PendingTurn,
+        seq_id: u64,
+        model_id: usize,
+        cached: usize,
+        base: Option<u64>,
+    ) {
+        // Privatize the prefix-cache snapshot for the chunks to fork
+        // from: a payload displacement (identical context re-published)
+        // between now and the first chunk must not invalidate it.
+        let base = base.map(|b| self.exec.snapshot(b));
+        self.q.running.push(RunningSeq {
+            seq_id,
+            wf_idx: turn.wf_idx,
+            turn_idx: turn.turn_idx,
+            model_id,
+            prompt: turn.prompt,
+            generated: Vec::new(),
+            remaining_gen: turn.remaining_gen,
+            cache: 0, // assigned when the final chunk lands
+            cached_tokens: cached,
+            ready_at: turn.ready_at,
+            admitted_at: self.now,
+            last_token_at: self.now,
+            prefill: Some(PrefillState { next: cached, start: cached, base, cache: None }),
+        });
     }
 
     /// Fatal-misconfiguration guard: if the system is idle (nothing
@@ -302,7 +375,7 @@ impl<E: Executor> Engine<E> {
     /// cannot be admitted, it never will be — fail loudly instead of
     /// spinning.
     fn check_admissible_when_idle(&self, turn: &PendingTurn) {
-        if self.running.is_empty() {
+        if self.q.running.is_empty() {
             panic!(
                 "KV pool ({} blocks of {} tokens) cannot hold a {}-token prompt \
                  even when idle; increase kv_pool_bytes",
@@ -314,7 +387,7 @@ impl<E: Executor> Engine<E> {
     }
 
     fn spawn_running(&mut self, seq_id: u64, turn: PendingTurn, model_id: usize, cache: u64) {
-        self.running.push(RunningSeq {
+        self.q.running.push(RunningSeq {
             seq_id,
             wf_idx: turn.wf_idx,
             turn_idx: turn.turn_idx,
@@ -326,15 +399,43 @@ impl<E: Executor> Engine<E> {
             cached_tokens: 0,
             ready_at: turn.ready_at,
             admitted_at: self.now,
+            last_token_at: self.now,
+            prefill: None,
         });
     }
 
-    fn requeue_preempted(&mut self, victim: RunningSeq) {
+    fn requeue_preempted(&mut self, mut victim: RunningSeq) {
+        if let Some(st) = victim.prefill.take() {
+            // A sequence preempted mid-chunked-prefill: no snapshot
+            // covers a half-encoded prompt, so partial caches are not
+            // swappable — always take the recompute path.
+            if let Some(c) = st.cache {
+                self.exec.drop_snapshot(c);
+            }
+            if let Some(b) = st.base {
+                self.exec.drop_snapshot(b);
+            }
+            let turn = PendingTurn {
+                wf_idx: victim.wf_idx,
+                turn_idx: victim.turn_idx,
+                model_id: victim.model_id,
+                ready_at: victim.ready_at,
+                remaining_gen: victim.remaining_gen,
+                // Only actually-encoded chunks count as wasted compute.
+                was_preempted: st.next > st.start,
+                swapped: None,
+                // No tokens generated yet: the context is the prompt.
+                prompt: victim.into_context(),
+            };
+            self.q.waiting.push_back(turn);
+            return;
+        }
         let cache = victim.cache;
         let context_len = victim.context_len();
         let mut turn = PendingTurn {
             wf_idx: victim.wf_idx,
             turn_idx: victim.turn_idx,
+            model_id: victim.model_id,
             ready_at: victim.ready_at,
             remaining_gen: victim.remaining_gen,
             was_preempted: true,
@@ -360,18 +461,25 @@ impl<E: Executor> Engine<E> {
         }
         // Preempted turns go to the back: freshly-arrived work is not
         // starved, matching vLLM's recompute-requeue behaviour.
-        self.waiting.push_back(turn);
+        self.q.waiting.push_back(turn);
     }
 
-    /// One decode step over the running batch.
+    /// One decode step over the running batch (chunking disabled: every
+    /// running sequence is decoding).
+    ///
+    /// Deliberately kept as a verbatim copy of the pre-scheduler loop
+    /// rather than folded into `chunked_step`'s chunk-free path: this
+    /// is the surface the FCFS bit-identity property test pins, and
+    /// keeping it byte-for-byte auditable against the frozen legacy
+    /// port is worth the duplication.
     fn decode_step(&mut self) {
-        if self.running.is_empty() {
+        if self.q.running.is_empty() {
             return;
         }
         // Grow every sequence by one token slot; preempt on pressure.
         let mut i = 0;
-        while i < self.running.len() {
-            let seq_id = self.running[i].seq_id;
+        while i < self.q.running.len() {
+            let seq_id = self.q.running[i].seq_id;
             match self.kv.append_tokens(seq_id, 1) {
                 Alloc::Ok(adm) => {
                     self.drop_snapshots(&adm.dropped_snapshots);
@@ -380,7 +488,7 @@ impl<E: Executor> Engine<E> {
                 Alloc::NoSpace => {
                     if !self.preempt_other(i) {
                         // This sequence itself is the victim.
-                        let victim = self.running.swap_remove(i);
+                        let victim = self.q.running.swap_remove(i);
                         self.kv.preempt(victim.seq_id);
                         self.stats.preemptions += 1;
                         self.requeue_preempted(victim);
@@ -388,10 +496,11 @@ impl<E: Executor> Engine<E> {
                 }
             }
         }
-        if self.running.is_empty() {
+        if self.q.running.is_empty() {
             return;
         }
         let mut slots: Vec<DecodeSlot> = self
+            .q
             .running
             .iter()
             .map(|s| DecodeSlot {
@@ -405,18 +514,225 @@ impl<E: Executor> Engine<E> {
             .collect();
         let dur = self.exec.decode(&mut slots).expect("decode failed");
         self.now += dur;
-        for (seq, slot) in self.running.iter_mut().zip(&slots) {
+        for (seq, slot) in self.q.running.iter_mut().zip(&slots) {
             debug_assert_eq!(seq.seq_id, slot.seq_id);
             seq.cache = slot.cache;
             seq.generated.push(slot.next_token);
             seq.remaining_gen = seq.remaining_gen.saturating_sub(1);
+            // The inter-token gap includes whatever else the engine did
+            // since this sequence's previous token (e.g. other turns'
+            // atomic prefills) — the stall signal, not just step cost.
+            let gap = (self.now - seq.last_token_at).max(0.0);
+            seq.last_token_at = self.now;
             self.stats.generated_tokens += 1;
+            self.stats.inter_token_latency.as_mut().unwrap().record(gap);
         }
         // Retire finished turns.
         let mut j = 0;
-        while j < self.running.len() {
-            if self.running[j].remaining_gen == 0 {
-                let seq = self.running.swap_remove(j);
+        while j < self.q.running.len() {
+            if self.q.running[j].remaining_gen == 0 {
+                let seq = self.q.running.swap_remove(j);
+                self.finish_turn(seq);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    /// One fused step under chunked prefill: co-schedule up to
+    /// `max_prefill_tokens` of prompt encoding (bounded per sequence by
+    /// `prefill_chunk`) with one decode step over the decoding batch,
+    /// so running sequences keep emitting tokens while long prompts
+    /// encode incrementally.
+    fn chunked_step(&mut self) {
+        if self.q.running.is_empty() {
+            return;
+        }
+        // Grow decoding sequences by one token slot; preempt on
+        // pressure (prefilling sequences reserved their prompt blocks
+        // at admission and grow nothing here).  Iterate by id, not
+        // index: preemption's swap_remove reorders the vec, and an
+        // index cursor could then skip a sequence's reservation while
+        // still decoding it (a latent legacy quirk decode_step keeps
+        // for bit-identity; this path is new and need not).
+        let grow_ids: Vec<u64> = self
+            .q
+            .running
+            .iter()
+            .filter(|s| s.prefill.is_none())
+            .map(|s| s.seq_id)
+            .collect();
+        for seq_id in grow_ids {
+            // Retry after successful third-party preemption; stop if
+            // this sequence itself got preempted as an earlier victim.
+            loop {
+                let Some(pos) = self.q.running.iter().position(|s| s.seq_id == seq_id) else {
+                    break;
+                };
+                match self.kv.append_tokens(seq_id, 1) {
+                    Alloc::Ok(adm) => {
+                        self.drop_snapshots(&adm.dropped_snapshots);
+                        break;
+                    }
+                    Alloc::NoSpace => {
+                        if !self.preempt_other(pos) {
+                            let victim = self.q.running.remove(pos);
+                            self.kv.preempt(victim.seq_id);
+                            self.stats.preemptions += 1;
+                            self.requeue_preempted(victim);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // Plan this step's chunks in admission order: per-sequence cap
+        // `prefill_chunk`, shared per-step budget `max_prefill_tokens`.
+        // Floor the budget at one token: with a degenerate
+        // `max_prefill_tokens = 0` the atomic path still prefills via
+        // admission's budget-bypassing first slot, so the chunked path
+        // must likewise guarantee progress instead of spinning forever.
+        let mut budget = self.cfg.max_prefill_tokens.max(1);
+        let mut plan: Vec<(u64, usize, usize)> = Vec::new(); // (seq, start, end)
+        for s in &self.q.running {
+            let Some(st) = &s.prefill else { continue };
+            let remaining = s.prompt.len() - st.next;
+            if remaining == 0 {
+                // Fully-cached prompt: a zero-token "chunk" still runs,
+                // forking the base cache and emitting the first token.
+                plan.push((s.seq_id, st.next, st.next));
+                continue;
+            }
+            if budget == 0 {
+                continue; // later prefills wait for the next step
+            }
+            let take = remaining.min(self.cfg.prefill_chunk.max(1)).min(budget);
+            plan.push((s.seq_id, st.next, st.next + take));
+            budget -= take;
+        }
+        let mut slots: Vec<DecodeSlot> = self
+            .q
+            .running
+            .iter()
+            .filter(|s| s.prefill.is_none())
+            .map(|s| DecodeSlot {
+                seq_id: s.seq_id,
+                model_id: s.model_id,
+                cache: s.cache,
+                context_len: s.context_len(),
+                last_token: *s.generated.last().unwrap_or(&1),
+                next_token: 0,
+            })
+            .collect();
+        if plan.is_empty() && slots.is_empty() {
+            return;
+        }
+        let mut chunks: Vec<ChunkSlot<'_>> = plan
+            .iter()
+            .map(|&(seq_id, start, end)| {
+                let s = self
+                    .q
+                    .running
+                    .iter()
+                    .find(|s| s.seq_id == seq_id)
+                    .expect("planned seq is running");
+                let st = s.prefill.as_ref().expect("planned seq is prefilling");
+                ChunkSlot {
+                    seq_id,
+                    model_id: s.model_id,
+                    tokens: &s.prompt[start..end],
+                    start,
+                    prompt_len: s.prompt.len(),
+                    base: st.base,
+                    cache: st.cache,
+                    first_token: None,
+                }
+            })
+            .collect();
+        let dur = self.exec.fused_step(&mut chunks, &mut slots).expect("fused step failed");
+        self.now += dur;
+        self.stats.prefill_chunks += chunks.len() as u64;
+        let chunk_out: Vec<(u64, usize, Option<u64>, Option<u32>)> =
+            chunks.iter().map(|c| (c.seq_id, c.end(), c.cache, c.first_token)).collect();
+        drop(chunks);
+        // Apply decode results, keyed by sequence id (the growth-phase
+        // preemptions above may have reordered the running vec).
+        for slot in &slots {
+            let seq = self
+                .q
+                .running
+                .iter_mut()
+                .find(|s| s.seq_id == slot.seq_id)
+                .expect("decoded seq is running");
+            seq.cache = slot.cache;
+            seq.generated.push(slot.next_token);
+            seq.remaining_gen = seq.remaining_gen.saturating_sub(1);
+            let gap = (self.now - seq.last_token_at).max(0.0);
+            seq.last_token_at = self.now;
+            self.stats.generated_tokens += 1;
+            self.stats.inter_token_latency.as_mut().unwrap().record(gap);
+        }
+        // Apply chunk results; final chunks promote their sequence to
+        // the decode batch.
+        for (seq_id, new_next, cache, first) in chunk_out {
+            let Some(pos) = self.q.running.iter().position(|s| s.seq_id == seq_id) else {
+                continue; // defensively tolerate a vanished sequence
+            };
+            {
+                let seq = &mut self.q.running[pos];
+                let st = seq.prefill.as_mut().expect("chunk applied to prefilling seq");
+                st.next = new_next;
+                st.cache = cache;
+            }
+            // The first chunk forked off the base snapshot; release the
+            // engine-private handle.
+            if self.q.running[pos].prefill.as_ref().is_some_and(|st| st.cache.is_some()) {
+                let base = self.q.running[pos].prefill.as_mut().and_then(|st| st.base.take());
+                if let Some(b) = base {
+                    self.exec.drop_snapshot(b);
+                }
+            }
+            let done = {
+                let s = &self.q.running[pos];
+                s.prefill.as_ref().expect("still prefilling").next == s.prompt.len()
+            };
+            if !done {
+                continue;
+            }
+            let ready_at = {
+                let seq = &mut self.q.running[pos];
+                let st = seq.prefill.take().expect("completed prefill state");
+                seq.cache = st.cache.expect("completed prefill built a cache");
+                seq.generated.push(first.expect("final chunk emits the first token"));
+                seq.remaining_gen = seq.remaining_gen.saturating_sub(1);
+                seq.last_token_at = self.now;
+                seq.ready_at
+            };
+            self.stats
+                .time_to_first_token
+                .as_mut()
+                .unwrap()
+                .record((self.now - ready_at).max(0.0));
+            // The first token occupies one slot, exactly like the
+            // atomic path; under extreme pressure the sequence preempts
+            // itself (prefill is complete here, so the normal
+            // recompute/swap eviction policy applies).
+            match self.kv.append_tokens(seq_id, 1) {
+                Alloc::Ok(adm) => self.drop_snapshots(&adm.dropped_snapshots),
+                Alloc::NoSpace => {
+                    let victim = self.q.running.remove(pos);
+                    self.kv.preempt(victim.seq_id);
+                    self.stats.preemptions += 1;
+                    self.requeue_preempted(victim);
+                }
+            }
+        }
+        // Retire finished turns (decoding sequences only).
+        let mut j = 0;
+        while j < self.q.running.len() {
+            let s = &self.q.running[j];
+            if s.prefill.is_none() && s.remaining_gen == 0 {
+                let seq = self.q.running.swap_remove(j);
                 self.finish_turn(seq);
             } else {
                 j += 1;
@@ -427,6 +743,7 @@ impl<E: Executor> Engine<E> {
     /// Preempt the newest running sequence other than index `keep`.
     fn preempt_other(&mut self, keep: usize) -> bool {
         let Some(pos) = self
+            .q
             .running
             .iter()
             .enumerate()
@@ -436,7 +753,7 @@ impl<E: Executor> Engine<E> {
         else {
             return false;
         };
-        let victim = self.running.swap_remove(pos);
+        let victim = self.q.running.swap_remove(pos);
         self.kv.preempt(victim.seq_id);
         self.stats.preemptions += 1;
         self.requeue_preempted(victim);
@@ -444,6 +761,7 @@ impl<E: Executor> Engine<E> {
     }
 
     fn finish_turn(&mut self, seq: RunningSeq) {
+        debug_assert!(seq.prefill.is_none(), "prefilling seq cannot retire");
         self.stats.completed_turns += 1;
         if let Some(trace) = &mut self.trace {
             trace.record(TurnEvent {
@@ -471,6 +789,10 @@ impl<E: Executor> Engine<E> {
         // happens in place — the sequence owns the context buffer.
         let full = seq.into_context();
         let snap = self.exec.snapshot(cache);
+        // The published snapshot keeps the cache alive; the sequence's
+        // live handle is done (leaving it would leak one handle per
+        // turn for the rest of the run).
+        self.exec.drop_snapshot(cache);
         let dropped = self.kv.finish_sequence(seq_id, &full, Some(snap));
         self.drop_snapshots(&dropped);
 
@@ -487,6 +809,7 @@ impl<E: Executor> Engine<E> {
             let turn = PendingTurn {
                 wf_idx,
                 turn_idx: wf.next_turn,
+                model_id: next.model_id,
                 ready_at,
                 // The pending turn owns the context (wf.context stays
                 // empty until the workflow's final turn completes).
@@ -496,9 +819,9 @@ impl<E: Executor> Engine<E> {
                 swapped: None,
             };
             if ready_at > self.now {
-                self.delayed.push(turn);
+                self.q.delayed.push(turn);
             } else {
-                self.waiting.push_back(turn);
+                self.q.waiting.push_back(turn);
             }
         } else {
             wf.context = ctx; // final context retained for inspection
@@ -524,13 +847,26 @@ impl<E: Executor> Engine<E> {
 mod tests {
     use super::executor::{CostModel, SimExecutor};
     use super::*;
-    use crate::config::{AgentPattern, Routing, ServingMode, WorkloadConfig};
+    use crate::config::{AgentPattern, Routing, SchedPolicy, ServingMode, WorkloadConfig};
     use crate::workload::generate;
 
     fn run(mode: ServingMode, n_models: usize, qps: f64, pool_mb: u64) -> ServingStats {
+        run_sched(mode, n_models, qps, pool_mb, SchedPolicy::Fcfs, 0)
+    }
+
+    fn run_sched(
+        mode: ServingMode,
+        n_models: usize,
+        qps: f64,
+        pool_mb: u64,
+        policy: SchedPolicy,
+        chunk: usize,
+    ) -> ServingStats {
         let scfg = ServingConfig {
             mode,
             kv_pool_bytes: pool_mb << 20,
+            sched_policy: policy,
+            prefill_chunk: chunk,
             ..Default::default()
         };
         let wcfg = WorkloadConfig {
@@ -564,6 +900,77 @@ mod tests {
     }
 
     #[test]
+    fn every_policy_and_chunking_completes() {
+        for policy in [SchedPolicy::Fcfs, SchedPolicy::CacheAware, SchedPolicy::Sjf] {
+            for chunk in [0usize, 128] {
+                for mode in [ServingMode::Icarus, ServingMode::Baseline] {
+                    let s = run_sched(mode, 4, 0.8, 32, policy, chunk);
+                    assert_eq!(
+                        s.completed_requests, 48,
+                        "{policy:?} chunk={chunk} {mode:?} lost workflows"
+                    );
+                    if chunk > 0 {
+                        assert!(s.prefill_chunks > 0, "{policy:?}: chunks must be counted");
+                    } else {
+                        assert_eq!(s.prefill_chunks, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policies_are_deterministic_given_seed() {
+        for policy in [SchedPolicy::CacheAware, SchedPolicy::Sjf] {
+            for chunk in [0usize, 96] {
+                let a = run_sched(ServingMode::Icarus, 4, 0.5, 64, policy, chunk);
+                let b = run_sched(ServingMode::Icarus, 4, 0.5, 64, policy, chunk);
+                assert_eq!(a.generated_tokens, b.generated_tokens, "{policy:?}/{chunk}");
+                assert_eq!(a.wall_seconds, b.wall_seconds, "{policy:?}/{chunk}");
+                assert_eq!(a.preemptions, b.preemptions, "{policy:?}/{chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_cuts_p95_with_long_prompts() {
+        // Long cold prompts + short turns: atomically prefilling a
+        // multi-thousand-token prompt stalls every queued/running turn
+        // for whole seconds; 256-token chunks bound the stall per step.
+        let mk = |chunk: usize| {
+            let scfg = ServingConfig {
+                mode: ServingMode::Baseline, // cold cache: worst case
+                kv_pool_bytes: 256 << 20,
+                prefill_chunk: chunk,
+                ..Default::default()
+            };
+            let wcfg = WorkloadConfig {
+                n_models: 4,
+                qps: 0.6,
+                n_requests: 48,
+                prompt_mean: 1600.0,
+                prompt_std: 800.0,
+                seed: 11,
+                ..Default::default()
+            };
+            let exec = SimExecutor::new(CostModel::default(), ServingMode::Baseline);
+            Engine::new(scfg, 2048, 4, exec).run(generate(&wcfg))
+        };
+        let atomic = mk(0);
+        let chunked = mk(256);
+        assert_eq!(atomic.completed_requests, chunked.completed_requests);
+        let pa = atomic.turn_latency.as_ref().unwrap().p95();
+        let pc = chunked.turn_latency.as_ref().unwrap().p95();
+        assert!(pc < pa, "chunked p95 {pc} must beat atomic p95 {pa}");
+        // The stall signal: inter-token gaps (which include other
+        // turns' prefill stalls) collapse under chunking.
+        let ia = atomic.inter_token_latency.as_ref().unwrap().mean();
+        let ic = chunked.inter_token_latency.as_ref().unwrap().mean();
+        assert!(ic < ia, "chunked mean ITL {ic} must beat atomic {ia}");
+        assert!(chunked.prefill_chunks > 0);
+    }
+
+    #[test]
     fn icarus_has_higher_cache_hit_rate() {
         let i = run(ServingMode::Icarus, 4, 0.5, 64);
         let b = run(ServingMode::Baseline, 4, 0.5, 64);
@@ -581,7 +988,7 @@ mod tests {
         let b = run(ServingMode::Baseline, 8, 0.6, 32);
         let pi = i.turn_latency.as_ref().unwrap().p95();
         let pb = b.turn_latency.as_ref().unwrap().p95();
-        assert!(pi < pb, "icarus p95 {pi} vs baseline {pb}");
+        assert!(pi < pb, "icarus p95 {pi} vs baseline p95 {pb}");
     }
 
     #[test]
@@ -657,6 +1064,17 @@ mod tests {
     }
 
     #[test]
+    fn chunked_survives_memory_pressure() {
+        // Chunked prefill under a tiny pool: preemptions of sequences
+        // mid-prefill must requeue and complete (recompute path).
+        for policy in [SchedPolicy::Fcfs, SchedPolicy::CacheAware, SchedPolicy::Sjf] {
+            let s = run_sched(ServingMode::Baseline, 8, 1.0, 4, policy, 64);
+            assert_eq!(s.completed_requests, 48, "{policy:?}");
+            assert!(s.preemptions > 0 || s.evictions > 0, "{policy:?}: pressure expected");
+        }
+    }
+
+    #[test]
     fn swap_mode_runs_and_swaps() {
         let scfg = ServingConfig {
             mode: ServingMode::Baseline,
@@ -692,6 +1110,13 @@ mod tests {
             engine.kv().resident_blocks(),
             engine.kv().resident_cache_blocks(),
             "blocks owned by dead sequences"
+        );
+        // And the only live cache handles are the prefix cache's
+        // published payloads — the engine dropped everything else.
+        assert_eq!(
+            engine.executor().live_snapshots(),
+            engine.kv().live_payloads() as u64,
+            "leaked snapshot handles"
         );
     }
 }

@@ -16,6 +16,10 @@ pub struct PendingTurn {
     pub wf_idx: usize,
     /// Turn position within the workflow's spec.
     pub turn_idx: usize,
+    /// LoRA adapter this turn is routed to (copied from the workflow
+    /// spec at enqueue time so schedulers can probe the prefix cache
+    /// for the right namespace without a workflow-table lookup).
+    pub model_id: usize,
     /// When this turn became runnable (workflow arrival or previous turn
     /// completion) — the latency clock starts here.
     pub ready_at: f64,
@@ -31,6 +35,27 @@ pub struct PendingTurn {
     /// Live cache parked in the swap tier by a swap-mode preemption:
     /// (handle, bytes).  Restored on re-admission without recompute.
     pub swapped: Option<(SnapshotId, u64)>,
+}
+
+/// Progress of a chunked prefill (only present while the sequence's
+/// prompt is still being encoded; `None` once it joined the decode
+/// batch — and always `None` with chunking disabled, where prefill is
+/// atomic at admission).
+#[derive(Debug)]
+pub struct PrefillState {
+    /// Next prompt position to encode (starts at the cached coverage).
+    pub next: usize,
+    /// Where encoding started (= cached coverage at admission) — a
+    /// preempted prefill with `next > start` has wasted compute and
+    /// requeues as `was_preempted`.
+    pub start: usize,
+    /// Engine-private snapshot of the prefix-cache hit covering
+    /// `[0, start)`, consumed (and dropped) by the first chunk.  Held
+    /// privately so a prefix-cache payload displacement between steps
+    /// cannot invalidate it.
+    pub base: Option<SnapshotId>,
+    /// Partial cache built by the chunks encoded so far.
+    pub cache: Option<SnapshotId>,
 }
 
 /// A sequence currently in the decode batch.
@@ -52,6 +77,8 @@ pub struct RunningSeq {
     /// Tokens still to generate this turn.
     pub remaining_gen: usize,
     /// Live cache handle (functional: replaced every decode step).
+    /// Meaningless (0) while `prefill` is `Some` — the partial cache
+    /// lives in the prefill state until the final chunk lands.
     pub cache: SnapshotId,
     /// Prompt tokens served from the prefix cache at admission.
     pub cached_tokens: usize,
@@ -59,6 +86,15 @@ pub struct RunningSeq {
     pub ready_at: f64,
     /// Admission order (preemption victims are picked newest-first).
     pub admitted_at: f64,
+    /// Virtual time of this sequence's last emitted token — the
+    /// inter-token-latency clock (gaps include whatever stalled the
+    /// engine between this sequence's decode steps, e.g. other turns'
+    /// atomic prefills; chunked prefill exists to flatten exactly
+    /// those spikes).
+    pub last_token_at: f64,
+    /// Chunked-prefill progress; `None` once decoding (or always, with
+    /// chunking disabled).
+    pub prefill: Option<PrefillState>,
 }
 
 impl RunningSeq {

@@ -83,6 +83,12 @@ pub struct KvCacheManager {
     prefix_caching: bool,
     /// Bytes per token of KV cache — pricing evictions for swap.
     kv_bytes_per_token: u64,
+    /// Snapshot ids dropped by an admission/growth attempt that then
+    /// failed with `NoSpace`: the eviction is not undone by the
+    /// failure, so the handles are parked here for the engine to drain
+    /// via `take_orphaned` (returning them inside `Alloc::NoSpace`
+    /// would break every pattern match on the variant).
+    orphaned: Vec<u64>,
     /// Cache-policy counters for the run.
     pub stats: ManagerStats,
 }
@@ -104,6 +110,7 @@ impl KvCacheManager {
             swap: SwapTier::new(cfg.swap_bytes),
             prefix_caching: cfg.prefix_caching,
             kv_bytes_per_token,
+            orphaned: Vec::new(),
             stats: ManagerStats::default(),
         }
     }
@@ -165,6 +172,28 @@ impl KvCacheManager {
         dropped_all
     }
 
+    /// Read-only coverage probe: prompt tokens an admission for
+    /// `model_id` could serve from the prefix cache right now (match
+    /// depth through the deepest snapshot-bearing node), with **no
+    /// side effects** (no LRU touch, no pin) — see
+    /// [`RadixCache::peek`].  Schedulers use this to rank and budget
+    /// waiting turns; the answer is advisory (the cache can change
+    /// before admission) but exact at probe time.
+    pub fn probe_cached_tokens(&self, model_id: usize, prompt: &[u32]) -> usize {
+        if !self.prefix_caching {
+            return 0;
+        }
+        self.trees[self.namespace_of(model_id)].peek(prompt)
+    }
+
+    /// Cache snapshots the prefix trees currently keep alive (payload
+    /// count across namespaces).  The executor's live-handle count must
+    /// match this at end of run if the engine dropped every handle it
+    /// was handed back — the no-leak invariant the property tests pin.
+    pub fn live_payloads(&self) -> usize {
+        self.trees.iter().map(RadixCache::live_payloads).sum()
+    }
+
     /// Admit a sequence: match its prompt against the prefix cache, pin
     /// the match, and allocate blocks for the uncached remainder.
     pub fn begin_sequence(&mut self, seq_id: u64, model_id: usize, prompt: &[u32]) -> Alloc {
@@ -189,6 +218,7 @@ impl KvCacheManager {
         }
         if self.pool.free_blocks() < need {
             self.trees[ns].unpin(&m, &mut self.pool);
+            self.orphaned.extend(dropped);
             return Alloc::NoSpace;
         }
         let mut swap_in_bytes = 0;
@@ -200,6 +230,7 @@ impl KvCacheManager {
         }
         let Some(own) = self.pool.alloc(self.pool.blocks_for_tokens(uncached)) else {
             self.trees[ns].unpin(&m, &mut self.pool);
+            self.orphaned.extend(dropped);
             return Alloc::NoSpace;
         };
         let adm = Admission {
@@ -234,6 +265,7 @@ impl KvCacheManager {
         }
         if need > 0 {
             let Some(mut blocks) = self.pool.alloc(need) else {
+                self.orphaned.extend(dropped);
                 return Alloc::NoSpace;
             };
             let st = self.seqs.get_mut(&seq_id).unwrap();
@@ -274,9 +306,17 @@ impl KvCacheManager {
                 if self.pool.free_blocks() < need {
                     dropped = self.make_room(need, st.namespace);
                 }
-                if !self.trees[st.namespace].insert(full_context, snap, &mut self.pool) {
+                let tree = &mut self.trees[st.namespace];
+                let (inserted, displaced) =
+                    tree.insert_with_displaced(full_context, snap, &mut self.pool);
+                if !inserted {
                     self.stats.failed_inserts += 1;
                     dropped.push(snap); // engine should drop the snapshot
+                }
+                if let Some(old) = displaced {
+                    // A re-published identical context displaced the
+                    // node's previous snapshot; hand it back for drop.
+                    dropped.push(old);
                 }
             }
         } else if let Some(snap) = snapshot {
@@ -297,6 +337,15 @@ impl KvCacheManager {
         }
         self.stats.preempted_tokens += st.tokens as u64;
         st.tokens
+    }
+
+    /// Drain snapshot ids whose radix nodes were evicted by an
+    /// admission/growth attempt that subsequently failed with
+    /// [`Alloc::NoSpace`].  The failure does not undo the eviction, so
+    /// the engine must drop these handles or they leak for the rest of
+    /// the run (the per-policy no-leak property tests pin this).
+    pub fn take_orphaned(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.orphaned)
     }
 
     /// KV cache cost per token this manager prices evictions with.
@@ -484,6 +533,53 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(m.swap.swap_ins > 0);
+    }
+
+    #[test]
+    fn probe_reports_coverage_per_namespace_without_side_effects() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Baseline, 256), 64, 4);
+        let p = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        m.finish_sequence(1, &p, Some(42));
+        assert_eq!(m.probe_cached_tokens(0, &p), 64, "same model covered");
+        assert_eq!(m.probe_cached_tokens(3, &p), 0, "baseline: no cross-model");
+        // Probing must not pin: an admission that needs the whole pool
+        // can still evict the probed context afterwards.
+        let big = prompt(256 * 16, 900);
+        assert!(matches!(m.begin_sequence(2, 1, &big), Alloc::Ok(_)));
+        assert_eq!(m.probe_cached_tokens(0, &p), 0, "probed context was evictable");
+    }
+
+    #[test]
+    fn failed_admission_surfaces_orphaned_drops() {
+        // Pool of 8 blocks; publish a 4-block context, then try to
+        // admit a prompt needing more than the whole pool: the eviction
+        // happens anyway, the admission still fails, and the dropped
+        // payload must surface for the engine to release.
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 8), 64, 1);
+        let p = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        m.finish_sequence(1, &p, Some(5));
+        let big = prompt(16 * 16, 700); // 16 blocks > capacity
+        assert_eq!(m.begin_sequence(2, 0, &big), Alloc::NoSpace);
+        assert_eq!(m.take_orphaned(), vec![5], "evicted payload must surface");
+        assert!(m.take_orphaned().is_empty(), "drain is one-shot");
+        assert_eq!(m.live_payloads(), 0);
+    }
+
+    #[test]
+    fn republish_hands_back_displaced_snapshot() {
+        let mut m = KvCacheManager::new(&cfg(ServingMode::Icarus, 256), 64, 1);
+        let p = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p), Alloc::Ok(_)));
+        assert!(m.finish_sequence(1, &p, Some(10)).is_empty());
+        assert_eq!(m.live_payloads(), 1);
+        // The same context published again (a preempted turn rerun):
+        // the displaced snapshot must come back for dropping.
+        assert!(matches!(m.begin_sequence(2, 0, &p), Alloc::Ok(_)));
+        let dropped = m.finish_sequence(2, &p, Some(11));
+        assert_eq!(dropped, vec![10], "old snapshot handed back");
+        assert_eq!(m.live_payloads(), 1);
     }
 
     #[test]

@@ -276,6 +276,51 @@ impl RadixCache {
         m
     }
 
+    /// Read-only coverage probe: tokens of `prompt` that an admission
+    /// could actually serve from cache — the match depth through the
+    /// deepest *payload-bearing* node, mirroring how the engine caps
+    /// coverage at the matched snapshot (blocks matched beyond the last
+    /// payload have no snapshot to prefill from).  Like
+    /// [`RadixCache::lookup`] but with **no side effects** — no LRU
+    /// touch, no heap reindex, no clock tick — so schedulers can rank
+    /// waiting turns every step without perturbing eviction order
+    /// (which is what keeps probe-free policies bit-identical to the
+    /// pre-scheduler engine).
+    pub fn peek(&self, prompt: &[u32]) -> usize {
+        let bt = self.block_tokens;
+        if bt == 0 {
+            return 0; // nothing inserted yet
+        }
+        let mut matched = 0usize;
+        let mut covered = 0usize; // through the deepest payload
+        let mut cur = self.root;
+        let mut hash = ROOT_HASH;
+        while matched + bt <= prompt.len() {
+            let span = &prompt[matched..matched + bt];
+            hash = hash_block(hash, span);
+            let next = match self.children.get(&(cur, hash)) {
+                Some(cands) => cands.iter().copied().find(|&c| self.nodes[c].span[..] == span[..]),
+                None => None,
+            };
+            let Some(c) = next else { break };
+            matched += bt;
+            if self.nodes[c].payload.is_some() {
+                covered = matched;
+            }
+            cur = c;
+        }
+        covered
+    }
+
+    /// Live (non-dead) nodes currently carrying a payload — i.e. cache
+    /// snapshots the tree is keeping alive.  With the engine dropping
+    /// every snapshot it is handed back, the executor's live-handle
+    /// count must equal this at end of run (the no-leak invariant
+    /// `tests/property_invariants.rs` checks per policy).
+    pub fn live_payloads(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.dead && n.payload.is_some()).count()
+    }
+
     /// Pin every node on a matched path so an active sequence's prefix
     /// can't be evicted underneath it.  Pins are advisory counters that
     /// `evict`/`evict_swap` respect; block refcounts stay owned by the
@@ -340,6 +385,21 @@ impl RadixCache {
     /// evict and retry or skip caching).  `payload` is attached to the
     /// deepest inserted/matched node.
     pub fn insert(&mut self, tokens: &[u32], payload: u64, pool: &mut BlockPool) -> bool {
+        self.insert_with_displaced(tokens, payload, pool).0
+    }
+
+    /// Like [`RadixCache::insert`], but also reports the payload this
+    /// insert displaced (a fully-matched re-insert — e.g. a preempted
+    /// turn re-publishing an identical context — overwrites the node's
+    /// existing payload).  The caller owns the displaced snapshot and
+    /// must drop it, or its device buffers leak for the rest of the
+    /// run.  Displacement can only happen on a successful insert.
+    pub fn insert_with_displaced(
+        &mut self,
+        tokens: &[u32],
+        payload: u64,
+        pool: &mut BlockPool,
+    ) -> (bool, Option<u64>) {
         if self.block_tokens == 0 {
             self.block_tokens = pool.block_tokens;
         }
@@ -352,7 +412,7 @@ impl RadixCache {
         debug_assert_eq!(off % bt, 0);
         let needed = (full - off) / bt;
         if pool.free_blocks() < needed {
-            return false;
+            return (false, None);
         }
         let now = self.tick();
         let mut hash = if cur == self.root { ROOT_HASH } else { self.nodes[cur].hash };
@@ -370,16 +430,13 @@ impl RadixCache {
             cur = id;
             off += bt;
         }
+        let mut displaced = None;
         if cur != self.root {
-            // NOTE: a fully-matched re-insert overwrites an existing
-            // payload without reporting the displaced snapshot id, so the
-            // engine never drops that snapshot (pre-existing behavior,
-            // kept for bit-identical semantics with the reference model).
-            self.nodes[cur].payload = Some(payload);
+            displaced = self.nodes[cur].payload.replace(payload);
             self.nodes[cur].last_access = now;
             self.reindex(cur);
         }
-        true
+        (true, displaced)
     }
 
     /// Kill one evictable leaf: release its block, collect its payload,
@@ -575,6 +632,65 @@ mod tests {
         let m = r.lookup(&b);
         assert_eq!(m.matched_tokens, 32);
         assert_eq!(m.payload, Some((7, 32)));
+    }
+
+    #[test]
+    fn peek_matches_lookup_without_touching_lru() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let a = toks(32, 0);
+        let b = toks(32, 1000);
+        assert!(r.insert(&a, 1, &mut p));
+        assert!(r.insert(&b, 2, &mut p));
+        // Coverage agrees with lookup (full, partial and miss cases).
+        assert_eq!(r.peek(&a), 32);
+        let mut ext = a.clone();
+        ext.extend(toks(20, 7777));
+        assert_eq!(r.peek(&ext), 32);
+        assert_eq!(r.peek(&toks(32, 5555)), 0);
+        assert_eq!(r.peek(&a[..8]), 0, "sub-block prefix matches nothing");
+        // a was inserted first; peeks at it must NOT refresh it, so it
+        // is still the LRU victim (a lookup here would protect it).
+        for _ in 0..4 {
+            let _ = r.peek(&a);
+        }
+        let _ = r.lookup(&b); // touch b
+        let (freed, dropped) = r.evict(2, &mut p);
+        assert_eq!(freed, 2);
+        assert_eq!(dropped, vec![1], "peeked-only entry stayed LRU");
+    }
+
+    #[test]
+    fn peek_reports_only_payload_usable_coverage() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let a = toks(32, 0);
+        assert!(r.insert(&a, 1, &mut p));
+        assert_eq!(r.peek(&a), 32);
+        // Evict the tip leaf: its payload goes with it; the surviving
+        // interior block still matches but no snapshot covers it, so an
+        // admission could not use it — peek must say 0, not 16.
+        let (freed, dropped) = r.evict(1, &mut p);
+        assert_eq!((freed, dropped), (1, vec![1]));
+        assert_eq!(r.lookup(&a).matched_tokens, 16, "block still matchable");
+        assert_eq!(r.peek(&a), 0, "admission-usable coverage is zero");
+    }
+
+    #[test]
+    fn reinsert_reports_displaced_payload() {
+        let mut r = RadixCache::new();
+        let mut p = pool();
+        let t = toks(32, 0);
+        assert_eq!(r.insert_with_displaced(&t, 5, &mut p), (true, None));
+        assert_eq!(r.live_payloads(), 1);
+        // Identical context re-published: new payload in, old reported.
+        assert_eq!(r.insert_with_displaced(&t, 9, &mut p), (true, Some(5)));
+        assert_eq!(r.live_payloads(), 1);
+        assert_eq!(r.lookup(&t).payload, Some((9, 32)));
+        // Payload count drops with eviction.
+        let (_, dropped) = r.evict(10, &mut p);
+        assert_eq!(dropped, vec![9]);
+        assert_eq!(r.live_payloads(), 0);
     }
 
     #[test]

@@ -13,10 +13,11 @@
 //!   * L2 — the JAX transformer (`python/compile/model.py`), lowered once
 //!     to HLO text per serving config.
 //!   * L3 — this crate: the multi-model serving engine (paged KV cache,
-//!     cross-model prefix caching, continuous batching, agentic workload
-//!     drivers), the multi-replica cluster layer that shards workflow
-//!     streams across engines, and the PJRT runtime that executes the
-//!     artifacts.
+//!     cross-model prefix caching, continuous batching with pluggable
+//!     admission scheduling and chunked prefill — see `sched` — and
+//!     agentic workload drivers), the multi-replica cluster layer that
+//!     shards workflow streams across engines, and the PJRT runtime
+//!     that executes the artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation; the `icarus` binary is self-contained afterwards.
@@ -36,6 +37,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod sched;
 pub mod tokenizer;
 pub mod tokens;
 pub mod trace;
@@ -43,11 +45,12 @@ pub mod workload;
 
 pub use cluster::{Cluster, ClusterStats};
 pub use config::{
-    AgentPattern, ClusterRouting, EvictionPolicy, Routing, ServingConfig, ServingMode,
-    WorkloadConfig,
+    AgentPattern, ClusterRouting, EvictionPolicy, Routing, SchedPolicy, ServingConfig,
+    ServingMode, WorkloadConfig,
 };
 pub use engine::executor::{CostModel, Executor, SimExecutor};
 pub use engine::Engine;
 pub use kvcache::KvCacheManager;
 pub use metrics::ServingStats;
+pub use sched::Scheduler;
 pub use tokens::TokenBuf;

@@ -4,7 +4,10 @@
 //!   serve  — run one workload configuration and print serving stats.
 //!            `--replicas R` shards the workload across R engine
 //!            replicas (own thread + KV pool each, sim executor only);
-//!            `--cluster-routing` picks the workflow-to-replica policy.
+//!            `--cluster-routing` picks the workflow-to-replica policy;
+//!            `--sched-policy fcfs|cache_aware|sjf` picks the admission
+//!            scheduler and `--prefill-chunk N` enables chunked prefill
+//!            (N tokens per sequence per fused step; 0 = atomic).
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
 //!            `--threads T` runs the sweep points across T worker
 //!            threads (near-linear wall-clock speedup for the grids;
@@ -20,6 +23,7 @@
 //!   icarus serve --mode icarus --models 4 --qps 0.4 --executor sim
 //!   icarus serve --executor pjrt --config serve-small --requests 8
 //!   icarus serve --replicas 4 --cluster-routing least_loaded --qps 2.0
+//!   icarus serve --sched-policy cache_aware --prefill-chunk 256 --qps 1.5
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
 //!   icarus sweep --threads 4 --json sweep.json
 
@@ -28,8 +32,8 @@ use anyhow::{anyhow, Result};
 use icarus::bench_util::par_map;
 use icarus::cluster::Cluster;
 use icarus::config::{
-    AgentPattern, ClusterRouting, EvictionPolicy, Routing, ServingConfig, ServingMode,
-    WorkloadConfig,
+    AgentPattern, ClusterRouting, EvictionPolicy, Routing, SchedPolicy, ServingConfig,
+    ServingMode, WorkloadConfig,
 };
 use icarus::engine::executor::{CostModel, SimExecutor};
 use icarus::engine::Engine;
@@ -91,6 +95,8 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         block_tokens: a.usize("block-tokens", 16)?,
         max_batch: a.usize("max-batch", 16)?,
         max_prefill_tokens: a.usize("max-prefill-tokens", 2048)?,
+        sched_policy: SchedPolicy::parse(a.get("sched-policy").unwrap_or("fcfs"))?,
+        prefill_chunk: a.usize("prefill-chunk", 0)?,
         eviction: match a.get("eviction").unwrap_or("recompute") {
             "recompute" => EvictionPolicy::Recompute,
             "swap" => EvictionPolicy::Swap,

@@ -143,6 +143,15 @@ pub struct ServingStats {
     pub turn_latency: Option<Histogram>,
     /// Latency from a turn becoming runnable to its first token.
     pub time_to_first_token: Option<Histogram>,
+    /// Gap between consecutive decoded tokens, per sequence (one sample
+    /// per sequence per decode step) — the stall signal chunked prefill
+    /// exists to flatten: an atomic long-prompt prefill shows up here
+    /// as a multi-second spike for every co-running sequence.
+    pub inter_token_latency: Option<Histogram>,
+    /// Waiting-queue depth in turns, sampled once per engine step
+    /// (recorded as a dimensionless count; quantiles are exact to the
+    /// histogram's ~3% bucket resolution).
+    pub queue_depth: Option<Histogram>,
     /// Workflows that ran every turn to completion.
     pub completed_requests: u64,
     /// Turns retired across all workflows.
@@ -163,6 +172,8 @@ pub struct ServingStats {
     pub swap_ins: u64,
     /// Running sequences preempted under memory pressure.
     pub preemptions: u64,
+    /// Prefill chunks executed (0 unless chunked prefill is enabled).
+    pub prefill_chunks: u64,
     /// Peak KV pool usage in bytes (the memory-explosion signal).
     pub peak_kv_bytes: u64,
     /// Simulated (or measured) seconds from run start to last retirement.
@@ -176,6 +187,8 @@ impl ServingStats {
             request_latency: Some(Histogram::new()),
             turn_latency: Some(Histogram::new()),
             time_to_first_token: Some(Histogram::new()),
+            inter_token_latency: Some(Histogram::new()),
+            queue_depth: Some(Histogram::new()),
             ..Default::default()
         }
     }
@@ -201,6 +214,8 @@ impl ServingStats {
         hist(&mut self.request_latency, &other.request_latency);
         hist(&mut self.turn_latency, &other.turn_latency);
         hist(&mut self.time_to_first_token, &other.time_to_first_token);
+        hist(&mut self.inter_token_latency, &other.inter_token_latency);
+        hist(&mut self.queue_depth, &other.queue_depth);
         self.completed_requests += other.completed_requests;
         self.completed_turns += other.completed_turns;
         self.generated_tokens += other.generated_tokens;
@@ -211,6 +226,7 @@ impl ServingStats {
         self.swap_outs += other.swap_outs;
         self.swap_ins += other.swap_ins;
         self.preemptions += other.preemptions;
+        self.prefill_chunks += other.prefill_chunks;
         self.peak_kv_bytes += other.peak_kv_bytes;
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
     }
@@ -261,6 +277,8 @@ impl ServingStats {
             ("request_latency", h(&self.request_latency)),
             ("turn_latency", h(&self.turn_latency)),
             ("ttft", h(&self.time_to_first_token)),
+            ("inter_token_latency", h(&self.inter_token_latency)),
+            ("queue_depth", h(&self.queue_depth)),
             ("completed_requests", num(self.completed_requests as f64)),
             ("completed_turns", num(self.completed_turns as f64)),
             ("generated_tokens", num(self.generated_tokens as f64)),
@@ -271,6 +289,7 @@ impl ServingStats {
             ("swap_outs", num(self.swap_outs as f64)),
             ("swap_ins", num(self.swap_ins as f64)),
             ("preemptions", num(self.preemptions as f64)),
+            ("prefill_chunks", num(self.prefill_chunks as f64)),
             ("peak_kv_bytes", num(self.peak_kv_bytes as f64)),
             ("throughput_tok_s", num(self.throughput_tok_s())),
             ("cache_hit_rate", num(self.cache_hit_rate())),

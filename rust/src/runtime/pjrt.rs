@@ -26,7 +26,7 @@ use anyhow::{anyhow, Context, Result};
 use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use crate::config::ServingMode;
-use crate::engine::executor::{DecodeSlot, Executor, PrefillOut, SnapshotId};
+use crate::engine::executor::{ChunkSlot, DecodeSlot, Executor, PrefillOut, SnapshotId};
 use crate::rng::Rng;
 
 use super::manifest::{Manifest, ModelSpec};
@@ -74,6 +74,8 @@ pub struct PjrtExecutor {
 pub struct PjrtStats {
     /// Prefill invocations.
     pub prefill_calls: u64,
+    /// Prefill chunks encoded (chunked-prefill path).
+    pub prefill_chunk_calls: u64,
     /// Wall seconds spent in prefill.
     pub prefill_secs: f64,
     /// Decode steps executed.
@@ -292,6 +294,58 @@ impl PjrtExecutor {
         }
     }
 
+    /// Fresh bucketized prefill of `tokens[..head_len]` at positions
+    /// `0..head_len`: pick the smallest bucket fitting `head_len`, pad,
+    /// execute, and return the resulting cache plus the next-token
+    /// prediction after position `head_len - 1`.
+    fn fresh_prefill_head(
+        &self,
+        model_id: usize,
+        tokens: &[u32],
+        head_len: usize,
+    ) -> Result<(Rc<CacheLits>, u32)> {
+        let bucket = self
+            .spec
+            .bucket_for(head_len)
+            .ok_or_else(|| anyhow!("prompt head {head_len} exceeds buckets"))?;
+        let mut toks = vec![0i32; bucket];
+        for (i, &t) in tokens[..head_len].iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks, &[bucket], None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[head_len as i32], &[], None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(2 + self.weights.len() + self.zero_adapter.len());
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.extend(self.weights.iter());
+        args.extend(self.adapter_for(model_id, true).iter());
+        let exe = &self.prefill_exes[&bucket];
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("prefill execute: {e}"))?;
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("no output"))?;
+        let tuple = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut it = tuple.into_iter();
+        let k = it.next().context("k")?;
+        let v = it.next().context("v")?;
+        let logits = it.next().context("logits")?;
+        let tok = argmax(&logits.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?);
+        Ok((Rc::new(CacheLits { k, v }), tok))
+    }
+
     /// One decode-artifact call: (token, pos, cache) -> (token', cache').
     fn decode_once(
         &mut self,
@@ -398,46 +452,7 @@ impl Executor for PjrtExecutor {
             // remainder through the decode artifact.
             let max_bucket = *self.spec.prefill.keys().last().expect("no buckets");
             let head_len = prompt.len().min(max_bucket);
-            let bucket = self
-                .spec
-                .bucket_for(head_len)
-                .ok_or_else(|| anyhow!("prompt {} exceeds buckets", prompt.len()))?;
-            let mut toks = vec![0i32; bucket];
-            for (i, &t) in prompt[..head_len].iter().enumerate() {
-                toks[i] = t as i32;
-            }
-            let tok_buf = self
-                .client
-                .buffer_from_host_buffer(&toks, &[bucket], None)
-                .map_err(|e| anyhow!("{e}"))?;
-            let len_buf = self
-                .client
-                .buffer_from_host_buffer(&[head_len as i32], &[], None)
-                .map_err(|e| anyhow!("{e}"))?;
-            let mut args: Vec<&PjRtBuffer> =
-                Vec::with_capacity(2 + self.weights.len() + self.zero_adapter.len());
-            args.push(&tok_buf);
-            args.push(&len_buf);
-            args.extend(self.weights.iter());
-            args.extend(self.adapter_for(model_id, true).iter());
-            let exe = &self.prefill_exes[&bucket];
-            let result = exe.execute_b(&args).map_err(|e| anyhow!("prefill execute: {e}"))?;
-            let out = result
-                .into_iter()
-                .next()
-                .and_then(|r| r.into_iter().next())
-                .ok_or_else(|| anyhow!("no output"))?;
-            let tuple = out
-                .to_literal_sync()
-                .map_err(|e| anyhow!("{e}"))?
-                .to_tuple()
-                .map_err(|e| anyhow!("{e}"))?;
-            let mut it = tuple.into_iter();
-            let k = it.next().context("k")?;
-            let v = it.next().context("v")?;
-            let logits = it.next().context("logits")?;
-            let mut tok = argmax(&logits.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?);
-            let mut cache = Rc::new(CacheLits { k, v });
+            let (mut cache, mut tok) = self.fresh_prefill_head(model_id, prompt, head_len)?;
             // Overflow beyond the largest bucket: logical encoder
             // extends the cache token by token.
             for pos in head_len..prompt.len() {
@@ -451,6 +466,79 @@ impl Executor for PjrtExecutor {
         let dur = t0.elapsed().as_secs_f64();
         self.stats.prefill_secs += dur;
         Ok(PrefillOut { duration: dur, cache: cache_id, first_token: first })
+    }
+
+    fn prefill_chunk(&mut self, c: &mut ChunkSlot<'_>) -> Result<f64> {
+        let t0 = Instant::now();
+        self.stats.prefill_chunk_calls += 1;
+        let end = c.end();
+        anyhow::ensure!(
+            c.prompt_len < self.spec.max_seq,
+            "prompt {} exceeds max_seq {}",
+            c.prompt_len,
+            self.spec.max_seq
+        );
+        let mut last = 0u32;
+        // Resume from the partial cache, fork from the prefix-cache
+        // base, or open fresh with a bucketized prefill of the head.
+        let (mut cache, from) = match (c.cache, c.base) {
+            (Some(id), _) => {
+                let lits = self
+                    .snapshots
+                    .get(&id)
+                    .ok_or_else(|| anyhow!("unknown partial cache {id}"))?
+                    .clone();
+                (lits, c.start)
+            }
+            (None, Some(b)) => {
+                let lits = self
+                    .snapshots
+                    .get(&b)
+                    .ok_or_else(|| anyhow!("unknown base snapshot {b}"))?
+                    .clone();
+                (lits, c.start)
+            }
+            (None, None) => {
+                anyhow::ensure!(
+                    c.start == 0 && end > 0,
+                    "first chunk without a base must start at 0 and be non-empty"
+                );
+                let max_bucket = *self.spec.prefill.keys().last().expect("no buckets");
+                let head_len = end.min(max_bucket);
+                let (lits, tok) = self.fresh_prefill_head(c.model_id, c.tokens, head_len)?;
+                last = tok;
+                (lits, head_len)
+            }
+        };
+        // Positions not covered above go through the logical encoder
+        // (decode artifact) one token at a time, same as suffix encode.
+        for pos in from..end {
+            let (t, new_cache) =
+                self.decode_once(c.model_id, c.tokens[pos - c.start], pos, &cache)?;
+            last = t;
+            cache = Rc::new(new_cache);
+            self.stats.suffix_decode_tokens += 1;
+        }
+        match c.cache {
+            Some(id) => {
+                // Replace the partial handle in place; the engine keeps
+                // using the same id across this sequence's chunks.
+                self.snapshots.insert(id, cache);
+            }
+            None => c.cache = Some(self.insert_snapshot(cache)),
+        }
+        if c.is_final() {
+            // Zero-token final chunk (fully cached prompt): no decode
+            // ran, so `last` is still 0 — the same placeholder the
+            // atomic path's suffix-encode produces when `cached_tokens
+            // == prompt.len()`.  The engine treats the token opaquely;
+            // a real fix needs re-scoring the last prompt position,
+            // which the snapshot layout does not expose.
+            c.first_token = Some(last);
+        }
+        let dur = t0.elapsed().as_secs_f64();
+        self.stats.prefill_secs += dur;
+        Ok(dur)
     }
 
     fn decode(&mut self, batch: &mut [DecodeSlot]) -> Result<f64> {

@@ -8,7 +8,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::ServingMode;
-use crate::engine::executor::{DecodeSlot, Executor, PrefillOut, SnapshotId};
+use crate::engine::executor::{ChunkSlot, DecodeSlot, Executor, PrefillOut, SnapshotId};
 
 use super::manifest::{Manifest, ModelSpec};
 
@@ -17,6 +17,8 @@ use super::manifest::{Manifest, ModelSpec};
 pub struct PjrtStats {
     /// Prefill invocations.
     pub prefill_calls: u64,
+    /// Prefill chunks encoded (chunked-prefill path).
+    pub prefill_chunk_calls: u64,
     /// Wall seconds spent in prefill.
     pub prefill_secs: f64,
     /// Decode steps executed.
@@ -72,6 +74,10 @@ impl Executor for PjrtExecutor {
         _cached_tokens: usize,
         _base: Option<SnapshotId>,
     ) -> Result<PrefillOut> {
+        unreachable!("stub PjrtExecutor cannot be constructed")
+    }
+
+    fn prefill_chunk(&mut self, _chunk: &mut ChunkSlot<'_>) -> Result<f64> {
         unreachable!("stub PjrtExecutor cannot be constructed")
     }
 

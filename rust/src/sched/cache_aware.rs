@@ -1,0 +1,50 @@
+//! Cache-aware admission: highest prefix-cache coverage first.
+
+use std::collections::VecDeque;
+
+use crate::config::SchedPolicy;
+use crate::engine::sequence::PendingTurn;
+
+use super::{CacheProbe, Pick, Scheduler};
+
+/// Admit the waiting turn with the highest probed prefix-cache coverage
+/// *fraction* first (ties broken FCFS).
+///
+/// In ICaRus mode a turn whose accumulated context was just published
+/// by another model is almost free to admit — serving it first drains
+/// the queue fastest and returns its KV blocks soonest, which is how
+/// the paper's cross-model sharing feeds back into scheduling.  The
+/// admission budget is charged with the probed-uncached suffix (not the
+/// whole prompt), fixing the pre-scheduler engine's conservative check
+/// that blocked cache hits behind a budget they would barely consume.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheAware;
+
+impl Scheduler for CacheAware {
+    fn policy(&self) -> SchedPolicy {
+        SchedPolicy::CacheAware
+    }
+
+    fn pick_next(
+        &mut self,
+        waiting: &VecDeque<PendingTurn>,
+        probe: &CacheProbe<'_>,
+    ) -> Option<Pick> {
+        let mut best: Option<(f64, Pick)> = None;
+        for (i, turn) in waiting.iter().enumerate() {
+            // A swap-parked turn is fully resident on its parked handle:
+            // treat it as complete coverage so restores drain first.
+            let (covered, uncached) = if turn.swapped.is_some() {
+                (1.0, 0)
+            } else {
+                let cached = probe.cached_tokens(turn);
+                (cached as f64 / turn.prompt.len().max(1) as f64, turn.prompt.len() - cached)
+            };
+            // Strict `>` keeps the earliest turn among ties (FCFS).
+            if best.is_none_or(|(c, _)| covered > c) {
+                best = Some((covered, Pick { idx: i, uncached_estimate: uncached }));
+            }
+        }
+        best.map(|(_, pick)| pick)
+    }
+}

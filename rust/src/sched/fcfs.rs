@@ -1,0 +1,36 @@
+//! First-come-first-served admission — the pinned-legacy policy.
+
+use std::collections::VecDeque;
+
+use crate::config::SchedPolicy;
+use crate::engine::sequence::PendingTurn;
+
+use super::{CacheProbe, Pick, Scheduler};
+
+/// Strict queue-order admission with the pre-scheduler engine's
+/// conservative whole-prompt budget estimate.
+///
+/// This policy is the compatibility anchor of the subsystem: with
+/// chunked prefill disabled it is pinned **bit-identical** (stats and
+/// trace) to the engine as it existed before the scheduler extraction,
+/// by a differential property test against a frozen port of the old
+/// loop.  That is why it keeps the worst-case `prompt.len()` budget
+/// estimate instead of the probe-accurate one — the probe fix lives in
+/// [`CacheAware`](super::CacheAware) and [`Sjf`](super::Sjf).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Fcfs;
+
+impl Scheduler for Fcfs {
+    fn policy(&self) -> SchedPolicy {
+        SchedPolicy::Fcfs
+    }
+
+    fn pick_next(
+        &mut self,
+        waiting: &VecDeque<PendingTurn>,
+        _probe: &CacheProbe<'_>,
+    ) -> Option<Pick> {
+        // Worst-case whole-prompt estimate: assume nothing is cached.
+        waiting.front().map(|t| Pick { idx: 0, uncached_estimate: t.prompt.len() })
+    }
+}

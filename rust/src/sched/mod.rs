@@ -1,0 +1,176 @@
+//! The scheduler subsystem: queue ownership + pluggable admission
+//! policies.
+//!
+//! The engine used to hardwire its scheduling decisions (which waiting
+//! turn to admit next, how to charge the per-step prefill budget) into
+//! its event loop.  This module extracts them behind the [`Scheduler`]
+//! trait so policies can be varied, measured and extended without
+//! touching the engine, and owns the turn queues ([`Queues`]) the
+//! policies operate over.
+//!
+//! Three policies ship (`--sched-policy` on the CLI; see
+//! `benches/sched_policies.rs` for the policy × chunk-size × QPS
+//! sweep):
+//!
+//!   * [`Fcfs`] — strict queue order, budget charged with the
+//!     worst-case whole-prompt estimate.  Pinned **bit-identical** to
+//!     the pre-scheduler engine (stats and trace) by a differential
+//!     property test against a frozen reference port of the old loop
+//!     (`tests/property_invariants.rs`), so the refactor is provably a
+//!     refactor.
+//!   * [`CacheAware`] — highest probed prefix-cache coverage first.
+//!     In ICaRus mode a turn whose context another model just
+//!     published is nearly free to admit; serving it first shortens
+//!     the queue for everyone (the paper's sharing directly feeds the
+//!     scheduler).  Also fixes the pre-scheduler engine's conservative
+//!     admission budget: the budget is charged with the *probed*
+//!     uncached suffix, not the whole prompt, so cache hits are no
+//!     longer blocked behind a budget they would barely consume.
+//!   * [`Sjf`] — shortest-remaining-prefill first (probed-uncached
+//!     tokens), the classic tail-latency heuristic, with the same
+//!     probe-accurate budget accounting.
+//!
+//! Probes go through [`CacheProbe`], a read-only prefix-cache coverage
+//! query (`KvCacheManager::probe_cached_tokens`) that deliberately does
+//! **not** touch LRU state: policies may probe the queue every step
+//! without perturbing eviction order — which is also what keeps `Fcfs`
+//! runs bit-identical while other policies probe freely.
+//!
+//! Head-of-line blocking is attacked on both axes: policies may admit
+//! from the middle of the queue (ordering axis), and chunked prefill
+//! (`--prefill-chunk`, see `engine`) splits long prompts into bounded
+//! chunks co-scheduled with the decode batch (time axis), so one long
+//! prompt can stall neither the waiting queue nor the running batch.
+
+mod cache_aware;
+mod fcfs;
+mod sjf;
+
+pub use cache_aware::CacheAware;
+pub use fcfs::Fcfs;
+pub use sjf::Sjf;
+
+use std::collections::VecDeque;
+
+use crate::config::SchedPolicy;
+use crate::engine::sequence::{PendingTurn, RunningSeq};
+use crate::kvcache::KvCacheManager;
+
+/// Read-only prefix-cache coverage probe handed to policies.
+///
+/// Coverage queries walk the radix index without updating access times
+/// or pinning, so probing is side-effect-free: a policy may probe every
+/// waiting turn every step without perturbing LRU eviction order.
+pub struct CacheProbe<'a> {
+    kv: &'a KvCacheManager,
+}
+
+impl<'a> CacheProbe<'a> {
+    /// Probe over the engine's KV manager.
+    pub fn new(kv: &'a KvCacheManager) -> Self {
+        CacheProbe { kv }
+    }
+
+    /// Prompt tokens of `turn` an admission could currently serve from
+    /// the prefix cache (match depth through the deepest
+    /// snapshot-bearing node — blocks matched beyond the last payload
+    /// have nothing to prefill from and do not count).
+    pub fn cached_tokens(&self, turn: &PendingTurn) -> usize {
+        self.kv.probe_cached_tokens(turn.model_id, &turn.prompt)
+    }
+
+    /// Prompt tokens of `turn` that would actually need prefilling.
+    pub fn uncached_tokens(&self, turn: &PendingTurn) -> usize {
+        turn.prompt.len().saturating_sub(self.cached_tokens(turn))
+    }
+}
+
+/// A policy's admission choice: which waiting turn to try next, plus
+/// the uncached-prefill estimate (computed in the same probe pass, so
+/// the engine never re-probes the picked turn) that gates the attempt
+/// against the per-step prefill budget.
+#[derive(Debug, Clone, Copy)]
+pub struct Pick {
+    /// Index into the waiting queue.
+    pub idx: usize,
+    /// Estimated uncached prefill tokens for that turn — worst-case
+    /// whole-prompt for [`Fcfs`], probed coverage for the others (the
+    /// budget itself settles against the real admission outcome; this
+    /// estimate only gates the attempt).
+    pub uncached_estimate: usize,
+}
+
+/// An admission policy: picks which waiting turn the engine tries to
+/// admit next and how much of the per-step prefill budget an admission
+/// is charged for.
+///
+/// The engine remains responsible for the mechanics (KV allocation,
+/// preemption, chunk planning); the policy only decides *order* and
+/// *budget*.  `Send` because engines run on cluster replica threads.
+pub trait Scheduler: Send {
+    /// Which policy this scheduler implements (for labels/dumps).
+    fn policy(&self) -> SchedPolicy;
+
+    /// The next turn to attempt admitting, or `None` to stop this
+    /// admission round.  Called once per admission attempt — the
+    /// queue's coverage can change with every admission (pins, inserts,
+    /// evictions), so probing policies deliberately re-rank each time.
+    fn pick_next(
+        &mut self,
+        waiting: &VecDeque<PendingTurn>,
+        probe: &CacheProbe<'_>,
+    ) -> Option<Pick>;
+}
+
+/// Construct the scheduler implementing `policy`.
+pub fn make(policy: SchedPolicy) -> Box<dyn Scheduler> {
+    match policy {
+        SchedPolicy::Fcfs => Box::new(Fcfs),
+        SchedPolicy::CacheAware => Box::new(CacheAware),
+        SchedPolicy::Sjf => Box::new(Sjf),
+    }
+}
+
+/// The scheduler-owned turn queues: turns waiting for admission, turns
+/// parked on tool latency, and the running batch (decoding or
+/// mid-chunked-prefill).
+#[derive(Debug, Default)]
+pub struct Queues {
+    /// Turns eligible for admission, in arrival/requeue order.
+    pub waiting: VecDeque<PendingTurn>,
+    /// Turns whose tool call (think time) has not finished yet.
+    pub delayed: Vec<PendingTurn>,
+    /// Sequences holding KV resources: the decode batch plus any
+    /// sequences still mid-chunked-prefill.
+    pub running: Vec<RunningSeq>,
+}
+
+impl Queues {
+    /// Empty queues.
+    pub fn new() -> Self {
+        Queues::default()
+    }
+
+    /// Move turns whose tool latency has elapsed into the run queue.
+    pub fn surface_delayed(&mut self, now: f64) {
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].ready_at <= now {
+                let t = self.delayed.swap_remove(i);
+                self.waiting.push_back(t);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Earliest tool-completion time among delayed turns, if any.
+    pub fn next_ready(&self) -> Option<f64> {
+        self.delayed.iter().map(|t| t.ready_at).min_by(f64::total_cmp)
+    }
+
+    /// True when nothing is waiting, delayed or running.
+    pub fn is_drained(&self) -> bool {
+        self.waiting.is_empty() && self.delayed.is_empty() && self.running.is_empty()
+    }
+}

@@ -2,15 +2,23 @@
 //! sequences over many iterations, shrink-free but reproducible — the
 //! failing seed is printed by the assertion message).
 //!
-//! Includes a differential test driving the optimized `RadixCache`
-//! (hash-indexed children, heap-based incremental eviction, node
-//! recycling) against a naive reference model with the pre-optimization
-//! semantics (per-node token vecs, full-scan LRU eviction): matched
-//! token counts, eviction victim order and payload drops must be
-//! bit-identical at every step.
+//! Includes two differential suites:
+//!
+//!   * the optimized `RadixCache` (hash-indexed children, heap-based
+//!     incremental eviction, node recycling) against a naive reference
+//!     model with the pre-optimization semantics (per-node token vecs,
+//!     full-scan LRU eviction): matched token counts, eviction victim
+//!     order and payload drops must be bit-identical at every step;
+//!   * the scheduler-refactored `Engine` under `--sched-policy fcfs`
+//!     with chunking disabled against `legacy_engine`, a frozen
+//!     verbatim port of the pre-scheduler event loop: serving stats
+//!     and the full per-turn trace must be bit-identical on seeded
+//!     ReAct/Reflexion × round-robin/skewed workloads, across modes,
+//!     eviction policies and memory-pressure levels.
 
 use icarus::config::{
-    AgentPattern, EvictionPolicy, Routing, ServingConfig, ServingMode, WorkloadConfig,
+    AgentPattern, EvictionPolicy, Routing, SchedPolicy, ServingConfig, ServingMode,
+    WorkloadConfig,
 };
 use icarus::engine::executor::{CostModel, SimExecutor};
 use icarus::engine::Engine;
@@ -679,6 +687,626 @@ fn prop_stats_merge_matches_single_instance() {
             );
         }
         assert_eq!(merged.generated_tokens, single.generated_tokens, "seed {seed}");
+    }
+}
+
+mod legacy_engine {
+    //! Frozen verbatim port of the engine event loop as it existed
+    //! before the scheduler extraction (PR 4): hardwired FCFS
+    //! admission, conservative whole-prompt budget estimate, atomic
+    //! prefill at admission.  Deliberately unmaintained — it is the
+    //! spec the refactored engine must match move for move under
+    //! `SchedPolicy::Fcfs` with chunking disabled.
+
+    use std::collections::VecDeque;
+
+    use icarus::config::{EvictionPolicy, ServingConfig};
+    use icarus::engine::executor::{DecodeSlot, Executor, PrefillOut};
+    use icarus::kvcache::{Alloc, KvCacheManager};
+    use icarus::metrics::ServingStats;
+    use icarus::trace::{Trace, TurnEvent};
+    use icarus::workload::Workflow;
+    use icarus::TokenBuf;
+
+    struct PendingTurn {
+        wf_idx: usize,
+        turn_idx: usize,
+        ready_at: f64,
+        prompt: TokenBuf,
+        remaining_gen: usize,
+        was_preempted: bool,
+        swapped: Option<(u64, u64)>,
+    }
+
+    struct RunningSeq {
+        seq_id: u64,
+        wf_idx: usize,
+        turn_idx: usize,
+        model_id: usize,
+        prompt: TokenBuf,
+        generated: Vec<u32>,
+        remaining_gen: usize,
+        cache: u64,
+        cached_tokens: usize,
+        ready_at: f64,
+        admitted_at: f64,
+    }
+
+    impl RunningSeq {
+        fn context_len(&self) -> usize {
+            self.prompt.len() + self.generated.len()
+        }
+
+        fn into_context(self) -> TokenBuf {
+            self.prompt.extended(&self.generated)
+        }
+    }
+
+    struct WfState {
+        spec: Workflow,
+        context: TokenBuf,
+        next_turn: usize,
+    }
+
+    pub struct LegacyEngine<E: Executor> {
+        cfg: ServingConfig,
+        exec: E,
+        kv: KvCacheManager,
+        now: f64,
+        next_seq_id: u64,
+        wfs: Vec<WfState>,
+        future: VecDeque<usize>,
+        waiting: VecDeque<PendingTurn>,
+        delayed: Vec<PendingTurn>,
+        running: Vec<RunningSeq>,
+        stats: ServingStats,
+        trace: Trace,
+    }
+
+    impl<E: Executor> LegacyEngine<E> {
+        pub fn new(cfg: ServingConfig, kv_bytes_per_token: u64, n_models: usize, exec: E) -> Self {
+            assert_eq!(cfg.mode, exec.mode(), "engine/executor mode mismatch");
+            let kv = KvCacheManager::new(&cfg, kv_bytes_per_token, n_models);
+            LegacyEngine {
+                cfg,
+                exec,
+                kv,
+                now: 0.0,
+                next_seq_id: 1,
+                wfs: Vec::new(),
+                future: VecDeque::new(),
+                waiting: VecDeque::new(),
+                delayed: Vec::new(),
+                running: Vec::new(),
+                stats: ServingStats::new(),
+                trace: Trace::new(),
+            }
+        }
+
+        pub fn run_traced(mut self, workload: Vec<Workflow>) -> (ServingStats, Trace) {
+            let mut idx: Vec<usize> = (0..workload.len()).collect();
+            idx.sort_by(|&a, &b| workload[a].arrival.total_cmp(&workload[b].arrival));
+            self.wfs = workload
+                .into_iter()
+                .map(|spec| {
+                    let context = spec.prompt.clone();
+                    WfState { spec, context, next_turn: 0 }
+                })
+                .collect();
+            self.future = idx.into();
+
+            loop {
+                self.surface_arrivals();
+                self.surface_delayed();
+                if self.waiting.is_empty() && self.running.is_empty() {
+                    let next_arrival = self.future.front().map(|&w| self.wfs[w].spec.arrival);
+                    let next_ready =
+                        self.delayed.iter().map(|t| t.ready_at).min_by(f64::total_cmp);
+                    match [next_arrival, next_ready].into_iter().flatten().min_by(f64::total_cmp) {
+                        Some(t) => {
+                            self.now = self.now.max(t);
+                            continue;
+                        }
+                        None => break,
+                    }
+                }
+                self.admit();
+                self.decode_step();
+            }
+            self.stats.wall_seconds = self.now;
+            self.stats.peak_kv_bytes = self.kv.pool.peak_bytes();
+            self.stats.swap_outs = self.kv.swap.swap_outs;
+            self.stats.swap_ins = self.kv.swap.swap_ins;
+            self.stats.evictions = self.kv.stats.evicted_blocks;
+            (self.stats, self.trace)
+        }
+
+        fn surface_delayed(&mut self) {
+            let now = self.now;
+            let mut i = 0;
+            while i < self.delayed.len() {
+                if self.delayed[i].ready_at <= now {
+                    let t = self.delayed.swap_remove(i);
+                    self.waiting.push_back(t);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        fn surface_arrivals(&mut self) {
+            while let Some(&w) = self.future.front() {
+                if self.wfs[w].spec.arrival > self.now {
+                    break;
+                }
+                self.future.pop_front();
+                let wf = &mut self.wfs[w];
+                let prompt = std::mem::take(&mut wf.context);
+                self.waiting.push_back(PendingTurn {
+                    wf_idx: w,
+                    turn_idx: 0,
+                    ready_at: wf.spec.arrival,
+                    prompt,
+                    remaining_gen: wf.spec.turns[0].gen_len,
+                    was_preempted: false,
+                    swapped: None,
+                });
+            }
+        }
+
+        fn admit(&mut self) {
+            let mut prefill_budget = self.cfg.max_prefill_tokens;
+            let mut attempts = self.waiting.len();
+            while self.running.len() < self.cfg.max_batch && attempts > 0 {
+                attempts -= 1;
+                let Some(turn) = self.waiting.front() else { break };
+                let uncached_upper = turn.prompt.len(); // worst case
+                if uncached_upper > prefill_budget && prefill_budget < self.cfg.max_prefill_tokens {
+                    break;
+                }
+                let mut turn = self.waiting.pop_front().unwrap();
+                let model_id = self.wfs[turn.wf_idx].spec.turns[turn.turn_idx].model_id;
+                let seq_id = self.next_seq_id;
+
+                if let Some((handle, bytes)) = turn.swapped.take() {
+                    match self.kv.begin_sequence(seq_id, model_id, &turn.prompt) {
+                        Alloc::Ok(adm) => {
+                            self.drop_snapshots(&adm.dropped_snapshots);
+                            self.kv.swap.swap_in(bytes);
+                            self.now += self.exec.swap_in_cost(bytes);
+                            self.next_seq_id += 1;
+                            self.running.push(RunningSeq {
+                                seq_id,
+                                wf_idx: turn.wf_idx,
+                                turn_idx: turn.turn_idx,
+                                model_id,
+                                prompt: turn.prompt,
+                                generated: Vec::new(),
+                                remaining_gen: turn.remaining_gen,
+                                cache: handle,
+                                cached_tokens: 0,
+                                ready_at: turn.ready_at,
+                                admitted_at: self.now,
+                            });
+                            continue;
+                        }
+                        Alloc::NoSpace => {
+                            turn.swapped = Some((handle, bytes));
+                            self.check_admissible_when_idle(&turn);
+                            self.waiting.push_front(turn);
+                            break;
+                        }
+                    }
+                }
+
+                match self.kv.begin_sequence(seq_id, model_id, &turn.prompt) {
+                    Alloc::Ok(adm) => {
+                        self.next_seq_id += 1;
+                        self.drop_snapshots(&adm.dropped_snapshots);
+                        if adm.swap_in_bytes > 0 {
+                            self.now += self.exec.swap_in_cost(adm.swap_in_bytes);
+                        }
+                        let (base, cached) = match adm.snapshot {
+                            Some((snap, covered)) => (Some(snap), covered),
+                            None => (None, 0),
+                        };
+                        let cached = cached.min(adm.cached_tokens);
+                        let uncached = turn.prompt.len() - cached;
+                        prefill_budget = prefill_budget.saturating_sub(uncached);
+                        let PrefillOut { duration, cache, first_token } = self
+                            .exec
+                            .prefill(model_id, &turn.prompt, cached, base)
+                            .expect("prefill failed");
+                        self.now += duration;
+                        self.stats.prefill_tokens += uncached as u64;
+                        self.stats.cached_prefill_tokens += cached as u64;
+                        if turn.was_preempted {
+                            self.stats.recomputed_tokens += uncached as u64;
+                        }
+                        self.stats
+                            .time_to_first_token
+                            .as_mut()
+                            .unwrap()
+                            .record((self.now - turn.ready_at).max(0.0));
+                        turn.remaining_gen = turn.remaining_gen.saturating_sub(1);
+                        let seq = RunningSeq {
+                            seq_id,
+                            wf_idx: turn.wf_idx,
+                            turn_idx: turn.turn_idx,
+                            model_id,
+                            prompt: turn.prompt,
+                            generated: vec![first_token],
+                            remaining_gen: turn.remaining_gen,
+                            cache,
+                            cached_tokens: cached,
+                            ready_at: turn.ready_at,
+                            admitted_at: self.now,
+                        };
+                        if let Alloc::NoSpace = self.kv.append_tokens(seq_id, 1) {
+                            self.kv.preempt(seq.seq_id);
+                            self.stats.preemptions += 1;
+                            self.requeue_preempted(seq);
+                            continue;
+                        }
+                        self.running.push(seq);
+                    }
+                    Alloc::NoSpace => {
+                        self.check_admissible_when_idle(&turn);
+                        self.waiting.push_front(turn);
+                        break;
+                    }
+                }
+            }
+        }
+
+        fn check_admissible_when_idle(&self, turn: &PendingTurn) {
+            if self.running.is_empty() {
+                panic!(
+                    "KV pool cannot hold a {}-token prompt even when idle",
+                    turn.prompt.len()
+                );
+            }
+        }
+
+        fn requeue_preempted(&mut self, victim: RunningSeq) {
+            let cache = victim.cache;
+            let context_len = victim.context_len();
+            let mut turn = PendingTurn {
+                wf_idx: victim.wf_idx,
+                turn_idx: victim.turn_idx,
+                ready_at: victim.ready_at,
+                remaining_gen: victim.remaining_gen,
+                was_preempted: true,
+                swapped: None,
+                prompt: victim.into_context(),
+            };
+            match self.cfg.eviction {
+                EvictionPolicy::Recompute => {
+                    self.exec.drop_snapshot(cache);
+                }
+                EvictionPolicy::Swap => {
+                    let bytes = context_len as u64 * self.kv.kv_bytes_per_token();
+                    if self.kv.swap.swap_out(bytes) {
+                        turn.swapped = Some((cache, bytes));
+                        turn.was_preempted = false;
+                    } else {
+                        self.kv.stats.swap_rejected += 1;
+                        self.exec.drop_snapshot(cache);
+                    }
+                }
+            }
+            self.waiting.push_back(turn);
+        }
+
+        fn decode_step(&mut self) {
+            if self.running.is_empty() {
+                return;
+            }
+            let mut i = 0;
+            while i < self.running.len() {
+                let seq_id = self.running[i].seq_id;
+                match self.kv.append_tokens(seq_id, 1) {
+                    Alloc::Ok(adm) => {
+                        self.drop_snapshots(&adm.dropped_snapshots);
+                        i += 1;
+                    }
+                    Alloc::NoSpace => {
+                        if !self.preempt_other(i) {
+                            let victim = self.running.swap_remove(i);
+                            self.kv.preempt(victim.seq_id);
+                            self.stats.preemptions += 1;
+                            self.requeue_preempted(victim);
+                        }
+                    }
+                }
+            }
+            if self.running.is_empty() {
+                return;
+            }
+            let mut slots: Vec<DecodeSlot> = self
+                .running
+                .iter()
+                .map(|s| DecodeSlot {
+                    seq_id: s.seq_id,
+                    model_id: s.model_id,
+                    cache: s.cache,
+                    context_len: s.context_len(),
+                    last_token: *s.generated.last().unwrap_or(&1),
+                    next_token: 0,
+                })
+                .collect();
+            let dur = self.exec.decode(&mut slots).expect("decode failed");
+            self.now += dur;
+            for (seq, slot) in self.running.iter_mut().zip(&slots) {
+                seq.cache = slot.cache;
+                seq.generated.push(slot.next_token);
+                seq.remaining_gen = seq.remaining_gen.saturating_sub(1);
+                self.stats.generated_tokens += 1;
+            }
+            let mut j = 0;
+            while j < self.running.len() {
+                if self.running[j].remaining_gen == 0 {
+                    let seq = self.running.swap_remove(j);
+                    self.finish_turn(seq);
+                } else {
+                    j += 1;
+                }
+            }
+        }
+
+        fn preempt_other(&mut self, keep: usize) -> bool {
+            let Some(pos) = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != keep)
+                .max_by(|a, b| a.1.admitted_at.total_cmp(&b.1.admitted_at))
+                .map(|(i, _)| i)
+            else {
+                return false;
+            };
+            let victim = self.running.swap_remove(pos);
+            self.kv.preempt(victim.seq_id);
+            self.stats.preemptions += 1;
+            self.requeue_preempted(victim);
+            true
+        }
+
+        fn finish_turn(&mut self, seq: RunningSeq) {
+            self.stats.completed_turns += 1;
+            self.trace.record(TurnEvent {
+                wf_id: self.wfs[seq.wf_idx].spec.id,
+                turn_idx: seq.turn_idx,
+                model_id: seq.model_id,
+                ready_at: seq.ready_at,
+                completed_at: self.now,
+                prompt_tokens: seq.prompt.len(),
+                cached_tokens: seq.cached_tokens,
+                generated_tokens: seq.generated.len(),
+            });
+            self.stats
+                .turn_latency
+                .as_mut()
+                .unwrap()
+                .record((self.now - seq.ready_at).max(0.0));
+            let seq_id = seq.seq_id;
+            let wf_idx = seq.wf_idx;
+            let turn_idx = seq.turn_idx;
+            let cache = seq.cache;
+            let full = seq.into_context();
+            let snap = self.exec.snapshot(cache);
+            let dropped = self.kv.finish_sequence(seq_id, &full, Some(snap));
+            self.drop_snapshots(&dropped);
+
+            let wf = &mut self.wfs[wf_idx];
+            let spec_turn = &wf.spec.turns[turn_idx];
+            let ctx = full.extended(&spec_turn.obs);
+            wf.next_turn = turn_idx + 1;
+            if wf.next_turn < wf.spec.turns.len() {
+                let next = &wf.spec.turns[wf.next_turn];
+                let gen = next.gen_len;
+                let ready_at = self.now + next.think_s;
+                let turn = PendingTurn {
+                    wf_idx,
+                    turn_idx: wf.next_turn,
+                    ready_at,
+                    prompt: ctx,
+                    remaining_gen: gen,
+                    was_preempted: false,
+                    swapped: None,
+                };
+                if ready_at > self.now {
+                    self.delayed.push(turn);
+                } else {
+                    self.waiting.push_back(turn);
+                }
+            } else {
+                wf.context = ctx;
+                self.stats.completed_requests += 1;
+                let arrival = wf.spec.arrival;
+                self.stats
+                    .request_latency
+                    .as_mut()
+                    .unwrap()
+                    .record((self.now - arrival).max(0.0));
+            }
+        }
+
+        fn drop_snapshots(&mut self, snaps: &[u64]) {
+            for &s in snaps {
+                self.exec.drop_snapshot(s);
+            }
+        }
+    }
+}
+
+/// The scheduler refactor is provably a refactor: `--sched-policy
+/// fcfs` with chunking disabled reproduces the pre-scheduler engine's
+/// serving stats and full per-turn trace bit for bit, on seeded
+/// ReAct/Reflexion x round-robin/skewed workloads across modes,
+/// eviction policies and memory-pressure levels (tiny pools force the
+/// preemption, swap and recompute paths through both loops).
+#[test]
+fn prop_fcfs_unchunked_bit_identical_to_legacy_engine() {
+    use legacy_engine::LegacyEngine;
+    let cases: &[(ServingMode, EvictionPolicy, AgentPattern, Routing, f64, u64, usize, u64)] = &[
+        // (mode, eviction, pattern, routing, qps, pool_mb, n_models, seed)
+        (
+            ServingMode::Icarus,
+            EvictionPolicy::Recompute,
+            AgentPattern::ReAct,
+            Routing::RoundRobin,
+            0.5,
+            64,
+            4,
+            7,
+        ),
+        (
+            ServingMode::Baseline,
+            EvictionPolicy::Recompute,
+            AgentPattern::ReAct,
+            Routing::RoundRobin,
+            1.0,
+            4,
+            8,
+            3,
+        ),
+        (
+            ServingMode::Icarus,
+            EvictionPolicy::Swap,
+            AgentPattern::ReAct,
+            Routing::Skewed { hot_p_percent: 50 },
+            0.8,
+            8,
+            8,
+            5,
+        ),
+        (
+            ServingMode::Baseline,
+            EvictionPolicy::Swap,
+            AgentPattern::Reflexion,
+            Routing::RoundRobin,
+            1.0,
+            4,
+            8,
+            9,
+        ),
+        (
+            ServingMode::Icarus,
+            EvictionPolicy::Recompute,
+            AgentPattern::Reflexion,
+            Routing::Skewed { hot_p_percent: 70 },
+            1.5,
+            16,
+            4,
+            21,
+        ),
+    ];
+    for &(mode, eviction, pattern, routing, qps, pool_mb, n_models, seed) in cases {
+        let scfg = ServingConfig {
+            mode,
+            eviction,
+            kv_pool_bytes: pool_mb << 20,
+            sched_policy: SchedPolicy::Fcfs,
+            prefill_chunk: 0,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            pattern,
+            n_models,
+            qps,
+            n_requests: 40,
+            routing,
+            seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let tag = format!("{mode:?}/{eviction:?}/{pattern:?}/qps={qps}/pool={pool_mb}MB");
+
+        let legacy_exec = SimExecutor::new(CostModel::default(), mode);
+        let (l, lt) =
+            LegacyEngine::new(scfg.clone(), 2048, n_models, legacy_exec).run_traced(wl.clone());
+
+        let exec = SimExecutor::new(CostModel::default(), mode);
+        let (n, nt) = Engine::new(scfg, 2048, n_models, exec).run_traced(wl);
+
+        // Every stat the pre-scheduler engine reported, bit for bit.
+        assert_eq!(n.completed_requests, l.completed_requests, "{tag}: requests");
+        assert_eq!(n.completed_turns, l.completed_turns, "{tag}: turns");
+        assert_eq!(n.generated_tokens, l.generated_tokens, "{tag}: generated");
+        assert_eq!(n.prefill_tokens, l.prefill_tokens, "{tag}: prefilled");
+        assert_eq!(n.cached_prefill_tokens, l.cached_prefill_tokens, "{tag}: cached");
+        assert_eq!(n.recomputed_tokens, l.recomputed_tokens, "{tag}: recomputed");
+        assert_eq!(n.evictions, l.evictions, "{tag}: evictions");
+        assert_eq!(n.swap_outs, l.swap_outs, "{tag}: swap outs");
+        assert_eq!(n.swap_ins, l.swap_ins, "{tag}: swap ins");
+        assert_eq!(n.preemptions, l.preemptions, "{tag}: preemptions");
+        assert_eq!(n.peak_kv_bytes, l.peak_kv_bytes, "{tag}: peak kv");
+        assert_eq!(n.prefill_chunks, 0, "{tag}: no chunks with chunking off");
+        assert_eq!(
+            n.wall_seconds.to_bits(),
+            l.wall_seconds.to_bits(),
+            "{tag}: wall clock must be bit-identical ({} vs {})",
+            n.wall_seconds,
+            l.wall_seconds
+        );
+        assert_eq!(n.request_latency, l.request_latency, "{tag}: request hist");
+        assert_eq!(n.turn_latency, l.turn_latency, "{tag}: turn hist");
+        assert_eq!(n.time_to_first_token, l.time_to_first_token, "{tag}: ttft hist");
+        // And the full per-turn timeline.
+        assert_eq!(nt.events, lt.events, "{tag}: trace must be bit-identical");
+    }
+}
+
+/// No resource leaks under any scheduling policy x chunking x mode:
+/// after a full run every sequence has drained from the KV manager,
+/// the only resident blocks belong to the prefix cache, and the only
+/// live executor snapshot handles are the prefix cache's published
+/// payloads (the engine dropped everything it was handed back —
+/// including displaced payloads from identical-context re-publishes
+/// and partial chunked-prefill caches of preempted sequences).
+#[test]
+fn prop_no_leaks_under_every_policy() {
+    for &policy in &[SchedPolicy::Fcfs, SchedPolicy::CacheAware, SchedPolicy::Sjf] {
+        for &chunk in &[0usize, 96] {
+            for &(mode, eviction, pool_mb) in &[
+                (ServingMode::Icarus, EvictionPolicy::Recompute, 8u64),
+                (ServingMode::Baseline, EvictionPolicy::Recompute, 4),
+                (ServingMode::Icarus, EvictionPolicy::Swap, 8),
+            ] {
+                let tag = format!("{policy:?}/chunk={chunk}/{mode:?}/{eviction:?}");
+                let scfg = ServingConfig {
+                    mode,
+                    eviction,
+                    kv_pool_bytes: pool_mb << 20,
+                    sched_policy: policy,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                };
+                let wcfg = WorkloadConfig {
+                    n_models: 4,
+                    qps: 1.0,
+                    n_requests: 24,
+                    seed: 13,
+                    ..Default::default()
+                };
+                let exec = SimExecutor::new(CostModel::default(), mode);
+                let mut engine = Engine::new(scfg, 2048, 4, exec);
+                let stats = engine.run_in_place(generate(&wcfg));
+                assert_eq!(stats.completed_requests, 24, "{tag}: completion");
+                assert_eq!(engine.kv().active_sequences(), 0, "{tag}: leaked sequences");
+                assert_eq!(
+                    engine.kv().resident_blocks(),
+                    engine.kv().resident_cache_blocks(),
+                    "{tag}: blocks owned by dead sequences"
+                );
+                assert_eq!(
+                    engine.executor().live_snapshots(),
+                    engine.kv().live_payloads() as u64,
+                    "{tag}: leaked snapshot handles"
+                );
+            }
+        }
     }
 }
 
