@@ -1,0 +1,145 @@
+//! Tiered snapshot-store sweep: tier budgets × prefetch × replicas,
+//! against the Fig-8 swap-eviction baseline (EXPERIMENTS.md §Tiered
+//! store).
+//!
+//! What this demonstrates:
+//!   * a bounded host tier catches evicted contexts, so the memory-
+//!     pressure regime of Fig 8 restores KV over PCIe instead of
+//!     re-prefilling (or swap-thrashing) it;
+//!   * a disk tier extends the reuse window at NVMe cost, and
+//!     `--store-prefetch` claws the NVMe latency back off the critical
+//!     path by staging queued turns' prefixes early;
+//!   * shared across 4 replicas, the store turns plain round-robin
+//!     routing into a warm-cache cluster: contexts prefilled on one
+//!     replica hit on the others (the `store`/`remote` columns).
+//!
+//! Results land in bench_results/store_tiers.json and, machine-
+//! readably for the perf trajectory, BENCH_store_tiers.json at the
+//! repo root (CI runs this at smoke scale and uploads the artifact).
+//!
+//! Run: cargo bench --bench store_tiers  [-- --smoke]
+
+use icarus::bench_util::{sweep, write_results, Point, Row, KV_BPT_SMALL};
+use icarus::config::{EvictionPolicy, ServingMode};
+use icarus::json::{self, Value};
+
+/// Store budget variants swept against the swap baseline, labeled.
+const HOST_64MB: u64 = 64 << 20;
+const HOST_8MB: u64 = 8 << 20;
+const DISK_256MB: u64 = 256 << 20;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (qps_list, n_requests, replica_list): (&[f64], usize, &[usize]) = if smoke {
+        (&[0.8], 24, &[1, 4])
+    } else {
+        (&[0.4, 0.8, 1.5], 96, &[1, 4])
+    };
+
+    // (host, disk, prefetch) store variants; (0, 0, false) is the
+    // store-less swap baseline every other row is judged against.
+    let variants: &[(u64, u64, bool)] = &[
+        (0, 0, false),
+        (HOST_64MB, 0, false),
+        (HOST_8MB, DISK_256MB, false),
+        (HOST_8MB, DISK_256MB, true),
+    ];
+
+    let mut points = Vec::new();
+    for &replicas in replica_list {
+        for &(host, disk, prefetch) in variants {
+            for &qps in qps_list {
+                points.push(Point {
+                    mode: ServingMode::Icarus,
+                    n_models: 4,
+                    qps,
+                    n_requests,
+                    // Fig-8's memory-pressure regime: a 12 MB pool per
+                    // replica forces constant eviction between turns.
+                    kv_pool_bytes: 12 << 20,
+                    kv_bytes_per_token: KV_BPT_SMALL,
+                    // The baseline keeps Fig 8's swap eviction; store
+                    // rows run plain Recompute — the store IS their
+                    // second chance, and a restore beats both paths.
+                    eviction: if host + disk == 0 {
+                        EvictionPolicy::Swap
+                    } else {
+                        EvictionPolicy::Recompute
+                    },
+                    replicas,
+                    store_host_bytes: host,
+                    store_disk_bytes: disk,
+                    store_prefetch: prefetch,
+                    seed: 13,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    println!(
+        "== Tiered store sweep: budgets x prefetch x replicas vs fig8 swap baseline, \
+         ICaRus N=4, pool 12 MB/replica{} ==\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+    let rows = sweep(&points);
+
+    // The acceptance comparison: each store variant vs the swap
+    // baseline at the same replica count and QPS.
+    let find = |replicas: usize, host: u64, disk: u64, prefetch: bool, qps: f64| -> Option<&Row> {
+        points
+            .iter()
+            .zip(&rows)
+            .find(|(p, _)| {
+                p.replicas == replicas
+                    && p.store_host_bytes == host
+                    && p.store_disk_bytes == disk
+                    && p.store_prefetch == prefetch
+                    && p.qps == qps
+            })
+            .map(|(_, r)| r)
+    };
+    println!("\n--- store vs fig8 swap baseline (same replicas, qps) ---");
+    let mut comparisons = Vec::new();
+    for &replicas in replica_list {
+        for &qps in qps_list {
+            let Some(base) = find(replicas, 0, 0, false, qps) else { continue };
+            for &(host, disk, prefetch) in variants.iter().filter(|v| v.0 + v.1 > 0) {
+                let Some(row) = find(replicas, host, disk, prefetch, qps) else { continue };
+                let speedup = if row.p95_s > 0.0 { base.p95_s / row.p95_s } else { 0.0 };
+                println!(
+                    "R={replicas} qps={qps:.2} host={}M disk={}M pf={}: p95 {:.3}s -> {:.3}s \
+                     ({speedup:.2}x), {} store hits ({} remote)",
+                    host >> 20,
+                    disk >> 20,
+                    prefetch,
+                    base.p95_s,
+                    row.p95_s,
+                    row.store_hits,
+                    row.store_remote_hits,
+                );
+                comparisons.push(json::obj(vec![
+                    ("replicas", json::num(replicas as f64)),
+                    ("qps", json::num(qps)),
+                    ("store_host_bytes", json::num(host as f64)),
+                    ("store_disk_bytes", json::num(disk as f64)),
+                    ("store_prefetch", Value::Bool(prefetch)),
+                    ("p95_baseline_s", json::num(base.p95_s)),
+                    ("p95_store_s", json::num(row.p95_s)),
+                    ("p95_speedup", json::num(speedup)),
+                    ("store_hits", json::num(row.store_hits as f64)),
+                    ("store_remote_hits", json::num(row.store_remote_hits as f64)),
+                ]));
+            }
+        }
+    }
+    write_results(
+        "store_tiers",
+        &rows,
+        vec![
+            ("figure", json::s("8-extended")),
+            ("baseline", json::s("fig8 swap eviction, store off")),
+            ("smoke", Value::Bool(smoke)),
+            ("store_vs_swap_baseline", Value::Arr(comparisons)),
+        ],
+    );
+}

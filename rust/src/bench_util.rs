@@ -6,9 +6,10 @@
 use std::path::Path;
 use std::time::Instant;
 
+use crate::cluster::Cluster;
 use crate::config::{
-    AgentPattern, EvictionPolicy, Routing, SchedPolicy, ServingConfig, ServingMode,
-    WorkloadConfig,
+    AgentPattern, ClusterRouting, EvictionPolicy, Routing, SchedPolicy, ServingConfig,
+    ServingMode, WorkloadConfig,
 };
 use crate::engine::executor::{CostModel, SimExecutor};
 use crate::engine::Engine;
@@ -77,6 +78,17 @@ pub struct Point {
     pub prompt_mean: f64,
     /// Std dev of initial prompt tokens.
     pub prompt_std: f64,
+    /// Engine replicas (>1 runs the point through the cluster layer,
+    /// bit-identical at 1 — `benches/store_tiers.rs` sweeps this).
+    pub replicas: usize,
+    /// Workflow-to-replica routing for multi-replica points.
+    pub cluster_routing: ClusterRouting,
+    /// Host tier of the tiered snapshot store in bytes (0 = off).
+    pub store_host_bytes: u64,
+    /// Disk tier of the tiered snapshot store in bytes (0 = off).
+    pub store_disk_bytes: u64,
+    /// Background prefetch staging for queued turns.
+    pub store_prefetch: bool,
     /// Simulator cost model.
     pub cost: CostModel,
 }
@@ -99,23 +111,40 @@ impl Default for Point {
             prefill_chunk: 0,
             prompt_mean: 96.0,
             prompt_std: 24.0,
+            replicas: 1,
+            cluster_routing: ClusterRouting::RoundRobin,
+            store_host_bytes: 0,
+            store_disk_bytes: 0,
+            store_prefetch: false,
             cost: CostModel::default(),
         }
     }
 }
 
 impl Point {
-    /// Run this point's full sim and return its stats.
-    pub fn run(&self) -> ServingStats {
-        let scfg = ServingConfig {
+    fn serving_config(&self) -> ServingConfig {
+        ServingConfig {
             mode: self.mode,
             kv_pool_bytes: self.kv_pool_bytes,
             eviction: self.eviction,
             prefix_caching: self.prefix_caching,
             sched_policy: self.sched_policy,
             prefill_chunk: self.prefill_chunk,
+            replicas: self.replicas,
+            cluster_routing: self.cluster_routing,
+            store_host_bytes: self.store_host_bytes,
+            store_disk_bytes: self.store_disk_bytes,
+            store_prefetch: self.store_prefetch,
             ..Default::default()
-        };
+        }
+    }
+
+    /// Run this point's full sim and return its stats.  Single-replica
+    /// store-less points run the plain engine; anything else goes
+    /// through the cluster layer (bit-identical at `replicas == 1`,
+    /// pinned by the cluster property tests).
+    pub fn run(&self) -> ServingStats {
+        let scfg = self.serving_config();
         let wcfg = WorkloadConfig {
             pattern: self.pattern,
             n_models: self.n_models,
@@ -127,13 +156,18 @@ impl Point {
             prompt_std: self.prompt_std,
             ..Default::default()
         };
+        if self.replicas > 1 || self.store_host_bytes + self.store_disk_bytes > 0 {
+            let cluster = Cluster::new(scfg, self.kv_bytes_per_token, self.n_models);
+            return cluster.run_sim(self.cost.clone(), generate(&wcfg)).merged;
+        }
         let exec = SimExecutor::new(self.cost.clone(), self.mode);
         Engine::new(scfg, self.kv_bytes_per_token, self.n_models, exec).run(generate(&wcfg))
     }
 
     /// Short `mode/N/qps` tag for table rows, extended with the
-    /// scheduling policy and chunk size when they differ from the
-    /// defaults (so policy sweeps stay distinguishable).
+    /// scheduling policy, chunk size, replica count and store budgets
+    /// when they differ from the defaults (so sweeps stay
+    /// distinguishable).
     pub fn label(&self) -> String {
         let mut s = format!("{}/N={}/qps={:.2}", self.mode.as_str(), self.n_models, self.qps);
         if self.sched_policy != SchedPolicy::Fcfs {
@@ -142,6 +176,17 @@ impl Point {
         }
         if self.prefill_chunk > 0 {
             s.push_str(&format!("/chunk={}", self.prefill_chunk));
+        }
+        if self.replicas > 1 {
+            s.push_str(&format!("/R={}", self.replicas));
+        }
+        if self.store_host_bytes + self.store_disk_bytes > 0 {
+            s.push_str(&format!(
+                "/store={}M+{}M{}",
+                self.store_host_bytes >> 20,
+                self.store_disk_bytes >> 20,
+                if self.store_prefetch { "+pf" } else { "" }
+            ));
         }
         s
     }
@@ -176,6 +221,10 @@ pub struct Row {
     pub preemptions: u64,
     /// Blocks evicted from the prefix cache.
     pub evictions: u64,
+    /// Snapshot-store restores (host + disk tiers).
+    pub store_hits: u64,
+    /// Store restores of contexts another replica published.
+    pub store_remote_hits: u64,
 }
 
 impl Row {
@@ -196,6 +245,8 @@ impl Row {
             peak_kv_mb: s.peak_kv_bytes as f64 / (1 << 20) as f64,
             preemptions: s.preemptions,
             evictions: s.evictions,
+            store_hits: s.store_hits(),
+            store_remote_hits: s.store_remote_hits,
         }
     }
 
@@ -214,6 +265,8 @@ impl Row {
             ("peak_kv_mb", json::num(self.peak_kv_mb)),
             ("preemptions", json::num(self.preemptions as f64)),
             ("evictions", json::num(self.evictions as f64)),
+            ("store_hits", json::num(self.store_hits as f64)),
+            ("store_remote_hits", json::num(self.store_remote_hits as f64)),
         ])
     }
 }
@@ -221,17 +274,34 @@ impl Row {
 /// Print the aligned column header matching [`print_row`].
 pub fn header() {
     println!(
-        "{:<28} {:>8} {:>8} {:>12} {:>8} {:>10} {:>8} {:>8}",
-        "point", "p95(s)", "p50(s)", "tput(tok/s)", "hit", "peakKV(MB)", "preempt", "evict"
+        "{:<34} {:>8} {:>8} {:>12} {:>8} {:>10} {:>8} {:>8} {:>7} {:>7}",
+        "point",
+        "p95(s)",
+        "p50(s)",
+        "tput(tok/s)",
+        "hit",
+        "peakKV(MB)",
+        "preempt",
+        "evict",
+        "store",
+        "remote"
     );
 }
 
 /// Print one aligned result row.
 pub fn print_row(r: &Row) {
     println!(
-        "{:<28} {:>8.3} {:>8.3} {:>12.1} {:>8.3} {:>10.1} {:>8} {:>8}",
-        r.label, r.p95_s, r.p50_s, r.tput_tok_s, r.hit_rate, r.peak_kv_mb, r.preemptions,
-        r.evictions
+        "{:<34} {:>8.3} {:>8.3} {:>12.1} {:>8.3} {:>10.1} {:>8} {:>8} {:>7} {:>7}",
+        r.label,
+        r.p95_s,
+        r.p50_s,
+        r.tput_tok_s,
+        r.hit_rate,
+        r.peak_kv_mb,
+        r.preemptions,
+        r.evictions,
+        r.store_hits,
+        r.store_remote_hits
     );
 }
 

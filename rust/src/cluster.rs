@@ -36,6 +36,7 @@
 //!
 //! [`KvCacheManager`]: crate::kvcache::KvCacheManager
 
+use std::sync::Arc;
 use std::thread;
 
 use crate::config::{ClusterRouting, ServingConfig};
@@ -44,6 +45,7 @@ use crate::engine::Engine;
 use crate::json::{self, Value};
 use crate::kvcache::block::{hash_block, ROOT_HASH};
 use crate::metrics::ServingStats;
+use crate::store::{ClockFence, SnapshotStore, StoreHandle, StoreStats, TieredStore};
 use crate::trace::{Trace, TurnEvent};
 use crate::workload::Workflow;
 
@@ -102,27 +104,35 @@ pub struct ClusterStats {
     pub merged: ServingStats,
     /// Each replica's own run stats, indexed by replica id.
     pub per_replica: Vec<ServingStats>,
+    /// Aggregate counters of the shared snapshot store (`None` when the
+    /// config leaves the store disabled).  Global, not per-replica —
+    /// per-replica restore counters live in each `ServingStats`.
+    pub store: Option<StoreStats>,
 }
 
 impl ClusterStats {
-    fn from_replicas(per_replica: Vec<ServingStats>) -> ClusterStats {
+    fn from_replicas(per_replica: Vec<ServingStats>, store: Option<StoreStats>) -> ClusterStats {
         let mut merged = ServingStats::new();
         for s in &per_replica {
             merged.merge(s);
         }
-        ClusterStats { merged, per_replica }
+        ClusterStats { merged, per_replica, store }
     }
 
     /// Merged stats plus the per-replica breakdown, for results files.
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut entries = vec![
             ("replicas", json::num(self.per_replica.len() as f64)),
             ("stats", self.merged.to_json()),
             (
                 "per_replica",
                 Value::Arr(self.per_replica.iter().map(ServingStats::to_json).collect()),
             ),
-        ])
+        ];
+        if let Some(store) = &self.store {
+            entries.push(("store", store.to_json()));
+        }
+        json::obj(entries)
     }
 }
 
@@ -174,11 +184,35 @@ impl Cluster {
         shards
     }
 
+    /// The shared tiered snapshot store this cluster's config asks for
+    /// (`None` with both budgets zero — the store then stays entirely
+    /// out of the engines' code paths).
+    fn make_store(&self) -> Option<Arc<TieredStore>> {
+        if self.scfg.store_host_bytes + self.scfg.store_disk_bytes == 0 {
+            return None;
+        }
+        Some(Arc::new(TieredStore::new(
+            self.scfg.store_host_bytes,
+            self.scfg.store_disk_bytes,
+            self.scfg.block_tokens,
+            self.kv_bytes_per_token,
+        )))
+    }
+
     /// Spawn one scoped thread per shard, build a fresh engine on each
     /// with `factory`, drive it with `run`, and join the results in
     /// replica order.  The one place replica threads are constructed —
     /// traced and untraced runs differ only in the closure they pass.
-    fn run_replicas<T, E, F, G>(&self, factory: F, workload: Vec<Workflow>, run: G) -> Vec<T>
+    /// With a shared `store`, every engine gets a per-replica handle
+    /// plus a common [`ClockFence`] so cross-replica store visibility
+    /// is causal in virtual time.
+    fn run_replicas<T, E, F, G>(
+        &self,
+        store: &Option<Arc<TieredStore>>,
+        factory: F,
+        workload: Vec<Workflow>,
+        run: G,
+    ) -> Vec<T>
     where
         T: Send,
         E: Executor,
@@ -186,19 +220,30 @@ impl Cluster {
         G: Fn(Engine<E>, Vec<Workflow>) -> T + Sync,
     {
         let shards = self.shard(workload);
+        let fence = match store {
+            Some(_) if shards.len() > 1 => Some(Arc::new(ClockFence::new(shards.len()))),
+            _ => None,
+        };
         thread::scope(|s| {
             let handles: Vec<_> = shards
                 .into_iter()
-                .map(|shard| {
+                .enumerate()
+                .map(|(replica, shard)| {
                     let factory = &factory;
                     let run = &run;
+                    let store = store.clone();
+                    let fence = fence.clone();
                     s.spawn(move || {
-                        let engine = Engine::new(
+                        let mut engine = Engine::new(
                             self.scfg.clone(),
                             self.kv_bytes_per_token,
                             self.n_models,
                             factory(),
                         );
+                        if let Some(st) = store {
+                            let st: Arc<dyn SnapshotStore> = st;
+                            engine.attach_store(StoreHandle::new(st, fence, replica));
+                        }
                         run(engine, shard)
                     })
                 })
@@ -214,7 +259,9 @@ impl Cluster {
         E: Executor,
         F: Fn() -> E + Sync,
     {
-        ClusterStats::from_replicas(self.run_replicas(factory, workload, |e, w| e.run(w)))
+        let store = self.make_store();
+        let per_replica = self.run_replicas(&store, factory, workload, |e, w| e.run(w));
+        ClusterStats::from_replicas(per_replica, store.map(|s| s.stats()))
     }
 
     /// Like [`Cluster::run_with`], but each replica also records a
@@ -229,7 +276,8 @@ impl Cluster {
         E: Executor,
         F: Fn() -> E + Sync,
     {
-        let outcomes = self.run_replicas(factory, workload, |e, w| e.run_traced(w));
+        let store = self.make_store();
+        let outcomes = self.run_replicas(&store, factory, workload, |e, w| e.run_traced(w));
         let mut per_replica = Vec::with_capacity(outcomes.len());
         let mut events: Vec<TurnEvent> = Vec::new();
         for (stats, trace) in outcomes {
@@ -240,7 +288,7 @@ impl Cluster {
         // The sort is stable, so a single replica's trace (already in
         // completion order) passes through unchanged.
         events.sort_by(|a, b| a.completed_at.total_cmp(&b.completed_at));
-        (ClusterStats::from_replicas(per_replica), Trace { events })
+        (ClusterStats::from_replicas(per_replica, store.map(|s| s.stats())), Trace { events })
     }
 
     /// Run with one [`SimExecutor`] per replica — the configuration the
@@ -368,6 +416,55 @@ mod tests {
                 "{policy:?}: chunk counts must come from every replica"
             );
         }
+    }
+
+    #[test]
+    fn shared_store_cross_replica_hits_beat_hash_prefix_affinity() {
+        // Workflow groups share a long identical opening (system
+        // prompt + retrieval doc); tails are unique.  Round-robin
+        // scatters every group across all four replicas, so without a
+        // store each replica re-prefills the opening cold;
+        // hash-prefix affinity instead colocates each group on one
+        // replica (the PR-3 answer, at the price of imbalance).  The
+        // shared snapshot store gives plain round robin the reuse AND
+        // the balance: a context prefilled on replica 0 is a warm
+        // transfer-priced hit on replicas 1..3.
+        let mut wl = workload(48, 0.8, 41);
+        let groups = 5u32; // coprime with 4 replicas: groups spread
+        for (i, wf) in wl.iter_mut().enumerate() {
+            let g = i as u32 % groups;
+            let mut p: Vec<u32> =
+                (0..512u32).map(|t| 32 + ((t * 37 + g * 7919) % 1900)).collect();
+            p.extend((0..32u32).map(|t| 32 + ((t * 13 + i as u32 * 101) % 1900)));
+            wf.prompt = p.into();
+        }
+        let mk = |routing: ClusterRouting, host_bytes: u64| {
+            let scfg = ServingConfig {
+                replicas: 4,
+                cluster_routing: routing,
+                kv_pool_bytes: 32 << 20,
+                store_host_bytes: host_bytes,
+                ..Default::default()
+            };
+            Cluster::new(scfg, 2048, 4).run_sim(CostModel::default(), wl.clone())
+        };
+        let store_rr = mk(ClusterRouting::RoundRobin, 512 << 20);
+        let affinity = mk(ClusterRouting::HashPrefix, 0);
+        assert_eq!(store_rr.merged.completed_requests, 48);
+        assert_eq!(affinity.merged.completed_requests, 48);
+        assert!(
+            store_rr.merged.store_remote_hits > 0,
+            "a context prefilled on one replica must hit on another"
+        );
+        let st = store_rr.store.as_ref().expect("store stats present");
+        assert!(st.remote_hits > 0 && st.publishes > 0);
+        assert!(affinity.store.is_none(), "baseline runs store-less");
+        let p_rr = store_rr.merged.turn_latency.as_ref().unwrap().p95();
+        let p_aff = affinity.merged.turn_latency.as_ref().unwrap().p95();
+        assert!(
+            p_rr <= p_aff,
+            "shared-store round robin must match prefix affinity: {p_rr} vs {p_aff}"
+        );
     }
 
     #[test]

@@ -165,6 +165,17 @@ pub struct ServingConfig {
     pub eviction: EvictionPolicy,
     /// Swap tier capacity in bytes (Appendix E uses 4 GB).
     pub swap_bytes: u64,
+    /// Host tier of the tiered KV snapshot store, in bytes.  0 together
+    /// with `store_disk_bytes` = 0 (the default) disables the store
+    /// entirely: the engine is then bit-identical to pre-store
+    /// Drop/Swap behavior (pinned by a differential property test).
+    pub store_host_bytes: u64,
+    /// Disk (NVMe) tier of the tiered KV snapshot store, in bytes.
+    pub store_disk_bytes: u64,
+    /// Issue background prefetches that stage disk-tier store entries
+    /// into host memory for queued turns before admission, so their
+    /// eventual restore pays PCIe instead of NVMe.
+    pub store_prefetch: bool,
     /// Enable per-namespace prefix caching (on in both systems; the
     /// ablation bench turns it off).
     pub prefix_caching: bool,
@@ -190,6 +201,9 @@ impl Default for ServingConfig {
             prefill_chunk: 0,
             eviction: EvictionPolicy::Recompute,
             swap_bytes: 4 << 30,
+            store_host_bytes: 0,
+            store_disk_bytes: 0,
+            store_prefetch: false,
             prefix_caching: true,
             replicas: 1,
             cluster_routing: ClusterRouting::RoundRobin,
@@ -210,6 +224,9 @@ impl ServingConfig {
             ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("eviction", json::s(self.eviction.as_str())),
             ("swap_bytes", json::num(self.swap_bytes as f64)),
+            ("store_host_bytes", json::num(self.store_host_bytes as f64)),
+            ("store_disk_bytes", json::num(self.store_disk_bytes as f64)),
+            ("store_prefetch", Value::Bool(self.store_prefetch)),
             ("prefix_caching", Value::Bool(self.prefix_caching)),
             ("replicas", json::num(self.replicas as f64)),
             ("cluster_routing", json::s(self.cluster_routing.as_str())),
@@ -393,6 +410,8 @@ mod tests {
         assert_eq!(s.replicas, 1, "plain single-engine serving by default");
         assert_eq!(s.sched_policy, SchedPolicy::Fcfs, "legacy-pinned policy by default");
         assert_eq!(s.prefill_chunk, 0, "atomic prefill by default");
+        assert_eq!(s.store_host_bytes + s.store_disk_bytes, 0, "store off by default");
+        assert!(!s.store_prefetch);
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);

@@ -146,6 +146,24 @@ pub trait Executor {
     /// Cost of restoring `bytes` from the swap tier.
     fn swap_in_cost(&self, bytes: u64) -> f64;
 
+    /// Cost of one snapshot-store restore moving `host_bytes` over
+    /// PCIe only and `disk_bytes` over NVMe + PCIe (a single restore
+    /// can straddle both tiers; the fixed DMA-setup latency is charged
+    /// once per restore, not per tier).  The default delegates to the
+    /// default [`CostModel`]'s bandwidths so executor and sim pricing
+    /// cannot silently diverge; `SimExecutor` overrides with its own
+    /// (possibly re-calibrated) model.
+    fn store_restore_cost(&self, host_bytes: u64, disk_bytes: u64) -> f64 {
+        CostModel::default().store_restore_time(host_bytes, disk_bytes)
+    }
+
+    /// Cost of staging `bytes` from the store's disk tier into host
+    /// memory (the transfer a background prefetch pays, off the
+    /// engine's critical path).
+    fn store_stage_cost(&self, bytes: u64) -> f64 {
+        bytes as f64 / CostModel::default().store_disk_bandwidth
+    }
+
     /// Serving mode this executor is configured for (decode cost model
     /// differs; PJRT selects the decode artifact).
     fn mode(&self) -> ServingMode;
@@ -181,6 +199,15 @@ pub struct CostModel {
     pub chunk_overlap: f64,
     /// Host<->device bandwidth for swap restores (bytes/sec).
     pub swap_bandwidth: f64,
+    /// Host-tier store restores: PCIe host->device bandwidth
+    /// (bytes/sec); also prices background write-back and the PCIe leg
+    /// of disk restores.
+    pub store_host_bandwidth: f64,
+    /// Disk-tier store reads: NVMe bandwidth (bytes/sec), paid on top
+    /// of the PCIe leg unless a prefetch already staged the entry.
+    pub store_disk_bandwidth: f64,
+    /// Fixed per-restore latency (allocator + DMA setup), seconds.
+    pub store_restore_base: f64,
 }
 
 impl Default for CostModel {
@@ -195,6 +222,9 @@ impl Default for CostModel {
             icarus_decode_factor: 1.05,
             chunk_overlap: 0.4,
             swap_bandwidth: 16.0e9,
+            store_host_bandwidth: 16.0e9,
+            store_disk_bandwidth: 3.2e9,
+            store_restore_base: 0.3e-3,
         }
     }
 }
@@ -215,6 +245,16 @@ impl CostModel {
     pub fn chunk_time(&self, start: usize, end: usize) -> f64 {
         let (s, e) = (start as f64, end as f64);
         self.prefill_per_token * (e - s) + self.prefill_per_token2 * (e * e - s * s)
+    }
+
+    /// Modeled seconds for one store restore moving `host_bytes` over
+    /// PCIe only and `disk_bytes` over NVMe then PCIe: DMA setup
+    /// (once), the PCIe hop for every restored byte, and the NVMe read
+    /// for the unstaged disk-tier bytes.
+    pub fn store_restore_time(&self, host_bytes: u64, disk_bytes: u64) -> f64 {
+        self.store_restore_base
+            + (host_bytes + disk_bytes) as f64 / self.store_host_bandwidth
+            + disk_bytes as f64 / self.store_disk_bandwidth
     }
 
     /// Modeled seconds for one decode step over a batch with the given
@@ -381,6 +421,14 @@ impl Executor for SimExecutor {
         bytes as f64 / self.cost.swap_bandwidth
     }
 
+    fn store_restore_cost(&self, host_bytes: u64, disk_bytes: u64) -> f64 {
+        self.cost.store_restore_time(host_bytes, disk_bytes)
+    }
+
+    fn store_stage_cost(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.cost.store_disk_bandwidth
+    }
+
     fn mode(&self) -> ServingMode {
         self.mode
     }
@@ -532,6 +580,27 @@ mod tests {
         let alone = ex.fused_step(&mut solo, &mut []).unwrap();
         let expect_alone = c.prefill_base + c.chunk_time(0, 32);
         assert!((alone - expect_alone).abs() < 1e-12, "{alone} vs {expect_alone}");
+    }
+
+    #[test]
+    fn store_restore_costs_ordered_by_tier() {
+        let c = CostModel::default();
+        let host = c.store_restore_time(1 << 20, 0);
+        let disk = c.store_restore_time(0, 1 << 20);
+        assert!(host > 0.0 && disk > host, "the NVMe leg must cost extra");
+        // A mixed-tier restore charges the DMA setup once, not per
+        // tier.
+        let mixed = c.store_restore_time(1 << 20, 1 << 20);
+        let expect = host + disk - c.store_restore_base;
+        assert!((mixed - expect).abs() < 1e-12, "{mixed} vs {expect}");
+        // Restoring beats recomputing by a wide margin (1 MB at
+        // 2048 B/token is 512 tokens of prefill) — the reason the
+        // tiered store pays off at all.
+        assert!(host < c.prefill_time(512) / 10.0, "{host}");
+        let mut ex = SimExecutor::new(c.clone(), ServingMode::Icarus);
+        let e: &mut dyn Executor = &mut ex;
+        assert_eq!(e.store_restore_cost(1 << 20, 0), host);
+        assert!(e.store_stage_cost(1 << 20) > 0.0);
     }
 
     #[test]

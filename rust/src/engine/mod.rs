@@ -35,6 +35,7 @@ use crate::config::{EvictionPolicy, ServingConfig};
 use crate::kvcache::{Alloc, KvCacheManager};
 use crate::metrics::ServingStats;
 use crate::sched::{self, CacheProbe, Queues, Scheduler};
+use crate::store::StoreHandle;
 use crate::trace::{Trace, TurnEvent};
 use crate::workload::Workflow;
 
@@ -57,9 +58,19 @@ pub struct Engine<E: Executor> {
     future: VecDeque<usize>,
     /// Scheduler-owned turn queues (waiting / delayed / running).
     q: Queues,
+    /// This replica's handle on the shared tiered snapshot store
+    /// (`None` — the default — leaves every store code path dormant,
+    /// which is what keeps store-less runs bit-identical to pre-store
+    /// behavior).
+    store: Option<StoreHandle>,
     stats: ServingStats,
     trace: Option<Trace>,
 }
+
+/// Waiting-queue prefix scanned for prefetch candidates per step: deep
+/// enough to cover what the next admission rounds will look at, bounded
+/// so a long queue cannot make the step O(queue x prompt).
+const PREFETCH_SCAN: usize = 16;
 
 impl<E: Executor> Engine<E> {
     /// Engine over `exec`, with a fresh KV manager sized by `cfg` and
@@ -79,6 +90,7 @@ impl<E: Executor> Engine<E> {
             wfs: Vec::new(),
             future: VecDeque::new(),
             q: Queues::new(),
+            store: None,
             stats: ServingStats::new(),
             trace: None,
         }
@@ -87,6 +99,16 @@ impl<E: Executor> Engine<E> {
     /// Record a per-turn event trace during `run` (see `trace::Trace`).
     pub fn enable_trace(&mut self) {
         self.trace = Some(Trace::new());
+    }
+
+    /// Attach this engine's handle on a (possibly shared) tiered
+    /// snapshot store.  From then on the engine restores store-resident
+    /// prefixes instead of re-prefilling them, writes finished contexts
+    /// back, demotes hard-evicted contexts into the store, and — in
+    /// cluster runs — fences its virtual clock against the other
+    /// replicas (see `crate::store`).
+    pub fn attach_store(&mut self, handle: StoreHandle) {
+        self.store = Some(handle);
     }
 
     /// Like `run`, but also returns the recorded trace.
@@ -133,6 +155,15 @@ impl<E: Executor> Engine<E> {
         self.future = idx.into();
 
         loop {
+            // Cluster runs with a shared store: heartbeat this
+            // replica's fence clock once per step so laggards are
+            // released even when this step touches no store path (the
+            // store handle additionally fences before every operation,
+            // at the exact clock the operation uses — the clock
+            // advances *within* steps).  No-op for single-engine runs.
+            if let Some(h) = &self.store {
+                h.sync(self.now);
+            }
             self.surface_arrivals();
             self.q.surface_delayed(self.now);
             if self.q.waiting.is_empty() && self.q.running.is_empty() {
@@ -154,6 +185,7 @@ impl<E: Executor> Engine<E> {
                 .unwrap()
                 .record(self.q.waiting.len() as f64);
             self.admit();
+            self.issue_prefetches();
             if self.cfg.prefill_chunk == 0 {
                 self.decode_step();
             } else {
@@ -164,8 +196,22 @@ impl<E: Executor> Engine<E> {
             // does not undo the eviction); release their handles.
             let orphaned = self.kv.take_orphaned();
             self.drop_snapshots(&orphaned);
+            // Hard-evicted payload contexts demote into the snapshot
+            // store (GPU -> host; the store cascades host -> disk ->
+            // drop).  Deduped content-addressed publishes make the
+            // common already-written-back case a refresh, not a copy.
+            let demoted = self.kv.take_demoted();
+            if self.store.is_some() {
+                for ctx in demoted {
+                    self.publish_to_store(&ctx);
+                }
+            }
         }
         debug_assert!(self.q.is_drained(), "queues must drain by end of run");
+        // This replica no longer constrains the cluster's clock fence.
+        if let Some(h) = &self.store {
+            h.finish();
+        }
         self.stats.wall_seconds = self.now;
         self.stats.peak_kv_bytes = self.kv.pool.peak_bytes();
         self.stats.swap_outs = self.kv.swap.swap_outs;
@@ -198,16 +244,41 @@ impl<E: Executor> Engine<E> {
         }
     }
 
+    /// Store coverage of every waiting turn, memoized once per
+    /// admission round (see [`sched::StoreCoverage`]): policies probe
+    /// the whole queue on every pick, and each store peek takes the
+    /// shared mutex + clock fence — once per turn per round is enough,
+    /// since coverage is advisory anyway.
+    fn store_coverage_memo(&self) -> Option<sched::StoreCoverage> {
+        if self.cfg.sched_policy == crate::config::SchedPolicy::Fcfs {
+            return None; // FCFS never probes: skip the queue walk
+        }
+        let h = self.store.as_ref()?;
+        let mut memo = sched::StoreCoverage::new();
+        for turn in &self.q.waiting {
+            if turn.swapped.is_some() {
+                continue; // fully resident on its parked handle
+            }
+            memo.entry((turn.prompt.as_ptr() as usize, turn.prompt.len()))
+                .or_insert_with(|| h.peek(&turn.prompt, self.now));
+        }
+        Some(memo)
+    }
+
     /// Admit turns in the order the scheduling policy picks, until the
     /// batch, KV pool or prefill-budget limits are hit.
     fn admit(&mut self) {
         let mut prefill_budget = self.cfg.max_prefill_tokens;
+        let store_coverage = self.store_coverage_memo();
         // Bound one admission round to the initial queue length so
         // requeued (preempted) turns cannot cycle within a single round.
         let mut attempts = self.q.waiting.len();
         while self.q.running.len() < self.cfg.max_batch && attempts > 0 {
             attempts -= 1;
-            let probe = CacheProbe::new(&self.kv);
+            let probe = match &store_coverage {
+                Some(memo) => CacheProbe::with_store(&self.kv, memo),
+                None => CacheProbe::new(&self.kv),
+            };
             let Some(pick) = self.sched.pick_next(&self.q.waiting, &probe) else { break };
             let idx = pick.idx;
             if pick.uncached_estimate > prefill_budget
@@ -225,7 +296,7 @@ impl<E: Executor> Engine<E> {
                 match self.kv.begin_sequence(seq_id, model_id, &turn.prompt) {
                     Alloc::Ok(adm) => {
                         self.drop_snapshots(&adm.dropped_snapshots);
-                        self.kv.swap.swap_in(bytes);
+                        self.kv.swap.swap_in(bytes).expect("swap tier accounting");
                         self.now += self.exec.swap_in_cost(bytes);
                         self.next_seq_id += 1;
                         self.spawn_running(seq_id, turn, model_id, handle);
@@ -258,7 +329,37 @@ impl<E: Executor> Engine<E> {
                     // Note: `adm.cached_tokens` may exceed the snapshot
                     // coverage (blocks cached deeper than the snapshot);
                     // the executor must recompute from the snapshot tip.
-                    let cached = cached.min(adm.cached_tokens);
+                    let mut cached = cached.min(adm.cached_tokens);
+                    // Tiered-store restore: when the store holds a
+                    // longer prefix of this prompt than the local radix
+                    // cache covers, download the KV over the tier's
+                    // modeled transfer path instead of recomputing it.
+                    // `begin_sequence` already allocated blocks for the
+                    // restored span (it is part of the uncached
+                    // remainder), so only the transfer is charged.
+                    if let Some(h) = &self.store {
+                        if let Some(hit) = h.begin_restore(&turn.prompt, cached, self.now) {
+                            let cost =
+                                self.exec.store_restore_cost(hit.host_bytes, hit.disk_bytes);
+                            self.now += cost;
+                            self.stats.store_restored_tokens += (hit.tokens - cached) as u64;
+                            self.stats.store_restored_bytes += hit.bytes();
+                            self.stats
+                                .store_restore_latency
+                                .as_mut()
+                                .unwrap()
+                                .record(cost);
+                            if hit.disk_bytes > 0 {
+                                self.stats.store_disk_hits += 1;
+                            } else {
+                                self.stats.store_host_hits += 1;
+                            }
+                            if hit.remote {
+                                self.stats.store_remote_hits += 1;
+                            }
+                            cached = hit.tokens;
+                        }
+                    }
                     let uncached = turn.prompt.len() - cached;
                     // The budget settles against the real admission
                     // outcome regardless of the policy's estimate.
@@ -370,6 +471,50 @@ impl<E: Executor> Engine<E> {
         });
     }
 
+    /// Issue background prefetches: stage disk-tier store entries that
+    /// cover queued turns' prompts into host memory, so the eventual
+    /// admission-time restore pays PCIe instead of NVMe.  The staging
+    /// transfer runs off the critical path (it charges no engine time;
+    /// the entry flips to host-priced once the requester's clock passes
+    /// the transfer completion).
+    fn issue_prefetches(&mut self) {
+        if !self.cfg.store_prefetch || self.cfg.store_disk_bytes == 0 {
+            // Staging moves disk blocks into host memory; without a
+            // disk tier there is never anything to stage, so skip the
+            // per-turn hash walks and store-mutex round trips entirely.
+            return;
+        }
+        let Some(h) = &self.store else { return };
+        for turn in self.q.waiting.iter().take(PREFETCH_SCAN) {
+            if turn.swapped.is_some() {
+                continue; // fully resident on its parked handle
+            }
+            // `stage` finds the unstaged disk blocks, prices the
+            // transfer and marks them in one locked pass; false means
+            // nothing was stageable (or another replica beat us), so
+            // the prefetch counter stays exact.
+            if h.stage(&turn.prompt, self.now, &|bytes| self.exec.store_stage_cost(bytes)) {
+                self.stats.store_prefetches += 1;
+            }
+        }
+    }
+
+    /// Write a context back into the snapshot store (background D2H
+    /// transfer: the entry becomes probe-visible once the write-back
+    /// completes, so publishing charges no engine time).
+    fn publish_to_store(&mut self, ctx: &[u32]) {
+        let Some(h) = &self.store else { return };
+        let bt = self.cfg.block_tokens;
+        let aligned = (ctx.len() / bt) * bt;
+        if aligned == 0 {
+            return;
+        }
+        let bytes = aligned as u64 * self.kv.kv_bytes_per_token();
+        // Write-back is the PCIe hop in the other direction.
+        let visible_at = self.now + self.exec.store_restore_cost(bytes, 0);
+        h.publish(ctx, self.now, visible_at);
+    }
+
     /// Fatal-misconfiguration guard: if the system is idle (nothing
     /// running, so every unpinned block is evictable) and a turn still
     /// cannot be admitted, it never will be — fail loudly instead of
@@ -454,7 +599,7 @@ impl<E: Executor> Engine<E> {
                     turn.swapped = Some((cache, bytes));
                     turn.was_preempted = false;
                 } else {
-                    self.kv.stats.swap_rejected += 1;
+                    self.kv.stats.swap_tier_full += 1;
                     self.exec.drop_snapshot(cache);
                 }
             }
@@ -795,6 +940,10 @@ impl<E: Executor> Engine<E> {
         self.exec.drop_snapshot(cache);
         let dropped = self.kv.finish_sequence(seq_id, &full, Some(snap));
         self.drop_snapshots(&dropped);
+        // Write-through into the snapshot store: the context becomes a
+        // restorable artifact for every replica (and survives local
+        // eviction) once the background write-back completes.
+        self.publish_to_store(&full);
 
         let wf = &mut self.wfs[wf_idx];
         let spec_turn = &wf.spec.turns[turn_idx];
@@ -1092,6 +1241,69 @@ mod tests {
         let exec = SimExecutor::new(CostModel::default(), ServingMode::Baseline);
         let s = Engine::new(scfg, 2048, 8, exec).run(generate(&wcfg));
         assert_eq!(s.completed_requests, 32);
+    }
+
+    fn run_with_store(
+        host_bytes: u64,
+        disk_bytes: u64,
+        prefetch: bool,
+        max_batch: usize,
+        wcfg: &WorkloadConfig,
+    ) -> ServingStats {
+        use crate::store::{SnapshotStore, StoreHandle, TieredStore};
+        use std::sync::Arc;
+        let scfg = ServingConfig {
+            kv_pool_bytes: 4 << 20,
+            max_batch,
+            store_host_bytes: host_bytes,
+            store_disk_bytes: disk_bytes,
+            store_prefetch: prefetch,
+            ..Default::default()
+        };
+        let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+        let mut engine = Engine::new(scfg.clone(), 2048, wcfg.n_models, exec);
+        if host_bytes + disk_bytes > 0 {
+            let store: Arc<dyn SnapshotStore> =
+                Arc::new(TieredStore::new(host_bytes, disk_bytes, scfg.block_tokens, 2048));
+            engine.attach_store(StoreHandle::new(store, None, 0));
+        }
+        engine.run(generate(wcfg))
+    }
+
+    #[test]
+    fn store_restores_evicted_contexts_instead_of_recomputing() {
+        // A 4 MB pool holds ~2k tokens of KV: agentic contexts are
+        // constantly evicted between turns.  With a roomy host tier the
+        // next turn restores its prefix over PCIe instead of
+        // re-prefilling it.
+        let wcfg =
+            WorkloadConfig { n_models: 4, qps: 1.0, n_requests: 32, seed: 3, ..Default::default() };
+        let with = run_with_store(256 << 20, 0, false, 16, &wcfg);
+        let without = run_with_store(0, 0, false, 16, &wcfg);
+        assert_eq!(with.completed_requests, 32);
+        assert_eq!(without.completed_requests, 32);
+        assert!(with.store_hits() > 0, "evicted contexts must restore from the store");
+        assert!(with.store_restored_tokens > 0);
+        assert!(
+            with.prefill_tokens < without.prefill_tokens,
+            "restores must replace recompute: {} vs {}",
+            with.prefill_tokens,
+            without.prefill_tokens
+        );
+    }
+
+    #[test]
+    fn store_disk_tier_and_prefetch_paths_run() {
+        // A 2-block host tier demotes nearly everything to disk; a
+        // tiny batch keeps turns queued, which is what prefetch staging
+        // feeds on.
+        let wcfg =
+            WorkloadConfig { n_models: 4, qps: 2.0, n_requests: 24, seed: 9, ..Default::default() };
+        let s = run_with_store(2 * 16 * 2048, 512 << 20, true, 2, &wcfg);
+        assert_eq!(s.completed_requests, 24);
+        assert!(s.store_disk_hits > 0, "demoted blocks must restore from disk");
+        assert!(s.store_prefetches > 0, "queued turns must trigger staging");
+        assert!(s.store_restore_latency.as_ref().unwrap().count() >= s.store_hits());
     }
 
     #[test]

@@ -65,8 +65,13 @@ pub struct ManagerStats {
     pub failed_inserts: u64,
     /// Tokens released by preemptions.
     pub preempted_tokens: u64,
-    /// Evictions that wanted to swap but found the tier full.
-    pub swap_rejected: u64,
+    /// Evictions that wanted to swap but fell back to hard eviction
+    /// because the swap tier lacked room for the shortfall.
+    pub swap_tier_full: u64,
+    /// Evictions that wanted to swap while the tier had room, but the
+    /// tree had nothing (left) swappable — previously mislabeled as a
+    /// tier rejection.
+    pub swap_nothing_swappable: u64,
 }
 
 /// The façade the scheduler talks to: block pool + per-namespace prefix
@@ -89,6 +94,14 @@ pub struct KvCacheManager {
     /// via `take_orphaned` (returning them inside `Alloc::NoSpace`
     /// would break every pattern match on the variant).
     orphaned: Vec<u64>,
+    /// True when a tiered snapshot store is configured: hard evictions
+    /// then reconstruct payload-bearing victims' contexts for demotion
+    /// (GPU → host tier) instead of losing them outright.
+    demote_to_store: bool,
+    /// Contexts of payload-bearing nodes hard-evicted since the last
+    /// [`KvCacheManager::take_demoted`] drain — the engine publishes
+    /// them into the tiered store.
+    demoted: Vec<Vec<u32>>,
     /// Cache-policy counters for the run.
     pub stats: ManagerStats,
 }
@@ -111,6 +124,8 @@ impl KvCacheManager {
             prefix_caching: cfg.prefix_caching,
             kv_bytes_per_token,
             orphaned: Vec::new(),
+            demote_to_store: cfg.store_host_bytes + cfg.store_disk_bytes > 0,
+            demoted: Vec::new(),
             stats: ManagerStats::default(),
         }
     }
@@ -153,19 +168,34 @@ impl KvCacheManager {
                 // Bounded by the swap tier's byte budget.
                 let room = (self.swap.free() / self.pool.block_bytes) as usize;
                 let to_swap = need.min(room);
+                let mut swapped = 0;
                 if to_swap > 0 {
-                    let freed = self.trees[t].evict_swap(to_swap, &mut self.pool);
-                    self.stats.evicted_blocks += freed as u64;
-                    let ok = self.swap.swap_out(freed as u64 * self.pool.block_bytes);
+                    swapped = self.trees[t].evict_swap(to_swap, &mut self.pool);
+                    self.stats.evicted_blocks += swapped as u64;
+                    let ok = self.swap.swap_out(swapped as u64 * self.pool.block_bytes);
                     debug_assert!(ok, "room was checked");
                 }
                 if self.pool.free_blocks() >= want {
                     continue;
                 }
-                self.stats.swap_rejected += 1; // tier full: hard-evict rest
+                // Falling through to hard eviction: attribute why swap
+                // could not cover the shortfall (both can apply —
+                // this used to be one mislabeled `swap_rejected`).
+                if room < need {
+                    self.stats.swap_tier_full += 1;
+                }
+                if swapped < to_swap {
+                    self.stats.swap_nothing_swappable += 1;
+                }
             }
             let need = want.saturating_sub(self.pool.free_blocks());
-            let (freed, dropped) = self.trees[t].evict(need, &mut self.pool);
+            let (freed, dropped) = if self.demote_to_store {
+                let (freed, dropped, demoted) = self.trees[t].evict_demoting(need, &mut self.pool);
+                self.demoted.extend(demoted);
+                (freed, dropped)
+            } else {
+                self.trees[t].evict(need, &mut self.pool)
+            };
             self.stats.evicted_blocks += freed as u64;
             dropped_all.extend(dropped);
         }
@@ -226,7 +256,7 @@ impl KvCacheManager {
             let restored = self.trees[ns].restore(&m.swapped_nodes, &mut self.pool);
             debug_assert_eq!(restored, restore_blocks, "free space was checked");
             swap_in_bytes = restored as u64 * self.pool.block_bytes;
-            self.swap.swap_in(swap_in_bytes);
+            self.swap.swap_in(swap_in_bytes).expect("swap tier accounting");
         }
         let Some(own) = self.pool.alloc(self.pool.blocks_for_tokens(uncached)) else {
             self.trees[ns].unpin(&m, &mut self.pool);
@@ -348,6 +378,13 @@ impl KvCacheManager {
         std::mem::take(&mut self.orphaned)
     }
 
+    /// Drain the contexts of payload-bearing nodes hard-evicted since
+    /// the last call, for demotion into the tiered snapshot store
+    /// (always empty unless the store is configured).
+    pub fn take_demoted(&mut self) -> Vec<Vec<u32>> {
+        std::mem::take(&mut self.demoted)
+    }
+
     /// KV cache cost per token this manager prices evictions with.
     pub fn kv_bytes_per_token(&self) -> u64 {
         self.kv_bytes_per_token
@@ -364,6 +401,13 @@ impl KvCacheManager {
     /// state leaked.
     pub fn resident_cache_blocks(&self) -> usize {
         self.trees.iter().map(RadixCache::resident_nodes).sum()
+    }
+
+    /// Tree nodes currently parked in the swap tier (one tier block
+    /// each): `swap.used()` must equal this times the block size as
+    /// long as only tree swaps charge the tier.
+    pub fn swapped_cache_blocks(&self) -> usize {
+        self.trees.iter().map(RadixCache::swapped_nodes).sum()
     }
 }
 
@@ -533,6 +577,66 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(m.swap.swap_ins > 0);
+    }
+
+    #[test]
+    fn swap_shortfall_attribution_tier_full() {
+        // Zero-capacity tier: falling through to hard eviction is a
+        // tier-full case, not "nothing swappable".
+        let mut c = cfg(ServingMode::Icarus, 8);
+        c.eviction = EvictionPolicy::Swap;
+        c.swap_bytes = 0;
+        let mut m = KvCacheManager::new(&c, 64, 1);
+        let p1 = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        m.finish_sequence(1, &p1, Some(1));
+        let p2 = prompt(128, 900); // needs the whole pool
+        assert!(matches!(m.begin_sequence(2, 0, &p2), Alloc::Ok(_)));
+        assert!(m.stats.swap_tier_full > 0);
+        assert_eq!(m.stats.swap_nothing_swappable, 0);
+    }
+
+    #[test]
+    fn swap_shortfall_attribution_nothing_swappable() {
+        // Roomy tier but every cached node is already swapped: the old
+        // accounting called this a tier rejection; it is not.
+        let mut c = cfg(ServingMode::Icarus, 8);
+        c.eviction = EvictionPolicy::Swap;
+        let mut m = KvCacheManager::new(&c, 64, 1);
+        let p1 = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        m.finish_sequence(1, &p1, Some(1));
+        // p2 takes the whole pool; p1's 4 blocks go to the swap tier.
+        let p2 = prompt(128, 900);
+        assert!(matches!(m.begin_sequence(2, 0, &p2), Alloc::Ok(_)));
+        assert_eq!(m.stats.swap_tier_full, 0);
+        assert_eq!(m.stats.swap_nothing_swappable, 0);
+        // A third prompt finds no free blocks, a roomy tier, and
+        // nothing left to swap (p1 is swapped, p2 is active).
+        let p3 = prompt(32, 500);
+        assert_eq!(m.begin_sequence(3, 0, &p3), Alloc::NoSpace);
+        assert_eq!(m.stats.swap_tier_full, 0);
+        assert!(m.stats.swap_nothing_swappable > 0);
+    }
+
+    #[test]
+    fn store_config_collects_demoted_contexts() {
+        let mut c = cfg(ServingMode::Icarus, 8);
+        c.store_host_bytes = 1 << 20;
+        let mut m = KvCacheManager::new(&c, 64, 1);
+        let p1 = prompt(64, 0);
+        assert!(matches!(m.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        m.finish_sequence(1, &p1, Some(7));
+        let p2 = prompt(128, 900);
+        assert!(matches!(m.begin_sequence(2, 0, &p2), Alloc::Ok(_))); // evicts p1
+        assert_eq!(m.take_demoted(), vec![p1.clone()]);
+        assert!(m.take_demoted().is_empty(), "drain is one-shot");
+        // Without a store configured, eviction collects nothing.
+        let mut m2 = KvCacheManager::new(&cfg(ServingMode::Icarus, 8), 64, 1);
+        assert!(matches!(m2.begin_sequence(1, 0, &p1), Alloc::Ok(_)));
+        m2.finish_sequence(1, &p1, Some(7));
+        assert!(matches!(m2.begin_sequence(2, 0, &p2), Alloc::Ok(_)));
+        assert!(m2.take_demoted().is_empty());
     }
 
     #[test]

@@ -166,6 +166,14 @@ impl RadixCache {
         self.free_list.len()
     }
 
+    /// Live nodes whose block currently lives in the swap tier —
+    /// matchable but needing re-allocation + swap-in on a hit.  Each
+    /// accounts for exactly one block of swap-tier occupancy, which is
+    /// what the byte-conservation property test pins.
+    pub fn swapped_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.dead && n.swapped).count()
+    }
+
     fn tick(&mut self) -> u64 {
         self.clock += 1;
         self.clock
@@ -493,6 +501,53 @@ impl RadixCache {
         (freed, dropped)
     }
 
+    /// Full context (root-to-node token chain) a node covers.  Valid
+    /// for any live node: ancestors of a live node are always live
+    /// (children pin parents against `kill_node`), and swapped
+    /// ancestors keep their spans.
+    fn context_of(&self, v: NodeId) -> Vec<u32> {
+        let mut chain = Vec::new();
+        let mut cur = Some(v);
+        while let Some(id) = cur {
+            if id == self.root {
+                break;
+            }
+            chain.push(id);
+            cur = self.nodes[id].parent;
+        }
+        let total: usize = chain.iter().map(|&id| self.nodes[id].span.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for &id in chain.iter().rev() {
+            out.extend_from_slice(&self.nodes[id].span);
+        }
+        out
+    }
+
+    /// Like [`RadixCache::evict`], but additionally reconstructs the
+    /// full context of every payload-bearing victim so the caller can
+    /// demote it into the tiered snapshot store (GPU → host) instead of
+    /// losing it outright.  Victim order is identical to `evict` (same
+    /// heap pop loop); the only extra cost is the context walk, paid
+    /// per *payload* victim, so callers without a store should keep
+    /// calling `evict`.
+    pub fn evict_demoting(
+        &mut self,
+        want: usize,
+        pool: &mut BlockPool,
+    ) -> (usize, Vec<u64>, Vec<Vec<u32>>) {
+        let mut freed = 0;
+        let mut dropped = Vec::new();
+        let mut demoted = Vec::new();
+        while freed < want {
+            let Some(v) = self.pop_victim(false) else { break };
+            if self.nodes[v].payload.is_some() {
+                demoted.push(self.context_of(v));
+            }
+            freed += self.kill_node(v, pool, &mut dropped);
+        }
+        (freed, dropped, demoted)
+    }
+
     /// Evict every unpinned resident node (used on engine reset between
     /// runs).  The explicit drain-all entry point — `evict` with a large
     /// `want` would also work, but intent beats sentinel values.
@@ -803,6 +858,33 @@ mod tests {
             r.arena_len()
         );
         assert_eq!(r.resident_nodes(), p.used());
+    }
+
+    #[test]
+    fn evict_demoting_matches_evict_and_reconstructs_contexts() {
+        // Two trees, same inserts: evict_demoting must free the same
+        // blocks and drop the same payloads in the same order as evict,
+        // and hand back the full root-to-victim context of every
+        // payload-bearing victim.
+        let mut a = RadixCache::new();
+        let mut b = RadixCache::new();
+        let mut pa = pool();
+        let mut pb = pool();
+        let t1 = toks(48, 0);
+        let mut t2 = t1[..16].to_vec();
+        t2.extend(toks(32, 5000)); // shares t1's first block
+        for (r, p) in [(&mut a, &mut pa), (&mut b, &mut pb)] {
+            assert!(r.insert(&t1, 1, p));
+            assert!(r.insert(&t2, 2, p));
+        }
+        let (fa, da) = a.evict(100, &mut pa);
+        let (fb, db, demoted) = b.evict_demoting(100, &mut pb);
+        assert_eq!((fa, &da), (fb, &db), "victim order identical");
+        // Both payload-bearing tips were demoted, each with its full
+        // block-aligned context.
+        assert_eq!(demoted.len(), 2);
+        assert!(demoted.contains(&t1));
+        assert!(demoted.contains(&t2[..48].to_vec()));
     }
 
     #[test]

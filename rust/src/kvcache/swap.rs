@@ -5,12 +5,20 @@
 //! simulated PCIe time in the executor cost model.  This module tracks
 //! occupancy and traffic; it holds no data (the engine keeps snapshot
 //! handles alive while swapped).
+//!
+//! Accounting is hard-errored: releasing more bytes than are parked
+//! (a double restore or double discard) returns
+//! [`TierAccountingError`] instead of saturating, so a caller bug can
+//! no longer silently corrupt occupancy in release builds.  The
+//! tiered snapshot store (`crate::store`) shares the same
+//! [`TierBudget`] discipline.
+
+use crate::store::{TierAccountingError, TierBudget};
 
 /// Bounded host-side swap space: occupancy + traffic accounting.
 #[derive(Debug)]
 pub struct SwapTier {
-    capacity: u64,
-    used: u64,
+    budget: TierBudget,
     /// Contexts moved out to the tier.
     pub swap_outs: u64,
     /// Contexts restored from the tier.
@@ -24,41 +32,48 @@ pub struct SwapTier {
 impl SwapTier {
     /// An empty tier with `capacity` bytes of host space.
     pub fn new(capacity: u64) -> Self {
-        SwapTier { capacity, used: 0, swap_outs: 0, swap_ins: 0, bytes_out: 0, bytes_in: 0 }
+        SwapTier {
+            budget: TierBudget::new(capacity),
+            swap_outs: 0,
+            swap_ins: 0,
+            bytes_out: 0,
+            bytes_in: 0,
+        }
     }
 
     /// Bytes currently parked in the tier.
     pub fn used(&self) -> u64 {
-        self.used
+        self.budget.used()
     }
 
     /// Bytes of remaining tier capacity.
     pub fn free(&self) -> u64 {
-        self.capacity - self.used
+        self.budget.free()
     }
 
     /// Reserve space for an evicted context; false -> must drop instead.
     pub fn swap_out(&mut self, bytes: u64) -> bool {
-        if self.used + bytes > self.capacity {
+        if !self.budget.reserve(bytes) {
             return false;
         }
-        self.used += bytes;
         self.swap_outs += 1;
         self.bytes_out += bytes;
         true
     }
 
-    /// Bring a context back; the space is released.
-    pub fn swap_in(&mut self, bytes: u64) {
-        debug_assert!(self.used >= bytes);
-        self.used = self.used.saturating_sub(bytes);
+    /// Bring a context back; the space is released.  Releasing bytes
+    /// that were never parked (a double restore) is a hard error.
+    pub fn swap_in(&mut self, bytes: u64) -> Result<(), TierAccountingError> {
+        self.budget.release(bytes)?;
         self.swap_ins += 1;
         self.bytes_in += bytes;
+        Ok(())
     }
 
-    /// Discard a swapped context without restoring it.
-    pub fn discard(&mut self, bytes: u64) {
-        self.used = self.used.saturating_sub(bytes);
+    /// Discard a swapped context without restoring it.  A double
+    /// discard is a hard error.
+    pub fn discard(&mut self, bytes: u64) -> Result<(), TierAccountingError> {
+        self.budget.release(bytes)
     }
 }
 
@@ -71,7 +86,7 @@ mod tests {
         let mut s = SwapTier::new(100);
         assert!(s.swap_out(60));
         assert_eq!(s.free(), 40);
-        s.swap_in(60);
+        s.swap_in(60).unwrap();
         assert_eq!(s.used(), 0);
         assert_eq!(s.swap_outs, 1);
         assert_eq!(s.swap_ins, 1);
@@ -89,8 +104,22 @@ mod tests {
     fn discard_frees_without_counting_in() {
         let mut s = SwapTier::new(100);
         assert!(s.swap_out(50));
-        s.discard(50);
+        s.discard(50).unwrap();
         assert_eq!(s.used(), 0);
         assert_eq!(s.swap_ins, 0);
+    }
+
+    #[test]
+    fn double_restore_is_a_hard_error() {
+        let mut s = SwapTier::new(100);
+        assert!(s.swap_out(40));
+        s.swap_in(40).unwrap();
+        // The release-build bug the pre-store tier hid: a second
+        // restore used to saturate to zero and corrupt occupancy.
+        let err = s.swap_in(40).unwrap_err();
+        assert_eq!(err, TierAccountingError { released: 40, used: 0 });
+        assert_eq!(s.used(), 0, "occupancy untouched");
+        assert_eq!(s.swap_ins, 1, "failed restore not counted");
+        assert!(s.discard(1).is_err(), "double discard equally hard");
     }
 }

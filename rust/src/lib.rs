@@ -16,8 +16,9 @@
 //!     cross-model prefix caching, continuous batching with pluggable
 //!     admission scheduling and chunked prefill — see `sched` — and
 //!     agentic workload drivers), the multi-replica cluster layer that
-//!     shards workflow streams across engines, and the PJRT runtime
-//!     that executes the artifacts.
+//!     shards workflow streams across engines, the tiered KV snapshot
+//!     store shared across replicas (see `store`), and the PJRT
+//!     runtime that executes the artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation; the `icarus` binary is self-contained afterwards.
@@ -38,6 +39,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
+pub mod store;
 pub mod tokenizer;
 pub mod tokens;
 pub mod trace;
@@ -53,4 +55,5 @@ pub use engine::Engine;
 pub use kvcache::KvCacheManager;
 pub use metrics::ServingStats;
 pub use sched::Scheduler;
+pub use store::{SnapshotStore, StoreStats, StoreTier, TieredStore};
 pub use tokens::TokenBuf;

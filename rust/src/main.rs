@@ -8,6 +8,10 @@
 //!            `--sched-policy fcfs|cache_aware|sjf` picks the admission
 //!            scheduler and `--prefill-chunk N` enables chunked prefill
 //!            (N tokens per sequence per fused step; 0 = atomic).
+//!            `--store-host-bytes B` / `--store-disk-bytes B` enable
+//!            the tiered KV snapshot store (one instance shared by all
+//!            replicas; 0/0 = off) and `--store-prefetch on` stages
+//!            disk-tier entries for queued turns before admission.
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
 //!            `--threads T` runs the sweep points across T worker
 //!            threads (near-linear wall-clock speedup for the grids;
@@ -24,6 +28,7 @@
 //!   icarus serve --executor pjrt --config serve-small --requests 8
 //!   icarus serve --replicas 4 --cluster-routing least_loaded --qps 2.0
 //!   icarus serve --sched-policy cache_aware --prefill-chunk 256 --qps 1.5
+//!   icarus serve --replicas 4 --store-host-bytes 268435456 --store-prefetch on
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
 //!   icarus sweep --threads 4 --json sweep.json
 
@@ -103,6 +108,9 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
             other => anyhow::bail!("unknown eviction policy {other}"),
         },
         swap_bytes: a.u64("swap-mb", 4096)? << 20,
+        store_host_bytes: a.u64("store-host-bytes", 0)?,
+        store_disk_bytes: a.u64("store-disk-bytes", 0)?,
+        store_prefetch: a.get("store-prefetch").unwrap_or("off") == "on",
         prefix_caching: a.get("prefix-caching").unwrap_or("on") != "off",
         replicas: a.usize("replicas", 1)?,
         cluster_routing: ClusterRouting::parse(a.get("cluster-routing").unwrap_or("round_robin"))?,
@@ -139,6 +147,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let wcfg = workload_config(a)?;
     let workload = generate(&wcfg);
     let mut per_replica_json = None;
+    let mut store_json = None;
     let stats = match a.get("executor").unwrap_or("sim") {
         "sim" => {
             // serve-small KV bytes/token unless overridden.
@@ -153,12 +162,20 @@ fn cmd_serve(a: &Args) -> Result<()> {
                     out.per_replica.iter().map(ServingStats::to_json).collect(),
                 ));
             }
+            if let Some(store) = &out.store {
+                store_json = Some(store.to_json());
+            }
             out.merged
         }
         "pjrt" => {
             anyhow::ensure!(
                 scfg.replicas <= 1,
                 "--replicas > 1 needs --executor sim (one PJRT runtime instance per process)"
+            );
+            anyhow::ensure!(
+                scfg.store_host_bytes + scfg.store_disk_bytes == 0,
+                "--store-host-bytes/--store-disk-bytes need --executor sim \
+                 (no PJRT store transport yet)"
             );
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let config = a.get("config").unwrap_or("serve-small");
@@ -176,6 +193,9 @@ fn cmd_serve(a: &Args) -> Result<()> {
     ];
     if let Some(pr) = per_replica_json {
         entries.push(("per_replica", pr));
+    }
+    if let Some(store) = store_json {
+        entries.push(("store", store));
     }
     let text = json::obj(entries).to_string_pretty();
     println!("{text}");

@@ -152,6 +152,9 @@ pub struct ServingStats {
     /// (recorded as a dimensionless count; quantiles are exact to the
     /// histogram's ~3% bucket resolution).
     pub queue_depth: Option<Histogram>,
+    /// Per-restore latency charged for snapshot-store restores (PCIe
+    /// for host-tier hits, NVMe + PCIe for unstaged disk hits).
+    pub store_restore_latency: Option<Histogram>,
     /// Workflows that ran every turn to completion.
     pub completed_requests: u64,
     /// Turns retired across all workflows.
@@ -160,7 +163,9 @@ pub struct ServingStats {
     pub generated_tokens: u64,
     /// Prompt tokens actually prefilled (cache misses).
     pub prefill_tokens: u64,
-    /// Prefill tokens that were served from prefix cache instead.
+    /// Prefill tokens that were served without recompute: prefix-cache
+    /// hits plus snapshot-store restores (the restored subset is also
+    /// tracked separately in `store_restored_tokens`).
     pub cached_prefill_tokens: u64,
     /// Tokens recomputed because their cache was evicted.
     pub recomputed_tokens: u64,
@@ -170,6 +175,22 @@ pub struct ServingStats {
     pub swap_outs: u64,
     /// Contexts restored from the host swap tier.
     pub swap_ins: u64,
+    /// Snapshot-store restores served from the host tier (per-tier
+    /// companion: `store_disk_hits`).
+    pub store_host_hits: u64,
+    /// Snapshot-store restores that paid the NVMe read (disk tier,
+    /// not prefetch-staged).
+    pub store_disk_hits: u64,
+    /// Store restores of entries another replica published — the
+    /// shared store's cross-replica reuse signal.
+    pub store_remote_hits: u64,
+    /// Prompt tokens restored from the snapshot store instead of
+    /// being re-prefilled.
+    pub store_restored_tokens: u64,
+    /// KV bytes transferred by store restores.
+    pub store_restored_bytes: u64,
+    /// Background prefetch stagings this replica issued.
+    pub store_prefetches: u64,
     /// Running sequences preempted under memory pressure.
     pub preemptions: u64,
     /// Prefill chunks executed (0 unless chunked prefill is enabled).
@@ -189,6 +210,7 @@ impl ServingStats {
             time_to_first_token: Some(Histogram::new()),
             inter_token_latency: Some(Histogram::new()),
             queue_depth: Some(Histogram::new()),
+            store_restore_latency: Some(Histogram::new()),
             ..Default::default()
         }
     }
@@ -216,6 +238,7 @@ impl ServingStats {
         hist(&mut self.time_to_first_token, &other.time_to_first_token);
         hist(&mut self.inter_token_latency, &other.inter_token_latency);
         hist(&mut self.queue_depth, &other.queue_depth);
+        hist(&mut self.store_restore_latency, &other.store_restore_latency);
         self.completed_requests += other.completed_requests;
         self.completed_turns += other.completed_turns;
         self.generated_tokens += other.generated_tokens;
@@ -225,6 +248,12 @@ impl ServingStats {
         self.evictions += other.evictions;
         self.swap_outs += other.swap_outs;
         self.swap_ins += other.swap_ins;
+        self.store_host_hits += other.store_host_hits;
+        self.store_disk_hits += other.store_disk_hits;
+        self.store_remote_hits += other.store_remote_hits;
+        self.store_restored_tokens += other.store_restored_tokens;
+        self.store_restored_bytes += other.store_restored_bytes;
+        self.store_prefetches += other.store_prefetches;
         self.preemptions += other.preemptions;
         self.prefill_chunks += other.prefill_chunks;
         self.peak_kv_bytes += other.peak_kv_bytes;
@@ -247,6 +276,11 @@ impl ServingStats {
         } else {
             self.completed_requests as f64 / self.wall_seconds
         }
+    }
+
+    /// Snapshot-store restores across both tiers.
+    pub fn store_hits(&self) -> u64 {
+        self.store_host_hits + self.store_disk_hits
     }
 
     /// Fraction of prompt tokens served from the prefix cache.
@@ -288,6 +322,13 @@ impl ServingStats {
             ("evictions", num(self.evictions as f64)),
             ("swap_outs", num(self.swap_outs as f64)),
             ("swap_ins", num(self.swap_ins as f64)),
+            ("store_host_hits", num(self.store_host_hits as f64)),
+            ("store_disk_hits", num(self.store_disk_hits as f64)),
+            ("store_remote_hits", num(self.store_remote_hits as f64)),
+            ("store_restored_tokens", num(self.store_restored_tokens as f64)),
+            ("store_restored_bytes", num(self.store_restored_bytes as f64)),
+            ("store_prefetches", num(self.store_prefetches as f64)),
+            ("store_restore_latency", h(&self.store_restore_latency)),
             ("preemptions", num(self.preemptions as f64)),
             ("prefill_chunks", num(self.prefill_chunks as f64)),
             ("peak_kv_bytes", num(self.peak_kv_bytes as f64)),

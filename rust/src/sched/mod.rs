@@ -50,33 +50,65 @@ pub use cache_aware::CacheAware;
 pub use fcfs::Fcfs;
 pub use sjf::Sjf;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::config::SchedPolicy;
 use crate::engine::sequence::{PendingTurn, RunningSeq};
 use crate::kvcache::KvCacheManager;
+
+/// Memoized snapshot-store coverage for the waiting queue, computed
+/// once per admission round: keyed by the turn's prompt buffer
+/// identity `(ptr, len)` — stable across `VecDeque` shuffles because
+/// `TokenBuf`s are Arc-backed and waiting turns keep their buffers
+/// alive for the whole round.  Policies probe every waiting turn on
+/// every pick, so reading a local map here instead of taking the
+/// shared store's mutex (and clock fence) per probe keeps `CacheAware`
+/// admission O(queue) lock acquisitions per *step*, not per pick.
+pub type StoreCoverage = HashMap<(usize, usize), usize>;
 
 /// Read-only prefix-cache coverage probe handed to policies.
 ///
 /// Coverage queries walk the radix index without updating access times
 /// or pinning, so probing is side-effect-free: a policy may probe every
 /// waiting turn every step without perturbing LRU eviction order.
+///
+/// With a tiered snapshot store attached ([`CacheProbe::with_store`]),
+/// coverage also counts store-resident prefixes (from a per-round
+/// [`StoreCoverage`] memo, so equally side-effect-free): to a
+/// `CacheAware` policy, a context another replica published is as good
+/// as a local radix hit — restoring it costs a transfer, not a
+/// re-prefill.
 pub struct CacheProbe<'a> {
     kv: &'a KvCacheManager,
+    store_coverage: Option<&'a StoreCoverage>,
 }
 
 impl<'a> CacheProbe<'a> {
     /// Probe over the engine's KV manager.
     pub fn new(kv: &'a KvCacheManager) -> Self {
-        CacheProbe { kv }
+        CacheProbe { kv, store_coverage: None }
+    }
+
+    /// Probe that also counts snapshot-store coverage, via the memo
+    /// the engine computed for this admission round.
+    pub fn with_store(kv: &'a KvCacheManager, coverage: &'a StoreCoverage) -> Self {
+        CacheProbe { kv, store_coverage: Some(coverage) }
     }
 
     /// Prompt tokens of `turn` an admission could currently serve from
     /// the prefix cache (match depth through the deepest
     /// snapshot-bearing node — blocks matched beyond the last payload
-    /// have nothing to prefill from and do not count).
+    /// have nothing to prefill from and do not count) or restore from
+    /// the snapshot store, whichever covers more.
     pub fn cached_tokens(&self, turn: &PendingTurn) -> usize {
-        self.kv.probe_cached_tokens(turn.model_id, &turn.prompt)
+        let local = self.kv.probe_cached_tokens(turn.model_id, &turn.prompt);
+        match self.store_coverage {
+            Some(memo) => {
+                let key = (turn.prompt.as_ptr() as usize, turn.prompt.len());
+                local.max(memo.get(&key).copied().unwrap_or(0))
+            }
+            None => local,
+        }
     }
 
     /// Prompt tokens of `turn` that would actually need prefilling.

@@ -1,0 +1,130 @@
+//! Conservative virtual-clock synchronization across cluster replicas.
+//!
+//! Each engine replica runs its own discrete-event timeline.  Without a
+//! shared store that is fine — replicas never exchange state mid-run
+//! and their stats merge afterwards.  A *shared* store introduces
+//! causality: replica B probing at virtual time `t` must observe every
+//! publish with `visible_at <= t`, no matter how the OS interleaved the
+//! replica threads.  The fence makes that hold conservatively (classic
+//! time-window synchronization from parallel discrete-event
+//! simulation): a replica may not advance more than [`ClockFence::window`]
+//! seconds of virtual time past the slowest replica, and the store
+//! clamps every visibility time at least one window into the future —
+//! so by the time any replica's clock reaches an entry's `visible_at`,
+//! the publishing replica has (wall-clock) already executed the
+//! publish.
+//!
+//! Hit/miss outcomes are therefore functions of virtual time alone.
+//! What remains scheduling-dependent is sub-window interleaving of LRU
+//! touches, which can reorder *eviction* ties inside the store — an
+//! approximation the module docs of `store` call out.
+//!
+//! A replica that finishes (or unwinds) parks its clock at `+inf` via
+//! [`ClockFence::finish`], so stragglers never deadlock the fence;
+//! `StoreHandle` calls it from `Drop`, which covers panics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default causality window in virtual seconds: far below every
+/// latency the benches report (milliseconds and up), far above the
+/// per-step spin granularity that would serialize replicas.
+pub const DEFAULT_WINDOW: f64 = 2e-3;
+
+/// Shared virtual-clock fence for one cluster run (see module docs).
+#[derive(Debug)]
+pub struct ClockFence {
+    /// Per-replica virtual clocks, as `f64::to_bits` (monotone for the
+    /// non-negative times the engine produces).
+    clocks: Vec<AtomicU64>,
+    window: f64,
+}
+
+impl ClockFence {
+    /// Fence over `replicas` clocks, all starting at virtual 0.
+    pub fn new(replicas: usize) -> Self {
+        ClockFence {
+            clocks: (0..replicas.max(1)).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+            window: DEFAULT_WINDOW,
+        }
+    }
+
+    /// The causality window in virtual seconds: the most any replica
+    /// may run ahead of the slowest, and the minimum visibility delay
+    /// the store imposes on cross-replica writes.
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Publish `now` as `replica`'s current virtual time and block
+    /// until every other replica is within the window behind it.  The
+    /// globally slowest replica never blocks, so the fence always makes
+    /// progress.
+    pub fn sync(&self, replica: usize, now: f64) {
+        self.clocks[replica].store(now.to_bits(), Ordering::Release);
+        let horizon = now - self.window;
+        let mut spins = 0u32;
+        loop {
+            let min = self
+                .clocks
+                .iter()
+                .map(|c| f64::from_bits(c.load(Ordering::Acquire)))
+                .fold(f64::INFINITY, f64::min);
+            if min >= horizon {
+                return;
+            }
+            // Brief spin for the common close-race case, then yield the
+            // core on a timer: a replica that idle-jumped far ahead may
+            // wait a long wall-clock time for the laggards.
+            spins += 1;
+            if spins < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::park_timeout(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Park `replica`'s clock at `+inf`: it no longer constrains
+    /// anyone.  Called when a replica drains its shard (or unwinds).
+    pub fn finish(&self, replica: usize) {
+        self.clocks[replica].store(f64::INFINITY.to_bits(), Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_replica_never_blocks() {
+        let f = ClockFence::new(1);
+        f.sync(0, 0.0);
+        f.sync(0, 1e9);
+    }
+
+    #[test]
+    fn finished_replica_releases_waiters() {
+        let f = Arc::new(ClockFence::new(2));
+        // Replica 1 parks at +inf; replica 0 may then run arbitrarily
+        // far ahead without spinning forever.
+        f.finish(1);
+        f.sync(0, 1e6);
+    }
+
+    #[test]
+    fn fence_bounds_clock_skew() {
+        let f = Arc::new(ClockFence::new(2));
+        let g = f.clone();
+        let t = std::thread::spawn(move || {
+            // Replica 1 walks slowly to 1.0; replica 0 wants to jump to
+            // 10.0 and must wait until replica 1 finishes.
+            for i in 0..=10 {
+                g.sync(1, i as f64 * 0.1);
+            }
+            g.finish(1);
+        });
+        f.sync(0, 10.0); // returns only once replica 1 caught up/finished
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,336 @@
+//! The tiered KV snapshot store: content-addressed host + disk tiers
+//! shared across engine replicas, with background write-back and
+//! prefetch.
+//!
+//! ICaRus's thesis is that the KV cache for an identical context is
+//! *one* reusable artifact across N models.  The radix prefix cache
+//! realizes that inside one replica's GPU pool; this module extends it
+//! past the GPU: published contexts are written back (in the
+//! background) to a bounded **host tier**, demoted under pressure to a
+//! bounded **disk tier**, and dropped only when both tiers are full —
+//! the full demotion pipeline GPU → host → disk → drop.  A later turn
+//! whose prompt prefix is store-resident *restores* the KV bytes over
+//! the modeled transfer path (PCIe for host, NVMe + PCIe for disk)
+//! instead of re-prefilling them, and because the store is one
+//! `Arc`-shared instance behind all R replicas of a cluster, a context
+//! prefilled on replica 0 is a warm hit on replica 3 even under plain
+//! round-robin routing — no prefix-affinity routing tricks required
+//! (DroidSpeak/PrefillShare-style cross-server KV reuse).
+//!
+//! Content addressing: entries are per-KV-block, keyed by the same
+//! rolling block-hash chain the radix prefix cache indexes children
+//! with ([`crate::kvcache::block::hash_block`]).  Identical context
+//! prefixes — from different models, workflows or replicas — therefore
+//! dedupe to one stored copy per block, and a probe finds the longest
+//! stored block prefix of *any* prompt, whether the stored context is
+//! longer or shorter than it (the radix tree's partial-match
+//! semantics, extended across tiers and replicas).
+//!
+//! Timing model: the store itself holds no clock.  Callers pass their
+//! engine's virtual `now` into every operation; writes carry a
+//! `visible_at` (publish) or `ready_at` (prefetch stage) computed by
+//! the caller from the executor's transfer cost model, so write-back
+//! and prefetch are *background* transfers: they consume no engine
+//! time, and the entry simply becomes usable once the requesting
+//! replica's clock passes the transfer completion.  Cross-replica
+//! causality is enforced by [`ClockFence`]: replicas advance their
+//! virtual clocks within a bounded window of each other, and the store
+//! clamps every visibility time to at least one window in the future,
+//! so an entry visible at virtual time `t` was always published
+//! (wall-clock) before any replica probes at `t`.  Within the window,
+//! LRU tie order between replicas is scheduling-dependent; hit/miss
+//! outcomes are not.
+
+mod fence;
+mod tiered;
+
+pub use fence::ClockFence;
+pub use tiered::{StoreHandle, StorePrefetch, TieredStore};
+
+use crate::json::{self, Value};
+
+/// Which storage tier an entry currently occupies (and therefore which
+/// transfer path a restore is charged for).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreTier {
+    /// Pinned host memory: restores pay one PCIe hop.
+    Host,
+    /// NVMe-backed spill: restores pay an NVMe read plus the PCIe hop
+    /// (unless a prefetch already staged the entry into host memory).
+    Disk,
+}
+
+impl StoreTier {
+    /// CLI / JSON spelling of the tier.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StoreTier::Host => "host",
+            StoreTier::Disk => "disk",
+        }
+    }
+}
+
+/// Underflow detected by tier byte accounting: more bytes released than
+/// were ever reserved.  This is always a caller bug (double restore,
+/// double discard); tiers refuse to absorb it silently — the pre-store
+/// `SwapTier` hid exactly this class of bug behind `debug_assert` +
+/// `saturating_sub`, corrupting occupancy in release builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierAccountingError {
+    /// Bytes the caller tried to release.
+    pub released: u64,
+    /// Bytes actually reserved at the time of the call.
+    pub used: u64,
+}
+
+impl std::fmt::Display for TierAccountingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tier accounting underflow: released {} bytes with only {} reserved \
+             (double restore/discard?)",
+            self.released, self.used
+        )
+    }
+}
+
+impl std::error::Error for TierAccountingError {}
+
+/// Bounded byte budget with hard-error accounting, shared by the swap
+/// tier and the store tiers.
+///
+/// `reserve` is a soft failure (the tier is simply full — callers fall
+/// back to the next tier or drop); `release` underflow is a hard error
+/// (see [`TierAccountingError`]).
+#[derive(Debug, Clone)]
+pub struct TierBudget {
+    capacity: u64,
+    used: u64,
+}
+
+impl TierBudget {
+    /// An empty budget of `capacity` bytes.
+    pub fn new(capacity: u64) -> Self {
+        TierBudget { capacity, used: 0 }
+    }
+
+    /// Total bytes the tier may hold.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes currently reserved.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Bytes of remaining capacity.
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Reserve `bytes`; false when the tier lacks room (caller must
+    /// demote or drop instead).
+    pub fn reserve(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        true
+    }
+
+    /// Release `bytes` back to the tier.  Underflow is a hard error:
+    /// occupancy is left untouched so the caller's bug cannot silently
+    /// corrupt later admission decisions.
+    pub fn release(&mut self, bytes: u64) -> Result<(), TierAccountingError> {
+        if bytes > self.used {
+            return Err(TierAccountingError { released: bytes, used: self.used });
+        }
+        self.used -= bytes;
+        Ok(())
+    }
+}
+
+/// A store probe that found a usable stored prefix: the engine charges
+/// the per-tier transfer costs and treats `tokens` of the prompt as
+/// cached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreHit {
+    /// Block-aligned prompt tokens the stored prefix covers.
+    pub tokens: usize,
+    /// Restored bytes moving over PCIe only: host-tier blocks, plus
+    /// disk blocks a prefetch already staged into host memory (that
+    /// is the whole point of prefetching).
+    pub host_bytes: u64,
+    /// Restored bytes additionally paying the NVMe read (disk-tier
+    /// blocks, unstaged).
+    pub disk_bytes: u64,
+    /// True when any restored block was published by a different
+    /// replica (the cross-replica reuse the shared store exists for).
+    pub remote: bool,
+}
+
+impl StoreHit {
+    /// Total bytes this restore transfers.
+    pub fn bytes(&self) -> u64 {
+        self.host_bytes + self.disk_bytes
+    }
+}
+
+/// Aggregate store counters (global across replicas — per-replica
+/// restore stats live in `ServingStats`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreStats {
+    /// Entries currently resident across both tiers.
+    pub entries: usize,
+    /// Bytes resident in the host tier.
+    pub host_used: u64,
+    /// Bytes resident in the disk tier.
+    pub disk_used: u64,
+    /// Host tier capacity in bytes.
+    pub host_capacity: u64,
+    /// Disk tier capacity in bytes.
+    pub disk_capacity: u64,
+    /// Publishes that admitted a new entry.
+    pub publishes: u64,
+    /// Publishes that found the identical context already stored (the
+    /// content-addressed dedup across models/workflows/replicas).
+    pub dedup_publishes: u64,
+    /// Publishes rejected because the entry fits in no tier.
+    pub publish_rejected: u64,
+    /// Bytes admitted into the tiers over the run.
+    pub bytes_published: u64,
+    /// Bytes dropped out of the pipeline's far end over the run.
+    pub bytes_dropped: u64,
+    /// Entries demoted host → disk under host pressure.
+    pub demotions_to_disk: u64,
+    /// Entries dropped (disk pressure, or host pressure with no disk).
+    pub dropped_entries: u64,
+    /// Restores served from the host tier.
+    pub host_hits: u64,
+    /// Restores served from the disk tier (unstaged).
+    pub disk_hits: u64,
+    /// Restores of entries published by a different replica.
+    pub remote_hits: u64,
+    /// Disk restores that found the entry already prefetch-staged in
+    /// host memory (and were therefore charged PCIe, not NVMe).
+    pub prefetch_hits: u64,
+    /// Prefetch stagings issued.
+    pub prefetches: u64,
+}
+
+impl StoreStats {
+    /// Dump every counter for results files.
+    pub fn to_json(&self) -> Value {
+        use json::num;
+        json::obj(vec![
+            ("entries", num(self.entries as f64)),
+            ("host_used", num(self.host_used as f64)),
+            ("disk_used", num(self.disk_used as f64)),
+            ("host_capacity", num(self.host_capacity as f64)),
+            ("disk_capacity", num(self.disk_capacity as f64)),
+            ("publishes", num(self.publishes as f64)),
+            ("dedup_publishes", num(self.dedup_publishes as f64)),
+            ("publish_rejected", num(self.publish_rejected as f64)),
+            ("bytes_published", num(self.bytes_published as f64)),
+            ("bytes_dropped", num(self.bytes_dropped as f64)),
+            ("demotions_to_disk", num(self.demotions_to_disk as f64)),
+            ("dropped_entries", num(self.dropped_entries as f64)),
+            ("host_hits", num(self.host_hits as f64)),
+            ("disk_hits", num(self.disk_hits as f64)),
+            ("remote_hits", num(self.remote_hits as f64)),
+            ("prefetch_hits", num(self.prefetch_hits as f64)),
+            ("prefetches", num(self.prefetches as f64)),
+        ])
+    }
+}
+
+/// The store abstraction the engine talks to: content-addressed KV
+/// snapshot entries behind tiered byte budgets (see the module docs;
+/// [`TieredStore`] is the shipped implementation).
+///
+/// Every method takes the caller's virtual `now`; see the module docs
+/// for the background-transfer timing model.  `Send + Sync` because one
+/// instance is shared across cluster replica threads.
+pub trait SnapshotStore: Send + Sync {
+    /// Side-effect-free coverage probe: block-aligned prompt tokens a
+    /// restore could serve right now (no LRU touch — schedulers may
+    /// probe every waiting turn every step, mirroring
+    /// `RadixCache::peek`).
+    fn peek(&self, prompt: &[u32], now: f64) -> usize;
+
+    /// Find the longest visible stored block prefix of `prompt`
+    /// covering strictly more than `min_tokens` (the caller's local
+    /// radix coverage, block-aligned) and begin restoring it: touches
+    /// LRU, counts the hit, and consumes any prefetch staging the
+    /// restored blocks carry (entries never change tier here — staging
+    /// is the promotion path, and it is transient).  The caller
+    /// charges the returned per-tier byte counts' transfer costs —
+    /// only bytes beyond `min_tokens` are transferred.
+    fn begin_restore(
+        &self,
+        prompt: &[u32],
+        min_tokens: usize,
+        now: f64,
+        replica: usize,
+    ) -> Option<StoreHit>;
+
+    /// Publish a completed context into the store (write-back), one
+    /// content-addressed entry per block.  The transfer runs in the
+    /// background: new blocks become visible to probes at `visible_at`
+    /// (clamped to at least one causality window past `now`).  Blocks
+    /// shared with already-stored contexts dedupe to one copy.
+    /// Admission is prefix-first: a context longer than the tiers can
+    /// hold is truncated rather than allowed to evict its own shallower
+    /// blocks — the stored prefix stays probe-reachable instead of
+    /// degenerating to unreachable tail blocks.
+    fn publish(&self, ctx: &[u32], now: f64, visible_at: f64, replica: usize);
+
+    /// Disk-resident, unstaged blocks inside `prompt`'s stored prefix,
+    /// if any — what a prefetch would stage.  Side-effect-free
+    /// (diagnostics and tests; [`SnapshotStore::stage`] is
+    /// self-contained and does not need a prior candidate probe).
+    fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch>;
+
+    /// Begin staging `prompt`'s disk-resident, unstaged stored blocks
+    /// into host memory.  The bytes to move and the completion time —
+    /// `now + price(bytes)`, clamped to the causality window — are
+    /// determined atomically with the marking, so concurrent replicas
+    /// can neither double-stage nor misprice a partial staging.  From
+    /// completion on, the next restore of each staged block is charged
+    /// PCIe instead of NVMe (the staging scratch is transient —
+    /// consumed by that restore, not a third tier); the transfer runs
+    /// in the background and consumes no engine time.  Returns false
+    /// when there was nothing (new) to stage.
+    fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool;
+
+    /// Snapshot of the aggregate store counters.
+    fn stats(&self) -> StoreStats;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_budget_reserve_release_roundtrip() {
+        let mut b = TierBudget::new(100);
+        assert!(b.reserve(60));
+        assert_eq!(b.free(), 40);
+        assert!(!b.reserve(50), "over capacity");
+        assert_eq!(b.used(), 60, "failed reserve leaves occupancy untouched");
+        assert!(b.release(60).is_ok());
+        assert_eq!(b.used(), 0);
+    }
+
+    #[test]
+    fn tier_budget_underflow_is_hard_error() {
+        let mut b = TierBudget::new(100);
+        assert!(b.reserve(30));
+        let err = b.release(40).unwrap_err();
+        assert_eq!(err, TierAccountingError { released: 40, used: 30 });
+        assert_eq!(b.used(), 30, "occupancy untouched after the error");
+        assert!(b.release(30).is_ok());
+        assert!(b.release(1).is_err(), "double release surfaces");
+    }
+}

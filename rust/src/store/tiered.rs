@@ -1,0 +1,758 @@
+//! The shipped [`SnapshotStore`]: bounded host + disk tiers over
+//! content-addressed **block** entries, with LRU demotion (host → disk
+//! → drop), background write-back visibility and prefetch staging.
+//!
+//! Granularity: one entry per KV block, keyed by the rolling
+//! block-hash chain — the same keying the radix prefix cache uses for
+//! child indexing.  Publishing a context inserts (or refreshes) one
+//! entry per block boundary, so overlapping contexts share their
+//! common-prefix blocks byte-for-byte, and a probe for *any* prompt
+//! finds the longest stored block prefix even when the stored context
+//! is longer or shorter than the prompt — exactly the partial-match
+//! semantics of the in-GPU radix tree, extended across tiers and
+//! replicas.
+//!
+//! LRU discipline: every chain touch ticks entries deepest-block
+//! first, so within one chain the root block is always the most
+//! recent and same-tier eviction peels chains from the tail.  Because
+//! the two tiers evict independently, a chain whose blocks straddle
+//! tiers can still lose a shallow block ahead of a deeper one; the
+//! orphaned deeper blocks are simply unreachable (probes stop at the
+//! hole) until LRU ages them out or a republish of the context
+//! reinserts the missing prefix — wasted budget at worst, never a
+//! wrong hit.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use crate::kvcache::block::{hash_block, ROOT_HASH};
+
+use super::fence::{ClockFence, DEFAULT_WINDOW};
+use super::{SnapshotStore, StoreHit, StoreStats, StoreTier, TierBudget};
+
+/// Block-entry key: the rolling hash chain through this block plus the
+/// token depth it ends at (the depth disambiguates the astronomically
+/// unlikely chain-hash collision across depths; same-depth collisions
+/// cost a spurious sim hit, never memory unsafety — README
+/// §Substitutions notes the approximation).
+type Key = (u64, usize);
+
+#[derive(Debug)]
+struct Entry {
+    tier: StoreTier,
+    /// Replica that published the block (remote-hit attribution).
+    publisher: usize,
+    /// Virtual time the background write-back completes; probes before
+    /// this miss.
+    visible_at: f64,
+    /// Virtual time a prefetch finishes staging this (disk) block into
+    /// host memory; `+inf` when never staged.
+    staged_at: f64,
+    /// LRU tick (strictly increasing across all touches).
+    tick: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    entries: HashMap<Key, Entry>,
+    /// Per-tier LRU indexes: tick -> key (ticks are unique, so each is
+    /// a total recency order within its tier).  Split per tier so
+    /// demotion cascades find a tier's LRU entry in O(log n) instead
+    /// of scanning a global order past the other tier's entries.
+    lru: [BTreeMap<u64, Key>; 2],
+    host: TierBudget,
+    disk: TierBudget,
+    next_tick: u64,
+    stats: StoreStats,
+}
+
+fn tier_idx(tier: StoreTier) -> usize {
+    match tier {
+        StoreTier::Host => 0,
+        StoreTier::Disk => 1,
+    }
+}
+
+impl Inner {
+    fn touch(&mut self, key: Key) {
+        let tick = self.next_tick;
+        self.next_tick += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            self.lru[tier_idx(e.tier)].remove(&e.tick);
+            e.tick = tick;
+            self.lru[tier_idx(e.tier)].insert(tick, key);
+        }
+    }
+
+    /// Least-recently-used key currently in `tier` (O(log n)).
+    fn lru_in_tier(&self, tier: StoreTier) -> Option<Key> {
+        self.lru[tier_idx(tier)].first_key_value().map(|(_, &k)| k)
+    }
+
+    fn drop_entry(&mut self, key: Key, block_bytes: u64) {
+        let e = self.entries.remove(&key).expect("dropping a present entry");
+        self.lru[tier_idx(e.tier)].remove(&e.tick);
+        match e.tier {
+            StoreTier::Host => self.host.release(block_bytes),
+            StoreTier::Disk => self.disk.release(block_bytes),
+        }
+        .expect("tier accounting");
+        self.stats.dropped_entries += 1;
+        self.stats.bytes_dropped += block_bytes;
+    }
+
+    /// Demote the host-LRU block one tier down: into disk when disk
+    /// has capacity for a block (dropping disk-LRU blocks as needed),
+    /// off the pipeline's far end otherwise.  Returns false — making
+    /// no change — when the host tier is empty, or when making room
+    /// would *drop* a block in `protected` (prefix-first admission: a
+    /// publish must never destroy its own already-placed prefix; see
+    /// [`SnapshotStore::publish`]).  Demoting a protected block to
+    /// disk is fine — the chain stays contiguous across tiers.
+    fn demote_host_lru(&mut self, block_bytes: u64, protected: &HashSet<Key>) -> bool {
+        let Some(key) = self.lru_in_tier(StoreTier::Host) else {
+            return false;
+        };
+        if block_bytes <= self.disk.capacity() {
+            // Pre-check the disk victims before touching any budget so
+            // a protected victim aborts with no partial state.
+            while self.disk.free() < block_bytes {
+                let victim = self.lru_in_tier(StoreTier::Disk).expect("capacity suffices");
+                if protected.contains(&victim) {
+                    return false;
+                }
+                self.drop_entry(victim, block_bytes);
+            }
+            self.host.release(block_bytes).expect("tier accounting");
+            assert!(self.disk.reserve(block_bytes), "free space was checked");
+            let e = self.entries.get_mut(&key).expect("demoting a present entry");
+            e.tier = StoreTier::Disk;
+            // The host copy is gone; any prefetch staging with it.
+            e.staged_at = f64::INFINITY;
+            let tick = e.tick;
+            self.lru[tier_idx(StoreTier::Host)].remove(&tick);
+            self.lru[tier_idx(StoreTier::Disk)].insert(tick, key);
+            self.stats.demotions_to_disk += 1;
+        } else {
+            if protected.contains(&key) {
+                return false;
+            }
+            self.drop_entry(key, block_bytes);
+        }
+        true
+    }
+}
+
+/// A prefetchable span: disk-resident, unstaged blocks inside a
+/// prompt's stored prefix (see [`SnapshotStore::prefetch_candidate`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StorePrefetch {
+    /// Block-aligned tokens the stored prefix covers.
+    pub tokens: usize,
+    /// Bytes of disk-tier blocks the staging transfer would move.
+    pub bytes: u64,
+}
+
+/// Content-addressed host + disk block store (see the `store` module
+/// docs for the architecture and timing model).  One instance is
+/// shared, behind an `Arc`, by every engine replica of a cluster.
+#[derive(Debug)]
+pub struct TieredStore {
+    inner: Mutex<Inner>,
+    block_tokens: usize,
+    /// Bytes one stored block holds (block_tokens * kv_bytes_per_token).
+    block_bytes: u64,
+    /// Causality window: minimum delay imposed on every visibility /
+    /// staging time (matches the cluster's [`ClockFence`] window).
+    window: f64,
+}
+
+impl TieredStore {
+    /// Store with `host_bytes` + `disk_bytes` budgets, pricing blocks
+    /// of `block_tokens` tokens at `kv_bytes_per_token`.
+    pub fn new(
+        host_bytes: u64,
+        disk_bytes: u64,
+        block_tokens: usize,
+        kv_bytes_per_token: u64,
+    ) -> Self {
+        let stats = StoreStats {
+            host_capacity: host_bytes,
+            disk_capacity: disk_bytes,
+            ..Default::default()
+        };
+        let block_tokens = block_tokens.max(1);
+        TieredStore {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                lru: [BTreeMap::new(), BTreeMap::new()],
+                host: TierBudget::new(host_bytes),
+                disk: TierBudget::new(disk_bytes),
+                next_tick: 0,
+                stats,
+            }),
+            block_tokens,
+            block_bytes: block_tokens as u64 * kv_bytes_per_token,
+            window: DEFAULT_WINDOW,
+        }
+    }
+
+    /// Bytes one stored block costs.
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    /// The rolling chain keys of every block-aligned prefix of
+    /// `prompt`, ascending by depth.
+    fn chain_keys(&self, prompt: &[u32]) -> Vec<Key> {
+        let bt = self.block_tokens;
+        let mut keys = Vec::with_capacity(prompt.len() / bt);
+        let mut h = ROOT_HASH;
+        let mut off = 0;
+        while off + bt <= prompt.len() {
+            h = hash_block(h, &prompt[off..off + bt]);
+            off += bt;
+            keys.push((h, off));
+        }
+        keys
+    }
+
+    /// Longest contiguous visible block prefix of `keys`: the count of
+    /// leading keys whose entries are present and past write-back.
+    fn covered(inner: &Inner, keys: &[Key], now: f64) -> usize {
+        keys.iter()
+            .take_while(|&k| inner.entries.get(k).is_some_and(|e| now >= e.visible_at))
+            .count()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("store lock poisoned (a replica panicked)")
+    }
+}
+
+impl SnapshotStore for TieredStore {
+    fn peek(&self, prompt: &[u32], now: f64) -> usize {
+        let keys = self.chain_keys(prompt);
+        let inner = self.lock();
+        Self::covered(&inner, &keys, now) * self.block_tokens
+    }
+
+    fn begin_restore(
+        &self,
+        prompt: &[u32],
+        min_tokens: usize,
+        now: f64,
+        replica: usize,
+    ) -> Option<StoreHit> {
+        let keys = self.chain_keys(prompt);
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        let blocks = Self::covered(inner, &keys, now);
+        let tokens = blocks * self.block_tokens;
+        if tokens <= min_tokens {
+            return None;
+        }
+        // Blocks beyond the caller's (block-aligned) local coverage are
+        // what the restore actually transfers.
+        debug_assert_eq!(min_tokens % self.block_tokens, 0, "radix coverage is aligned");
+        let first = min_tokens / self.block_tokens;
+        let mut host_bytes = 0;
+        let mut disk_bytes = 0;
+        let mut remote = false;
+        for k in &keys[first..blocks] {
+            let e = inner.entries.get_mut(k).expect("covered block is present");
+            match e.tier {
+                StoreTier::Host => host_bytes += self.block_bytes,
+                StoreTier::Disk if e.staged_at <= now => {
+                    host_bytes += self.block_bytes;
+                    // The staged host copy is consumed by this restore;
+                    // the next one pays NVMe again unless re-prefetched
+                    // (staging scratch is transient, not a third tier).
+                    e.staged_at = f64::INFINITY;
+                    inner.stats.prefetch_hits += 1;
+                }
+                StoreTier::Disk => disk_bytes += self.block_bytes,
+            }
+            if e.publisher != replica {
+                remote = true;
+            }
+        }
+        // Touch the whole matched chain, deepest block first, so the
+        // root stays the most recent and LRU eviction peels chain
+        // tails instead of punching holes.
+        for &k in keys[..blocks].iter().rev() {
+            inner.touch(k);
+        }
+        if disk_bytes > 0 {
+            inner.stats.disk_hits += 1;
+        } else {
+            inner.stats.host_hits += 1;
+        }
+        if remote {
+            inner.stats.remote_hits += 1;
+        }
+        Some(StoreHit { tokens, host_bytes, disk_bytes, remote })
+    }
+
+    fn publish(&self, ctx: &[u32], now: f64, visible_at: f64, replica: usize) {
+        let keys = self.chain_keys(ctx);
+        if keys.is_empty() {
+            return;
+        }
+        let visible_at = visible_at.max(now + self.window);
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        let mut inserted = 0u64;
+        let mut rejected = false;
+        // Blocks of THIS chain already resident (deduped or just
+        // placed): making room for a deeper block must never drop one
+        // of them — a context longer than the tiers would otherwise
+        // evict its own roots block by block, ending with nothing but
+        // unreachable tail blocks after thrashing out other entries.
+        // Prefix-first admission truncates the chain instead: the
+        // placed prefix stays usable.
+        let mut placed: HashSet<Key> = HashSet::new();
+        for &key in &keys {
+            if let Some(e) = inner.entries.get_mut(&key) {
+                // Shared-prefix block already stored (possibly by
+                // another model/workflow/replica): one copy, refreshed.
+                e.visible_at = e.visible_at.min(visible_at);
+                placed.insert(key);
+                continue;
+            }
+            let tier = if self.block_bytes <= inner.host.capacity() {
+                let mut truncated = false;
+                while !inner.host.reserve(self.block_bytes) {
+                    if !inner.demote_host_lru(self.block_bytes, &placed) {
+                        truncated = true;
+                        break;
+                    }
+                }
+                if truncated {
+                    break;
+                }
+                StoreTier::Host
+            } else if self.block_bytes <= inner.disk.capacity() {
+                let mut truncated = false;
+                while !inner.disk.reserve(self.block_bytes) {
+                    let victim = inner.lru_in_tier(StoreTier::Disk).expect("capacity suffices");
+                    if placed.contains(&victim) {
+                        truncated = true;
+                        break;
+                    }
+                    inner.drop_entry(victim, self.block_bytes);
+                }
+                if truncated {
+                    break;
+                }
+                StoreTier::Disk
+            } else {
+                // A block fits in no tier: nothing deeper can be
+                // reachable either.
+                inner.stats.publish_rejected += 1;
+                rejected = true;
+                break;
+            };
+            let tick = inner.next_tick;
+            inner.next_tick += 1;
+            inner.entries.insert(
+                key,
+                Entry { tier, publisher: replica, visible_at, staged_at: f64::INFINITY, tick },
+            );
+            inner.lru[tier_idx(tier)].insert(tick, key);
+            placed.insert(key);
+            inserted += 1;
+            inner.stats.bytes_published += self.block_bytes;
+        }
+        // Refresh LRU over the whole chain, deepest first (see
+        // `begin_restore`), covering both new and deduped blocks.
+        for &k in keys.iter().rev() {
+            inner.touch(k);
+        }
+        if inserted > 0 {
+            inner.stats.publishes += 1;
+        } else if !rejected {
+            inner.stats.dedup_publishes += 1;
+        }
+    }
+
+    fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch> {
+        let keys = self.chain_keys(prompt);
+        let inner = self.lock();
+        let blocks = Self::covered(&inner, &keys, now);
+        let bytes: u64 = keys[..blocks]
+            .iter()
+            .filter(|k| {
+                let e = &inner.entries[*k];
+                e.tier == StoreTier::Disk && e.staged_at.is_infinite()
+            })
+            .map(|_| self.block_bytes)
+            .sum();
+        (bytes > 0).then_some(StorePrefetch { tokens: blocks * self.block_tokens, bytes })
+    }
+
+    fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+        {
+            // Nothing on disk -> nothing stageable; skip the hash walk.
+            let inner = self.lock();
+            if inner.disk.used() == 0 {
+                return false;
+            }
+        }
+        let keys = self.chain_keys(prompt);
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        let blocks = Self::covered(inner, &keys, now);
+        // Bytes and completion time are computed under the same lock
+        // that marks the staging, so a racing replica can neither
+        // double-stage nor leave this staging priced for a transfer
+        // larger than what it actually moves.
+        let bytes: u64 = keys[..blocks]
+            .iter()
+            .filter(|&k| {
+                let e = &inner.entries[k];
+                e.tier == StoreTier::Disk && e.staged_at.is_infinite()
+            })
+            .map(|_| self.block_bytes)
+            .sum();
+        if bytes == 0 {
+            return false;
+        }
+        let ready_at = (now + price(bytes)).max(now + self.window);
+        for k in &keys[..blocks] {
+            let e = inner.entries.get_mut(k).expect("covered block is present");
+            if e.tier == StoreTier::Disk && e.staged_at.is_infinite() {
+                e.staged_at = ready_at;
+            }
+        }
+        inner.stats.prefetches += 1;
+        true
+    }
+
+    fn stats(&self) -> StoreStats {
+        let inner = self.lock();
+        let mut s = inner.stats.clone();
+        s.entries = inner.entries.len();
+        s.host_used = inner.host.used();
+        s.disk_used = inner.disk.used();
+        s
+    }
+}
+
+/// One replica's view of the shared store: the store `Arc`, the
+/// replica's id (remote-hit attribution) and the cluster's clock fence.
+///
+/// Every store operation fences first at the virtual time it is about
+/// to use — the engine's clock advances *within* a step (prefills,
+/// restores), so fencing only at step boundaries would let a replica
+/// probe at a clock far past what the other replicas have been held
+/// to, re-introducing the thread-interleaving dependence the fence
+/// exists to remove.  Dropping the handle parks the replica's fence
+/// clock, so a finished (or panicking) replica never deadlocks the
+/// others.
+pub struct StoreHandle {
+    store: Arc<dyn SnapshotStore>,
+    fence: Option<Arc<ClockFence>>,
+    replica: usize,
+}
+
+impl StoreHandle {
+    /// Handle for `replica` over a shared `store` (and, in cluster
+    /// runs, the shared `fence`).
+    pub fn new(
+        store: Arc<dyn SnapshotStore>,
+        fence: Option<Arc<ClockFence>>,
+        replica: usize,
+    ) -> Self {
+        StoreHandle { store, fence, replica }
+    }
+
+    /// This replica's id within the cluster.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Fence this replica's virtual clock (no-op without a fence).
+    pub fn sync(&self, now: f64) {
+        if let Some(f) = &self.fence {
+            f.sync(self.replica, now);
+        }
+    }
+
+    /// Park this replica's fence clock at `+inf` — it no longer
+    /// constrains the other replicas (also done on drop, which covers
+    /// unwinding replicas).
+    pub fn finish(&self) {
+        if let Some(f) = &self.fence {
+            f.finish(self.replica);
+        }
+    }
+
+    /// See [`SnapshotStore::peek`] (fences at `now` first).
+    pub fn peek(&self, prompt: &[u32], now: f64) -> usize {
+        self.sync(now);
+        self.store.peek(prompt, now)
+    }
+
+    /// See [`SnapshotStore::begin_restore`] (fences at `now` first).
+    pub fn begin_restore(&self, prompt: &[u32], min_tokens: usize, now: f64) -> Option<StoreHit> {
+        self.sync(now);
+        self.store.begin_restore(prompt, min_tokens, now, self.replica)
+    }
+
+    /// See [`SnapshotStore::publish`] (fences at `now` first).
+    pub fn publish(&self, ctx: &[u32], now: f64, visible_at: f64) {
+        self.sync(now);
+        self.store.publish(ctx, now, visible_at, self.replica);
+    }
+
+    /// See [`SnapshotStore::prefetch_candidate`] (fences at `now`
+    /// first).
+    pub fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch> {
+        self.sync(now);
+        self.store.prefetch_candidate(prompt, now)
+    }
+
+    /// See [`SnapshotStore::stage`] (fences at `now` first).
+    pub fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+        self.sync(now);
+        self.store.stage(prompt, now, price)
+    }
+
+    /// Snapshot of the shared store's aggregate counters.
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+}
+
+impl Drop for StoreHandle {
+    fn drop(&mut self) {
+        if let Some(f) = &self.fence {
+            f.finish(self.replica);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BT: usize = 16;
+    const BPT: u64 = 64; // block_bytes = 1024
+
+    fn toks(n: usize, salt: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 11 + salt).collect()
+    }
+
+    fn store(host_blocks: u64, disk_blocks: u64) -> TieredStore {
+        TieredStore::new(host_blocks * 1024, disk_blocks * 1024, BT, BPT)
+    }
+
+    /// Publish with write-back already completed (visible immediately
+    /// after the causality window).
+    fn publish_now(s: &TieredStore, ctx: &[u32], now: f64, replica: usize) {
+        s.publish(ctx, now, now, replica);
+    }
+
+    const LATER: f64 = 1.0; // comfortably past the causality window
+
+    fn ledger_balances(s: &TieredStore) {
+        let st = s.stats();
+        assert_eq!(
+            st.bytes_published,
+            st.host_used + st.disk_used + st.bytes_dropped,
+            "every published byte is resident or dropped"
+        );
+    }
+
+    #[test]
+    fn publish_probe_restore_roundtrip() {
+        let s = store(16, 0);
+        let ctx = toks(48, 0); // 3 blocks
+        publish_now(&s, &ctx, 0.0, 0);
+        // Not yet visible at publish time (background write-back).
+        assert_eq!(s.peek(&ctx, 0.0), 0);
+        assert_eq!(s.peek(&ctx, LATER), 48);
+        // A prompt extending the context hits its stored prefix...
+        let mut longer = ctx.clone();
+        longer.extend(toks(40, 999));
+        assert_eq!(s.peek(&longer, LATER), 48);
+        // ...and a *shorter* prompt hits its aligned sub-prefix (the
+        // block granularity the radix tree also matches at).
+        assert_eq!(s.peek(&ctx[..32], LATER), 32);
+        let hit = s.begin_restore(&longer, 0, LATER, 1).expect("hit");
+        assert_eq!(hit.tokens, 48);
+        assert_eq!(hit.host_bytes, 3 * 1024);
+        assert_eq!(hit.disk_bytes, 0);
+        assert!(hit.remote, "published by replica 0, restored by 1");
+        // Local radix already covering one block: only the rest moves.
+        let partial = s.begin_restore(&longer, 16, LATER, 1).expect("hit");
+        assert_eq!(partial.tokens, 48);
+        assert_eq!(partial.host_bytes, 2 * 1024);
+        // No hit when coverage does not beat the floor.
+        assert!(s.begin_restore(&longer, 48, LATER, 1).is_none());
+        let st = s.stats();
+        assert_eq!((st.host_hits, st.remote_hits), (2, 2));
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn shared_prefix_blocks_dedupe_to_one_copy() {
+        let s = store(16, 0);
+        let a = toks(32, 3);
+        let mut b = a.clone();
+        b.extend(toks(32, 77)); // same first 2 blocks, 2 more
+        publish_now(&s, &a, 0.0, 0);
+        publish_now(&s, &b, 0.5, 1);
+        let st = s.stats();
+        assert_eq!(st.publishes, 2);
+        assert_eq!(st.entries, 4, "shared prefix stored once");
+        assert_eq!(st.host_used, 4 * 1024);
+        // Identical republish adds nothing.
+        publish_now(&s, &a, 0.6, 1);
+        assert_eq!(s.stats().dedup_publishes, 1);
+        assert_eq!(s.stats().entries, 4);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn partial_blocks_are_not_stored() {
+        let s = store(16, 0);
+        publish_now(&s, &toks(10, 0), 0.0, 0); // below one block
+        assert_eq!(s.stats().publishes, 0);
+        let ctx = toks(40, 1); // 2.5 blocks -> 2 stored
+        publish_now(&s, &ctx, 0.0, 0);
+        assert_eq!(s.peek(&ctx, LATER), 32);
+    }
+
+    #[test]
+    fn demotion_pipeline_host_to_disk_to_drop() {
+        // Host holds 4 blocks, disk 4: ten published blocks push the
+        // oldest through disk and off the far end.
+        let s = store(4, 4);
+        for salt in 0..5u32 {
+            publish_now(&s, &toks(32, 1000 * (salt + 1)), f64::from(salt), 0);
+        }
+        let st = s.stats();
+        assert_eq!(st.host_used, 4 * 1024, "host full");
+        assert_eq!(st.disk_used, 4 * 1024, "disk full");
+        assert_eq!(st.demotions_to_disk, 6, "blocks cascade in LRU order");
+        assert_eq!(st.dropped_entries, 2, "pipeline's far end drops");
+        ledger_balances(&s);
+        // The newest context is host-resident, the oldest gone.
+        assert_eq!(s.peek(&toks(32, 1000), 10.0), 0, "oldest dropped");
+        let hit = s.begin_restore(&toks(32, 5000), 0, 10.0, 0).expect("newest");
+        assert_eq!(hit.disk_bytes, 0, "newest still host-resident");
+    }
+
+    #[test]
+    fn long_chain_publish_truncates_instead_of_self_evicting() {
+        // A 6-block context into a 4-block host-only store: admission
+        // is prefix-first — the first 4 blocks stay probe-reachable
+        // and the tail is truncated, instead of the chain eating its
+        // own roots and ending 100% unreachable.
+        let s = store(4, 0);
+        let long = toks(96, 5);
+        publish_now(&s, &long, 0.0, 0);
+        assert_eq!(s.peek(&long, LATER), 64, "placed prefix stays usable");
+        assert_eq!(s.stats().dropped_entries, 0, "no self-thrash");
+        ledger_balances(&s);
+        // With a disk tier the chain spreads across tiers instead:
+        // shallow blocks demote to disk, everything stays reachable.
+        let s2 = store(4, 4);
+        publish_now(&s2, &long, 0.0, 0);
+        assert_eq!(s2.peek(&long, LATER), 96, "tiers jointly hold the chain");
+        let st = s2.stats();
+        assert_eq!((st.host_used, st.disk_used), (4 * 1024, 2 * 1024));
+        // And longer than both tiers combined: truncate at capacity.
+        let s3 = store(2, 2);
+        publish_now(&s3, &long, 0.0, 0);
+        assert_eq!(s3.peek(&long, LATER), 64, "prefix bounded by total budget");
+        assert_eq!(s3.stats().dropped_entries, 0);
+        ledger_balances(&s3);
+    }
+
+    #[test]
+    fn chain_eviction_peels_tails_not_roots() {
+        // One long chain; pressure drops its deepest blocks first, so
+        // the surviving prefix stays contiguous and probe-able.
+        let s = store(4, 0);
+        publish_now(&s, &toks(64, 9), 0.0, 0); // exactly fills host
+        publish_now(&s, &toks(32, 7777), 0.5, 0); // 2 blocks push out 2
+        assert_eq!(s.peek(&toks(64, 9), LATER), 32, "tail peeled, root kept");
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn disk_restore_charges_disk_until_staged() {
+        let s = store(2, 8);
+        let cold = toks(32, 1);
+        let hot = toks(32, 2);
+        publish_now(&s, &cold, 0.0, 0);
+        publish_now(&s, &hot, 0.1, 0); // demotes `cold` to disk
+        // Host is full, so the disk hit cannot promote; charged Disk.
+        let hit = s.begin_restore(&cold, 0, LATER, 0).expect("disk hit");
+        assert_eq!(hit.disk_bytes, 2 * 1024);
+        assert_eq!(s.stats().disk_hits, 1);
+        // Prefetch staging flips the charge to host-side once ready.
+        let p = s.prefetch_candidate(&cold, LATER).expect("stageable");
+        assert_eq!(p.bytes, 2 * 1024);
+        assert!(s.stage(&cold, LATER, &|_| 0.5), "staging starts");
+        assert!(s.prefetch_candidate(&cold, LATER).is_none(), "no double stage");
+        assert!(!s.stage(&cold, LATER, &|_| 0.5), "no double stage via stage");
+        let early = s.begin_restore(&cold, 0, LATER + 0.1, 0).expect("in flight");
+        assert!(early.disk_bytes > 0, "staging not finished yet");
+        let staged = s.begin_restore(&cold, 0, LATER + 1.0, 0).expect("staged");
+        assert_eq!(staged.disk_bytes, 0, "PCIe-only after staging");
+        assert_eq!(s.stats().prefetch_hits, 2, "both staged blocks consumed");
+        assert_eq!(s.stats().prefetches, 1);
+        // Staging scratch is transient: the restore consumed it, so the
+        // next restore pays NVMe again — and the chain is stageable
+        // again.
+        let after = s.begin_restore(&cold, 0, LATER + 2.0, 0).expect("hit");
+        assert!(after.disk_bytes > 0, "staged copy was consumed");
+        assert!(s.prefetch_candidate(&cold, LATER + 2.0).is_some());
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn peek_is_side_effect_free_for_lru() {
+        let s = store(4, 0);
+        let a = toks(32, 1);
+        let b = toks(32, 2);
+        publish_now(&s, &a, 0.0, 0);
+        publish_now(&s, &b, 0.1, 0);
+        for _ in 0..8 {
+            assert_eq!(s.peek(&a, LATER), 32);
+        }
+        // Host full; the next publish demotes LRU blocks — still `a`'s
+        // (peeks don't refresh), and with no disk they drop.
+        publish_now(&s, &toks(32, 3), LATER, 0);
+        assert_eq!(s.peek(&a, LATER + 1.0), 0, "peeked-only chain stayed LRU");
+        assert_eq!(s.peek(&b, LATER + 1.0), 32);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn oversized_blocks_are_rejected_not_thrashed() {
+        // Budgets below one block: nothing can ever be admitted.
+        let s = TieredStore::new(100, 100, BT, BPT); // block_bytes = 1024
+        publish_now(&s, &toks(32, 1), 0.0, 0);
+        let st = s.stats();
+        assert_eq!(st.publish_rejected, 1, "chain placement stops at the first reject");
+        assert_eq!(st.entries, 0);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn zero_host_budget_goes_straight_to_disk() {
+        let s = store(0, 4);
+        let ctx = toks(32, 9);
+        publish_now(&s, &ctx, 0.0, 0);
+        let hit = s.begin_restore(&ctx, 0, LATER, 0).expect("disk-only store");
+        assert_eq!(hit.host_bytes, 0);
+        assert_eq!(hit.disk_bytes, 2 * 1024);
+        assert_eq!(s.stats().disk_used, 2 * 1024);
+        ledger_balances(&s);
+    }
+}

@@ -872,7 +872,7 @@ mod legacy_engine {
                     match self.kv.begin_sequence(seq_id, model_id, &turn.prompt) {
                         Alloc::Ok(adm) => {
                             self.drop_snapshots(&adm.dropped_snapshots);
-                            self.kv.swap.swap_in(bytes);
+                            self.kv.swap.swap_in(bytes).expect("swap tier accounting");
                             self.now += self.exec.swap_in_cost(bytes);
                             self.next_seq_id += 1;
                             self.running.push(RunningSeq {
@@ -990,7 +990,7 @@ mod legacy_engine {
                         turn.swapped = Some((cache, bytes));
                         turn.was_preempted = false;
                     } else {
-                        self.kv.stats.swap_rejected += 1;
+                        self.kv.stats.swap_tier_full += 1;
                         self.exec.drop_snapshot(cache);
                     }
                 }
@@ -1307,6 +1307,176 @@ fn prop_no_leaks_under_every_policy() {
                 );
             }
         }
+    }
+}
+
+/// Satellite: byte conservation across the full demotion pipeline
+/// (GPU pool -> swap tier -> snapshot-store host -> disk -> dropped),
+/// under random begin/append/finish/preempt churn with the store
+/// enabled, for every eviction policy.  At every step:
+///
+///   * swap-tier occupancy equals the swapped radix nodes' bytes
+///     (evict_swap reserves, restore releases — never out of step);
+///   * the store ledger balances: every published byte is host-
+///     resident, disk-resident or dropped (restores are copies and
+///     must not perturb it);
+///   * tier budgets are never exceeded;
+///   * pool blocks held by the trees never exceed total pool usage.
+#[test]
+fn prop_demotion_pipeline_conserves_bytes() {
+    use icarus::store::{SnapshotStore, TieredStore};
+    for &eviction in &[EvictionPolicy::Recompute, EvictionPolicy::Swap] {
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(16_000 + seed);
+            let cfg = ServingConfig {
+                mode: ServingMode::Icarus,
+                kv_pool_bytes: 64 * 16 * 64, // 64 blocks of 16 tokens @ 64 B/token
+                block_tokens: 16,
+                eviction,
+                swap_bytes: 24 * 16 * 64,
+                store_host_bytes: 20 * 16 * 64,
+                store_disk_bytes: 12 * 16 * 64,
+                ..Default::default()
+            };
+            let mut m = KvCacheManager::new(&cfg, 64, 4);
+            let store = TieredStore::new(cfg.store_host_bytes, cfg.store_disk_bytes, 16, 64);
+            let mut now = 0.0f64;
+            let mut active: Vec<(u64, Vec<u32>)> = Vec::new();
+            let mut published: Vec<Vec<u32>> = Vec::new();
+            let mut next_id = 1u64;
+            let mut next_snap = 1u64;
+            let tag = format!("{eviction:?} seed {seed}");
+            for step in 0..300 {
+                now += 0.01;
+                match rng.below(5) {
+                    0 | 1 => {
+                        let n = rng.range(8, 96) as usize;
+                        let mut p: Vec<u32> = (0..32u32).collect(); // shared prefix
+                        p.extend((0..n).map(|_| rng.below(300) as u32));
+                        if let Alloc::Ok(_) = m.begin_sequence(next_id, 0, &p) {
+                            active.push((next_id, p));
+                            next_id += 1;
+                        }
+                    }
+                    2 if !active.is_empty() => {
+                        let i = rng.below(active.len() as u64) as usize;
+                        let _ = m.append_tokens(active[i].0, rng.range(1, 20) as usize);
+                    }
+                    3 if !active.is_empty() => {
+                        let i = rng.below(active.len() as u64) as usize;
+                        let (id, ctx) = active.swap_remove(i);
+                        m.finish_sequence(id, &ctx, Some(next_snap));
+                        next_snap += 1;
+                        // Write-through, as the engine does on finish.
+                        store.publish(&ctx, now, now, 0);
+                        published.push(ctx);
+                    }
+                    _ if !active.is_empty() => {
+                        let i = rng.below(active.len() as u64) as usize;
+                        let (id, _) = active.swap_remove(i);
+                        m.preempt(id);
+                    }
+                    _ => {}
+                }
+                // Demotion pipeline: hard-evicted payload contexts flow
+                // GPU -> host tier (the store cascades the rest).
+                for ctx in m.take_demoted() {
+                    store.publish(&ctx, now, now, 0);
+                }
+                // Restores are copies: they must not bend the ledger.
+                if !published.is_empty() && rng.bool(0.25) {
+                    let i = rng.below(published.len() as u64) as usize;
+                    let _ = store.begin_restore(&published[i], 0, now + 10.0, 1);
+                }
+                if rng.bool(0.1) && !published.is_empty() {
+                    let i = rng.below(published.len() as u64) as usize;
+                    store.stage(&published[i], now, &|_| 0.5);
+                }
+                let st = store.stats();
+                assert_eq!(
+                    st.bytes_published,
+                    st.host_used + st.disk_used + st.bytes_dropped,
+                    "{tag} step {step}: store ledger"
+                );
+                assert!(st.host_used <= st.host_capacity, "{tag} step {step}: host budget");
+                assert!(st.disk_used <= st.disk_capacity, "{tag} step {step}: disk budget");
+                assert_eq!(
+                    m.swap.used(),
+                    m.swapped_cache_blocks() as u64 * m.pool.block_bytes,
+                    "{tag} step {step}: swap occupancy"
+                );
+                assert!(
+                    m.resident_cache_blocks() <= m.pool.used(),
+                    "{tag} step {step}: tree blocks exceed pool usage"
+                );
+            }
+            // Drain everything: per-sequence state goes to zero and the
+            // tree owns exactly the remaining pool blocks.
+            for (id, ctx) in active.drain(..) {
+                m.finish_sequence(id, &ctx, None);
+            }
+            assert_eq!(m.active_sequences(), 0, "{tag}");
+            assert_eq!(m.resident_cache_blocks(), m.pool.used(), "{tag}: end residency");
+            let st = store.stats();
+            assert_eq!(
+                st.bytes_published,
+                st.host_used + st.disk_used + st.bytes_dropped,
+                "{tag}: final ledger"
+            );
+        }
+    }
+}
+
+/// The store's disable gate: with both tier budgets zero (and even the
+/// prefetch flag left on) the cluster — at any replica count — builds
+/// no store and produces bit-identical stats *and* traces to the
+/// default configuration, across modes, eviction policies and pool
+/// pressures.  This pins that the knobs alone can never perturb a
+/// store-less run; the claim that store-less PR-5 code equals
+/// *pre-store* behavior is pinned separately by
+/// `prop_fcfs_unchunked_bit_identical_to_legacy_engine` above, whose
+/// frozen reference loop predates the store entirely and exercises the
+/// restructured admit path, the demotion drain and the swap-stat split
+/// through the default (store-less) engine.
+#[test]
+fn prop_store_zero_budget_bit_identical() {
+    use icarus::cluster::Cluster;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(17_000 + seed);
+        let mode = if rng.bool(0.5) { ServingMode::Icarus } else { ServingMode::Baseline };
+        let eviction =
+            if rng.bool(0.5) { EvictionPolicy::Recompute } else { EvictionPolicy::Swap };
+        let replicas = 1 + rng.below(4) as usize;
+        let n_models = 1 + rng.below(6) as usize;
+        let base = ServingConfig {
+            mode,
+            eviction,
+            kv_pool_bytes: (8 + rng.below(48)) << 20,
+            replicas,
+            ..Default::default()
+        };
+        let zeroed = ServingConfig {
+            store_host_bytes: 0,
+            store_disk_bytes: 0,
+            store_prefetch: true, // must be inert without tier budgets
+            ..base.clone()
+        };
+        let wcfg = WorkloadConfig {
+            n_models,
+            qps: 0.3 + rng.f64(),
+            n_requests: 24,
+            seed: 500 + seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let (a, at) =
+            Cluster::new(base, 2048, n_models).run_sim_traced(CostModel::default(), wl.clone());
+        let (b, bt) =
+            Cluster::new(zeroed, 2048, n_models).run_sim_traced(CostModel::default(), wl);
+        assert_eq!(a.merged, b.merged, "seed {seed}: stats must be bit-identical");
+        assert_eq!(at.events, bt.events, "seed {seed}: trace must be bit-identical");
+        assert!(b.store.is_none(), "seed {seed}: zero budgets must not build a store");
+        assert_eq!(b.merged.store_hits(), 0, "seed {seed}");
     }
 }
 
