@@ -1,0 +1,132 @@
+//! Overlap sweep: the cooperative task runtime (`--overlap on`) vs the
+//! serial inline-transfer-charging loop, across prefetch × replicas ×
+//! QPS (EXPERIMENTS.md §Overlap).
+//!
+//! What this demonstrates:
+//!   * with `--overlap off` every store restore and swap-in is charged
+//!     inline — the whole batch waits out the PCIe/NVMe window;
+//!   * with `--overlap on` the restore flies as a task on the
+//!     per-replica executor: other sequences keep decoding across the
+//!     window and the restored turn joins the batch at its virtual
+//!     completion time, so P95 drops and the stall/overlap split in
+//!     the stats (`stalled_transfer_s` vs `overlapped_transfer_s`)
+//!     shows where the transfer seconds went;
+//!   * stacking `--store-prefetch` on top overlaps the staging too, so
+//!     the two optimizations compose rather than compete.
+//!
+//! Results land in bench_results/overlap.json and, machine-readably
+//! for the perf trajectory, BENCH_overlap.json at the repo root (CI
+//! runs this at smoke scale and uploads the artifact).
+//!
+//! Run: cargo bench --bench overlap  [-- --smoke]
+
+use icarus::bench_util::{sweep, write_results, Point, Row, KV_BPT_SMALL};
+use icarus::config::{EvictionPolicy, ServingMode};
+use icarus::json::{self, Value};
+
+const HOST_8MB: u64 = 8 << 20;
+const DISK_256MB: u64 = 256 << 20;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (qps_list, n_requests, replica_list): (&[f64], usize, &[usize]) = if smoke {
+        (&[0.8], 24, &[1, 4])
+    } else {
+        (&[0.8, 1.5], 96, &[1, 4])
+    };
+
+    // overlap × prefetch grid; every point carries the same tiered
+    // store + memory-pressure config, so overlap is the only axis that
+    // changes how transfer seconds are charged.
+    let variants: &[(bool, bool)] = &[
+        (false, false), // serial baseline
+        (true, false),  // overlap alone
+        (false, true),  // prefetch alone
+        (true, true),   // both
+    ];
+
+    let mut points = Vec::new();
+    for &replicas in replica_list {
+        for &(overlap, prefetch) in variants {
+            for &qps in qps_list {
+                points.push(Point {
+                    mode: ServingMode::Icarus,
+                    n_models: 4,
+                    qps,
+                    n_requests,
+                    // Fig-8's memory-pressure regime: a 12 MB pool per
+                    // replica forces constant eviction between turns,
+                    // so nearly every re-admission rides a restore.
+                    kv_pool_bytes: 12 << 20,
+                    kv_bytes_per_token: KV_BPT_SMALL,
+                    eviction: EvictionPolicy::Recompute,
+                    replicas,
+                    store_host_bytes: HOST_8MB,
+                    store_disk_bytes: DISK_256MB,
+                    store_prefetch: prefetch,
+                    overlap,
+                    seed: 13,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    println!(
+        "== Overlap sweep: cooperative runtime x prefetch x replicas vs serial transfer \
+         charging, ICaRus N=4, host 8M + disk 256M, pool 12 MB/replica{} ==\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+    let rows = sweep(&points);
+
+    // The acceptance comparison: overlap-on vs overlap-off at the same
+    // replica count, prefetch setting and QPS.
+    let find = |replicas: usize, overlap: bool, prefetch: bool, qps: f64| -> Option<&Row> {
+        points
+            .iter()
+            .zip(&rows)
+            .find(|(p, _)| {
+                p.replicas == replicas
+                    && p.overlap == overlap
+                    && p.store_prefetch == prefetch
+                    && p.qps == qps
+            })
+            .map(|(_, r)| r)
+    };
+    println!("\n--- overlap on vs off (same replicas, prefetch, qps) ---");
+    let mut comparisons = Vec::new();
+    for &replicas in replica_list {
+        for &prefetch in &[false, true] {
+            for &qps in qps_list {
+                let Some(base) = find(replicas, false, prefetch, qps) else { continue };
+                let Some(on) = find(replicas, true, prefetch, qps) else { continue };
+                let speedup = if on.p95_s > 0.0 { base.p95_s / on.p95_s } else { 0.0 };
+                println!(
+                    "R={replicas} pf={prefetch} qps={qps:.2}: p95 {:.3}s -> {:.3}s \
+                     ({speedup:.2}x), stalled {:.3}s, overlapped {:.3}s",
+                    base.p95_s, on.p95_s, on.stalled_transfer_s, on.overlapped_transfer_s,
+                );
+                comparisons.push(json::obj(vec![
+                    ("replicas", json::num(replicas as f64)),
+                    ("store_prefetch", Value::Bool(prefetch)),
+                    ("qps", json::num(qps)),
+                    ("p95_serial_s", json::num(base.p95_s)),
+                    ("p95_overlap_s", json::num(on.p95_s)),
+                    ("p95_speedup", json::num(speedup)),
+                    ("stalled_transfer_s", json::num(on.stalled_transfer_s)),
+                    ("overlapped_transfer_s", json::num(on.overlapped_transfer_s)),
+                    ("store_hits", json::num(on.store_hits as f64)),
+                ]));
+            }
+        }
+    }
+    write_results(
+        "overlap",
+        &rows,
+        vec![
+            ("figure", json::s("8-overlap")),
+            ("baseline", json::s("serial inline transfer charging (--overlap off)")),
+            ("smoke", Value::Bool(smoke)),
+            ("overlap_vs_serial", Value::Arr(comparisons)),
+        ],
+    );
+}

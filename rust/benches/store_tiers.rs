@@ -36,18 +36,21 @@ fn main() {
         (&[0.4, 0.8, 1.5], 96, &[1, 4])
     };
 
-    // (host, disk, prefetch) store variants; (0, 0, false) is the
-    // store-less swap baseline every other row is judged against.
-    let variants: &[(u64, u64, bool)] = &[
-        (0, 0, false),
-        (HOST_64MB, 0, false),
-        (HOST_8MB, DISK_256MB, false),
-        (HOST_8MB, DISK_256MB, true),
+    // (host, disk, prefetch, overlap) store variants; (0, 0, false,
+    // false) is the store-less swap baseline every other row is judged
+    // against.  The final variant reruns the full tiered+prefetch
+    // config with the cooperative overlap runtime flying its restores.
+    let variants: &[(u64, u64, bool, bool)] = &[
+        (0, 0, false, false),
+        (HOST_64MB, 0, false, false),
+        (HOST_8MB, DISK_256MB, false, false),
+        (HOST_8MB, DISK_256MB, true, false),
+        (HOST_8MB, DISK_256MB, true, true),
     ];
 
     let mut points = Vec::new();
     for &replicas in replica_list {
-        for &(host, disk, prefetch) in variants {
+        for &(host, disk, prefetch, overlap) in variants {
             for &qps in qps_list {
                 points.push(Point {
                     mode: ServingMode::Icarus,
@@ -70,6 +73,7 @@ fn main() {
                     store_host_bytes: host,
                     store_disk_bytes: disk,
                     store_prefetch: prefetch,
+                    overlap,
                     seed: 13,
                     ..Default::default()
                 });
@@ -85,7 +89,13 @@ fn main() {
 
     // The acceptance comparison: each store variant vs the swap
     // baseline at the same replica count and QPS.
-    let find = |replicas: usize, host: u64, disk: u64, prefetch: bool, qps: f64| -> Option<&Row> {
+    let find = |replicas: usize,
+                host: u64,
+                disk: u64,
+                prefetch: bool,
+                overlap: bool,
+                qps: f64|
+     -> Option<&Row> {
         points
             .iter()
             .zip(&rows)
@@ -94,6 +104,7 @@ fn main() {
                     && p.store_host_bytes == host
                     && p.store_disk_bytes == disk
                     && p.store_prefetch == prefetch
+                    && p.overlap == overlap
                     && p.qps == qps
             })
             .map(|(_, r)| r)
@@ -102,16 +113,19 @@ fn main() {
     let mut comparisons = Vec::new();
     for &replicas in replica_list {
         for &qps in qps_list {
-            let Some(base) = find(replicas, 0, 0, false, qps) else { continue };
-            for &(host, disk, prefetch) in variants.iter().filter(|v| v.0 + v.1 > 0) {
-                let Some(row) = find(replicas, host, disk, prefetch, qps) else { continue };
+            let Some(base) = find(replicas, 0, 0, false, false, qps) else { continue };
+            for &(host, disk, prefetch, overlap) in variants.iter().filter(|v| v.0 + v.1 > 0) {
+                let Some(row) = find(replicas, host, disk, prefetch, overlap, qps) else {
+                    continue;
+                };
                 let speedup = if row.p95_s > 0.0 { base.p95_s / row.p95_s } else { 0.0 };
                 println!(
-                    "R={replicas} qps={qps:.2} host={}M disk={}M pf={}: p95 {:.3}s -> {:.3}s \
-                     ({speedup:.2}x), {} store hits ({} remote)",
+                    "R={replicas} qps={qps:.2} host={}M disk={}M pf={} ov={}: p95 {:.3}s -> \
+                     {:.3}s ({speedup:.2}x), {} store hits ({} remote)",
                     host >> 20,
                     disk >> 20,
                     prefetch,
+                    overlap,
                     base.p95_s,
                     row.p95_s,
                     row.store_hits,
@@ -123,6 +137,7 @@ fn main() {
                     ("store_host_bytes", json::num(host as f64)),
                     ("store_disk_bytes", json::num(disk as f64)),
                     ("store_prefetch", Value::Bool(prefetch)),
+                    ("overlap", Value::Bool(overlap)),
                     ("p95_baseline_s", json::num(base.p95_s)),
                     ("p95_store_s", json::num(row.p95_s)),
                     ("p95_speedup", json::num(speedup)),

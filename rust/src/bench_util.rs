@@ -89,6 +89,10 @@ pub struct Point {
     pub store_disk_bytes: u64,
     /// Background prefetch staging for queued turns.
     pub store_prefetch: bool,
+    /// Cooperative overlap runtime: fly store/swap transfers as tasks
+    /// instead of charging them inline (`benches/overlap.rs` sweeps
+    /// this).
+    pub overlap: bool,
     /// Simulator cost model.
     pub cost: CostModel,
 }
@@ -116,6 +120,7 @@ impl Default for Point {
             store_host_bytes: 0,
             store_disk_bytes: 0,
             store_prefetch: false,
+            overlap: false,
             cost: CostModel::default(),
         }
     }
@@ -135,6 +140,7 @@ impl Point {
             store_host_bytes: self.store_host_bytes,
             store_disk_bytes: self.store_disk_bytes,
             store_prefetch: self.store_prefetch,
+            overlap: self.overlap,
             ..Default::default()
         }
     }
@@ -188,6 +194,9 @@ impl Point {
                 if self.store_prefetch { "+pf" } else { "" }
             ));
         }
+        if self.overlap {
+            s.push_str("/ov");
+        }
         s
     }
 }
@@ -225,6 +234,10 @@ pub struct Row {
     pub store_hits: u64,
     /// Store restores of contexts another replica published.
     pub store_remote_hits: u64,
+    /// Virtual seconds replicas stalled waiting on gating transfers.
+    pub stalled_transfer_s: f64,
+    /// Virtual seconds of transfer time hidden behind compute.
+    pub overlapped_transfer_s: f64,
 }
 
 impl Row {
@@ -247,6 +260,8 @@ impl Row {
             evictions: s.evictions,
             store_hits: s.store_hits(),
             store_remote_hits: s.store_remote_hits,
+            stalled_transfer_s: s.stalled_transfer_time,
+            overlapped_transfer_s: s.overlapped_transfer_time,
         }
     }
 
@@ -267,6 +282,8 @@ impl Row {
             ("evictions", json::num(self.evictions as f64)),
             ("store_hits", json::num(self.store_hits as f64)),
             ("store_remote_hits", json::num(self.store_remote_hits as f64)),
+            ("stalled_transfer_s", json::num(self.stalled_transfer_s)),
+            ("overlapped_transfer_s", json::num(self.overlapped_transfer_s)),
         ])
     }
 }

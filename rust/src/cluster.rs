@@ -34,6 +34,15 @@
 //! throughput, wall clock = slowest replica, and KV footprint = sum of
 //! the per-replica pools.
 //!
+//! With `overlap` enabled in the config, each replica owns one pinned
+//! cooperative task executor (`crate::runtime::exec`, built inside
+//! `Engine::new` on the replica's own thread) that overlaps its
+//! modeled store/swap transfers with compute.  The executor is as
+//! replica-local as the KV pool — tasks never migrate — so the
+//! [`ClockFence`] ordering between replicas is untouched: every store
+//! operation still fences at the virtual clock it uses, whether the
+//! transfer it prices is charged inline or flown as a task.
+//!
 //! [`KvCacheManager`]: crate::kvcache::KvCacheManager
 
 use std::sync::Arc;
@@ -497,6 +506,37 @@ mod tests {
         assert!(p4 < p1, "4 replicas should cut P95 under load: {p4} vs {p1}");
         // The fleet's memory footprint is additive.
         assert!(r4.merged.peak_kv_bytes >= r1.merged.peak_kv_bytes);
+    }
+
+    #[test]
+    fn overlap_threads_through_replicas_with_shared_store() {
+        // Each replica pins its own cooperative executor; the shared
+        // store still fences between them.  Small per-replica pools +
+        // Recompute eviction force store traffic that the overlap
+        // runtime can hide behind other sequences' steps.
+        let scfg = ServingConfig {
+            replicas: 4,
+            kv_pool_bytes: 12 << 20,
+            store_host_bytes: 256 << 20,
+            store_prefetch: true,
+            overlap: true,
+            ..Default::default()
+        };
+        let cluster = Cluster::new(scfg, 2048, 4);
+        let out = cluster.run_sim(CostModel::default(), workload(48, 1.2, 29));
+        assert_eq!(out.merged.completed_requests, 48);
+        assert!(out.merged.store_hits > 0, "store traffic expected at this pool size");
+        assert!(
+            out.merged.tasks_spawned > 0,
+            "every replica's executor should have flown transfer tasks"
+        );
+        assert!(
+            out.merged.overlapped_transfer_time > 0.0,
+            "some transfer time must hide behind compute"
+        );
+        // Merged counters are sums of per-replica counters.
+        let sum: u64 = out.per_replica.iter().map(|s| s.tasks_spawned).sum();
+        assert_eq!(out.merged.tasks_spawned, sum);
     }
 
     #[test]

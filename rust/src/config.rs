@@ -176,6 +176,14 @@ pub struct ServingConfig {
     /// into host memory for queued turns before admission, so their
     /// eventual restore pays PCIe instead of NVMe.
     pub store_prefetch: bool,
+    /// Overlap modeled store/swap transfers with compute on the
+    /// per-replica cooperative task runtime (`runtime::exec`): a
+    /// restore issued at admission completes in virtual time while
+    /// other sequences keep decoding, instead of being charged inline
+    /// on the replica's critical path.  `false` (the default) keeps
+    /// the serial charging path, bit-identical to the pre-overlap
+    /// engine (pinned by a differential property test).
+    pub overlap: bool,
     /// Enable per-namespace prefix caching (on in both systems; the
     /// ablation bench turns it off).
     pub prefix_caching: bool,
@@ -204,6 +212,7 @@ impl Default for ServingConfig {
             store_host_bytes: 0,
             store_disk_bytes: 0,
             store_prefetch: false,
+            overlap: false,
             prefix_caching: true,
             replicas: 1,
             cluster_routing: ClusterRouting::RoundRobin,
@@ -227,6 +236,7 @@ impl ServingConfig {
             ("store_host_bytes", json::num(self.store_host_bytes as f64)),
             ("store_disk_bytes", json::num(self.store_disk_bytes as f64)),
             ("store_prefetch", Value::Bool(self.store_prefetch)),
+            ("overlap", Value::Bool(self.overlap)),
             ("prefix_caching", Value::Bool(self.prefix_caching)),
             ("replicas", json::num(self.replicas as f64)),
             ("cluster_routing", json::s(self.cluster_routing.as_str())),
@@ -412,6 +422,7 @@ mod tests {
         assert_eq!(s.prefill_chunk, 0, "atomic prefill by default");
         assert_eq!(s.store_host_bytes + s.store_disk_bytes, 0, "store off by default");
         assert!(!s.store_prefetch);
+        assert!(!s.overlap, "serial transfer charging by default");
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);

@@ -25,11 +25,26 @@
 //!   4. retire finished turns: publish their context to the prefix cache
 //!      (cross-model-visible in ICaRus mode), record latency, enqueue
 //!      the workflow's next turn.
+//!
+//! Transfer/compute overlap (`--overlap on`): by default every modeled
+//! transfer — store restore, swap-in, write-back — is charged *inline*
+//! on the virtual clock, serializing against compute.  With overlap
+//! enabled, admission-time restores are issued as tasks on a
+//! per-replica cooperative executor (`crate::runtime::exec`) instead:
+//! the admitted turn's KV is reserved immediately, but the sequence
+//! joins the running batch only when the clock passes the transfer's
+//! virtual completion, while other sequences keep decoding — and the
+//! decode batch re-forms each step around whatever has landed
+//! (continuous batching across transfers).  The serial path remains
+//! the default and stays bit-identical to the pre-overlap engine
+//! (stats and trace), pinned by a differential property test; see
+//! `overlap` for the task/stall accounting model.
 
 pub mod executor;
+mod overlap;
 pub mod sequence;
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 use crate::config::{EvictionPolicy, ServingConfig};
 use crate::kvcache::{Alloc, KvCacheManager};
@@ -40,6 +55,7 @@ use crate::trace::{Trace, TurnEvent};
 use crate::workload::Workflow;
 
 use executor::{ChunkSlot, DecodeSlot, Executor, PrefillOut};
+use overlap::{Overlap, TransferKind};
 use sequence::{PendingTurn, PrefillState, RunningSeq, WfState};
 
 /// The single-threaded continuous-batching serving engine (see the
@@ -63,6 +79,18 @@ pub struct Engine<E: Executor> {
     /// which is what keeps store-less runs bit-identical to pre-store
     /// behavior).
     store: Option<StoreHandle>,
+    /// Cooperative-overlap state: `Some` iff `cfg.overlap` — the
+    /// per-replica task executor plus the ledger of in-flight gating
+    /// transfers.  `None` leaves every overlap branch dormant, which
+    /// is what keeps `--overlap off` runs bit-identical to the serial
+    /// loop.
+    ovl: Option<Overlap>,
+    /// Prefetch-scan memo: turns (keyed by workflow, turn index and
+    /// context length — stable, deterministic identity) already probed
+    /// for staging since the last local store publish.  Stops
+    /// `issue_prefetches` from re-walking the same candidates' block
+    /// hashes and re-taking the store mutex every engine step.
+    prefetch_seen: HashSet<(usize, usize, usize)>,
     stats: ServingStats,
     trace: Option<Trace>,
 }
@@ -80,6 +108,7 @@ impl<E: Executor> Engine<E> {
         assert_eq!(cfg.mode, exec.mode(), "engine/executor mode mismatch");
         let kv = KvCacheManager::new(&cfg, kv_bytes_per_token, n_models);
         let sched = sched::make(cfg.sched_policy);
+        let ovl = cfg.overlap.then(Overlap::new);
         Engine {
             cfg,
             exec,
@@ -91,6 +120,8 @@ impl<E: Executor> Engine<E> {
             future: VecDeque::new(),
             q: Queues::new(),
             store: None,
+            ovl,
+            prefetch_seen: HashSet::new(),
             stats: ServingStats::new(),
             trace: None,
         }
@@ -166,13 +197,30 @@ impl<E: Executor> Engine<E> {
             }
             self.surface_arrivals();
             self.q.surface_delayed(self.now);
+            // Overlap mode: integrate every transfer whose virtual
+            // completion the clock has passed — their sequences join
+            // the batch before this step's admission and decode, so
+            // the decode batch re-forms around them each tick.
+            self.integrate_transfers();
             if self.q.waiting.is_empty() && self.q.running.is_empty() {
-                // Idle: jump to the next arrival or tool completion.
+                // Idle: jump to the next arrival, tool completion or
+                // (overlap mode) transfer completion.
                 let next_arrival =
                     self.future.front().map(|&w| self.wfs[w].spec.arrival);
                 let next_ready = self.q.next_ready();
-                match [next_arrival, next_ready].into_iter().flatten().min_by(f64::total_cmp) {
+                let next_xfer = self.ovl.as_ref().and_then(Overlap::next_gating);
+                match [next_arrival, next_ready, next_xfer]
+                    .into_iter()
+                    .flatten()
+                    .min_by(f64::total_cmp)
+                {
                     Some(t) => {
+                        if next_xfer.is_some_and(|x| x <= t) {
+                            // The jump is (co-)bound by a transfer:
+                            // this wait is transfer stall, the time
+                            // the serial path charges inline.
+                            self.record_stall(t);
+                        }
                         self.now = self.now.max(t);
                         continue;
                     }
@@ -184,12 +232,28 @@ impl<E: Executor> Engine<E> {
                 .as_mut()
                 .unwrap()
                 .record(self.q.waiting.len() as f64);
-            self.admit();
+            let step_start = self.now;
+            if self.cfg.overlap {
+                self.admit_overlap();
+            } else {
+                self.admit();
+            }
             self.issue_prefetches();
             if self.cfg.prefill_chunk == 0 {
                 self.decode_step();
             } else {
                 self.chunked_step();
+            }
+            // Overlap guard: the step made no progress (batch empty,
+            // clock parked) because every admissible turn is gated on
+            // KV that in-flight restores hold — jump to the next
+            // completion instead of spinning.  Stall time, same as an
+            // idle-jump bound by a transfer.
+            if self.cfg.overlap && self.q.running.is_empty() && self.now == step_start {
+                if let Some(t) = self.ovl.as_ref().and_then(Overlap::next_gating) {
+                    self.record_stall(t);
+                    self.now = self.now.max(t);
+                }
             }
             // Admission/growth attempts that failed with NoSpace may
             // still have evicted prefix-cache payloads (the failure
@@ -211,6 +275,14 @@ impl<E: Executor> Engine<E> {
         // This replica no longer constrains the cluster's clock fence.
         if let Some(h) = &self.store {
             h.finish();
+        }
+        // Overlap teardown: run remaining background tasks (write-back
+        // and staging completions past the last retirement) to their
+        // deadlines and fold the executor's counters into the stats.
+        // Asserts every gating transfer was integrated and no task
+        // leaked.
+        if let Some(mut o) = self.ovl.take() {
+            self.stats.tasks_spawned = o.finish().spawned;
         }
         self.stats.wall_seconds = self.now;
         self.stats.peak_kv_bytes = self.kv.pool.peak_bytes();
@@ -384,6 +456,208 @@ impl<E: Executor> Engine<E> {
         }
     }
 
+    /// Record a stall: the replica is about to jump its clock to `t`
+    /// purely to wait on an in-flight gating transfer.
+    fn record_stall(&mut self, t: f64) {
+        let d = (t - self.now).max(0.0);
+        self.stats.stalled_transfer_time += d;
+        if let Some(o) = self.ovl.as_mut() {
+            o.stalled += d;
+        }
+    }
+
+    /// Overlap-mode admission: the same policy loop, KV mechanics and
+    /// budget/stat accounting as [`Engine::admit`], except that
+    /// admission-time transfers (swap-ins of parked contexts, swap-tier
+    /// block restores, store restores) are issued as tasks on the
+    /// cooperative executor instead of being charged inline — the turn
+    /// reserves its KV and a batch slot now, and joins the running
+    /// batch when the clock passes the transfer's completion
+    /// ([`Engine::integrate_transfers`]).  Transfer-free admissions
+    /// take exactly the serial tail, so a run with no transfers is
+    /// step-for-step identical to `--overlap off`.
+    fn admit_overlap(&mut self) {
+        let mut prefill_budget = self.cfg.max_prefill_tokens;
+        let store_coverage = self.store_coverage_memo();
+        let mut attempts = self.q.waiting.len();
+        // In-flight gating transfers hold reserved batch slots: count
+        // them against `max_batch` so integration never overfills the
+        // decode batch.
+        while self.q.running.len() + self.ovl.as_ref().map_or(0, |o| o.gating_count())
+            < self.cfg.max_batch
+            && attempts > 0
+        {
+            attempts -= 1;
+            let probe = match &store_coverage {
+                Some(memo) => CacheProbe::with_store(&self.kv, memo),
+                None => CacheProbe::new(&self.kv),
+            };
+            let Some(pick) = self.sched.pick_next(&self.q.waiting, &probe) else { break };
+            let idx = pick.idx;
+            if pick.uncached_estimate > prefill_budget
+                && prefill_budget < self.cfg.max_prefill_tokens
+            {
+                break;
+            }
+            let mut turn = self.q.waiting.remove(idx).expect("pick_next index in range");
+            let model_id = turn.model_id;
+            let seq_id = self.next_seq_id;
+
+            // Swap-restored turns: issue the PCIe restore as a gating
+            // transfer; the turn rejoins the batch with its parked
+            // handle once the transfer lands.
+            if let Some((handle, bytes)) = turn.swapped.take() {
+                match self.kv.begin_sequence(seq_id, model_id, &turn.prompt) {
+                    Alloc::Ok(adm) => {
+                        self.drop_snapshots(&adm.dropped_snapshots);
+                        self.kv.swap.swap_in(bytes).expect("swap tier accounting");
+                        self.next_seq_id += 1;
+                        let dur = self.exec.swap_in_cost(bytes);
+                        let now = self.now;
+                        self.ovl
+                            .as_mut()
+                            .expect("overlap admission requires overlap state")
+                            .issue(TransferKind::SwapIn { turn, seq_id, handle }, now, dur);
+                        continue;
+                    }
+                    Alloc::NoSpace => {
+                        turn.swapped = Some((handle, bytes));
+                        self.check_admissible_when_idle(&turn);
+                        self.q.waiting.insert(idx, turn);
+                        break;
+                    }
+                }
+            }
+
+            match self.kv.begin_sequence(seq_id, model_id, &turn.prompt) {
+                Alloc::Ok(adm) => {
+                    self.next_seq_id += 1;
+                    self.drop_snapshots(&adm.dropped_snapshots);
+                    // Accumulate every transfer this admission needs
+                    // into one gating task: swap-tier block restores
+                    // plus the store restore ride the same window.
+                    let mut transfer = 0.0f64;
+                    if adm.swap_in_bytes > 0 {
+                        transfer += self.exec.swap_in_cost(adm.swap_in_bytes);
+                    }
+                    let (base, cached) = match adm.snapshot {
+                        Some((snap, covered)) => (Some(snap), covered),
+                        None => (None, 0),
+                    };
+                    let mut cached = cached.min(adm.cached_tokens);
+                    // The store hit is consumed at issue time (blocks
+                    // touched, stats recorded) — only the time charge
+                    // moves off the critical path.
+                    if let Some(h) = &self.store {
+                        if let Some(hit) = h.begin_restore(&turn.prompt, cached, self.now) {
+                            let cost =
+                                self.exec.store_restore_cost(hit.host_bytes, hit.disk_bytes);
+                            transfer += cost;
+                            self.stats.store_restored_tokens += (hit.tokens - cached) as u64;
+                            self.stats.store_restored_bytes += hit.bytes();
+                            self.stats
+                                .store_restore_latency
+                                .as_mut()
+                                .unwrap()
+                                .record(cost);
+                            if hit.disk_bytes > 0 {
+                                self.stats.store_disk_hits += 1;
+                            } else {
+                                self.stats.store_host_hits += 1;
+                            }
+                            if hit.remote {
+                                self.stats.store_remote_hits += 1;
+                            }
+                            cached = hit.tokens;
+                        }
+                    }
+                    let uncached = turn.prompt.len() - cached;
+                    prefill_budget = prefill_budget.saturating_sub(uncached);
+                    self.stats.prefill_tokens += uncached as u64;
+                    self.stats.cached_prefill_tokens += cached as u64;
+                    if turn.was_preempted {
+                        self.stats.recomputed_tokens += uncached as u64;
+                    }
+                    if transfer > 0.0 {
+                        // Privatize the prefix-cache snapshot across
+                        // the in-flight window: a payload displacement
+                        // (identical context re-published) before
+                        // integration must not invalidate it.  Exactly
+                        // what chunked admission does across steps.
+                        let base = base.map(|b| self.exec.snapshot(b));
+                        let now = self.now;
+                        self.ovl
+                            .as_mut()
+                            .expect("overlap admission requires overlap state")
+                            .issue(
+                                TransferKind::StoreRestore { turn, seq_id, cached, base },
+                                now,
+                                transfer,
+                            );
+                    } else if self.cfg.prefill_chunk == 0 {
+                        self.admit_atomic(turn, seq_id, model_id, cached, base);
+                    } else {
+                        self.admit_chunked(turn, seq_id, model_id, cached, base);
+                    }
+                }
+                Alloc::NoSpace => {
+                    self.check_admissible_when_idle(&turn);
+                    self.q.waiting.insert(idx, turn);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Drive the cooperative runtime to the engine's clock and
+    /// integrate every gating transfer that has completed: swap-ins
+    /// rejoin the batch with their parked handle; store restores run
+    /// their (compute) prefill tail and join.  Loops because an
+    /// integration prefill advances the clock, which can carry further
+    /// transfers past their completion times.
+    fn integrate_transfers(&mut self) {
+        if self.ovl.is_none() {
+            return;
+        }
+        loop {
+            let (done, stalled_total) = {
+                let ovl = self.ovl.as_mut().expect("overlap state present");
+                (ovl.drain(self.now), ovl.stalled)
+            };
+            if done.is_empty() {
+                return;
+            }
+            for t in done {
+                // The portion of the flight that genuinely hid behind
+                // compute: full duration minus any replica stall that
+                // accrued while it flew.
+                let stalled_in_flight = stalled_total - t.stall_mark;
+                self.stats.overlapped_transfer_time +=
+                    ((t.complete_at - t.issued_at) - stalled_in_flight).max(0.0);
+                match t.kind {
+                    TransferKind::SwapIn { turn, seq_id, handle } => {
+                        let model_id = turn.model_id;
+                        self.spawn_running(seq_id, turn, model_id, handle);
+                    }
+                    TransferKind::StoreRestore { turn, seq_id, cached, base } => {
+                        let model_id = turn.model_id;
+                        if self.cfg.prefill_chunk == 0 {
+                            self.admit_atomic(turn, seq_id, model_id, cached, base);
+                        } else {
+                            self.admit_chunked(turn, seq_id, model_id, cached, base);
+                        }
+                        // Integration consumed the transfer's private
+                        // base fork (atomic prefill forked from it;
+                        // chunked admission took its own): release it.
+                        if let Some(b) = base {
+                            self.exec.drop_snapshot(b);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Pre-scheduler admission tail: prefill the whole uncached suffix
     /// in one executor call, charged to the clock before anything else
     /// runs (the head-of-line behavior chunked prefill removes).
@@ -485,16 +759,53 @@ impl<E: Executor> Engine<E> {
             return;
         }
         let Some(h) = &self.store else { return };
+        // Staging completion times, to spawn background tasks for once
+        // the queue walk (and its borrows) ends.
+        let mut staged: Vec<f64> = Vec::new();
         for turn in self.q.waiting.iter().take(PREFETCH_SCAN) {
             if turn.swapped.is_some() {
                 continue; // fully resident on its parked handle
             }
+            // Scan memo: a candidate probed once — staged, or found
+            // unstageable — is not re-probed on every subsequent step;
+            // the memo clears whenever this replica publishes to the
+            // store, since new contents can overturn a "nothing
+            // stageable" verdict.  (Cross-replica publishes are not
+            // observed; a candidate they would unblock is re-probed
+            // after the next local publish — a deliberately cheap
+            // approximation for a purely advisory optimization.)  The
+            // key is the turn's deterministic identity; the length
+            // distinguishes a requeued turn whose context grew.
+            let key = (turn.wf_idx, turn.turn_idx, turn.prompt.len());
+            if self.prefetch_seen.contains(&key) {
+                self.stats.store_prefetch_skips += 1;
+                continue;
+            }
+            self.prefetch_seen.insert(key);
             // `stage` finds the unstaged disk blocks, prices the
             // transfer and marks them in one locked pass; false means
             // nothing was stageable (or another replica beat us), so
             // the prefetch counter stays exact.
-            if h.stage(&turn.prompt, self.now, &|bytes| self.exec.store_stage_cost(bytes)) {
+            let cost = std::cell::Cell::new(0.0f64);
+            let priced = &|bytes| {
+                let c = self.exec.store_stage_cost(bytes);
+                cost.set(c);
+                c
+            };
+            if h.stage(&turn.prompt, self.now, priced) {
                 self.stats.store_prefetches += 1;
+                staged.push(self.now + cost.get());
+            }
+        }
+        // Overlap mode: model each staging transfer as a background
+        // task on the cooperative executor.  The store's staged-until
+        // bookkeeping already prices the latency; the task makes the
+        // NVMe traffic visible to the runtime's counters and counts as
+        // overlapped time (staging never blocks the replica).
+        if let Some(ovl) = self.ovl.as_mut() {
+            for until in staged {
+                self.stats.overlapped_transfer_time += (until - self.now).max(0.0);
+                ovl.spawn_background(until);
             }
         }
     }
@@ -513,6 +824,17 @@ impl<E: Executor> Engine<E> {
         // Write-back is the PCIe hop in the other direction.
         let visible_at = self.now + self.exec.store_restore_cost(bytes, 0);
         h.publish(ctx, self.now, visible_at);
+        // New store contents invalidate the prefetch scan's
+        // already-probed verdicts (see `issue_prefetches`).
+        self.prefetch_seen.clear();
+        // Overlap mode: the D2H write-back becomes a background task —
+        // visibility timing is unchanged (the store models it), but
+        // the transfer shows up in the runtime's task counters and as
+        // overlapped time, since it never blocked the replica.
+        if let Some(ovl) = self.ovl.as_mut() {
+            self.stats.overlapped_transfer_time += (visible_at - self.now).max(0.0);
+            ovl.spawn_background(visible_at);
+        }
     }
 
     /// Fatal-misconfiguration guard: if the system is idle (nothing
@@ -520,6 +842,12 @@ impl<E: Executor> Engine<E> {
     /// cannot be admitted, it never will be — fail loudly instead of
     /// spinning.
     fn check_admissible_when_idle(&self, turn: &PendingTurn) {
+        // Overlap mode: in-flight gating transfers hold KV and batch
+        // slots but are invisible in `running` — their integration
+        // frees capacity, so the system is not actually wedged.
+        if self.ovl.as_ref().is_some_and(Overlap::has_gating) {
+            return;
+        }
         if self.q.running.is_empty() {
             panic!(
                 "KV pool ({} blocks of {} tokens) cannot hold a {}-token prompt \
@@ -1250,6 +1578,17 @@ mod tests {
         max_batch: usize,
         wcfg: &WorkloadConfig,
     ) -> ServingStats {
+        run_with_store_overlap(host_bytes, disk_bytes, prefetch, max_batch, false, wcfg)
+    }
+
+    fn run_with_store_overlap(
+        host_bytes: u64,
+        disk_bytes: u64,
+        prefetch: bool,
+        max_batch: usize,
+        overlap: bool,
+        wcfg: &WorkloadConfig,
+    ) -> ServingStats {
         use crate::store::{SnapshotStore, StoreHandle, TieredStore};
         use std::sync::Arc;
         let scfg = ServingConfig {
@@ -1258,6 +1597,7 @@ mod tests {
             store_host_bytes: host_bytes,
             store_disk_bytes: disk_bytes,
             store_prefetch: prefetch,
+            overlap,
             ..Default::default()
         };
         let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
@@ -1304,6 +1644,134 @@ mod tests {
         assert!(s.store_disk_hits > 0, "demoted blocks must restore from disk");
         assert!(s.store_prefetches > 0, "queued turns must trigger staging");
         assert!(s.store_restore_latency.as_ref().unwrap().count() >= s.store_hits());
+    }
+
+    #[test]
+    fn overlap_on_matches_off_without_transfers() {
+        // Recompute eviction, no store: there are no modeled transfers
+        // at all, so the overlap admission path degenerates to the
+        // serial tail step for step — the runs must be fully
+        // bit-identical, overlap counters included (all zero).
+        let mk = |overlap: bool| {
+            let scfg = ServingConfig {
+                kv_pool_bytes: 8 << 20,
+                overlap,
+                ..Default::default()
+            };
+            let wcfg = WorkloadConfig {
+                n_models: 4,
+                qps: 1.0,
+                n_requests: 32,
+                seed: 3,
+                ..Default::default()
+            };
+            let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+            Engine::new(scfg, 2048, 4, exec).run(generate(&wcfg))
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert_eq!(on, off, "transfer-free overlap run must be bit-identical to serial");
+        assert_eq!(on.stalled_transfer_time, 0.0);
+        assert_eq!(on.overlapped_transfer_time, 0.0);
+        assert_eq!(on.tasks_spawned, 0);
+    }
+
+    #[test]
+    fn overlap_with_store_completes_and_overlaps() {
+        // Constant eviction + store restores on every next turn: the
+        // overlap run must complete identically-counted work while
+        // moving transfer time off the critical path.
+        let wcfg =
+            WorkloadConfig { n_models: 4, qps: 1.0, n_requests: 32, seed: 3, ..Default::default() };
+        let on = run_with_store_overlap(256 << 20, 0, false, 16, true, &wcfg);
+        let off = run_with_store_overlap(256 << 20, 0, false, 16, false, &wcfg);
+        assert_eq!(on.completed_requests, 32);
+        assert_eq!(off.completed_requests, 32);
+        assert!(on.store_hits() > 0, "overlap run must still restore from the store");
+        assert!(on.overlapped_transfer_time > 0.0, "restores must overlap with compute");
+        assert!(on.tasks_spawned > 0, "transfers and write-backs must run as tasks");
+        // Transfers off the critical path must not slow the run down
+        // (small tolerance: scheduling divergence can shift individual
+        // retirements even as total transfer stalls shrink).
+        assert!(
+            on.wall_seconds <= off.wall_seconds * 1.05,
+            "overlap wall {} vs serial wall {}",
+            on.wall_seconds,
+            off.wall_seconds
+        );
+    }
+
+    #[test]
+    fn overlap_swap_mode_completes() {
+        // Swap eviction under pressure: parked contexts ride SwapIn
+        // gating transfers back into the batch.
+        let scfg = ServingConfig {
+            mode: ServingMode::Baseline,
+            kv_pool_bytes: 4 << 20,
+            eviction: EvictionPolicy::Swap,
+            overlap: true,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            n_models: 8,
+            qps: 1.0,
+            n_requests: 32,
+            seed: 3,
+            ..Default::default()
+        };
+        let exec = SimExecutor::new(CostModel::default(), ServingMode::Baseline);
+        let s = Engine::new(scfg, 2048, 8, exec).run(generate(&wcfg));
+        assert_eq!(s.completed_requests, 32);
+        if s.swap_ins > 0 {
+            assert!(s.overlapped_transfer_time + s.stalled_transfer_time > 0.0);
+        }
+    }
+
+    #[test]
+    fn overlap_chunked_prefill_with_store_completes() {
+        // Chunked integration path: restored turns enter the chunked
+        // prefill pipeline after their transfer lands.
+        use crate::store::{SnapshotStore, StoreHandle, TieredStore};
+        use std::sync::Arc;
+        let scfg = ServingConfig {
+            kv_pool_bytes: 4 << 20,
+            prefill_chunk: 96,
+            store_host_bytes: 64 << 20,
+            overlap: true,
+            ..Default::default()
+        };
+        let wcfg =
+            WorkloadConfig { n_models: 4, qps: 1.0, n_requests: 24, seed: 5, ..Default::default() };
+        let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+        let mut engine = Engine::new(scfg.clone(), 2048, 4, exec);
+        let store: Arc<dyn SnapshotStore> =
+            Arc::new(TieredStore::new(64 << 20, 0, scfg.block_tokens, 2048));
+        engine.attach_store(StoreHandle::new(store, None, 0));
+        let s = engine.run_in_place(generate(&wcfg));
+        assert_eq!(s.completed_requests, 24);
+        assert!(s.prefill_chunks > 0);
+        assert_eq!(engine.kv().active_sequences(), 0, "leaked sequences");
+        assert_eq!(
+            engine.executor().live_snapshots(),
+            engine.kv().live_payloads() as u64,
+            "leaked snapshot handles"
+        );
+    }
+
+    #[test]
+    fn prefetch_scan_memo_skips_reprobes() {
+        // Same config as the disk-tier/prefetch test: a tiny batch
+        // keeps turns queued across many steps, so without the memo
+        // the same candidates are re-probed every tick.
+        let wcfg =
+            WorkloadConfig { n_models: 4, qps: 2.0, n_requests: 24, seed: 9, ..Default::default() };
+        let s = run_with_store(2 * 16 * 2048, 512 << 20, true, 2, &wcfg);
+        assert_eq!(s.completed_requests, 24);
+        assert!(s.store_prefetches > 0, "first probes must still stage");
+        assert!(
+            s.store_prefetch_skips > 0,
+            "queued turns re-scanned across steps must hit the memo"
+        );
     }
 
     #[test]

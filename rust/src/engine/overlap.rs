@@ -1,0 +1,172 @@
+//! Engine-side state for `--overlap on`: in-flight modeled transfers
+//! tracked as tasks on the per-replica cooperative runtime
+//! (`crate::runtime::exec`).
+//!
+//! The division of labor: the runtime knows how to sleep until a
+//! virtual deadline and wake in deterministic order; this module knows
+//! what a transfer *is* to the serving engine.  Two shapes exist:
+//!
+//!   * **Gating** transfers ([`TransferKind`]) carry an admitted turn
+//!     across the transfer window — a swap-in restoring a parked
+//!     device handle, or a store restore downloading a stored prefix.
+//!     The turn's KV blocks are allocated at issue; the sequence joins
+//!     the running batch only when the engine's clock passes the
+//!     completion time ([`Overlap::drain`]).  Until then other
+//!     sequences keep decoding — that concurrency is the overlap win.
+//!   * **Background** tasks (write-back, prefetch staging) model
+//!     transfers whose latency the store already accounts for via
+//!     visibility times; they occupy the executor (and the
+//!     `tasks_spawned` counter) but gate nothing.
+//!
+//! Stall accounting: when the replica has nothing runnable and jumps
+//! its clock to the next transfer completion, that wait is *stalled*
+//! time (the serial path would have charged it inline anyway).  Each
+//! transfer snapshots the cumulative stall at issue
+//! ([`InFlightTransfer::stall_mark`]); on completion the engine
+//! credits `(duration - stall accrued during flight).max(0)` as
+//! *overlapped* time — the portion of the transfer that genuinely hid
+//! behind compute.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::engine::sequence::PendingTurn;
+use crate::runtime::exec::{ExecMetrics, LocalExecutor};
+
+/// What a gating transfer delivers when it completes.
+pub(crate) enum TransferKind {
+    /// Swap-tier restore of a fully-cached parked context: the turn
+    /// rejoins the batch with its device `handle`, no prefill needed.
+    SwapIn {
+        /// The admitted turn riding the transfer.
+        turn: PendingTurn,
+        /// Sequence id reserved (and KV allocated) at issue.
+        seq_id: u64,
+        /// Parked device cache handle, live across the window.
+        handle: u64,
+    },
+    /// Snapshot-store restore (plus any swap-tier block restores the
+    /// same admission charged): on completion the turn prefills its
+    /// uncached suffix and joins the batch.
+    StoreRestore {
+        /// The admitted turn riding the transfer.
+        turn: PendingTurn,
+        /// Sequence id reserved (and KV allocated) at issue.
+        seq_id: u64,
+        /// Prompt tokens covered by cache + restore (settled at issue;
+        /// the store hit was consumed then).
+        cached: usize,
+        /// Engine-private fork of the prefix-cache base snapshot,
+        /// taken at issue so a payload displacement during the flight
+        /// cannot invalidate it.  Dropped after integration.
+        base: Option<u64>,
+    },
+}
+
+/// One gating transfer in flight.
+pub(crate) struct InFlightTransfer {
+    pub kind: TransferKind,
+    pub issued_at: f64,
+    pub complete_at: f64,
+    /// Cumulative replica stall time at issue (see module docs).
+    pub stall_mark: f64,
+}
+
+/// Per-replica overlap state: the cooperative executor plus the
+/// engine's ledger of gating transfers.
+pub(crate) struct Overlap {
+    rt: LocalExecutor,
+    /// Completion order, filled by transfer tasks as their virtual
+    /// deadline fires; drained by the engine each step.  (Task wake
+    /// order is deterministic, so so is this.)
+    outbox: Arc<Mutex<Vec<u64>>>,
+    in_flight: HashMap<u64, InFlightTransfer>,
+    next_id: u64,
+    /// Cumulative virtual seconds this replica stalled waiting on a
+    /// gating transfer (mirrors `ServingStats::stalled_transfer_time`).
+    pub stalled: f64,
+}
+
+impl Overlap {
+    pub fn new() -> Self {
+        Overlap {
+            rt: LocalExecutor::new(),
+            outbox: Arc::default(),
+            in_flight: HashMap::new(),
+            next_id: 0,
+            stalled: 0.0,
+        }
+    }
+
+    /// Gating transfers currently in flight (each owns a reserved
+    /// batch slot: admission counts them against `max_batch`).
+    pub fn gating_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn has_gating(&self) -> bool {
+        !self.in_flight.is_empty()
+    }
+
+    /// Earliest completion among gating transfers — the time an idle
+    /// replica must jump to.
+    pub fn next_gating(&self) -> Option<f64> {
+        self.in_flight.values().map(|t| t.complete_at).min_by(f64::total_cmp)
+    }
+
+    /// Issue a gating transfer: spawn a task that sleeps until
+    /// `now + duration` in virtual time and then reports completion.
+    pub fn issue(&mut self, kind: TransferKind, now: f64, duration: f64) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let complete_at = now + duration;
+        self.in_flight.insert(
+            id,
+            InFlightTransfer { kind, issued_at: now, complete_at, stall_mark: self.stalled },
+        );
+        let timers = self.rt.timers();
+        let outbox = Arc::clone(&self.outbox);
+        self.rt.spawn(async move {
+            timers.sleep_until(complete_at).await;
+            outbox.lock().expect("outbox poisoned").push(id);
+        });
+    }
+
+    /// Spawn a non-gating background task (write-back, prefetch
+    /// staging) that occupies the executor until `until`.
+    pub fn spawn_background(&mut self, until: f64) {
+        let timers = self.rt.timers();
+        self.rt.spawn(async move {
+            timers.sleep_until(until).await;
+        });
+    }
+
+    /// Advance the runtime to the engine's clock and return every
+    /// gating transfer that completed, in completion (wake) order.
+    pub fn drain(&mut self, now: f64) -> Vec<InFlightTransfer> {
+        self.rt.advance_to(now);
+        let ids: Vec<u64> = self.outbox.lock().expect("outbox poisoned").drain(..).collect();
+        ids.into_iter()
+            .map(|id| self.in_flight.remove(&id).expect("completion matches in-flight"))
+            .collect()
+    }
+
+    /// End-of-run teardown: run remaining background tasks to their
+    /// deadlines (their virtual completion may lie past the last
+    /// retirement, like the store's own visibility horizon) and return
+    /// the executor's counters.  Gating transfers must all have been
+    /// integrated by now — the run loop cannot end with a turn parked
+    /// on a transfer.
+    pub fn finish(&mut self) -> ExecMetrics {
+        assert!(self.in_flight.is_empty(), "run ended with gating transfers in flight");
+        // A task spawned after the last clock advance has not had its
+        // first poll yet (so its sleep is not registered): poll ready
+        // tasks first, then run the wheel dry.
+        self.rt.run_ready();
+        while let Some(t) = self.rt.next_deadline() {
+            self.rt.advance_to(t);
+        }
+        debug_assert_eq!(self.rt.live_tasks(), 0, "cooperative tasks leaked past the run");
+        self.rt.metrics()
+    }
+}

@@ -17,8 +17,10 @@
 //!     admission scheduling and chunked prefill — see `sched` — and
 //!     agentic workload drivers), the multi-replica cluster layer that
 //!     shards workflow streams across engines, the tiered KV snapshot
-//!     store shared across replicas (see `store`), and the PJRT
-//!     runtime that executes the artifacts.
+//!     store shared across replicas (see `store`), the per-replica
+//!     cooperative task runtime that overlaps modeled store/swap
+//!     transfers with compute (see `runtime::exec`; `--overlap on`),
+//!     and the PJRT runtime that executes the artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation; the `icarus` binary is self-contained afterwards.

@@ -12,6 +12,11 @@
 //!            the tiered KV snapshot store (one instance shared by all
 //!            replicas; 0/0 = off) and `--store-prefetch on` stages
 //!            disk-tier entries for queued turns before admission.
+//!            `--overlap on` runs modeled store/swap transfers as
+//!            tasks on a per-replica cooperative executor so they
+//!            overlap with compute instead of stalling the replica
+//!            (off = the serial charging path, bit-identical to the
+//!            pre-overlap engine).
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
 //!            `--threads T` runs the sweep points across T worker
 //!            threads (near-linear wall-clock speedup for the grids;
@@ -29,6 +34,7 @@
 //!   icarus serve --replicas 4 --cluster-routing least_loaded --qps 2.0
 //!   icarus serve --sched-policy cache_aware --prefill-chunk 256 --qps 1.5
 //!   icarus serve --replicas 4 --store-host-bytes 268435456 --store-prefetch on
+//!   icarus serve --store-host-bytes 268435456 --overlap on --qps 1.5
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
 //!   icarus sweep --threads 4 --json sweep.json
 
@@ -111,6 +117,7 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         store_host_bytes: a.u64("store-host-bytes", 0)?,
         store_disk_bytes: a.u64("store-disk-bytes", 0)?,
         store_prefetch: a.get("store-prefetch").unwrap_or("off") == "on",
+        overlap: a.get("overlap").unwrap_or("off") == "on",
         prefix_caching: a.get("prefix-caching").unwrap_or("on") != "off",
         replicas: a.usize("replicas", 1)?,
         cluster_routing: ClusterRouting::parse(a.get("cluster-routing").unwrap_or("round_robin"))?,
@@ -176,6 +183,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 scfg.store_host_bytes + scfg.store_disk_bytes == 0,
                 "--store-host-bytes/--store-disk-bytes need --executor sim \
                  (no PJRT store transport yet)"
+            );
+            anyhow::ensure!(
+                !scfg.overlap,
+                "--overlap on needs --executor sim (PJRT durations are measured \
+                 wall time, not modeled transfers the virtual-time reactor can overlap)"
             );
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let config = a.get("config").unwrap_or("serve-small");

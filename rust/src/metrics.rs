@@ -195,6 +195,24 @@ pub struct ServingStats {
     pub preemptions: u64,
     /// Prefill chunks executed (0 unless chunked prefill is enabled).
     pub prefill_chunks: u64,
+    /// Prefetch-scan probes skipped because the candidate was already
+    /// probed (staged or found unstageable) since the last local store
+    /// publish — the scan memo's savings signal.
+    pub store_prefetch_skips: u64,
+    /// Virtual seconds the replica spent stalled with an empty running
+    /// batch waiting on an in-flight modeled transfer (`--overlap on`
+    /// only; the serial path charges transfers inline and never
+    /// records a stall here).
+    pub stalled_transfer_time: f64,
+    /// Virtual seconds of modeled transfer time that ran concurrently
+    /// with compute instead of on the replica's critical path
+    /// (`--overlap on` only) — the overlap win the cooperative runtime
+    /// exists for.
+    pub overlapped_transfer_time: f64,
+    /// Tasks spawned on the per-replica cooperative executor
+    /// (`--overlap on` only): transfer completions plus background
+    /// write-back/prefetch tasks.
+    pub tasks_spawned: u64,
     /// Peak KV pool usage in bytes (the memory-explosion signal).
     pub peak_kv_bytes: u64,
     /// Simulated (or measured) seconds from run start to last retirement.
@@ -256,6 +274,10 @@ impl ServingStats {
         self.store_prefetches += other.store_prefetches;
         self.preemptions += other.preemptions;
         self.prefill_chunks += other.prefill_chunks;
+        self.store_prefetch_skips += other.store_prefetch_skips;
+        self.stalled_transfer_time += other.stalled_transfer_time;
+        self.overlapped_transfer_time += other.overlapped_transfer_time;
+        self.tasks_spawned += other.tasks_spawned;
         self.peak_kv_bytes += other.peak_kv_bytes;
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
     }
@@ -331,6 +353,10 @@ impl ServingStats {
             ("store_restore_latency", h(&self.store_restore_latency)),
             ("preemptions", num(self.preemptions as f64)),
             ("prefill_chunks", num(self.prefill_chunks as f64)),
+            ("store_prefetch_skips", num(self.store_prefetch_skips as f64)),
+            ("stalled_transfer_time", num(self.stalled_transfer_time)),
+            ("overlapped_transfer_time", num(self.overlapped_transfer_time)),
+            ("tasks_spawned", num(self.tasks_spawned as f64)),
             ("peak_kv_bytes", num(self.peak_kv_bytes as f64)),
             ("throughput_tok_s", num(self.throughput_tok_s())),
             ("cache_hit_rate", num(self.cache_hit_rate())),

@@ -1,0 +1,251 @@
+//! The per-replica local executor: task storage, the FIFO run queue
+//! and the glue that drives tasks from the virtual clock.
+
+use std::collections::{HashMap, VecDeque};
+use std::future::Future;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Waker};
+
+use super::task::{RunQueue, Task, TaskId, WakeState};
+use super::timer::Timers;
+
+/// Executor lifetime counters, for `ServingStats::tasks_spawned` and
+/// the executor-invariant property test.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecMetrics {
+    /// Tasks ever spawned on this executor.
+    pub spawned: u64,
+    /// Tasks polled to completion (invariant after a drain: equals
+    /// `spawned` — no task leaked).
+    pub completed: u64,
+    /// Individual future polls executed.
+    pub polls: u64,
+    /// Timers registered via [`Timers::sleep_until`].
+    pub timers_registered: u64,
+    /// Timers fired by clock advances (invariant after a drain: equals
+    /// `timers_registered` — no timer lost, none fired twice).
+    pub timers_fired: u64,
+}
+
+/// A deterministic single-threaded cooperative executor driven by a
+/// virtual clock.
+///
+/// Unlike a wall-clock async runtime there is no I/O and no
+/// preemption: tasks only ever block on [`Timers::sleep_until`], and
+/// the owner advances the clock explicitly with
+/// [`LocalExecutor::advance_to`] — which fires due timers and then
+/// polls every runnable task until quiescent.  Scheduling is a pure
+/// function of the spawn order and the clock sequence (FIFO run queue,
+/// timers fired in `(deadline, registration)` order), which is what
+/// lets the serving engine keep its bit-identical determinism
+/// guarantees while overlapping modeled transfers with compute.
+///
+/// ```
+/// use icarus::runtime::exec::LocalExecutor;
+///
+/// let mut ex = LocalExecutor::new();
+/// let timers = ex.timers();
+/// ex.spawn(async move {
+///     timers.sleep_until(2.0).await;
+/// });
+/// ex.advance_to(1.0);
+/// assert_eq!(ex.live_tasks(), 1); // still sleeping
+/// ex.advance_to(2.0);
+/// assert_eq!(ex.live_tasks(), 0); // fired, ran to completion
+/// assert_eq!(ex.metrics().spawned, ex.metrics().completed);
+/// ```
+pub struct LocalExecutor {
+    tasks: HashMap<TaskId, Task>,
+    ready: RunQueue,
+    timers: Timers,
+    next_id: TaskId,
+    spawned: u64,
+    completed: u64,
+    polls: u64,
+}
+
+impl Default for LocalExecutor {
+    fn default() -> Self {
+        LocalExecutor::new()
+    }
+}
+
+impl LocalExecutor {
+    /// Fresh executor with an empty run queue and timer wheel, virtual
+    /// clock at 0.
+    pub fn new() -> Self {
+        LocalExecutor {
+            tasks: HashMap::new(),
+            ready: Arc::new(Mutex::new(VecDeque::new())),
+            timers: Timers::new(),
+            next_id: 0,
+            spawned: 0,
+            completed: 0,
+            polls: 0,
+        }
+    }
+
+    /// Handle on this executor's timer wheel, for futures to register
+    /// sleeps against.
+    pub fn timers(&self) -> Timers {
+        self.timers.clone()
+    }
+
+    /// Spawn a task.  It is polled for the first time on the next
+    /// [`LocalExecutor::advance_to`] (or [`LocalExecutor::run_ready`]),
+    /// in spawn order relative to other runnable tasks.
+    pub fn spawn(&mut self, fut: impl Future<Output = ()> + 'static) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let wake = Arc::new(WakeState {
+            id,
+            queued: AtomicBool::new(true),
+            queue: Arc::clone(&self.ready),
+        });
+        self.ready.lock().expect("run queue poisoned").push_back(id);
+        self.tasks.insert(id, Task { fut: Box::pin(fut), wake });
+        self.spawned += 1;
+    }
+
+    /// Advance the virtual clock to `now` (firing due timers) and poll
+    /// runnable tasks until the executor is quiescent *at `now`*: a
+    /// polled task may register a new sleep at or before `now` (e.g. a
+    /// chained hop into the past), which must fire within this same
+    /// advance — hence the fire/poll loop.  Panics if the clock runs
+    /// backwards — per-replica virtual time is monotone by
+    /// construction, and silently tolerating regressions would mask
+    /// engine bugs.
+    pub fn advance_to(&mut self, now: f64) {
+        loop {
+            self.timers.advance_to(now);
+            self.run_ready();
+            match self.timers.next_deadline() {
+                Some(d) if d <= now => continue,
+                _ => break,
+            }
+        }
+    }
+
+    /// Poll every runnable task (in FIFO wake order) until the run
+    /// queue is empty, without advancing the clock.
+    pub fn run_ready(&mut self) {
+        loop {
+            let id = self.ready.lock().expect("run queue poisoned").pop_front();
+            let Some(id) = id else { break };
+            let Some(task) = self.tasks.get_mut(&id) else {
+                continue; // stale wake for a completed task
+            };
+            // Clear `queued` before polling so a wake arriving during
+            // the poll re-enqueues the task instead of being lost.
+            task.wake.queued.store(false, Ordering::Release);
+            let waker = Waker::from(Arc::clone(&task.wake));
+            let mut cx = Context::from_waker(&waker);
+            self.polls += 1;
+            if task.fut.as_mut().poll(&mut cx).is_ready() {
+                self.tasks.remove(&id);
+                self.completed += 1;
+            }
+        }
+    }
+
+    /// Earliest pending timer deadline — the next virtual time at
+    /// which some task becomes runnable.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.timers.next_deadline()
+    }
+
+    /// Tasks spawned but not yet run to completion.
+    pub fn live_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Snapshot of the lifetime counters.
+    pub fn metrics(&self) -> ExecMetrics {
+        let (timers_registered, timers_fired) = self.timers.counters();
+        ExecMetrics {
+            spawned: self.spawned,
+            completed: self.completed,
+            polls: self.polls,
+            timers_registered,
+            timers_fired,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn tasks_run_in_spawn_order() {
+        let mut ex = LocalExecutor::new();
+        let order: Rc<RefCell<Vec<u32>>> = Rc::default();
+        for i in 0..4u32 {
+            let order = Rc::clone(&order);
+            ex.spawn(async move { order.borrow_mut().push(i) });
+        }
+        ex.run_ready();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3]);
+        assert_eq!(ex.live_tasks(), 0);
+        assert_eq!(ex.metrics().completed, 4);
+    }
+
+    #[test]
+    fn equal_deadlines_fire_in_registration_order() {
+        let mut ex = LocalExecutor::new();
+        let order: Rc<RefCell<Vec<u32>>> = Rc::default();
+        let timers = ex.timers();
+        for i in 0..3u32 {
+            let order = Rc::clone(&order);
+            let timers = timers.clone();
+            ex.spawn(async move {
+                timers.sleep_until(5.0).await;
+                order.borrow_mut().push(i);
+            });
+        }
+        ex.advance_to(4.999);
+        assert!(order.borrow().is_empty());
+        ex.advance_to(5.0);
+        assert_eq!(*order.borrow(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn chained_sleeps_and_counters_balance() {
+        let mut ex = LocalExecutor::new();
+        let timers = ex.timers();
+        ex.spawn(async move {
+            timers.sleep_until(1.0).await;
+            timers.sleep_until(3.0).await;
+            timers.sleep_until(2.0).await; // already past once reached
+        });
+        ex.advance_to(1.0);
+        assert_eq!(ex.next_deadline(), Some(3.0));
+        ex.advance_to(10.0);
+        assert_eq!(ex.live_tasks(), 0);
+        let m = ex.metrics();
+        assert_eq!(m.spawned, m.completed);
+        assert_eq!(m.timers_registered, m.timers_fired);
+        assert_eq!(m.timers_registered, 3);
+    }
+
+    #[test]
+    fn sleep_until_the_past_resolves() {
+        let mut ex = LocalExecutor::new();
+        let timers = ex.timers();
+        ex.advance_to(7.0);
+        ex.spawn(async move { timers.sleep_until(1.0).await });
+        ex.advance_to(7.0); // re-entrant at equal time
+        assert_eq!(ex.live_tasks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "virtual clock ran backwards")]
+    fn clock_regression_panics() {
+        let mut ex = LocalExecutor::new();
+        ex.advance_to(5.0);
+        ex.advance_to(4.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Deterministic cooperative task runtime, one per engine replica.
+//!
+//! The serving engine is a discrete-event simulation: virtual time
+//! advances by the durations the executor model reports.  Historically
+//! every modeled transfer (store restore, swap-in, write-back,
+//! prefetch staging) was charged *inline* on that clock — a PCIe/NVMe
+//! restore issued at admission stalled the whole replica.  This module
+//! provides the machinery to overlap those transfers with compute
+//! instead, without giving up determinism:
+//!
+//!   * [`LocalExecutor`] — a single-threaded executor: spawned futures
+//!     run cooperatively from a FIFO run queue, in spawn/wake order.
+//!   * [`Timers`] — the virtual-time reactor: a timer wheel keyed on
+//!     the engine's discrete-event clock.  [`Timers::sleep_until`]
+//!     yields until the engine's clock reaches the deadline; the
+//!     engine drives the wheel with [`LocalExecutor::advance_to`] as
+//!     its own clock moves.  No wall-clock time anywhere.
+//!
+//! Determinism is structural rather than incidental: the run queue is
+//! FIFO, timers fire in `(deadline, registration)` order, task ids are
+//! assigned in spawn order, and the wheel panics if virtual time ever
+//! runs backwards.  Given the same spawn sequence and the same clock
+//! sequence, the schedule is identical — which is what lets
+//! `--overlap on` runs stay run-to-run bit-identical (same seed →
+//! identical stats and trace) even though transfers and compute now
+//! interleave.
+//!
+//! The engine-facing half (what a transfer task *is*, how completions
+//! rejoin the batch) lives in `engine::overlap`; this module knows
+//! nothing about serving.
+
+mod local;
+mod task;
+mod timer;
+
+pub use local::{ExecMetrics, LocalExecutor};
+pub use task::TaskId;
+pub use timer::{Sleep, Timers};

@@ -1,0 +1,51 @@
+//! Tasks and wakers for the cooperative executor.
+//!
+//! A task is a pinned boxed future plus its wake state.  The wake
+//! state implements [`std::task::Wake`], so the executor never touches
+//! a raw waker vtable: waking a task pushes its id onto the executor's
+//! FIFO run queue, with an atomic `queued` flag coalescing duplicate
+//! wakes — a task is enqueued (and later polled) at most once per
+//! wake-up, which is one of the invariants the executor property test
+//! pins (`tests/property_invariants.rs`).
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::task::Wake;
+
+/// Identifier of a spawned task, unique within its executor (ids are
+/// never reused, so stale wakes are detectable).
+pub type TaskId = u64;
+
+/// The executor's FIFO run queue, shared with every task's waker.
+pub(crate) type RunQueue = Arc<Mutex<VecDeque<TaskId>>>;
+
+/// Per-task wake state: marks the task runnable by pushing its id onto
+/// the shared run queue.
+pub(crate) struct WakeState {
+    pub id: TaskId,
+    /// True while the task sits in the run queue awaiting its poll;
+    /// the swap in [`Wake::wake_by_ref`] coalesces duplicate wakes.
+    pub queued: AtomicBool,
+    pub queue: RunQueue,
+}
+
+impl Wake for WakeState {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        if !self.queued.swap(true, Ordering::AcqRel) {
+            self.queue.lock().expect("run queue poisoned").push_back(self.id);
+        }
+    }
+}
+
+/// A spawned task: the future and the wake state its `Waker`s share.
+pub(crate) struct Task {
+    pub fut: Pin<Box<dyn Future<Output = ()> + 'static>>,
+    pub wake: Arc<WakeState>,
+}

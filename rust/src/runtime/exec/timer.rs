@@ -1,0 +1,137 @@
+//! The virtual-time reactor: a timer wheel keyed on the engine's
+//! discrete-event clock.
+//!
+//! Nothing here reads wall-clock time.  Futures register deadlines in
+//! *virtual* seconds via [`Timers::sleep_until`]; the executor drives
+//! the wheel forward with `advance_to(now)` whenever the engine's
+//! clock moves, firing every due timer's waker.  Determinism falls out
+//! of the key order: timers fire sorted by `(deadline, registration
+//! seq)`, so equal deadlines resolve in registration order and no
+//! pointer or hash order ever influences the schedule.
+
+use std::collections::BTreeMap;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+/// Handle on an executor's virtual-time timer wheel.  Clones share the
+/// wheel: futures hold one to register sleeps, the executor holds one
+/// to advance the clock.
+#[derive(Clone)]
+pub struct Timers {
+    inner: Arc<Mutex<Wheel>>,
+}
+
+struct Wheel {
+    /// Pending timers keyed by `(deadline bits, registration seq)`:
+    /// `f64::to_bits` is order-preserving for the non-negative virtual
+    /// times the engine produces, and the seq breaks deadline ties in
+    /// registration order.
+    pending: BTreeMap<(u64, u64), Arc<TimerShared>>,
+    next_seq: u64,
+    /// Virtual time the wheel was last advanced to (monotonicity pin:
+    /// `advance_to` panics if the clock runs backwards).
+    now: f64,
+    registered: u64,
+    fired: u64,
+}
+
+/// State shared between one pending timer entry and its [`Sleep`].
+struct TimerShared {
+    fired: AtomicBool,
+    waker: Mutex<Option<Waker>>,
+}
+
+impl Timers {
+    pub(crate) fn new() -> Timers {
+        Timers {
+            inner: Arc::new(Mutex::new(Wheel {
+                pending: BTreeMap::new(),
+                next_seq: 0,
+                now: 0.0,
+                registered: 0,
+                fired: 0,
+            })),
+        }
+    }
+
+    /// A future that completes when the virtual clock reaches
+    /// `deadline`.  A deadline at or before the wheel's current time
+    /// fires on the next `advance_to` (which is re-entrant at equal
+    /// time), so "sleep until the past" resolves promptly instead of
+    /// hanging.
+    pub fn sleep_until(&self, deadline: f64) -> Sleep {
+        let shared =
+            Arc::new(TimerShared { fired: AtomicBool::new(false), waker: Mutex::new(None) });
+        let mut w = self.inner.lock().expect("timer wheel poisoned");
+        let seq = w.next_seq;
+        w.next_seq += 1;
+        w.registered += 1;
+        w.pending.insert((deadline.max(0.0).to_bits(), seq), Arc::clone(&shared));
+        Sleep { shared }
+    }
+
+    /// Earliest pending deadline, if any timer is registered.
+    pub fn next_deadline(&self) -> Option<f64> {
+        let w = self.inner.lock().expect("timer wheel poisoned");
+        w.pending.keys().next().map(|&(bits, _)| f64::from_bits(bits))
+    }
+
+    /// `(registered, fired)` lifetime counters (invariant: equal once
+    /// the wheel is drained — no timer fires twice, none is lost).
+    pub fn counters(&self) -> (u64, u64) {
+        let w = self.inner.lock().expect("timer wheel poisoned");
+        (w.registered, w.fired)
+    }
+
+    /// Advance the virtual clock to `now` and fire every timer with
+    /// `deadline <= now`, in `(deadline, registration)` order.  Panics
+    /// if the virtual clock runs backwards.
+    pub(crate) fn advance_to(&self, now: f64) {
+        let due: Vec<Arc<TimerShared>> = {
+            let mut w = self.inner.lock().expect("timer wheel poisoned");
+            assert!(now >= w.now, "virtual clock ran backwards: {} -> {now}", w.now);
+            w.now = now;
+            let mut due = Vec::new();
+            loop {
+                let key = match w.pending.keys().next() {
+                    Some(&k) if f64::from_bits(k.0) <= now => k,
+                    _ => break,
+                };
+                due.push(w.pending.remove(&key).expect("key just observed"));
+            }
+            w.fired += due.len() as u64;
+            due
+        };
+        // Wake outside the wheel lock: a woken task may immediately
+        // register its next sleep.
+        for t in due {
+            let was_fired = t.fired.swap(true, Ordering::AcqRel);
+            debug_assert!(!was_fired, "timer fired twice");
+            if let Some(wk) = t.waker.lock().expect("waker slot poisoned").take() {
+                wk.wake();
+            }
+        }
+    }
+}
+
+/// Future returned by [`Timers::sleep_until`]: pending until the
+/// executor advances the virtual clock past the deadline.
+pub struct Sleep {
+    shared: Arc<TimerShared>,
+}
+
+impl Future for Sleep {
+    type Output = ();
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.shared.fired.load(Ordering::Acquire) {
+            Poll::Ready(())
+        } else {
+            *self.shared.waker.lock().expect("waker slot poisoned") = Some(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}

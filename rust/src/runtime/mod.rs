@@ -1,4 +1,9 @@
-//! Runtime: AOT artifact loading + PJRT execution (the xla crate).
+//! Runtime: the cooperative task executor, AOT artifact loading and
+//! PJRT execution (the xla crate).
+//!
+//! [`exec`] is the deterministic per-replica cooperative task runtime
+//! (local executor + virtual-time reactor) the serving engine uses to
+//! overlap modeled store/swap transfers with compute (`--overlap on`).
 //!
 //! `Manifest` describes what `make artifacts` produced; `PjrtExecutor`
 //! implements the engine's `Executor` trait over the compiled HLO.
@@ -9,6 +14,7 @@
 //! compiled whose `load` fails, so every caller (CLI, benches, examples)
 //! still builds and degrades gracefully at runtime.
 
+pub mod exec;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;

@@ -1511,3 +1511,177 @@ fn prop_cluster_replicas_one_bit_identical() {
         assert_eq!(trace.events, single_trace.events, "seed {seed}: trace must match");
     }
 }
+
+/// The overlap runtime's off switch is provably inert: with `overlap:
+/// false` pinned explicitly (not just defaulted), the task-runtime-
+/// aware engine reproduces the frozen pre-scheduler serial loop bit
+/// for bit — stats and full per-turn trace — under fcfs, chunking
+/// disabled, one replica and zero store budget, across modes, eviction
+/// policies and pool pressures.  The overlap counters must read
+/// exactly zero: the serial path may not touch them.
+#[test]
+fn prop_overlap_off_bit_identical_to_legacy_engine() {
+    use legacy_engine::LegacyEngine;
+    let cases: &[(ServingMode, EvictionPolicy, f64, u64, usize, u64)] = &[
+        // (mode, eviction, qps, pool_mb, n_models, seed)
+        (ServingMode::Icarus, EvictionPolicy::Recompute, 0.8, 16, 4, 31),
+        (ServingMode::Baseline, EvictionPolicy::Recompute, 1.2, 4, 8, 33),
+        (ServingMode::Icarus, EvictionPolicy::Swap, 1.0, 8, 8, 37),
+    ];
+    for &(mode, eviction, qps, pool_mb, n_models, seed) in cases {
+        let scfg = ServingConfig {
+            mode,
+            eviction,
+            kv_pool_bytes: pool_mb << 20,
+            sched_policy: SchedPolicy::Fcfs,
+            prefill_chunk: 0,
+            store_host_bytes: 0,
+            store_disk_bytes: 0,
+            overlap: false,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig { n_models, qps, n_requests: 40, seed, ..Default::default() };
+        let wl = generate(&wcfg);
+        let tag = format!("{mode:?}/{eviction:?}/qps={qps}/pool={pool_mb}MB");
+
+        let legacy_exec = SimExecutor::new(CostModel::default(), mode);
+        let (l, lt) =
+            LegacyEngine::new(scfg.clone(), 2048, n_models, legacy_exec).run_traced(wl.clone());
+
+        let exec = SimExecutor::new(CostModel::default(), mode);
+        let (n, nt) = Engine::new(scfg, 2048, n_models, exec).run_traced(wl);
+
+        assert_eq!(n.completed_requests, l.completed_requests, "{tag}: requests");
+        assert_eq!(n.completed_turns, l.completed_turns, "{tag}: turns");
+        assert_eq!(n.generated_tokens, l.generated_tokens, "{tag}: generated");
+        assert_eq!(n.prefill_tokens, l.prefill_tokens, "{tag}: prefilled");
+        assert_eq!(n.cached_prefill_tokens, l.cached_prefill_tokens, "{tag}: cached");
+        assert_eq!(n.recomputed_tokens, l.recomputed_tokens, "{tag}: recomputed");
+        assert_eq!(n.evictions, l.evictions, "{tag}: evictions");
+        assert_eq!(n.swap_outs, l.swap_outs, "{tag}: swap outs");
+        assert_eq!(n.swap_ins, l.swap_ins, "{tag}: swap ins");
+        assert_eq!(n.preemptions, l.preemptions, "{tag}: preemptions");
+        assert_eq!(n.peak_kv_bytes, l.peak_kv_bytes, "{tag}: peak kv");
+        assert_eq!(
+            n.wall_seconds.to_bits(),
+            l.wall_seconds.to_bits(),
+            "{tag}: wall clock must be bit-identical ({} vs {})",
+            n.wall_seconds,
+            l.wall_seconds
+        );
+        assert_eq!(n.request_latency, l.request_latency, "{tag}: request hist");
+        assert_eq!(n.turn_latency, l.turn_latency, "{tag}: turn hist");
+        assert_eq!(n.time_to_first_token, l.time_to_first_token, "{tag}: ttft hist");
+        assert_eq!(nt.events, lt.events, "{tag}: trace must be bit-identical");
+        // The serial path never touches the overlap machinery.
+        assert_eq!(n.tasks_spawned, 0, "{tag}: no tasks with overlap off");
+        assert_eq!(n.stalled_transfer_time, 0.0, "{tag}: no stall accounting");
+        assert_eq!(n.overlapped_transfer_time, 0.0, "{tag}: no overlap accounting");
+    }
+}
+
+/// `--overlap on` is run-to-run deterministic: the same seed produces
+/// bit-identical serving stats (whole struct, overlap counters
+/// included) and per-turn traces across two fresh runs, under the
+/// configs the overlap runtime targets — one replica over a tiered
+/// store (with and without prefetch and chunked prefill), and two
+/// replicas with swap eviction and no store (swap-ins ride the
+/// executor there).  Multi-replica *shared-store* runs are excluded by
+/// design: cross-replica eviction-tie ordering under the sub-window
+/// LRU is already documented as schedule-dependent (see
+/// `store::fence`), independent of overlap.
+#[test]
+fn prop_overlap_on_deterministic() {
+    use icarus::cluster::Cluster;
+    let cases: &[(usize, u64, u64, bool, usize, EvictionPolicy, u64)] = &[
+        // (replicas, host, disk, prefetch, chunk, eviction, seed)
+        (1, 64 << 20, 0, false, 0, EvictionPolicy::Recompute, 51),
+        (1, 8 << 20, 256 << 20, true, 0, EvictionPolicy::Recompute, 53),
+        (1, 8 << 20, 256 << 20, true, 96, EvictionPolicy::Recompute, 57),
+        (2, 0, 0, false, 0, EvictionPolicy::Swap, 59),
+    ];
+    for &(replicas, host, disk, prefetch, chunk, eviction, seed) in cases {
+        let scfg = ServingConfig {
+            mode: ServingMode::Icarus,
+            eviction,
+            kv_pool_bytes: 12 << 20,
+            prefill_chunk: chunk,
+            replicas,
+            store_host_bytes: host,
+            store_disk_bytes: disk,
+            store_prefetch: prefetch,
+            overlap: true,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            n_models: 4,
+            qps: 1.0,
+            n_requests: 32,
+            seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let tag = format!("R={replicas}/host={host}/disk={disk}/pf={prefetch}/chunk={chunk}");
+        let run = || {
+            Cluster::new(scfg.clone(), 2048, 4).run_sim_traced(CostModel::default(), wl.clone())
+        };
+        let (a, at) = run();
+        let (b, bt) = run();
+        assert_eq!(a.merged, b.merged, "{tag}: merged stats must be run-to-run identical");
+        assert_eq!(a.per_replica, b.per_replica, "{tag}: per-replica stats must match");
+        assert_eq!(at.events, bt.events, "{tag}: trace must be run-to-run identical");
+        assert_eq!(a.merged.completed_requests, 32, "{tag}: completion");
+        if host + disk > 0 {
+            assert!(a.merged.tasks_spawned > 0, "{tag}: transfers should ride the executor");
+        }
+    }
+}
+
+/// Executor invariants under seeded random task/timer workloads: every
+/// spawned task completes (none leaks), every registered timer fires
+/// exactly once (the wheel debug-asserts a double fire and panics on a
+/// backwards clock), and the wheel drains to empty.  Tasks chain
+/// sleeps through *unsorted* random deadlines — a hop into the past
+/// must resolve on the next advance instead of hanging.
+#[test]
+fn prop_executor_invariants() {
+    use icarus::runtime::exec::LocalExecutor;
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(18_000 + seed);
+        let mut rt = LocalExecutor::new();
+        let n_tasks = 1 + rng.below(24) as usize;
+        let horizon = 1.0 + rng.f64() * 9.0;
+        for _ in 0..n_tasks {
+            let timers = rt.timers();
+            let hops: Vec<f64> = (0..1 + rng.below(5)).map(|_| rng.f64() * horizon).collect();
+            rt.spawn(async move {
+                for d in hops {
+                    timers.sleep_until(d).await;
+                }
+            });
+        }
+        // Advance in random monotone increments past the horizon, then
+        // drain hops registered during the final advances (re-advancing
+        // at equal time fires past-deadline sleeps).
+        let mut now = 0.0;
+        while now < horizon {
+            now += 1e-3 + rng.f64() * horizon / 4.0;
+            rt.advance_to(now);
+        }
+        while let Some(t) = rt.next_deadline() {
+            now = now.max(t);
+            rt.advance_to(now);
+        }
+        let m = rt.metrics();
+        assert_eq!(m.spawned, n_tasks as u64, "seed {seed}: spawn count");
+        assert_eq!(m.completed, m.spawned, "seed {seed}: task leaked");
+        assert_eq!(rt.live_tasks(), 0, "seed {seed}: live tasks after drain");
+        assert_eq!(
+            m.timers_fired,
+            m.timers_registered,
+            "seed {seed}: every timer fires exactly once"
+        );
+        assert!(rt.next_deadline().is_none(), "seed {seed}: wheel drained");
+        assert!(m.polls >= m.spawned, "seed {seed}: every task polled at least once");
+    }
+}
