@@ -1,6 +1,6 @@
 //! Cluster scaling bench: what the multi-replica layer buys.
 //!
-//! Three measurements:
+//! Four measurements:
 //!
 //!   1. Parallel sweep wall-clock — the same fixed 16-point grid (a
 //!      Fig 4-style row) swept with 1/2/4/8 worker threads.  Points
@@ -12,12 +12,19 @@
 //!      throughput rises as the per-replica arrival rate drops.
 //!   3. Routing policies — the same cluster at R = 4 under
 //!      round_robin / least_loaded / hash_prefix workflow routing.
+//!   4. Disaggregated prefill/decode tiers — a long-prompt overload at
+//!      R = 4 swept over prefill:decode ratio × QPS × store budget
+//!      against the homogeneous cluster (same replicas, same store).
+//!      Prefill interference is what disaggregation removes, so the
+//!      tiered splits should win P95/throughput at high QPS and lose
+//!      at low QPS where dedicated prefill replicas sit idle.
 //!
 //! Run: cargo bench --bench cluster_scale
+//! `-- --smoke` shrinks every grid for CI-sized runs.
 
 use std::time::Instant;
 
-use icarus::bench_util::{sweep_parallel, Point, KV_BPT_SMALL};
+use icarus::bench_util::{self, sweep, sweep_parallel, Point, KV_BPT_SMALL};
 use icarus::cluster::Cluster;
 use icarus::config::{ClusterRouting, ServingConfig, ServingMode, WorkloadConfig};
 use icarus::engine::executor::CostModel;
@@ -25,17 +32,21 @@ use icarus::json::{self, Value};
 use icarus::workload::generate;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut results: Vec<(String, Value)> = Vec::new();
 
     // -- 1: parallel sweep wall-clock ------------------------------------
     let mut points = Vec::new();
+    let (qps_grid_1, n_grid_1): (&[f64], &[usize]) =
+        if smoke { (&[0.4, 1.5], &[4]) } else { (&[0.2, 0.4, 0.8, 1.5], &[4, 8]) };
     for mode in [ServingMode::Baseline, ServingMode::Icarus] {
-        for &qps in &[0.2, 0.4, 0.8, 1.5] {
-            for &n in &[4usize, 8] {
+        for &qps in qps_grid_1 {
+            for &n in n_grid_1 {
                 points.push(Point {
                     mode,
                     n_models: n,
                     qps,
+                    n_requests: if smoke { 48 } else { 128 },
                     kv_pool_bytes: 24 << 20,
                     kv_bytes_per_token: KV_BPT_SMALL,
                     ..Default::default()
@@ -45,7 +56,8 @@ fn main() {
     }
     println!("== 1: parallel sweep wall-clock ({} points) ==", points.len());
     let mut base_wall = 0.0;
-    for &threads in &[1usize, 2, 4, 8] {
+    let thread_grid: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &threads in thread_grid {
         println!("\n-- threads={threads} --");
         let t0 = Instant::now();
         let rows = sweep_parallel(&points, threads);
@@ -66,14 +78,18 @@ fn main() {
     let wcfg = WorkloadConfig {
         n_models: 8,
         qps: 4.0,
-        n_requests: 256,
+        n_requests: if smoke { 96 } else { 256 },
         seed: 17,
         ..Default::default()
     };
     let workload = generate(&wcfg);
-    println!("\n== 2: replica scaling (8 models, qps 4.0, 256 workflows, 32 MB/replica) ==\n");
+    println!(
+        "\n== 2: replica scaling (8 models, qps 4.0, {} workflows, 32 MB/replica) ==\n",
+        wcfg.n_requests
+    );
     println!("{:>9} {:>10} {:>10} {:>14} {:>10}", "replicas", "p95(s)", "p50(s)", "tput(tok/s)", "hit-rate");
-    for &r in &[1usize, 2, 4, 8] {
+    let replica_grid: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    for &r in replica_grid {
         let scfg = ServingConfig {
             replicas: r,
             kv_pool_bytes: 32 << 20,
@@ -127,8 +143,64 @@ fn main() {
         ));
     }
 
-    std::fs::create_dir_all("bench_results").ok();
-    let v = json::obj(results.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
-    std::fs::write("bench_results/cluster_scale.json", v.to_string_pretty()).unwrap();
-    println!("\nwrote bench_results/cluster_scale.json");
+    // -- 4: disaggregated prefill/decode tiers ----------------------------
+    // Long prompts make prefill the interference source; every point
+    // (homogeneous included) runs chunk=256 so the comparison isolates
+    // the tier split, not chunking.  Each cell sweeps the homogeneous
+    // cluster first, then every prefill:decode ratio of the same R.
+    let replicas = 4usize;
+    let (disagg_qps, disagg_stores): (&[f64], &[u64]) = if smoke {
+        (&[4.0], &[512 << 20])
+    } else {
+        (&[2.0, 4.0], &[256 << 20, 1 << 30])
+    };
+    println!("\n== 4: disaggregated prefill/decode tiers (R={replicas}, long prompts) ==\n");
+    let mut rows = Vec::new();
+    for &store in disagg_stores {
+        for &qps in disagg_qps {
+            let base = Point {
+                n_models: 8,
+                qps,
+                n_requests: if smoke { 96 } else { 256 },
+                seed: 17,
+                prompt_mean: 384.0,
+                prompt_std: 96.0,
+                prefill_chunk: 256,
+                replicas,
+                kv_pool_bytes: 32 << 20,
+                store_host_bytes: store,
+                ..Default::default()
+            };
+            let mut pts = vec![base.clone()];
+            for p in 1..replicas {
+                pts.push(Point {
+                    disagg: true,
+                    prefill_replicas: p,
+                    cluster_routing: ClusterRouting::PrefillDecode,
+                    ..base.clone()
+                });
+            }
+            let cell = sweep(&pts);
+            let homog = &cell[0];
+            let best = cell[1..]
+                .iter()
+                .min_by(|a, b| a.p95_s.total_cmp(&b.p95_s))
+                .expect("ratio rows");
+            println!(
+                "store={}M qps={qps:.1}: best split {} — p95 {:.2}x, tput {:.2}x vs homogeneous",
+                store >> 20,
+                best.label,
+                if best.p95_s > 0.0 { homog.p95_s / best.p95_s } else { f64::INFINITY },
+                if homog.tput_tok_s > 0.0 { best.tput_tok_s / homog.tput_tok_s } else { f64::INFINITY },
+            );
+            results.push((
+                format!("disagg_best_p95_ratio_store{}m_qps{qps:.1}", store >> 20),
+                json::num(if best.p95_s > 0.0 { homog.p95_s / best.p95_s } else { f64::INFINITY }),
+            ));
+            rows.extend(cell);
+        }
+    }
+
+    let extra: Vec<(&str, Value)> = results.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    bench_util::write_results("cluster_scale", &rows, extra);
 }

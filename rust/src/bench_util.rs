@@ -93,6 +93,11 @@ pub struct Point {
     /// instead of charging them inline (`benches/overlap.rs` sweeps
     /// this).
     pub overlap: bool,
+    /// Disaggregated prefill/decode tiers over the shared store
+    /// (`benches/cluster_scale.rs` sweeps the tier split).
+    pub disagg: bool,
+    /// Replicas serving the prefill tier when `disagg` is on.
+    pub prefill_replicas: usize,
     /// Simulator cost model.
     pub cost: CostModel,
 }
@@ -121,6 +126,8 @@ impl Default for Point {
             store_disk_bytes: 0,
             store_prefetch: false,
             overlap: false,
+            disagg: false,
+            prefill_replicas: 1,
             cost: CostModel::default(),
         }
     }
@@ -141,6 +148,8 @@ impl Point {
             store_disk_bytes: self.store_disk_bytes,
             store_prefetch: self.store_prefetch,
             overlap: self.overlap,
+            disagg: self.disagg,
+            prefill_replicas: self.prefill_replicas,
             ..Default::default()
         }
     }
@@ -196,6 +205,10 @@ impl Point {
         }
         if self.overlap {
             s.push_str("/ov");
+        }
+        if self.disagg {
+            let p = self.prefill_replicas.clamp(1, self.replicas.saturating_sub(1).max(1));
+            s.push_str(&format!("/pd={}:{}", p, self.replicas.saturating_sub(p)));
         }
         s
     }

@@ -48,7 +48,8 @@
 use std::sync::Arc;
 use std::thread;
 
-use crate::config::{ClusterRouting, ServingConfig};
+use crate::config::{ClusterRouting, SchedPolicy, ServingConfig};
+use crate::disagg::{DisaggHandle, DisaggShared, ReplicaRole};
 use crate::engine::executor::{CostModel, Executor, SimExecutor};
 use crate::engine::Engine;
 use crate::json::{self, Value};
@@ -64,6 +65,12 @@ use crate::workload::Workflow;
 /// workflows sharing a meaningful opening context still collide.
 pub const HASH_PREFIX_BLOCKS: usize = 4;
 
+/// Minimum prefill chunk forced onto prefill-role replicas under
+/// `--disagg`: they exist to encode long prompts without head-of-line
+/// blocking, so atomic prefill (or a degenerate chunk) would defeat the
+/// point.  Decode-role and hybrid replicas keep the configured value.
+pub const PREFILL_ROLE_CHUNK: usize = 256;
+
 /// Replica index for every workflow in `workload`, under `routing`.
 ///
 /// Pure function of the workload (not of arrival timing beyond its
@@ -78,6 +85,13 @@ pub fn assign_replicas(
     let r = replicas.max(1);
     match routing {
         ClusterRouting::RoundRobin => (0..workload.len()).map(|i| i % r).collect(),
+        // Workflow *ownership* under prefill/decode disaggregation is
+        // plain round robin; the disagg-aware part — routing only
+        // across the decode tier, with prefill replicas fed through the
+        // handoff edge — lives in `Cluster::shard`, which passes this
+        // function the decode-tier width.  Outside `--disagg` the
+        // policy therefore degenerates to `RoundRobin` exactly.
+        ClusterRouting::PrefillDecode => (0..workload.len()).map(|i| i % r).collect(),
         ClusterRouting::LeastLoaded => {
             let mut loads = vec![0u64; r];
             workload
@@ -110,9 +124,18 @@ pub fn assign_replicas(
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
     /// Cluster-level stats (see [`ServingStats::merge`] for semantics).
+    /// With heterogeneous roles this is still the plain merge of every
+    /// replica: counters stay run-wide totals, and the latency
+    /// histograms are untainted because prefill-role replicas record no
+    /// decode-side samples — but per-replica *averages* derived from it
+    /// would be skewed by the prefill tier's zeroes; use
+    /// [`ClusterStats::merged_for_role`] for those.
     pub merged: ServingStats,
     /// Each replica's own run stats, indexed by replica id.
     pub per_replica: Vec<ServingStats>,
+    /// Role each replica played (all `Hybrid` outside `--disagg`),
+    /// indexed by replica id.
+    pub roles: Vec<ReplicaRole>,
     /// Aggregate counters of the shared snapshot store (`None` when the
     /// config leaves the store disabled).  Global, not per-replica —
     /// per-replica restore counters live in each `ServingStats`.
@@ -120,15 +143,46 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
-    fn from_replicas(per_replica: Vec<ServingStats>, store: Option<StoreStats>) -> ClusterStats {
+    fn from_replicas(
+        per_replica: Vec<ServingStats>,
+        roles: Vec<ReplicaRole>,
+        store: Option<StoreStats>,
+    ) -> ClusterStats {
+        debug_assert_eq!(per_replica.len(), roles.len());
         let mut merged = ServingStats::new();
         for s in &per_replica {
             merged.merge(s);
         }
-        ClusterStats { merged, per_replica, store }
+        ClusterStats { merged, per_replica, roles, store }
+    }
+
+    /// True when this run's replicas play heterogeneous roles
+    /// (`--disagg`): the per-role stat views are then meaningful.
+    pub fn is_disaggregated(&self) -> bool {
+        self.roles.iter().any(|&r| r != ReplicaRole::Hybrid)
+    }
+
+    /// Merge of only the replicas that played `role` — the honest
+    /// basis for per-role reporting under `--disagg` (e.g. decode-tier
+    /// P95 or prefill-tier token throughput), where the all-replica
+    /// merge would average heterogeneous replicas together.  `None`
+    /// when no replica played the role.
+    pub fn merged_for_role(&self, role: ReplicaRole) -> Option<ServingStats> {
+        if !self.roles.contains(&role) {
+            return None;
+        }
+        let mut m = ServingStats::new();
+        for (s, &r) in self.per_replica.iter().zip(&self.roles) {
+            if r == role {
+                m.merge(s);
+            }
+        }
+        Some(m)
     }
 
     /// Merged stats plus the per-replica breakdown, for results files.
+    /// Heterogeneous runs additionally carry the role map and per-role
+    /// merged views; homogeneous output is byte-identical to before.
     pub fn to_json(&self) -> Value {
         let mut entries = vec![
             ("replicas", json::num(self.per_replica.len() as f64)),
@@ -138,6 +192,19 @@ impl ClusterStats {
                 Value::Arr(self.per_replica.iter().map(ServingStats::to_json).collect()),
             ),
         ];
+        if self.is_disaggregated() {
+            entries.push((
+                "roles",
+                Value::Arr(self.roles.iter().map(|r| json::s(r.as_str())).collect()),
+            ));
+            let mut per_role = Vec::new();
+            for role in [ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Hybrid] {
+                if let Some(m) = self.merged_for_role(role) {
+                    per_role.push((role.as_str(), m.to_json()));
+                }
+            }
+            entries.push(("per_role", json::obj(per_role)));
+        }
         if let Some(store) = &self.store {
             entries.push(("store", store.to_json()));
         }
@@ -182,13 +249,48 @@ impl Cluster {
         self.scfg.replicas.max(1)
     }
 
+    /// Prefill-role replicas under `--disagg`; 0 in homogeneous mode.
+    /// Clamped so at least one replica serves each role.
+    pub fn prefill_count(&self) -> usize {
+        if !self.scfg.disagg {
+            return 0;
+        }
+        let r = self.replicas();
+        assert!(r >= 2, "disaggregation requires at least 2 replicas");
+        self.scfg.prefill_replicas.clamp(1, r - 1)
+    }
+
+    /// Role each replica index plays: replicas `0..prefill_count()` are
+    /// prefill, the rest decode; all hybrid outside `--disagg`.
+    pub fn roles(&self) -> Vec<ReplicaRole> {
+        let p = self.prefill_count();
+        (0..self.replicas())
+            .map(|i| {
+                if p == 0 {
+                    ReplicaRole::Hybrid
+                } else if i < p {
+                    ReplicaRole::Prefill
+                } else {
+                    ReplicaRole::Decode
+                }
+            })
+            .collect()
+    }
+
     fn shard(&self, workload: Vec<Workflow>) -> Vec<Vec<Workflow>> {
         let r = self.replicas();
+        let prefill = self.prefill_count();
+        // Disagg: workflows are owned by the decode tier only — route
+        // across it with the configured policy (prefill replicas get
+        // their work over the handoff edge, not from the router) and
+        // leave the prefill shards empty.  `prefill == 0` reduces to
+        // the homogeneous path untouched.
+        let decode = r - prefill;
         let assignment =
-            assign_replicas(&workload, r, self.scfg.cluster_routing, self.scfg.block_tokens);
+            assign_replicas(&workload, decode, self.scfg.cluster_routing, self.scfg.block_tokens);
         let mut shards: Vec<Vec<Workflow>> = (0..r).map(|_| Vec::new()).collect();
         for (wf, &rep) in workload.into_iter().zip(&assignment) {
-            shards[rep].push(wf);
+            shards[prefill + rep].push(wf);
         }
         shards
     }
@@ -228,6 +330,21 @@ impl Cluster {
         F: Fn() -> E + Sync,
         G: Fn(Engine<E>, Vec<Workflow>) -> T + Sync,
     {
+        let prefill = self.prefill_count();
+        let disagg = if prefill > 0 {
+            assert!(
+                store.is_some(),
+                "disaggregation requires a shared store (non-zero --store-host/--store-disk): \
+                 the handoff artifact is the published KV prefix"
+            );
+            // Every turn of every workflow crosses the handoff edge
+            // exactly once — the run-wide termination token for the
+            // prefill tier.
+            let total_turns: usize = workload.iter().map(|wf| wf.turns.len()).sum();
+            Some(DisaggShared::new(self.replicas(), prefill, total_turns))
+        } else {
+            None
+        };
         let shards = self.shard(workload);
         let fence = match store {
             Some(_) if shards.len() > 1 => Some(Arc::new(ClockFence::new(shards.len()))),
@@ -242,9 +359,24 @@ impl Cluster {
                     let run = &run;
                     let store = store.clone();
                     let fence = fence.clone();
+                    let disagg = disagg.clone();
                     s.spawn(move || {
+                        let role = match &disagg {
+                            Some(_) if replica < prefill => ReplicaRole::Prefill,
+                            Some(_) => ReplicaRole::Decode,
+                            None => ReplicaRole::Hybrid,
+                        };
+                        let mut scfg = self.scfg.clone();
+                        if role == ReplicaRole::Prefill {
+                            // The prefill tier's whole job is encoding
+                            // long prompts side by side: force chunked
+                            // prefill and shortest-job-first over the
+                            // handoff backlog.
+                            scfg.prefill_chunk = scfg.prefill_chunk.max(PREFILL_ROLE_CHUNK);
+                            scfg.sched_policy = SchedPolicy::Sjf;
+                        }
                         let mut engine = Engine::new(
-                            self.scfg.clone(),
+                            scfg,
                             self.kv_bytes_per_token,
                             self.n_models,
                             factory(),
@@ -252,6 +384,9 @@ impl Cluster {
                         if let Some(st) = store {
                             let st: Arc<dyn SnapshotStore> = st;
                             engine.attach_store(StoreHandle::new(st, fence, replica));
+                        }
+                        if let Some(shared) = disagg {
+                            engine.attach_disagg(DisaggHandle::new(shared, replica, role));
                         }
                         run(engine, shard)
                     })
@@ -270,7 +405,7 @@ impl Cluster {
     {
         let store = self.make_store();
         let per_replica = self.run_replicas(&store, factory, workload, |e, w| e.run(w));
-        ClusterStats::from_replicas(per_replica, store.map(|s| s.stats()))
+        ClusterStats::from_replicas(per_replica, self.roles(), store.map(|s| s.stats()))
     }
 
     /// Like [`Cluster::run_with`], but each replica also records a
@@ -297,7 +432,10 @@ impl Cluster {
         // The sort is stable, so a single replica's trace (already in
         // completion order) passes through unchanged.
         events.sort_by(|a, b| a.completed_at.total_cmp(&b.completed_at));
-        (ClusterStats::from_replicas(per_replica, store.map(|s| s.stats())), Trace { events })
+        (
+            ClusterStats::from_replicas(per_replica, self.roles(), store.map(|s| s.stats())),
+            Trace { events },
+        )
     }
 
     /// Run with one [`SimExecutor`] per replica — the configuration the
@@ -537,6 +675,83 @@ mod tests {
         // Merged counters are sums of per-replica counters.
         let sum: u64 = out.per_replica.iter().map(|s| s.tasks_spawned).sum();
         assert_eq!(out.merged.tasks_spawned, sum);
+    }
+
+    #[test]
+    fn disaggregated_cluster_completes_and_hands_off() {
+        let scfg = ServingConfig {
+            replicas: 4,
+            disagg: true,
+            prefill_replicas: 2,
+            cluster_routing: ClusterRouting::PrefillDecode,
+            kv_pool_bytes: 32 << 20,
+            store_host_bytes: 512 << 20,
+            ..Default::default()
+        };
+        let cluster = Cluster::new(scfg, 2048, 4);
+        assert_eq!(
+            cluster.roles(),
+            vec![
+                ReplicaRole::Prefill,
+                ReplicaRole::Prefill,
+                ReplicaRole::Decode,
+                ReplicaRole::Decode
+            ]
+        );
+        let out = cluster.run_sim(CostModel::default(), workload(48, 1.0, 19));
+        assert_eq!(out.merged.completed_requests, 48);
+        assert!(out.is_disaggregated());
+        // Every turn crossed the edge exactly once, in each direction.
+        let handed: u64 = out.per_replica.iter().map(|s| s.prefill_handoffs).sum();
+        let consumed: u64 = out.per_replica.iter().map(|s| s.decode_handoffs).sum();
+        assert_eq!(handed, out.merged.completed_turns, "one handoff per turn");
+        assert_eq!(consumed, out.merged.completed_turns, "every handoff consumed");
+        // Role separation holds all the way down.
+        for (s, &r) in out.per_replica.iter().zip(&out.roles) {
+            match r {
+                ReplicaRole::Prefill => {
+                    assert_eq!(s.generated_tokens, 0, "prefill replicas never decode");
+                    assert!(s.prefill_handoffs > 0, "round robin feeds both prefills");
+                    assert!(s.prefill_chunks > 0, "prefill tier runs chunked");
+                }
+                ReplicaRole::Decode => {
+                    assert!(s.generated_tokens > 0, "decode tier decodes");
+                    assert!(s.decode_handoffs > 0, "decode tier consumes handoffs");
+                }
+                ReplicaRole::Hybrid => unreachable!("disagg run has no hybrids"),
+            }
+        }
+        // Handed-off prefixes came back over the store's transfer path,
+        // not via local re-prefill, and the pin ledger closed out.
+        let decode = out.merged_for_role(ReplicaRole::Decode).expect("decode tier present");
+        assert!(decode.store_restored_tokens > 0, "handoffs restore from the store");
+        assert!(decode.turn_latency.as_ref().unwrap().count() > 0);
+        let prefill = out.merged_for_role(ReplicaRole::Prefill).expect("prefill tier present");
+        assert_eq!(prefill.turn_latency.as_ref().unwrap().count(), 0);
+        let st = out.store.as_ref().expect("disagg requires the store");
+        assert!(st.handoff_pins > 0, "handoff chains were pinned");
+        assert_eq!(st.pinned_blocks, 0, "every handoff pin released by run end");
+    }
+
+    #[test]
+    fn disagg_off_ignores_prefill_replica_knob() {
+        // The knob is inert without --disagg: same roles, same stats.
+        let wl = workload(24, 1.0, 23);
+        let mk = |prefill_replicas: usize| {
+            let scfg = ServingConfig {
+                replicas: 2,
+                prefill_replicas,
+                store_host_bytes: 128 << 20,
+                ..Default::default()
+            };
+            Cluster::new(scfg, 2048, 4).run_sim(CostModel::default(), wl.clone())
+        };
+        let a = mk(1);
+        let b = mk(7);
+        assert_eq!(a.roles, vec![ReplicaRole::Hybrid; 2]);
+        assert!(!a.is_disaggregated());
+        assert_eq!(a.merged, b.merged);
+        assert_eq!(a.merged_for_role(ReplicaRole::Decode), None);
     }
 
     #[test]

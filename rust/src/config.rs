@@ -112,6 +112,12 @@ pub enum ClusterRouting {
     /// holds that cache — the cluster-level analogue of ICaRus's
     /// cross-model reuse.
     HashPrefix,
+    /// Disaggregated pipeline: workflows are owned by decode-role
+    /// replicas (sharded round-robin among them) while every turn's
+    /// prefill is dispatched to a prefill-role replica and handed back
+    /// through the shared KV store.  Requires `disagg` mode; outside a
+    /// disaggregated cluster it degenerates to round-robin.
+    PrefillDecode,
 }
 
 impl ClusterRouting {
@@ -121,6 +127,7 @@ impl ClusterRouting {
             ClusterRouting::RoundRobin => "round_robin",
             ClusterRouting::LeastLoaded => "least_loaded",
             ClusterRouting::HashPrefix => "hash_prefix",
+            ClusterRouting::PrefillDecode => "prefill_decode",
         }
     }
 
@@ -130,6 +137,7 @@ impl ClusterRouting {
             "round_robin" => Ok(ClusterRouting::RoundRobin),
             "least_loaded" => Ok(ClusterRouting::LeastLoaded),
             "hash_prefix" => Ok(ClusterRouting::HashPrefix),
+            "prefill_decode" => Ok(ClusterRouting::PrefillDecode),
             other => anyhow::bail!("unknown cluster routing: {other}"),
         }
     }
@@ -195,6 +203,19 @@ pub struct ServingConfig {
     /// Workflow-to-replica assignment policy (ignored for `replicas`
     /// = 1).
     pub cluster_routing: ClusterRouting,
+    /// Disaggregated prefill/decode serving: the first
+    /// `prefill_replicas` replicas run chunked prefill only, publishing
+    /// finished prefixes into the shared KV store; the rest own
+    /// workflows and decode, restoring handed-off prefixes over the
+    /// modeled host/PCIe path.  Requires `replicas >= 2` and a
+    /// non-zero store budget (the store *is* the handoff path).
+    /// `false` (the default) keeps every replica hybrid and is
+    /// bit-identical to the pre-disaggregation cluster (pinned by a
+    /// differential property test).
+    pub disagg: bool,
+    /// Number of prefill-role replicas under `disagg` (clamped to
+    /// `1..=replicas-1`); ignored when `disagg` is off.
+    pub prefill_replicas: usize,
 }
 
 impl Default for ServingConfig {
@@ -216,6 +237,8 @@ impl Default for ServingConfig {
             prefix_caching: true,
             replicas: 1,
             cluster_routing: ClusterRouting::RoundRobin,
+            disagg: false,
+            prefill_replicas: 1,
         }
     }
 }
@@ -240,6 +263,8 @@ impl ServingConfig {
             ("prefix_caching", Value::Bool(self.prefix_caching)),
             ("replicas", json::num(self.replicas as f64)),
             ("cluster_routing", json::s(self.cluster_routing.as_str())),
+            ("disagg", Value::Bool(self.disagg)),
+            ("prefill_replicas", json::num(self.prefill_replicas as f64)),
         ])
     }
 }
@@ -407,6 +432,7 @@ mod tests {
             ClusterRouting::RoundRobin,
             ClusterRouting::LeastLoaded,
             ClusterRouting::HashPrefix,
+            ClusterRouting::PrefillDecode,
         ] {
             assert_eq!(ClusterRouting::parse(r.as_str()).unwrap(), r);
         }
@@ -423,6 +449,8 @@ mod tests {
         assert_eq!(s.store_host_bytes + s.store_disk_bytes, 0, "store off by default");
         assert!(!s.store_prefetch);
         assert!(!s.overlap, "serial transfer charging by default");
+        assert!(!s.disagg, "homogeneous replicas by default");
+        assert_eq!(s.prefill_replicas, 1);
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);

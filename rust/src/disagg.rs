@@ -1,0 +1,356 @@
+//! Cross-replica plumbing for disaggregated prefill/decode serving
+//! (`--disagg on`).
+//!
+//! In disaggregated mode the cluster's replicas are heterogeneous:
+//! *prefill* replicas run chunked prefill to completion and publish the
+//! finished prefix into the shared [`TieredStore`](crate::store::TieredStore)
+//! (write-through, fence-stamped), *decode* replicas own the workflows
+//! and run decode batches, restoring handed-off prefixes over the
+//! modeled host/PCIe path.  This module is the edge between them: typed
+//! request/response messages, one mailbox per replica, and the
+//! termination protocol.
+//!
+//! ## Virtual-time causality
+//!
+//! Replicas advance independent virtual clocks bounded by the
+//! [`ClockFence`](crate::store::ClockFence).  The handoff edge keeps
+//! causality two ways:
+//!
+//!   * a [`PrefillResponse`] carries `admissible_at` — the store
+//!     visibility horizon of the published prefix — and the decode
+//!     replica surfaces the turn only once its own clock passes it, so
+//!     a handoff block is never restored before its publish is visible;
+//!   * a replica with nothing runnable that is *waiting on the other
+//!     side* (a decode replica with prefills in flight, a prefill
+//!     replica with an empty backlog) parks its fence clock
+//!     ([`crate::store::StoreHandle::finish`]) and blocks on its
+//!     mailbox, so the waited-on replica is free to advance past the
+//!     fence window.  Re-arming the fence happens through the ordinary
+//!     per-step `sync`, which blocks the *prober* until laggards catch
+//!     up — the property that makes parking safe.
+//!
+//! Wall-clock delivery order of messages from different senders is not
+//! deterministic, so disaggregated runs are schedule-dependent in tie
+//! order — the same caveat the shared store already carries for
+//! cross-replica LRU state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::tokens::TokenBuf;
+
+/// Role a cluster replica plays under `--disagg`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaRole {
+    /// Runs chunked prefill to completion, publishes KV into the shared
+    /// store, and hands sequences off; never decodes.
+    Prefill,
+    /// Owns workflows and decode batches; prefill work is forwarded to
+    /// a prefill replica and re-enters as a store restore.
+    Decode,
+    /// The homogeneous default: interleaves prefill and decode locally.
+    Hybrid,
+}
+
+impl ReplicaRole {
+    /// Stable lowercase name (used in stats JSON and logs).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+            ReplicaRole::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// A turn dispatched by a decode replica to a prefill replica.
+#[derive(Debug, Clone)]
+pub struct PrefillRequest {
+    /// Prompt to prefill (shared `Arc` buffer — cheap to clone).
+    pub prompt: TokenBuf,
+    /// Model the turn runs on.
+    pub model_id: usize,
+    /// Decode tokens still owed after prefill (carried through opaquely).
+    pub remaining_gen: usize,
+    /// Workflow index *on the owning decode replica* (opaque here).
+    pub wf_idx: usize,
+    /// Turn index within the workflow (opaque here).
+    pub turn_idx: usize,
+    /// When the turn first became runnable on the decode replica — the
+    /// latency-clock origin, passed through so TTFT and turn latency
+    /// still cover the prefill + handoff window.
+    pub ready_at: f64,
+    /// Decode replica's virtual clock at dispatch; the prefill replica
+    /// starts the turn no earlier than this.
+    pub sent_at: f64,
+    /// Replica index to send the [`PrefillResponse`] to.
+    pub reply_to: usize,
+}
+
+/// A finished prefill handed back to the owning decode replica.
+#[derive(Debug, Clone)]
+pub struct PrefillResponse {
+    /// The prefilled prompt (same shared buffer the request carried).
+    pub prompt: TokenBuf,
+    /// Model the turn runs on.
+    pub model_id: usize,
+    /// Decode tokens owed.
+    pub remaining_gen: usize,
+    /// Workflow index on the decode replica (echoed from the request).
+    pub wf_idx: usize,
+    /// Turn index within the workflow (echoed from the request).
+    pub turn_idx: usize,
+    /// Original latency-clock origin (echoed from the request).
+    pub ready_at: f64,
+    /// Virtual time at which the published prefix is visible in the
+    /// shared store; the decode replica must not admit (and so not
+    /// restore) the turn before its clock passes this.
+    pub admissible_at: f64,
+}
+
+/// One message on the prefill→decode edge.
+#[derive(Debug)]
+pub enum Handoff {
+    /// Decode → prefill: please prefill this turn.
+    Request(PrefillRequest),
+    /// Prefill → decode: prefix published, turn is yours again.
+    Response(PrefillResponse),
+}
+
+struct Mailbox {
+    q: Mutex<Vec<Handoff>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Mailbox { q: Mutex::new(Vec::new()), cv: Condvar::new() }
+    }
+}
+
+/// Shared state for one disaggregated cluster run: a mailbox per
+/// replica plus the count of turns still owed a prefill (the
+/// termination token for prefill replicas, which otherwise cannot know
+/// when the last request has been sent).
+pub struct DisaggShared {
+    mailboxes: Vec<Mailbox>,
+    /// Turns not yet prefilled, across the whole run.  Every turn of
+    /// every workflow is forwarded exactly once (preemption re-admits
+    /// locally), so prefill replicas may exit when this reaches zero
+    /// and their backlog is drained.
+    remaining: AtomicUsize,
+    prefill_replicas: usize,
+}
+
+impl DisaggShared {
+    /// Build shared state for `replicas` total replicas, the first
+    /// `prefill_replicas` of which serve prefill, with `total_turns`
+    /// prefills owed across the run.
+    pub fn new(replicas: usize, prefill_replicas: usize, total_turns: usize) -> Arc<Self> {
+        assert!(prefill_replicas >= 1 && prefill_replicas < replicas);
+        Arc::new(DisaggShared {
+            mailboxes: (0..replicas).map(|_| Mailbox::new()).collect(),
+            remaining: AtomicUsize::new(total_turns),
+            prefill_replicas,
+        })
+    }
+
+    /// Number of prefill-role replicas (indices `0..prefill_replicas`).
+    pub fn prefill_replicas(&self) -> usize {
+        self.prefill_replicas
+    }
+
+    /// Turns still owed a prefill.
+    pub fn remaining(&self) -> usize {
+        self.remaining.load(Ordering::SeqCst)
+    }
+
+    fn push(&self, replica: usize, msg: Handoff) {
+        let mb = &self.mailboxes[replica];
+        mb.q.lock().expect("mailbox poisoned").push(msg);
+        mb.cv.notify_all();
+    }
+
+    fn drain(&self, replica: usize) -> Vec<Handoff> {
+        let mb = &self.mailboxes[replica];
+        std::mem::take(&mut *mb.q.lock().expect("mailbox poisoned"))
+    }
+
+    /// Block until mail arrives for `replica`, or — when `wake_on_done`
+    /// (prefill replicas) — until the run has no prefills left to send.
+    /// Returns the drained mailbox (possibly empty on the done wake).
+    fn wait(&self, replica: usize, wake_on_done: bool) -> Vec<Handoff> {
+        let mb = &self.mailboxes[replica];
+        let mut q = mb.q.lock().expect("mailbox poisoned");
+        loop {
+            if !q.is_empty() {
+                return std::mem::take(&mut *q);
+            }
+            if wake_on_done && self.remaining.load(Ordering::SeqCst) == 0 {
+                return Vec::new();
+            }
+            q = mb.cv.wait(q).expect("mailbox poisoned");
+        }
+    }
+
+    /// Record one completed prefill; the final completion wakes every
+    /// parked prefill replica so it can observe termination.
+    fn complete_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            for mb in &self.mailboxes[..self.prefill_replicas] {
+                let _g = mb.q.lock().expect("mailbox poisoned");
+                mb.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Per-replica view of [`DisaggShared`]: the engine's only interface to
+/// the handoff edge.
+pub struct DisaggHandle {
+    shared: Arc<DisaggShared>,
+    replica: usize,
+    role: ReplicaRole,
+    /// Round-robin cursor over prefill replicas for [`forward`](Self::forward).
+    next_prefill: usize,
+}
+
+impl DisaggHandle {
+    /// Bind `replica` (playing `role`) to the shared edge.
+    pub fn new(shared: Arc<DisaggShared>, replica: usize, role: ReplicaRole) -> Self {
+        // Start each decode replica's cursor at its own offset so
+        // single-workflow bursts from different replicas don't all land
+        // on prefill replica 0.
+        let next_prefill = replica % shared.prefill_replicas;
+        DisaggHandle { shared, replica, role, next_prefill }
+    }
+
+    /// This replica's role.
+    pub fn role(&self) -> ReplicaRole {
+        self.role
+    }
+
+    /// This replica's index (the `reply_to` decode replicas stamp on
+    /// their requests).
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Turns still owed a prefill, run-wide.
+    pub fn remaining(&self) -> usize {
+        self.shared.remaining()
+    }
+
+    /// Decode side: dispatch a turn to a prefill replica (round-robin).
+    pub fn forward(&mut self, req: PrefillRequest) {
+        debug_assert_eq!(self.role, ReplicaRole::Decode);
+        let target = self.next_prefill;
+        self.next_prefill = (self.next_prefill + 1) % self.shared.prefill_replicas;
+        self.shared.push(target, Handoff::Request(req));
+    }
+
+    /// Prefill side: hand a finished prefix back to `to` and retire one
+    /// unit of the run-wide prefill debt.
+    pub fn respond(&self, to: usize, resp: PrefillResponse) {
+        debug_assert_eq!(self.role, ReplicaRole::Prefill);
+        self.shared.push(to, Handoff::Response(resp));
+        self.shared.complete_one();
+    }
+
+    /// Non-blocking drain of this replica's mailbox.
+    pub fn drain(&self) -> Vec<Handoff> {
+        self.shared.drain(self.replica)
+    }
+
+    /// Block until mail arrives (prefill replicas also wake, possibly
+    /// empty-handed, when no prefills remain run-wide).  Callers must
+    /// park their fence clock first — see the module docs.
+    pub fn wait(&self) -> Vec<Handoff> {
+        self.shared.wait(self.replica, self.role == ReplicaRole::Prefill)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(reply_to: usize) -> PrefillRequest {
+        PrefillRequest {
+            prompt: TokenBuf::from_vec(vec![1, 2, 3]),
+            model_id: 0,
+            remaining_gen: 4,
+            wf_idx: 7,
+            turn_idx: 0,
+            ready_at: 0.5,
+            sent_at: 0.5,
+            reply_to,
+        }
+    }
+
+    #[test]
+    fn round_trip_and_round_robin() {
+        let shared = DisaggShared::new(4, 2, 3);
+        let mut d = DisaggHandle::new(Arc::clone(&shared), 2, ReplicaRole::Decode);
+        let p0 = DisaggHandle::new(Arc::clone(&shared), 0, ReplicaRole::Prefill);
+        let p1 = DisaggHandle::new(Arc::clone(&shared), 1, ReplicaRole::Prefill);
+
+        d.forward(req(2));
+        d.forward(req(2));
+        d.forward(req(2));
+        // Cursor started at 2 % 2 == 0: targets 0, 1, 0.
+        assert_eq!(p0.drain().len(), 2);
+        assert_eq!(p1.drain().len(), 1);
+
+        for _ in 0..3 {
+            p0.respond(
+                2,
+                PrefillResponse {
+                    prompt: TokenBuf::from_vec(vec![1, 2, 3]),
+                    model_id: 0,
+                    remaining_gen: 4,
+                    wf_idx: 7,
+                    turn_idx: 0,
+                    ready_at: 0.5,
+                    admissible_at: 1.0,
+                },
+            );
+        }
+        assert_eq!(shared.remaining(), 0);
+        assert_eq!(d.drain().len(), 3);
+    }
+
+    #[test]
+    fn done_broadcast_wakes_parked_prefill() {
+        let shared = DisaggShared::new(2, 1, 1);
+        let waiter = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let p = DisaggHandle::new(shared, 0, ReplicaRole::Prefill);
+                // First wait returns the request; after responding, the
+                // second wait returns empty on the done broadcast.
+                let mail = p.wait();
+                assert_eq!(mail.len(), 1);
+                let Handoff::Request(r) = &mail[0] else { panic!("expected request") };
+                p.respond(
+                    r.reply_to,
+                    PrefillResponse {
+                        prompt: r.prompt.clone(),
+                        model_id: r.model_id,
+                        remaining_gen: r.remaining_gen,
+                        wf_idx: r.wf_idx,
+                        turn_idx: r.turn_idx,
+                        ready_at: r.ready_at,
+                        admissible_at: 1.0,
+                    },
+                );
+                assert!(p.wait().is_empty());
+            })
+        };
+        let mut d = DisaggHandle::new(Arc::clone(&shared), 1, ReplicaRole::Decode);
+        d.forward(req(1));
+        let mail = d.wait();
+        assert_eq!(mail.len(), 1);
+        assert!(matches!(mail[0], Handoff::Response(_)));
+        waiter.join().unwrap();
+    }
+}

@@ -47,6 +47,7 @@ pub mod sequence;
 use std::collections::{HashSet, VecDeque};
 
 use crate::config::{EvictionPolicy, ServingConfig};
+use crate::disagg::{DisaggHandle, Handoff, PrefillRequest, PrefillResponse, ReplicaRole};
 use crate::kvcache::{Alloc, KvCacheManager};
 use crate::metrics::ServingStats;
 use crate::sched::{self, CacheProbe, Queues, Scheduler};
@@ -85,6 +86,25 @@ pub struct Engine<E: Executor> {
     /// is what keeps `--overlap off` runs bit-identical to the serial
     /// loop.
     ovl: Option<Overlap>,
+    /// Disaggregated-mode handle on the prefill/decode handoff edge
+    /// (`None` — the default — leaves every disagg branch dormant,
+    /// which is what keeps `--disagg off` runs bit-identical to the
+    /// homogeneous engine).
+    disagg: Option<DisaggHandle>,
+    /// Prefill role: side table of handoff jobs in flight on this
+    /// replica.  A forwarded turn's `wf_idx` indexes this table instead
+    /// of `wfs` (prefill replicas own no workflows, and their sequences
+    /// never reach `finish_turn`).
+    prefill_jobs: Vec<PrefillJob>,
+    /// Decode role: turns prefilled remotely, held (with their
+    /// store-visibility horizon) until this replica's clock passes it —
+    /// the causality half of the handoff protocol.
+    pending_handoffs: Vec<(f64, PendingTurn)>,
+    /// Decode role: turns forwarded to prefill replicas and not yet
+    /// returned.  While nonzero and idle, the replica parks on its
+    /// mailbox instead of jumping its clock (a jump would overshoot
+    /// responses landing before the next local event).
+    outstanding_prefills: usize,
     /// Prefetch-scan memo: turns (keyed by workflow, turn index and
     /// context length — stable, deterministic identity) already probed
     /// for staging since the last local store publish.  Stops
@@ -99,6 +119,23 @@ pub struct Engine<E: Executor> {
 /// enough to cover what the next admission rounds will look at, bounded
 /// so a long queue cannot make the step O(queue x prompt).
 const PREFETCH_SCAN: usize = 16;
+
+/// Prefill-role bookkeeping for one handoff in flight: everything the
+/// eventual [`PrefillResponse`] must echo back to the owning decode
+/// replica.  A forwarded turn's `wf_idx` indexes the engine's
+/// `prefill_jobs` table of these.
+struct PrefillJob {
+    /// Replica index to send the response to.
+    reply_to: usize,
+    /// Workflow index on the owning decode replica (opaque here).
+    wf_idx: usize,
+    /// Turn index within that workflow (opaque here).
+    turn_idx: usize,
+    /// Decode tokens still owed after prefill (carried through).
+    remaining_gen: usize,
+    /// Original latency-clock origin (carried through).
+    ready_at: f64,
+}
 
 impl<E: Executor> Engine<E> {
     /// Engine over `exec`, with a fresh KV manager sized by `cfg` and
@@ -121,6 +158,10 @@ impl<E: Executor> Engine<E> {
             q: Queues::new(),
             store: None,
             ovl,
+            disagg: None,
+            prefill_jobs: Vec::new(),
+            pending_handoffs: Vec::new(),
+            outstanding_prefills: 0,
             prefetch_seen: HashSet::new(),
             stats: ServingStats::new(),
             trace: None,
@@ -140,6 +181,22 @@ impl<E: Executor> Engine<E> {
     /// replicas (see `crate::store`).
     pub fn attach_store(&mut self, handle: StoreHandle) {
         self.store = Some(handle);
+    }
+
+    /// Attach this engine's handle on the disaggregated handoff edge
+    /// and take up its role (see `crate::disagg`).  Decode replicas
+    /// forward every fresh turn to a prefill replica and re-admit it as
+    /// a store restore once the published prefix is visible; prefill
+    /// replicas serve forwarded prefills and never decode.  Requires an
+    /// attached store (the handoff artifact lives there), and —
+    /// prefill role — chunked prefill (the final-chunk landing is the
+    /// handoff point).
+    pub fn attach_disagg(&mut self, handle: DisaggHandle) {
+        assert!(self.store.is_some(), "disaggregation requires a shared snapshot store");
+        if handle.role() == ReplicaRole::Prefill {
+            assert!(self.cfg.prefill_chunk > 0, "prefill replicas require chunked prefill");
+        }
+        self.disagg = Some(handle);
     }
 
     /// Like `run`, but also returns the recorded trace.
@@ -197,19 +254,34 @@ impl<E: Executor> Engine<E> {
             }
             self.surface_arrivals();
             self.q.surface_delayed(self.now);
+            // Disaggregated mode: exchange handoffs with the other side
+            // of the prefill/decode edge (no-op otherwise).
+            self.disagg_step();
             // Overlap mode: integrate every transfer whose virtual
             // completion the clock has passed — their sequences join
             // the batch before this step's admission and decode, so
             // the decode batch re-forms around them each tick.
             self.integrate_transfers();
             if self.q.waiting.is_empty() && self.q.running.is_empty() {
-                // Idle: jump to the next arrival, tool completion or
-                // (overlap mode) transfer completion.
+                // Disagg: a replica idle but waiting on the *other
+                // side* of the handoff edge parks its fence clock and
+                // blocks on its mailbox instead of jumping — a clock
+                // jump would overshoot responses whose visibility lands
+                // before the next local event, inflating handoff
+                // latency with idle time the replica never spent.
+                if self.disagg_park_wait() {
+                    continue;
+                }
+                // Idle: jump to the next arrival, tool completion,
+                // (overlap mode) transfer completion or (disagg mode)
+                // held handoff's visibility horizon.
                 let next_arrival =
                     self.future.front().map(|&w| self.wfs[w].spec.arrival);
                 let next_ready = self.q.next_ready();
                 let next_xfer = self.ovl.as_ref().and_then(Overlap::next_gating);
-                match [next_arrival, next_ready, next_xfer]
+                let next_handoff =
+                    self.pending_handoffs.iter().map(|&(t, _)| t).min_by(f64::total_cmp);
+                match [next_arrival, next_ready, next_xfer, next_handoff]
                     .into_iter()
                     .flatten()
                     .min_by(f64::total_cmp)
@@ -272,6 +344,8 @@ impl<E: Executor> Engine<E> {
             }
         }
         debug_assert!(self.q.is_drained(), "queues must drain by end of run");
+        debug_assert!(self.pending_handoffs.is_empty(), "held handoffs must drain");
+        debug_assert_eq!(self.outstanding_prefills, 0, "forwarded prefills must return");
         // This replica no longer constrains the cluster's clock fence.
         if let Some(h) = &self.store {
             h.finish();
@@ -312,8 +386,147 @@ impl<E: Executor> Engine<E> {
                 remaining_gen: wf.spec.turns[0].gen_len,
                 was_preempted: false,
                 swapped: None,
+                from_handoff: false,
+                local_only: false,
             });
         }
+    }
+
+    /// Per-step handoff exchange (no-op outside `--disagg`).  Decode
+    /// replicas ingest returned prefills, forward every fresh turn to a
+    /// prefill replica, and surface held handoffs whose visibility
+    /// horizon the clock has passed; prefill replicas ingest forwarded
+    /// requests into the waiting queue.
+    fn disagg_step(&mut self) {
+        let Some(dh) = &self.disagg else { return };
+        let role = dh.role();
+        let mail = dh.drain();
+        self.ingest_handoffs(mail);
+        if role != ReplicaRole::Decode {
+            return;
+        }
+        // Forward every fresh turn.  Handoff returns (restored
+        // locally), preemption re-admissions and swap-parked contexts
+        // stay local: each turn crosses the edge exactly once — the
+        // run-wide termination counter depends on it.
+        let mut i = 0;
+        while i < self.q.waiting.len() {
+            let t = &self.q.waiting[i];
+            if t.from_handoff || t.local_only || t.swapped.is_some() {
+                i += 1;
+                continue;
+            }
+            let turn = self.q.waiting.remove(i).expect("index in range");
+            let dh = self.disagg.as_mut().expect("decode role checked above");
+            dh.forward(PrefillRequest {
+                reply_to: dh.replica(),
+                prompt: turn.prompt,
+                model_id: turn.model_id,
+                remaining_gen: turn.remaining_gen,
+                wf_idx: turn.wf_idx,
+                turn_idx: turn.turn_idx,
+                ready_at: turn.ready_at,
+                sent_at: self.now,
+            });
+            self.outstanding_prefills += 1;
+        }
+        // Surface held handoffs the clock has caught up with, in
+        // arrival order (the admission policy reorders from there).
+        let mut j = 0;
+        while j < self.pending_handoffs.len() {
+            if self.pending_handoffs[j].0 <= self.now {
+                let (_, turn) = self.pending_handoffs.remove(j);
+                self.q.waiting.push_back(turn);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    /// Fold drained mailbox messages into engine state: requests become
+    /// waiting turns backed by `prefill_jobs` (prefill role), responses
+    /// become held handoffs awaiting their visibility horizon (decode
+    /// role).
+    fn ingest_handoffs(&mut self, mail: Vec<Handoff>) {
+        for msg in mail {
+            match msg {
+                Handoff::Request(r) => {
+                    // Virtual causality: a prefill replica's clock
+                    // cannot lag the dispatch time of work it serves.
+                    self.now = self.now.max(r.sent_at);
+                    let job = self.prefill_jobs.len();
+                    self.prefill_jobs.push(PrefillJob {
+                        reply_to: r.reply_to,
+                        wf_idx: r.wf_idx,
+                        turn_idx: r.turn_idx,
+                        remaining_gen: r.remaining_gen,
+                        ready_at: r.ready_at,
+                    });
+                    self.q.waiting.push_back(PendingTurn {
+                        wf_idx: job,
+                        turn_idx: r.turn_idx,
+                        model_id: r.model_id,
+                        ready_at: r.ready_at,
+                        prompt: r.prompt,
+                        remaining_gen: r.remaining_gen,
+                        was_preempted: false,
+                        swapped: None,
+                        from_handoff: false,
+                        local_only: true,
+                    });
+                }
+                Handoff::Response(r) => {
+                    self.outstanding_prefills = self
+                        .outstanding_prefills
+                        .checked_sub(1)
+                        .expect("response without an outstanding prefill");
+                    self.pending_handoffs.push((
+                        r.admissible_at,
+                        PendingTurn {
+                            wf_idx: r.wf_idx,
+                            turn_idx: r.turn_idx,
+                            model_id: r.model_id,
+                            ready_at: r.ready_at,
+                            prompt: r.prompt,
+                            remaining_gen: r.remaining_gen,
+                            was_preempted: false,
+                            swapped: None,
+                            from_handoff: true,
+                            local_only: true,
+                        },
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Idle with nothing locally runnable: when the replica is waiting
+    /// on the *other side* of the handoff edge (decode role: prefills
+    /// in flight; prefill role: turns still owed run-wide), park the
+    /// fence clock, block on the mailbox and ingest what arrives.
+    /// Parking is safe because `ClockFence::sync` blocks the *prober*
+    /// until laggards catch up, so the ordinary top-of-loop re-sync
+    /// cannot miss anything that became visible meanwhile.  Returns
+    /// false when the replica is not waiting on anything (run over, or
+    /// not in disagg mode).
+    fn disagg_park_wait(&mut self) -> bool {
+        let waiting = match &self.disagg {
+            Some(dh) => match dh.role() {
+                ReplicaRole::Decode => self.outstanding_prefills > 0,
+                ReplicaRole::Prefill => dh.remaining() > 0,
+                ReplicaRole::Hybrid => false,
+            },
+            None => return false,
+        };
+        if !waiting {
+            return false;
+        }
+        if let Some(h) = &self.store {
+            h.finish();
+        }
+        let mail = self.disagg.as_ref().expect("checked above").wait();
+        self.ingest_handoffs(mail);
+        true
     }
 
     /// Store coverage of every waiting turn, memoized once per
@@ -431,6 +644,16 @@ impl<E: Executor> Engine<E> {
                             }
                             cached = hit.tokens;
                         }
+                    }
+                    // Handoff consume (disagg decode role): the pinned
+                    // prefix has been restored above — release the pin
+                    // so the store may age the blocks out normally.
+                    if turn.from_handoff {
+                        if let Some(h) = &self.store {
+                            h.unpin(&turn.prompt);
+                        }
+                        turn.from_handoff = false;
+                        self.stats.decode_handoffs += 1;
                     }
                     let uncached = turn.prompt.len() - cached;
                     // The budget settles against the real admission
@@ -570,6 +793,16 @@ impl<E: Executor> Engine<E> {
                             }
                             cached = hit.tokens;
                         }
+                    }
+                    // Handoff consume — as in the serial path; the hit
+                    // was taken above, so the pin has done its job even
+                    // though the transfer lands later.
+                    if turn.from_handoff {
+                        if let Some(h) = &self.store {
+                            h.unpin(&turn.prompt);
+                        }
+                        turn.from_handoff = false;
+                        self.stats.decode_handoffs += 1;
                     }
                     let uncached = turn.prompt.len() - cached;
                     prefill_budget = prefill_budget.saturating_sub(uncached);
@@ -812,13 +1045,16 @@ impl<E: Executor> Engine<E> {
 
     /// Write a context back into the snapshot store (background D2H
     /// transfer: the entry becomes probe-visible once the write-back
-    /// completes, so publishing charges no engine time).
-    fn publish_to_store(&mut self, ctx: &[u32]) {
-        let Some(h) = &self.store else { return };
+    /// completes, so publishing charges no engine time).  Returns the
+    /// virtual time the published prefix becomes visible to probes —
+    /// including the store's causality-window clamp — or `None` when
+    /// nothing was published (no store, or a sub-block context).
+    fn publish_to_store(&mut self, ctx: &[u32]) -> Option<f64> {
+        let Some(h) = &self.store else { return None };
         let bt = self.cfg.block_tokens;
         let aligned = (ctx.len() / bt) * bt;
         if aligned == 0 {
-            return;
+            return None;
         }
         let bytes = aligned as u64 * self.kv.kv_bytes_per_token();
         // Write-back is the PCIe hop in the other direction.
@@ -835,6 +1071,12 @@ impl<E: Executor> Engine<E> {
             self.stats.overlapped_transfer_time += (visible_at - self.now).max(0.0);
             ovl.spawn_background(visible_at);
         }
+        // Report the horizon the *store* will enforce: it clamps every
+        // visibility time at least one causality window into the future
+        // (see `crate::store`), so an unclamped value would make a
+        // handoff's `admissible_at` land just before the prefix is
+        // probe-visible and silently degrade to a full re-prefill.
+        Some(visible_at.max(self.now + crate::store::DEFAULT_WINDOW))
     }
 
     /// Fatal-misconfiguration guard: if the system is idle (nothing
@@ -897,6 +1139,11 @@ impl<E: Executor> Engine<E> {
                 // Only actually-encoded chunks count as wasted compute.
                 was_preempted: st.next > st.start,
                 swapped: None,
+                // Disagg: a preempted turn re-admits locally — its
+                // prefill debt was already retired (or, prefill role,
+                // the job is still this replica's to finish).
+                from_handoff: false,
+                local_only: true,
                 // No tokens generated yet: the context is the prompt.
                 prompt: victim.into_context(),
             };
@@ -913,6 +1160,12 @@ impl<E: Executor> Engine<E> {
             remaining_gen: victim.remaining_gen,
             was_preempted: true,
             swapped: None,
+            // Disagg: preempted mid-decode — the context now includes
+            // generated tokens no prefill replica has seen; re-admit
+            // locally (and never re-forward: the termination counter
+            // charges each turn once).
+            from_handoff: false,
+            local_only: true,
             // Restart prompt = prompt + generated-so-far; appends in
             // place (the victim owns its buffer), no context copy.
             prompt: victim.into_context(),
@@ -1172,6 +1425,15 @@ impl<E: Executor> Engine<E> {
             if !done {
                 continue;
             }
+            // Prefill role: the finished prompt encode *is* the
+            // product.  Publish and hand off instead of joining the
+            // decode batch — no first token here; the decode replica
+            // emits it after restoring the prefix.
+            if self.disagg.as_ref().is_some_and(|d| d.role() == ReplicaRole::Prefill) {
+                let seq = self.q.running.remove(pos);
+                self.finish_prefill_handoff(seq);
+                continue;
+            }
             let ready_at = {
                 let seq = &mut self.q.running[pos];
                 let st = seq.prefill.take().expect("completed prefill state");
@@ -1211,6 +1473,45 @@ impl<E: Executor> Engine<E> {
                 j += 1;
             }
         }
+    }
+
+    /// Prefill-role retirement: the sequence's prompt is fully encoded.
+    /// Publish the KV into the shared store (write-through, exactly the
+    /// artifact a decode replica restores), pin the chain against
+    /// demotion until the decode side consumes it, and hand the turn
+    /// back to its owner stamped with the store-visibility horizon.
+    /// The sequence also publishes to the local radix cache, so later
+    /// handoffs sharing the prefix skip the re-encode.
+    fn finish_prefill_handoff(&mut self, mut seq: RunningSeq) {
+        let st = seq.prefill.take().expect("handoff seq completed its prefill");
+        let cache = st.cache.expect("completed prefill built a cache");
+        debug_assert!(st.base.is_none(), "base snapshot consumed by the first chunk");
+        debug_assert!(seq.generated.is_empty(), "prefill role never decodes");
+        let snap = self.exec.snapshot(cache);
+        self.exec.drop_snapshot(cache);
+        let dropped = self.kv.finish_sequence(seq.seq_id, &seq.prompt, Some(snap));
+        self.drop_snapshots(&dropped);
+        let visible_at = self.publish_to_store(&seq.prompt);
+        // A sub-block prompt publishes nothing: the decode side will
+        // simply re-encode it (a few tokens) at admission.
+        let admissible_at = visible_at.map_or(self.now, |v| v.max(self.now));
+        if let Some(h) = &self.store {
+            h.pin(&seq.prompt);
+        }
+        self.stats.prefill_handoffs += 1;
+        let job = &self.prefill_jobs[seq.wf_idx];
+        self.disagg.as_ref().expect("prefill handoff requires disagg").respond(
+            job.reply_to,
+            PrefillResponse {
+                prompt: seq.prompt,
+                model_id: seq.model_id,
+                remaining_gen: job.remaining_gen,
+                wf_idx: job.wf_idx,
+                turn_idx: job.turn_idx,
+                ready_at: job.ready_at,
+                admissible_at,
+            },
+        );
     }
 
     /// Preempt the newest running sequence other than index `keep`.
@@ -1294,6 +1595,11 @@ impl<E: Executor> Engine<E> {
                 remaining_gen: gen,
                 was_preempted: false,
                 swapped: None,
+                // Fresh turn: under disagg it is forwarded for prefill
+                // like any other (the grown context's new suffix is
+                // what the prefill fleet encodes).
+                from_handoff: false,
+                local_only: false,
             };
             if ready_at > self.now {
                 self.q.delayed.push(turn);

@@ -35,6 +35,14 @@ pub struct PendingTurn {
     /// Live cache parked in the swap tier by a swap-mode preemption:
     /// (handle, bytes).  Restored on re-admission without recompute.
     pub swapped: Option<(SnapshotId, u64)>,
+    /// `--disagg on`, decode role: this turn came back from a prefill
+    /// replica with its prefix published (and pinned) in the shared
+    /// store.  Admission releases the pin after consuming the restore.
+    pub from_handoff: bool,
+    /// `--disagg on`, decode role: never forward this turn to a prefill
+    /// replica (it already went once, or was preempted after admission
+    /// and must re-admit locally).  Always false outside disagg mode.
+    pub local_only: bool,
 }
 
 /// Progress of a chunked prefill (only present while the sequence's

@@ -34,6 +34,7 @@
 pub mod bench_util;
 pub mod cluster;
 pub mod config;
+pub mod disagg;
 pub mod engine;
 pub mod json;
 pub mod kvcache;
@@ -48,6 +49,7 @@ pub mod trace;
 pub mod workload;
 
 pub use cluster::{Cluster, ClusterStats};
+pub use disagg::ReplicaRole;
 pub use config::{
     AgentPattern, ClusterRouting, EvictionPolicy, Routing, SchedPolicy, ServingConfig,
     ServingMode, WorkloadConfig,

@@ -17,6 +17,12 @@
 //!            overlap with compute instead of stalling the replica
 //!            (off = the serial charging path, bit-identical to the
 //!            pre-overlap engine).
+//!            `--disagg on` splits the cluster into prefill and decode
+//!            tiers over the shared store (`--prefill-replicas N` of
+//!            the `--replicas R` total serve prefills; the rest
+//!            decode).  Needs `--replicas >= 2`, a non-zero store, and
+//!            `--cluster-routing prefill_decode` to shard the workload
+//!            across the decode tier only.
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
 //!            `--threads T` runs the sweep points across T worker
 //!            threads (near-linear wall-clock speedup for the grids;
@@ -35,6 +41,8 @@
 //!   icarus serve --sched-policy cache_aware --prefill-chunk 256 --qps 1.5
 //!   icarus serve --replicas 4 --store-host-bytes 268435456 --store-prefetch on
 //!   icarus serve --store-host-bytes 268435456 --overlap on --qps 1.5
+//!   icarus serve --replicas 4 --disagg on --prefill-replicas 2 \
+//!       --cluster-routing prefill_decode --store-host-bytes 268435456
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
 //!   icarus sweep --threads 4 --json sweep.json
 
@@ -121,6 +129,8 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         prefix_caching: a.get("prefix-caching").unwrap_or("on") != "off",
         replicas: a.usize("replicas", 1)?,
         cluster_routing: ClusterRouting::parse(a.get("cluster-routing").unwrap_or("round_robin"))?,
+        disagg: a.get("disagg").unwrap_or("off") == "on",
+        prefill_replicas: a.usize("prefill-replicas", 1)?,
     })
 }
 
@@ -188,6 +198,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 !scfg.overlap,
                 "--overlap on needs --executor sim (PJRT durations are measured \
                  wall time, not modeled transfers the virtual-time reactor can overlap)"
+            );
+            anyhow::ensure!(
+                !scfg.disagg,
+                "--disagg on needs --executor sim (disaggregation splits a \
+                 multi-replica cluster; PJRT runs a single engine)"
             );
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let config = a.get("config").unwrap_or("serve-small");

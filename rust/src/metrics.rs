@@ -213,6 +213,15 @@ pub struct ServingStats {
     /// (`--overlap on` only): transfer completions plus background
     /// write-back/prefetch tasks.
     pub tasks_spawned: u64,
+    /// Prefills this replica ran to completion and handed off to a
+    /// decode replica (`--disagg on`, prefill role only; such turns do
+    /// not count as `completed_turns` here — the decode side retires
+    /// them).
+    pub prefill_handoffs: u64,
+    /// Turns this replica admitted from the handoff queue after a
+    /// prefill replica published their prefix (`--disagg on`, decode
+    /// role only).
+    pub decode_handoffs: u64,
     /// Peak KV pool usage in bytes (the memory-explosion signal).
     pub peak_kv_bytes: u64,
     /// Simulated (or measured) seconds from run start to last retirement.
@@ -278,6 +287,8 @@ impl ServingStats {
         self.stalled_transfer_time += other.stalled_transfer_time;
         self.overlapped_transfer_time += other.overlapped_transfer_time;
         self.tasks_spawned += other.tasks_spawned;
+        self.prefill_handoffs += other.prefill_handoffs;
+        self.decode_handoffs += other.decode_handoffs;
         self.peak_kv_bytes += other.peak_kv_bytes;
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
     }
@@ -357,6 +368,8 @@ impl ServingStats {
             ("stalled_transfer_time", num(self.stalled_transfer_time)),
             ("overlapped_transfer_time", num(self.overlapped_transfer_time)),
             ("tasks_spawned", num(self.tasks_spawned as f64)),
+            ("prefill_handoffs", num(self.prefill_handoffs as f64)),
+            ("decode_handoffs", num(self.decode_handoffs as f64)),
             ("peak_kv_bytes", num(self.peak_kv_bytes as f64)),
             ("throughput_tok_s", num(self.throughput_tok_s())),
             ("cache_hit_rate", num(self.cache_hit_rate())),

@@ -41,6 +41,18 @@
 //! (`--prefill-chunk`, see `engine`) splits long prompts into bounded
 //! chunks co-scheduled with the decode batch (time axis), so one long
 //! prompt can stall neither the waiting queue nor the running batch.
+//!
+//! Under disaggregation (`--disagg on`, see `cluster`) the two replica
+//! roles lean on different halves of this module without needing any
+//! disagg-specific policy code.  Prefill replicas are forced onto
+//! [`Sjf`] by the cluster (shortest prompt first minimizes mean handoff
+//! wait for the decode tier; there is no decode batch to protect, so
+//! SJF's only cost — long-prompt starvation under overload — is the
+//! right trade).  Decode replicas keep the operator-chosen policy:
+//! handed-off turns arrive with their prefix already published in the
+//! shared store, so the existing [`StoreCoverage`] memo prices their
+//! admission as a restore (transfer) rather than a re-prefill, and the
+//! probe-accurate budget admits them nearly for free.
 
 mod cache_aware;
 mod fcfs;

@@ -44,7 +44,7 @@
 mod fence;
 mod tiered;
 
-pub use fence::ClockFence;
+pub use fence::{ClockFence, DEFAULT_WINDOW};
 pub use tiered::{StoreHandle, StorePrefetch, TieredStore};
 
 use crate::json::{self, Value};
@@ -217,6 +217,11 @@ pub struct StoreStats {
     pub prefetch_hits: u64,
     /// Prefetch stagings issued.
     pub prefetches: u64,
+    /// Pin operations taken out on handoff chains (see
+    /// [`SnapshotStore::pin`]).
+    pub handoff_pins: u64,
+    /// Blocks currently carrying at least one handoff pin (gauge).
+    pub pinned_blocks: usize,
 }
 
 impl StoreStats {
@@ -241,6 +246,8 @@ impl StoreStats {
             ("remote_hits", num(self.remote_hits as f64)),
             ("prefetch_hits", num(self.prefetch_hits as f64)),
             ("prefetches", num(self.prefetches as f64)),
+            ("handoff_pins", num(self.handoff_pins as f64)),
+            ("pinned_blocks", num(self.pinned_blocks as f64)),
         ])
     }
 }
@@ -303,6 +310,25 @@ pub trait SnapshotStore: Send + Sync {
     /// in the background and consumes no engine time.  Returns false
     /// when there was nothing (new) to stage.
     fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool;
+
+    /// Pin `ctx`'s stored block chain against demotion and drop — the
+    /// disaggregated handoff guarantee: a prefix published by a prefill
+    /// replica must still be restorable (from the tier it was published
+    /// to) when the owning decode replica consumes it, no matter what
+    /// pressure other publishes apply in between.  Pins are counted, so
+    /// overlapping handoffs sharing prefix blocks nest; blocks absent
+    /// from the store (truncated publish) are skipped.  The default
+    /// implementation is a no-op for stores without eviction.
+    fn pin(&self, ctx: &[u32]) {
+        let _ = ctx;
+    }
+
+    /// Release one pin on each block of `ctx`'s stored chain (the
+    /// decode-side consume).  Saturating: blocks that were dropped
+    /// before ever being pinned, or never pinned, are skipped.
+    fn unpin(&self, ctx: &[u32]) {
+        let _ = ctx;
+    }
 
     /// Snapshot of the aggregate store counters.
     fn stats(&self) -> StoreStats;

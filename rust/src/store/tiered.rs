@@ -50,6 +50,11 @@ struct Entry {
     staged_at: f64,
     /// LRU tick (strictly increasing across all touches).
     tick: u64,
+    /// Outstanding handoff pins (see [`SnapshotStore::pin`]): while
+    /// non-zero the block is skipped by every eviction scan — neither
+    /// demoted nor dropped.  Counted so overlapping handoffs sharing
+    /// prefix blocks nest.
+    pins: u32,
 }
 
 #[derive(Debug)]
@@ -84,9 +89,12 @@ impl Inner {
         }
     }
 
-    /// Least-recently-used key currently in `tier` (O(log n)).
-    fn lru_in_tier(&self, tier: StoreTier) -> Option<Key> {
-        self.lru[tier_idx(tier)].first_key_value().map(|(_, &k)| k)
+    /// Least-recently-used *unpinned* key currently in `tier`.
+    /// Handoff-pinned blocks are immovable until consumed, so eviction
+    /// scans past them in recency order (O(pinned) extra per scan, and
+    /// pins are transient); `None` when every resident block is pinned.
+    fn lru_victim(&self, tier: StoreTier) -> Option<Key> {
+        self.lru[tier_idx(tier)].values().find(|k| self.entries[*k].pins == 0).copied()
     }
 
     fn drop_entry(&mut self, key: Key, block_bytes: u64) {
@@ -110,14 +118,16 @@ impl Inner {
     /// [`SnapshotStore::publish`]).  Demoting a protected block to
     /// disk is fine — the chain stays contiguous across tiers.
     fn demote_host_lru(&mut self, block_bytes: u64, protected: &HashSet<Key>) -> bool {
-        let Some(key) = self.lru_in_tier(StoreTier::Host) else {
+        let Some(key) = self.lru_victim(StoreTier::Host) else {
             return false;
         };
         if block_bytes <= self.disk.capacity() {
             // Pre-check the disk victims before touching any budget so
             // a protected victim aborts with no partial state.
             while self.disk.free() < block_bytes {
-                let victim = self.lru_in_tier(StoreTier::Disk).expect("capacity suffices");
+                let Some(victim) = self.lru_victim(StoreTier::Disk) else {
+                    return false; // every disk block is pinned
+                };
                 if protected.contains(&victim) {
                     return false;
                 }
@@ -335,11 +345,11 @@ impl SnapshotStore for TieredStore {
             } else if self.block_bytes <= inner.disk.capacity() {
                 let mut truncated = false;
                 while !inner.disk.reserve(self.block_bytes) {
-                    let victim = inner.lru_in_tier(StoreTier::Disk).expect("capacity suffices");
-                    if placed.contains(&victim) {
+                    let victim = inner.lru_victim(StoreTier::Disk);
+                    let Some(victim) = victim.filter(|v| !placed.contains(v)) else {
                         truncated = true;
                         break;
-                    }
+                    };
                     inner.drop_entry(victim, self.block_bytes);
                 }
                 if truncated {
@@ -357,7 +367,14 @@ impl SnapshotStore for TieredStore {
             inner.next_tick += 1;
             inner.entries.insert(
                 key,
-                Entry { tier, publisher: replica, visible_at, staged_at: f64::INFINITY, tick },
+                Entry {
+                    tier,
+                    publisher: replica,
+                    visible_at,
+                    staged_at: f64::INFINITY,
+                    tick,
+                    pins: 0,
+                },
             );
             inner.lru[tier_idx(tier)].insert(tick, key);
             placed.insert(key);
@@ -427,6 +444,41 @@ impl SnapshotStore for TieredStore {
         }
         inner.stats.prefetches += 1;
         true
+    }
+
+    fn pin(&self, ctx: &[u32]) {
+        let keys = self.chain_keys(ctx);
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        let mut any = false;
+        for k in &keys {
+            if let Some(e) = inner.entries.get_mut(k) {
+                if e.pins == 0 {
+                    inner.stats.pinned_blocks += 1;
+                }
+                e.pins += 1;
+                any = true;
+            }
+        }
+        if any {
+            inner.stats.handoff_pins += 1;
+        }
+    }
+
+    fn unpin(&self, ctx: &[u32]) {
+        let keys = self.chain_keys(ctx);
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        for k in &keys {
+            if let Some(e) = inner.entries.get_mut(k) {
+                if e.pins > 0 {
+                    e.pins -= 1;
+                    if e.pins == 0 {
+                        inner.stats.pinned_blocks -= 1;
+                    }
+                }
+            }
+        }
     }
 
     fn stats(&self) -> StoreStats {
@@ -517,6 +569,17 @@ impl StoreHandle {
     pub fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
         self.sync(now);
         self.store.stage(prompt, now, price)
+    }
+
+    /// See [`SnapshotStore::pin`] (no fence: pins have no visibility
+    /// semantics — they only constrain eviction).
+    pub fn pin(&self, ctx: &[u32]) {
+        self.store.pin(ctx);
+    }
+
+    /// See [`SnapshotStore::unpin`].
+    pub fn unpin(&self, ctx: &[u32]) {
+        self.store.unpin(ctx);
     }
 
     /// Snapshot of the shared store's aggregate counters.
@@ -741,6 +804,52 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.publish_rejected, 1, "chain placement stops at the first reject");
         assert_eq!(st.entries, 0);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn pinned_handoff_chain_survives_pressure_until_unpinned() {
+        let s = store(4, 0); // host-only, 4 blocks
+        let handoff = toks(32, 1); // 2 blocks
+        publish_now(&s, &handoff, 0.0, 0);
+        s.pin(&handoff);
+        let st = s.stats();
+        assert_eq!((st.pinned_blocks, st.handoff_pins), (2, 1));
+        // Causality: the pinned publish is still invisible before its
+        // write-back horizon — a consumer must not restore it early.
+        assert!(s.begin_restore(&handoff, 0, 0.0, 1).is_none());
+        // Pressure that would evict the LRU chain (the handoff is
+        // oldest) must scan past the pinned blocks.
+        publish_now(&s, &toks(32, 2), 0.5, 0); // fills host
+        publish_now(&s, &toks(32, 3), 1.0, 0); // evicts salt-2, not the pin
+        assert_eq!(s.peek(&handoff, 2.0), 32, "pinned chain still resident");
+        // Consume on the decode side, then release the pin.
+        let hit = s.begin_restore(&handoff, 0, 2.0, 1).expect("handoff restore");
+        assert_eq!((hit.tokens, hit.remote), (32, true));
+        s.unpin(&handoff);
+        assert_eq!(s.stats().pinned_blocks, 0);
+        // Unpinned, the chain ages out under pressure like any other.
+        publish_now(&s, &toks(32, 4), 3.0, 0); // evicts salt-3 (LRU)
+        publish_now(&s, &toks(32, 5), 4.0, 0); // evicts the old handoff
+        assert_eq!(s.peek(&handoff, 5.0), 0, "unpinned chain evictable again");
+        // Pins on absent blocks are skipped; double unpin saturates.
+        s.pin(&handoff);
+        s.unpin(&handoff);
+        s.unpin(&handoff);
+        assert_eq!(s.stats().pinned_blocks, 0);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn fully_pinned_store_truncates_publishes_instead_of_evicting() {
+        let s = store(2, 0);
+        let pinned = toks(32, 1); // exactly fills host
+        publish_now(&s, &pinned, 0.0, 0);
+        s.pin(&pinned);
+        publish_now(&s, &toks(32, 2), 1.0, 0); // nowhere to go
+        assert_eq!(s.peek(&pinned, 2.0), 32, "pins win over new publishes");
+        assert_eq!(s.peek(&toks(32, 2), 2.0), 0, "newcomer truncated away");
+        s.unpin(&pinned);
         ledger_balances(&s);
     }
 

@@ -1637,6 +1637,132 @@ fn prop_overlap_on_deterministic() {
     }
 }
 
+/// The disaggregation gate is provably inert: with `disagg: false`
+/// pinned explicitly, the `prefill_replicas` knob set to arbitrary
+/// values and the `prefill_decode` routing policy selected, a cluster
+/// produces bit-identical stats *and* traces to the default
+/// configuration — across modes, eviction policies, replica counts and
+/// store on/off.  (This also pins the documented claim that
+/// `prefill_decode` routing degenerates to `round_robin` exactly
+/// outside `--disagg`.)  Store-on cases keep the host tier comfortably
+/// over-provisioned: cross-replica eviction-tie ordering under the
+/// store's sub-window LRU is documented as schedule-dependent (see
+/// `store::fence`), and this differential must not depend on it.
+#[test]
+fn prop_disagg_off_bit_identical() {
+    use icarus::cluster::Cluster;
+    use icarus::config::ClusterRouting;
+    use icarus::ReplicaRole;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(19_000 + seed);
+        let mode = if rng.bool(0.5) { ServingMode::Icarus } else { ServingMode::Baseline };
+        let eviction =
+            if rng.bool(0.5) { EvictionPolicy::Recompute } else { EvictionPolicy::Swap };
+        let replicas = 1 + rng.below(4) as usize;
+        let n_models = 1 + rng.below(6) as usize;
+        let host = if rng.bool(0.5) { 0 } else { 256 << 20 };
+        let base = ServingConfig {
+            mode,
+            eviction,
+            kv_pool_bytes: (8 + rng.below(48)) << 20,
+            replicas,
+            store_host_bytes: host,
+            ..Default::default()
+        };
+        let knobs = ServingConfig {
+            disagg: false,
+            prefill_replicas: 1 + rng.below(7) as usize,
+            cluster_routing: ClusterRouting::PrefillDecode,
+            ..base.clone()
+        };
+        let wcfg = WorkloadConfig {
+            n_models,
+            qps: 0.3 + rng.f64(),
+            n_requests: 24,
+            seed: 600 + seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let (a, at) =
+            Cluster::new(base, 2048, n_models).run_sim_traced(CostModel::default(), wl.clone());
+        let (b, bt) =
+            Cluster::new(knobs, 2048, n_models).run_sim_traced(CostModel::default(), wl);
+        assert_eq!(a.merged, b.merged, "seed {seed}: stats must be bit-identical");
+        assert_eq!(a.per_replica, b.per_replica, "seed {seed}: per-replica stats must match");
+        assert_eq!(at.events, bt.events, "seed {seed}: trace must be bit-identical");
+        assert!(
+            b.roles.iter().all(|&r| r == ReplicaRole::Hybrid),
+            "seed {seed}: no roles without --disagg"
+        );
+        assert!(!b.is_disaggregated(), "seed {seed}");
+        assert_eq!(b.merged.prefill_handoffs, 0, "seed {seed}: handoff edge must stay cold");
+        assert_eq!(b.merged.decode_handoffs, 0, "seed {seed}");
+    }
+}
+
+/// Disaggregated runs conserve handoffs and respect publish causality,
+/// across random tier splits, loads and seeds:
+///
+///   * every turn crosses the prefill→decode edge exactly once
+///     (prefill handoffs == decode handoffs == completed turns —
+///     preemption requeues re-admit locally rather than re-forwarding);
+///   * consuming a handoff means restoring the published prefix over
+///     the modeled transfer path, never re-prefilling it, and a
+///     restore can only begin once the publish is visible through the
+///     clock fence (`ClockFence` + the store's write-back horizon) —
+///     observable as decode-tier store restores with the prefill tier
+///     generating zero tokens and recording zero turn latencies;
+///   * every pin taken at publish is released at consumption (the
+///     pinned-block gauge drains to zero).
+#[test]
+fn prop_disagg_handoff_balance_and_causality() {
+    use icarus::cluster::Cluster;
+    use icarus::config::ClusterRouting;
+    use icarus::ReplicaRole;
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(20_000 + seed);
+        let replicas = 2 + rng.below(3) as usize;
+        let prefill_replicas = 1 + rng.below(replicas as u64 - 1) as usize;
+        let scfg = ServingConfig {
+            disagg: true,
+            prefill_replicas,
+            replicas,
+            cluster_routing: ClusterRouting::PrefillDecode,
+            kv_pool_bytes: 32 << 20,
+            store_host_bytes: 512 << 20,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            n_models: 1 + rng.below(6) as usize,
+            qps: 0.5 + rng.f64() * 2.0,
+            n_requests: 32,
+            seed: 700 + seed,
+            ..Default::default()
+        };
+        let tag = format!("seed {seed} split {prefill_replicas}:{}", replicas - prefill_replicas);
+        let out = Cluster::new(scfg, 2048, wcfg.n_models)
+            .run_sim(CostModel::default(), generate(&wcfg));
+        let expected_turns: u64 = generate(&wcfg).iter().map(|w| w.turns.len() as u64).sum();
+        assert_eq!(out.merged.completed_requests, 32, "{tag}: completion");
+        assert_eq!(out.merged.completed_turns, expected_turns, "{tag}: turns");
+        assert_eq!(out.merged.prefill_handoffs, expected_turns, "{tag}: handoffs out");
+        assert_eq!(out.merged.decode_handoffs, expected_turns, "{tag}: handoffs in");
+        let prefill = out.merged_for_role(ReplicaRole::Prefill).expect("prefill tier");
+        assert_eq!(prefill.generated_tokens, 0, "{tag}: prefill tier must not decode");
+        assert_eq!(
+            prefill.turn_latency.as_ref().unwrap().count(),
+            0,
+            "{tag}: prefill tier must not record decode latencies"
+        );
+        let decode = out.merged_for_role(ReplicaRole::Decode).expect("decode tier");
+        assert_eq!(decode.completed_turns, expected_turns, "{tag}: decode tier owns turns");
+        assert!(decode.store_restored_tokens > 0, "{tag}: handoffs must restore, not re-prefill");
+        let st = out.store.as_ref().expect("disagg requires the store");
+        assert_eq!(st.handoff_pins, expected_turns, "{tag}: one pin per handoff");
+        assert_eq!(st.pinned_blocks, 0, "{tag}: every pin released at consumption");
+    }
+}
+
 /// Executor invariants under seeded random task/timer workloads: every
 /// spawned task completes (none leaks), every registered timer fires
 /// exactly once (the wheel debug-asserts a double fire and panics on a
