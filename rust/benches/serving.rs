@@ -1,0 +1,213 @@
+//! Serving sweep: goodput and SLO attainment under open-loop
+//! heavy-tailed traffic, across arrival rate × replicas × store budget
+//! × admission bound (EXPERIMENTS.md §Serving).
+//!
+//! Open-loop means arrivals never wait for completions — the generator
+//! (serve::openloop) keeps injecting on its Pareto clock however far
+//! the system falls behind, which is what makes overload visible:
+//! closed-loop drivers self-throttle and hide it.  Goodput counts only
+//! requests that finished inside the request SLO; attainment is the
+//! fraction of requests meeting the TTFT deadline (and decode steps
+//! meeting the ITL deadline).  Past saturation throughput keeps
+//! climbing while goodput collapses — the gap between those two curves
+//! is the figure.
+//!
+//! Sections:
+//!   1. arrival rate × replicas — the goodput knee per replica count;
+//!   2. arrival rate × store budget at fixed replicas — does the shared
+//!      snapshot store move the knee;
+//!   3. Pareto vs Poisson arrivals at the same mean rate — what the
+//!      heavy tail alone costs in SLO attainment;
+//!   4. admission bound sweep at overload — load shedding trades
+//!      completed requests for restored TTFT attainment.
+//!
+//! Results land in bench_results/serving.json and, machine-readably for
+//! the perf trajectory, BENCH_serving.json at the repo root (CI runs
+//! this at smoke scale and uploads the artifact).
+//!
+//! Run: cargo bench --bench serving  [-- --smoke]
+
+use icarus::bench_util::{write_results, Point, Row, KV_BPT_SMALL};
+use icarus::config::ServingMode;
+use icarus::json::{self, Value};
+
+const HOST_8MB: u64 = 8 << 20;
+const DISK_256MB: u64 = 256 << 20;
+
+fn serving_header() {
+    println!(
+        "{:<38} {:>9} {:>9} {:>9} {:>8} {:>8} {:>8}",
+        "point", "tput_rps", "goodput", "ttft_att", "itl_att", "p95(s)", "rejected"
+    );
+}
+
+fn print_serving_row(r: &Row, tput_rps: f64) {
+    println!(
+        "{:<38} {:>9.3} {:>9.3} {:>9.3} {:>8.3} {:>8.3} {:>8}",
+        r.label, tput_rps, r.goodput_rps, r.ttft_attainment, r.itl_attainment, r.p95_s, r.rejected
+    );
+}
+
+/// Run a section's points, printing the serving-centric table.
+fn run_section(title: &str, points: &[Point]) -> Vec<Row> {
+    println!("\n--- {title} ---");
+    serving_header();
+    let mut rows = Vec::new();
+    for p in points {
+        let stats = p.run();
+        let row = Row::from_stats(p, &stats);
+        print_serving_row(&row, stats.requests_per_s());
+        rows.push(row);
+    }
+    rows
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (qps_list, n_requests, replica_list): (&[f64], usize, &[usize]) = if smoke {
+        (&[1.0, 4.0], 32, &[1, 4])
+    } else {
+        (&[0.5, 1.0, 2.0, 4.0, 8.0], 256, &[1, 2, 4])
+    };
+    let overload_qps = *qps_list.last().unwrap();
+
+    println!(
+        "== Serving sweep: open-loop Pareto traffic, goodput + SLO attainment, \
+         ICaRus N=4{} ==",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let base = Point {
+        mode: ServingMode::Icarus,
+        n_models: 4,
+        n_requests,
+        kv_bytes_per_token: KV_BPT_SMALL,
+        open_loop: true,
+        pareto_alpha: 1.5,
+        seed: 21,
+        ..Default::default()
+    };
+
+    // 1: the goodput knee per replica count.  The gate is on (depth 64)
+    // so overload sheds instead of queueing without bound.
+    let mut points = Vec::new();
+    for &replicas in replica_list {
+        for &qps in qps_list {
+            points.push(Point { qps, replicas, admit_queue: 64, ..base.clone() });
+        }
+    }
+    let rows1 = run_section("goodput vs arrival rate x replicas (admit_queue=64)", &points);
+
+    // 2: does the shared store move the knee at fixed replicas?  Same
+    // memory-pressure regime as the overlap bench so restores happen.
+    let store_budgets: &[(u64, u64, &str)] = &[
+        (0, 0, "none"),
+        (HOST_8MB, 0, "host8M"),
+        (HOST_8MB, DISK_256MB, "host8M+disk256M"),
+    ];
+    let store_replicas = *replica_list.last().unwrap();
+    let mut points2 = Vec::new();
+    for &(host, disk, _) in store_budgets {
+        for &qps in qps_list {
+            points2.push(Point {
+                qps,
+                replicas: store_replicas,
+                admit_queue: 64,
+                kv_pool_bytes: 12 << 20,
+                store_host_bytes: host,
+                store_disk_bytes: disk,
+                ..base.clone()
+            });
+        }
+    }
+    let title2 = format!("goodput vs arrival rate x store budget (R={store_replicas})");
+    let rows2 = run_section(&title2, &points2);
+
+    // 3: the heavy tail alone.  pareto_alpha <= 1 falls back to Poisson
+    // in the generator, so both runs share every other knob and the
+    // mean arrival rate.
+    let mut points3 = Vec::new();
+    for &alpha in &[1.0, 1.2, 1.5] {
+        points3.push(Point {
+            qps: overload_qps / 2.0,
+            replicas: store_replicas,
+            admit_queue: 64,
+            pareto_alpha: alpha,
+            ..base.clone()
+        });
+    }
+    let title3 = "Pareto tail index vs Poisson (alpha=1.0) at the same mean rate";
+    let rows3 = run_section(title3, &points3);
+
+    // 4: admission bound at overload — shedding vs unbounded queueing.
+    let mut points4 = Vec::new();
+    for &admit_queue in &[0usize, 16, 64] {
+        points4.push(Point {
+            qps: overload_qps,
+            replicas: store_replicas,
+            admit_queue,
+            ..base.clone()
+        });
+    }
+    let title4 = format!("admission bound at overload (qps={overload_qps})");
+    let rows4 = run_section(&title4, &points4);
+
+    let mut rows = rows1;
+    rows.extend(rows2);
+    rows.extend(rows3);
+    rows.extend(rows4);
+
+    // Goodput/attainment curves keyed by sweep axis, for plotting
+    // without re-deriving the sections from row labels.
+    let curve = |rows: &[Row], points: &[Point]| -> Value {
+        Value::Arr(
+            points
+                .iter()
+                .zip(rows)
+                .map(|(p, r)| {
+                    json::obj(vec![
+                        ("qps", json::num(p.qps)),
+                        ("replicas", json::num(p.replicas as f64)),
+                        ("store_host_bytes", json::num(p.store_host_bytes as f64)),
+                        ("store_disk_bytes", json::num(p.store_disk_bytes as f64)),
+                        ("pareto_alpha", json::num(p.pareto_alpha)),
+                        ("admit_queue", json::num(p.admit_queue as f64)),
+                        ("goodput_rps", json::num(r.goodput_rps)),
+                        ("ttft_attainment", json::num(r.ttft_attainment)),
+                        ("itl_attainment", json::num(r.itl_attainment)),
+                        ("rejected", json::num(r.rejected as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    write_results(
+        "serving",
+        &rows,
+        vec![
+            ("figure", json::s("serving-goodput-slo")),
+            ("smoke", Value::Bool(smoke)),
+            (
+                "slo",
+                json::obj(vec![
+                    ("request_s", json::num(icarus::serve::DEFAULT_SLO_REQUEST_S)),
+                    ("ttft_s", json::num(icarus::serve::DEFAULT_SLO_TTFT_S)),
+                    ("itl_s", json::num(icarus::serve::DEFAULT_SLO_ITL_S)),
+                ]),
+            ),
+            ("rate_x_replicas", curve(&rows[..points.len()], &points)),
+            ("rate_x_store", {
+                let off = points.len();
+                curve(&rows[off..off + points2.len()], &points2)
+            }),
+            ("tail_ablation", {
+                let off = points.len() + points2.len();
+                curve(&rows[off..off + points3.len()], &points3)
+            }),
+            ("admission_ablation", {
+                let off = points.len() + points2.len() + points3.len();
+                curve(&rows[off..off + points4.len()], &points4)
+            }),
+        ],
+    );
+}

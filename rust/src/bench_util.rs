@@ -15,6 +15,10 @@ use crate::engine::executor::{CostModel, SimExecutor};
 use crate::engine::Engine;
 use crate::json::{self, Value};
 use crate::metrics::ServingStats;
+use crate::serve::{
+    generate_open_loop, OpenLoopConfig, DEFAULT_SLO_ITL_S, DEFAULT_SLO_REQUEST_S,
+    DEFAULT_SLO_TTFT_S,
+};
 use crate::workload::generate;
 
 /// Plain measure loop: warmup, then median of 5 timed runs of `iters`
@@ -98,6 +102,17 @@ pub struct Point {
     pub disagg: bool,
     /// Replicas serving the prefill tier when `disagg` is on.
     pub prefill_replicas: usize,
+    /// Admission gate: waiting-queue depth bound (0 = gate off;
+    /// `benches/serving.rs` sweeps this).
+    pub admit_queue: usize,
+    /// Open-loop workload: generate arrivals with the serving front
+    /// end's heavy-tailed generator instead of `workload::generate`.
+    pub open_loop: bool,
+    /// Pareto tail index for open-loop inter-arrivals (<= 1 falls back
+    /// to Poisson — the bench's tail ablation).
+    pub pareto_alpha: f64,
+    /// Persistent-user population for open-loop session prefixes.
+    pub users: u64,
     /// Simulator cost model.
     pub cost: CostModel,
 }
@@ -128,13 +143,20 @@ impl Default for Point {
             overlap: false,
             disagg: false,
             prefill_replicas: 1,
+            admit_queue: 0,
+            open_loop: false,
+            pareto_alpha: 1.5,
+            users: 1 << 20,
             cost: CostModel::default(),
         }
     }
 }
 
 impl Point {
-    fn serving_config(&self) -> ServingConfig {
+    /// The serving config this point encodes (public so benches that
+    /// bypass [`Point::run`] — e.g. to attach a custom workload — stay
+    /// consistent with it).
+    pub fn serving_config(&self) -> ServingConfig {
         ServingConfig {
             mode: self.mode,
             kv_pool_bytes: self.kv_pool_bytes,
@@ -150,6 +172,7 @@ impl Point {
             overlap: self.overlap,
             disagg: self.disagg,
             prefill_replicas: self.prefill_replicas,
+            admit_queue: self.admit_queue,
             ..Default::default()
         }
     }
@@ -171,12 +194,23 @@ impl Point {
             prompt_std: self.prompt_std,
             ..Default::default()
         };
+        let workload = if self.open_loop {
+            let ocfg = OpenLoopConfig {
+                base: wcfg,
+                users: self.users,
+                pareto_alpha: self.pareto_alpha,
+                ..Default::default()
+            };
+            generate_open_loop(&ocfg)
+        } else {
+            generate(&wcfg)
+        };
         if self.replicas > 1 || self.store_host_bytes + self.store_disk_bytes > 0 {
             let cluster = Cluster::new(scfg, self.kv_bytes_per_token, self.n_models);
-            return cluster.run_sim(self.cost.clone(), generate(&wcfg)).merged;
+            return cluster.run_sim(self.cost.clone(), workload).merged;
         }
         let exec = SimExecutor::new(self.cost.clone(), self.mode);
-        Engine::new(scfg, self.kv_bytes_per_token, self.n_models, exec).run(generate(&wcfg))
+        Engine::new(scfg, self.kv_bytes_per_token, self.n_models, exec).run(workload)
     }
 
     /// Short `mode/N/qps` tag for table rows, extended with the
@@ -209,6 +243,12 @@ impl Point {
         if self.disagg {
             let p = self.prefill_replicas.clamp(1, self.replicas.saturating_sub(1).max(1));
             s.push_str(&format!("/pd={}:{}", p, self.replicas.saturating_sub(p)));
+        }
+        if self.admit_queue > 0 {
+            s.push_str(&format!("/adm={}", self.admit_queue));
+        }
+        if self.open_loop {
+            s.push_str(&format!("/ol(a={:.1})", self.pareto_alpha));
         }
         s
     }
@@ -251,6 +291,15 @@ pub struct Row {
     pub stalled_transfer_s: f64,
     /// Virtual seconds of transfer time hidden behind compute.
     pub overlapped_transfer_s: f64,
+    /// Goodput: completed requests per second that met the default
+    /// request SLO ([`DEFAULT_SLO_REQUEST_S`]).
+    pub goodput_rps: f64,
+    /// Fraction of requests whose TTFT met [`DEFAULT_SLO_TTFT_S`].
+    pub ttft_attainment: f64,
+    /// Fraction of decode steps whose ITL met [`DEFAULT_SLO_ITL_S`].
+    pub itl_attainment: f64,
+    /// Requests shed by the admission gate (0 when the gate is off).
+    pub rejected: u64,
 }
 
 impl Row {
@@ -275,6 +324,10 @@ impl Row {
             store_remote_hits: s.store_remote_hits,
             stalled_transfer_s: s.stalled_transfer_time,
             overlapped_transfer_s: s.overlapped_transfer_time,
+            goodput_rps: s.goodput_rps(DEFAULT_SLO_REQUEST_S),
+            ttft_attainment: s.slo_ttft_attainment(DEFAULT_SLO_TTFT_S),
+            itl_attainment: s.slo_itl_attainment(DEFAULT_SLO_ITL_S),
+            rejected: s.rejected_requests,
         }
     }
 
@@ -297,6 +350,10 @@ impl Row {
             ("store_remote_hits", json::num(self.store_remote_hits as f64)),
             ("stalled_transfer_s", json::num(self.stalled_transfer_s)),
             ("overlapped_transfer_s", json::num(self.overlapped_transfer_s)),
+            ("goodput_rps", json::num(self.goodput_rps)),
+            ("ttft_attainment", json::num(self.ttft_attainment)),
+            ("itl_attainment", json::num(self.itl_attainment)),
+            ("rejected", json::num(self.rejected as f64)),
         ])
     }
 }

@@ -92,6 +92,15 @@ impl EvictionPolicy {
             EvictionPolicy::Swap => "swap",
         }
     }
+
+    /// Inverse of [`EvictionPolicy::as_str`].
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "recompute" => Ok(EvictionPolicy::Recompute),
+            "swap" => Ok(EvictionPolicy::Swap),
+            other => anyhow::bail!("unknown eviction policy: {other}"),
+        }
+    }
 }
 
 /// How the cluster layer assigns workflows to engine replicas (see
@@ -216,6 +225,19 @@ pub struct ServingConfig {
     /// Number of prefill-role replicas under `disagg` (clamped to
     /// `1..=replicas-1`); ignored when `disagg` is off.
     pub prefill_replicas: usize,
+    /// Serving-front-end admission control (`serve::AdmissionLimits`):
+    /// a workflow arriving while the replica's waiting queue already
+    /// holds at least this many turns is load-shed at the gate
+    /// (counted in `rejected_requests`, like a 503 from a live front
+    /// end) instead of enqueued.  0 (the default) disables the depth
+    /// bound; with `admit_tokens` also 0 the gate is off entirely and
+    /// the engine is bit-identical to the pre-front-end arrival path
+    /// (pinned by a differential property test).
+    pub admit_queue: usize,
+    /// Token-budget companion to `admit_queue`: reject arrivals while
+    /// the waiting queue's summed prompt tokens are at or above this.
+    /// 0 (the default) disables the token bound.
+    pub admit_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -239,6 +261,8 @@ impl Default for ServingConfig {
             cluster_routing: ClusterRouting::RoundRobin,
             disagg: false,
             prefill_replicas: 1,
+            admit_queue: 0,
+            admit_tokens: 0,
         }
     }
 }
@@ -265,7 +289,71 @@ impl ServingConfig {
             ("cluster_routing", json::s(self.cluster_routing.as_str())),
             ("disagg", Value::Bool(self.disagg)),
             ("prefill_replicas", json::num(self.prefill_replicas as f64)),
+            ("admit_queue", json::num(self.admit_queue as f64)),
+            ("admit_tokens", json::num(self.admit_tokens as f64)),
         ])
+    }
+
+    /// Inverse of [`ServingConfig::to_json`], with defaults for absent
+    /// keys — how the serving front end's job endpoint accepts run
+    /// configurations over the wire.  Unknown keys are ignored; known
+    /// keys with the wrong type or spelling are errors.
+    pub fn from_json(v: &Value) -> anyhow::Result<ServingConfig> {
+        let d = ServingConfig::default();
+        let s = |key: &str| -> anyhow::Result<Option<&str>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => {
+                    Ok(Some(x.as_str().ok_or_else(|| anyhow::anyhow!("{key}: want string"))?))
+                }
+            }
+        };
+        let n = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("{key}: want number")),
+            }
+        };
+        let b = |key: &str, default: bool| -> anyhow::Result<bool> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: want bool")),
+            }
+        };
+        Ok(ServingConfig {
+            mode: match s("mode")? {
+                Some(m) => ServingMode::parse(m)?,
+                None => d.mode,
+            },
+            kv_pool_bytes: n("kv_pool_bytes", d.kv_pool_bytes as f64)? as u64,
+            block_tokens: n("block_tokens", d.block_tokens as f64)? as usize,
+            max_batch: n("max_batch", d.max_batch as f64)? as usize,
+            max_prefill_tokens: n("max_prefill_tokens", d.max_prefill_tokens as f64)? as usize,
+            sched_policy: match s("sched_policy")? {
+                Some(p) => SchedPolicy::parse(p)?,
+                None => d.sched_policy,
+            },
+            prefill_chunk: n("prefill_chunk", d.prefill_chunk as f64)? as usize,
+            eviction: match s("eviction")? {
+                Some(e) => EvictionPolicy::parse(e)?,
+                None => d.eviction,
+            },
+            swap_bytes: n("swap_bytes", d.swap_bytes as f64)? as u64,
+            store_host_bytes: n("store_host_bytes", d.store_host_bytes as f64)? as u64,
+            store_disk_bytes: n("store_disk_bytes", d.store_disk_bytes as f64)? as u64,
+            store_prefetch: b("store_prefetch", d.store_prefetch)?,
+            overlap: b("overlap", d.overlap)?,
+            prefix_caching: b("prefix_caching", d.prefix_caching)?,
+            replicas: n("replicas", d.replicas as f64)? as usize,
+            cluster_routing: match s("cluster_routing")? {
+                Some(r) => ClusterRouting::parse(r)?,
+                None => d.cluster_routing,
+            },
+            disagg: b("disagg", d.disagg)?,
+            prefill_replicas: n("prefill_replicas", d.prefill_replicas as f64)? as usize,
+            admit_queue: n("admit_queue", d.admit_queue as f64)? as usize,
+            admit_tokens: n("admit_tokens", d.admit_tokens as f64)? as usize,
+        })
     }
 }
 
@@ -397,6 +485,53 @@ impl WorkloadConfig {
             ("seed", json::num(self.seed as f64)),
         ])
     }
+
+    /// Build a workload config from a (possibly partial) JSON object,
+    /// with defaults for absent keys — the serving front end's job
+    /// endpoint accepts workload descriptions in this form.  `routing`
+    /// is `"round_robin"` or `"skewed"`; the latter reads the hot share
+    /// from `hot_p_percent` (default 80).
+    pub fn from_json(v: &Value) -> anyhow::Result<WorkloadConfig> {
+        let d = WorkloadConfig::default();
+        let n = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("{key}: want number")),
+            }
+        };
+        let pattern = match v.get("pattern") {
+            None => d.pattern,
+            Some(x) => AgentPattern::parse(
+                x.as_str().ok_or_else(|| anyhow::anyhow!("pattern: want string"))?,
+            )?,
+        };
+        let routing = match v.get("routing").and_then(|x| x.as_str()) {
+            None => d.routing,
+            Some("round_robin") => Routing::RoundRobin,
+            Some("skewed") => {
+                Routing::Skewed { hot_p_percent: n("hot_p_percent", 80.0)?.clamp(0.0, 100.0) as u8 }
+            }
+            Some(other) => anyhow::bail!("unknown routing: {other}"),
+        };
+        Ok(WorkloadConfig {
+            pattern,
+            n_models: n("n_models", d.n_models as f64)? as usize,
+            qps: n("qps", d.qps)?,
+            n_requests: n("n_requests", d.n_requests as f64)? as usize,
+            routing,
+            prompt_mean: n("prompt_mean", d.prompt_mean)?,
+            prompt_std: n("prompt_std", d.prompt_std)?,
+            turns_min: n("turns_min", d.turns_min as f64)? as u64,
+            turns_max: n("turns_max", d.turns_max as f64)? as u64,
+            output_mean: n("output_mean", d.output_mean)?,
+            output_std: n("output_std", d.output_std)?,
+            obs_mean: n("obs_mean", d.obs_mean)?,
+            obs_std: n("obs_std", d.obs_std)?,
+            think_mean: n("think_mean", d.think_mean)?,
+            think_std: n("think_std", d.think_std)?,
+            seed: n("seed", d.seed as f64)? as u64,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -451,6 +586,7 @@ mod tests {
         assert!(!s.overlap, "serial transfer charging by default");
         assert!(!s.disagg, "homogeneous replicas by default");
         assert_eq!(s.prefill_replicas, 1);
+        assert_eq!(s.admit_queue + s.admit_tokens, 0, "admission gate off by default");
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);
@@ -460,5 +596,64 @@ mod tests {
     fn json_dump_contains_mode() {
         let s = ServingConfig::default().to_json();
         assert_eq!(s.get("mode").unwrap().as_str(), Some("icarus"));
+    }
+
+    #[test]
+    fn eviction_roundtrip() {
+        for e in [EvictionPolicy::Recompute, EvictionPolicy::Swap] {
+            assert_eq!(EvictionPolicy::parse(e.as_str()).unwrap(), e);
+        }
+        assert!(EvictionPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn serving_config_json_roundtrip() {
+        let cfg = ServingConfig {
+            mode: ServingMode::Baseline,
+            sched_policy: SchedPolicy::Sjf,
+            eviction: EvictionPolicy::Swap,
+            prefill_chunk: 256,
+            store_host_bytes: 1 << 20,
+            overlap: true,
+            replicas: 3,
+            cluster_routing: ClusterRouting::HashPrefix,
+            admit_queue: 64,
+            admit_tokens: 8192,
+            ..Default::default()
+        };
+        let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+        // Struct is not PartialEq (holds enums only, but keep it light):
+        // compare via the canonical JSON dump.
+        assert_eq!(back.to_json().to_string_pretty(), cfg.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn serving_config_from_partial_and_bad_json() {
+        let v = Value::parse(r#"{"replicas": 4, "admit_queue": 32}"#).unwrap();
+        let cfg = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.admit_queue, 32);
+        assert_eq!(cfg.block_tokens, ServingConfig::default().block_tokens);
+        let bad = Value::parse(r#"{"mode": "warp"}"#).unwrap();
+        assert!(ServingConfig::from_json(&bad).is_err());
+        let wrong_type = Value::parse(r#"{"replicas": "four"}"#).unwrap();
+        assert!(ServingConfig::from_json(&wrong_type).is_err());
+    }
+
+    #[test]
+    fn workload_config_from_json() {
+        let v = Value::parse(
+            r#"{"pattern": "reflexion", "qps": 2.5, "n_requests": 42,
+                "routing": "skewed", "hot_p_percent": 60, "seed": 7}"#,
+        )
+        .unwrap();
+        let cfg = WorkloadConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.pattern, AgentPattern::Reflexion);
+        assert_eq!(cfg.qps, 2.5);
+        assert_eq!(cfg.n_requests, 42);
+        assert_eq!(cfg.routing, Routing::Skewed { hot_p_percent: 60 });
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.n_models, WorkloadConfig::default().n_models);
+        assert!(WorkloadConfig::from_json(&Value::parse(r#"{"routing":"x"}"#).unwrap()).is_err());
     }
 }

@@ -372,6 +372,25 @@ impl<E: Executor> Engine<E> {
                 break;
             }
             self.future.pop_front();
+            // Serving-front-end admission gate: with either bound
+            // enabled, an arrival that finds the waiting queue over
+            // depth/token budget is load-shed here (the virtual-time
+            // analogue of the front end's 503), before it touches KV or
+            // scheduler state.  Both bounds 0 (the default) skips the
+            // whole block, leaving the counters at 0 and the arrival
+            // path bit-identical to the pre-front-end engine.
+            if self.cfg.admit_queue > 0 || self.cfg.admit_tokens > 0 {
+                self.stats.submitted_requests += 1;
+                let depth_over =
+                    self.cfg.admit_queue > 0 && self.q.waiting.len() >= self.cfg.admit_queue;
+                let tokens_over = self.cfg.admit_tokens > 0
+                    && self.q.queued_prompt_tokens() >= self.cfg.admit_tokens;
+                if depth_over || tokens_over {
+                    self.stats.rejected_requests += 1;
+                    self.wfs[w].done = true;
+                    continue;
+                }
+            }
             let wf = &mut self.wfs[w];
             // Park the context in the turn (wf.context goes empty) so
             // the buffer stays uniquely owned and later appends are

@@ -20,7 +20,10 @@
 //!     store shared across replicas (see `store`), the per-replica
 //!     cooperative task runtime that overlaps modeled store/swap
 //!     transfers with compute (see `runtime::exec`; `--overlap on`),
-//!     and the PJRT runtime that executes the artifacts.
+//!     the serving front end — an Inference-Protocol-style HTTP
+//!     service with streaming responses, admission control, and an
+//!     open-loop heavy-tailed traffic generator (see `serve`) — and
+//!     the PJRT runtime that executes the artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation; the `icarus` binary is self-contained afterwards.
@@ -42,6 +45,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod store;
 pub mod tokenizer;
 pub mod tokens;
@@ -59,5 +63,6 @@ pub use engine::Engine;
 pub use kvcache::KvCacheManager;
 pub use metrics::ServingStats;
 pub use sched::Scheduler;
+pub use serve::{AdmissionLimits, Frontend, LiveGate, OpenLoopConfig, OpenLoopGen};
 pub use store::{SnapshotStore, StoreStats, StoreTier, TieredStore};
 pub use tokens::TokenBuf;

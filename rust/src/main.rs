@@ -23,6 +23,16 @@
 //!            decode).  Needs `--replicas >= 2`, a non-zero store, and
 //!            `--cluster-routing prefill_decode` to shard the workload
 //!            across the decode tier only.
+//!            `--admit-queue N` / `--admit-tokens T` bound the waiting
+//!            queue (depth / summed prompt tokens) and load-shed
+//!            arrivals over the bound (both 0 = gate off, bit-identical
+//!            to the ungated engine).  `--openloop on` swaps the
+//!            workload for the open-loop generator: Pareto
+//!            inter-arrivals (`--pareto-alpha`), Zipf-popular persistent
+//!            user sessions (`--users`, `--zipf`, `--user-prefix`), and
+//!            diurnal bursts (`--diurnal-amp`, `--diurnal-period`).
+//!            `--slo-request/--slo-ttft/--slo-itl` set the SLOs behind
+//!            the printed goodput and attainment report.
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
 //!            `--threads T` runs the sweep points across T worker
 //!            threads (near-linear wall-clock speedup for the grids;
@@ -30,6 +40,10 @@
 //!            point is a plain single-engine run either way — threads
 //!            change wall clock, never the numbers.
 //!   info   — show artifact manifest details.
+//!   frontend — run the live Inference-Protocol HTTP front end
+//!            (`--port`/`--addr`, `--models`, `--admit-queue`,
+//!            `--admit-tokens`) until killed; see `serve` module docs
+//!            for the endpoints.
 //!
 //! Both serve and sweep accept `--json out.json` to write the results
 //! machine-readably alongside the stdout report.
@@ -43,8 +57,11 @@
 //!   icarus serve --store-host-bytes 268435456 --overlap on --qps 1.5
 //!   icarus serve --replicas 4 --disagg on --prefill-replicas 2 \
 //!       --cluster-routing prefill_decode --store-host-bytes 268435456
+//!   icarus serve --openloop on --qps 4.0 --requests 512 --replicas 4 \
+//!       --admit-queue 64 --slo-ttft 2.0
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
 //!   icarus sweep --threads 4 --json sweep.json
+//!   icarus frontend --port 8080 --models 4 --admit-queue 128
 
 use anyhow::{anyhow, Result};
 
@@ -59,6 +76,7 @@ use icarus::engine::Engine;
 use icarus::json::{self, Value};
 use icarus::metrics::ServingStats;
 use icarus::runtime::{Manifest, PjrtExecutor};
+use icarus::serve::{self, generate_open_loop, AdmissionLimits, Frontend, OpenLoopConfig, Server};
 use icarus::workload::generate;
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -131,6 +149,8 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         cluster_routing: ClusterRouting::parse(a.get("cluster-routing").unwrap_or("round_robin"))?,
         disagg: a.get("disagg").unwrap_or("off") == "on",
         prefill_replicas: a.usize("prefill-replicas", 1)?,
+        admit_queue: a.usize("admit-queue", 0)?,
+        admit_tokens: a.usize("admit-tokens", 0)?,
     })
 }
 
@@ -150,6 +170,20 @@ fn workload_config(a: &Args) -> Result<WorkloadConfig> {
     })
 }
 
+/// Open-loop generator config from the CLI knobs (see `serve::openloop`).
+fn openloop_config(a: &Args, base: WorkloadConfig) -> Result<OpenLoopConfig> {
+    let d = OpenLoopConfig::default();
+    Ok(OpenLoopConfig {
+        base,
+        users: a.u64("users", d.users)?,
+        zipf_s: a.f64("zipf", d.zipf_s)?,
+        pareto_alpha: a.f64("pareto-alpha", d.pareto_alpha)?,
+        user_prefix_tokens: a.usize("user-prefix", d.user_prefix_tokens)?,
+        diurnal_amplitude: a.f64("diurnal-amp", d.diurnal_amplitude)?,
+        diurnal_period_s: a.f64("diurnal-period", d.diurnal_period_s)?,
+    })
+}
+
 /// Write `text` to `--json <path>` when the flag is present.
 fn write_json_flag(a: &Args, text: &str) -> Result<()> {
     if let Some(path) = a.get("json") {
@@ -162,7 +196,13 @@ fn write_json_flag(a: &Args, text: &str) -> Result<()> {
 fn cmd_serve(a: &Args) -> Result<()> {
     let scfg = serving_config(a)?;
     let wcfg = workload_config(a)?;
-    let workload = generate(&wcfg);
+    let open_loop = a.get("openloop").unwrap_or("off") == "on";
+    let (workload, workload_json) = if open_loop {
+        let ocfg = openloop_config(a, wcfg.clone())?;
+        (generate_open_loop(&ocfg), ocfg.to_json())
+    } else {
+        (generate(&wcfg), wcfg.to_json())
+    };
     let mut per_replica_json = None;
     let mut store_json = None;
     let stats = match a.get("executor").unwrap_or("sim") {
@@ -213,10 +253,37 @@ fn cmd_serve(a: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown executor {other}"),
     };
+    // SLO report: goodput counts only requests finishing inside
+    // --slo-request; attainment fractions come straight from the TTFT
+    // and ITL histograms.
+    let slo_req = a.f64("slo-request", serve::DEFAULT_SLO_REQUEST_S)?;
+    let slo_ttft = a.f64("slo-ttft", serve::DEFAULT_SLO_TTFT_S)?;
+    let slo_itl = a.f64("slo-itl", serve::DEFAULT_SLO_ITL_S)?;
+    let slo_json = json::obj(vec![
+        ("request_s", json::num(slo_req)),
+        ("ttft_s", json::num(slo_ttft)),
+        ("itl_s", json::num(slo_itl)),
+        ("goodput_rps", json::num(stats.goodput_rps(slo_req))),
+        ("ttft_attainment", json::num(stats.slo_ttft_attainment(slo_ttft))),
+        ("itl_attainment", json::num(stats.slo_itl_attainment(slo_itl))),
+    ]);
+    println!(
+        "goodput {:.3} req/s (SLO {slo_req}s) | TTFT<{slo_ttft}s {:.1}% | ITL<{slo_itl}s {:.1}%",
+        stats.goodput_rps(slo_req),
+        100.0 * stats.slo_ttft_attainment(slo_ttft),
+        100.0 * stats.slo_itl_attainment(slo_itl),
+    );
+    if stats.submitted_requests > 0 {
+        println!(
+            "admission: {} submitted, {} rejected ({} completed)",
+            stats.submitted_requests, stats.rejected_requests, stats.completed_requests
+        );
+    }
     let mut entries = vec![
         ("serving", scfg.to_json()),
-        ("workload", wcfg.to_json()),
+        ("workload", workload_json),
         ("stats", stats.to_json()),
+        ("slo", slo_json),
     ];
     if let Some(pr) = per_replica_json {
         entries.push(("per_replica", pr));
@@ -227,6 +294,28 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let text = json::obj(entries).to_string_pretty();
     println!("{text}");
     write_json_flag(a, &text)
+}
+
+/// `icarus frontend`: run the live HTTP front end until killed.
+fn cmd_frontend(a: &Args) -> Result<()> {
+    let addr = match a.get("addr") {
+        Some(addr) => addr.to_string(),
+        None => format!("127.0.0.1:{}", a.usize("port", 8080)?),
+    };
+    let limits = AdmissionLimits {
+        max_queue: a.usize("admit-queue", 0)?,
+        max_tokens: a.usize("admit-tokens", 0)?,
+    };
+    let fe = Frontend::new(limits, a.usize("models", 4)?);
+    let server = Server::start(&addr, std::sync::Arc::new(fe))?;
+    println!("icarus frontend listening on http://{}", server.addr());
+    println!("  GET  /v2/health/ready   readiness probe");
+    println!("  GET  /v2/stats          admission-gate counters");
+    println!("  POST /v2/models/{{m}}/infer   generate (\"stream\": true for ndjson)");
+    println!("  POST /v2/jobs/simulate  run a virtual-time sim job");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// Run one single-engine sim point per QPS value, spread across
@@ -332,7 +421,7 @@ fn main() -> Result<()> {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.as_str(), r),
         None => {
-            eprintln!("usage: icarus <serve|sweep|info> [--flag value ...]");
+            eprintln!("usage: icarus <serve|sweep|info|frontend> [--flag value ...]");
             std::process::exit(2);
         }
     };
@@ -341,8 +430,9 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "info" => cmd_info(&args),
+        "frontend" => cmd_frontend(&args),
         other => {
-            eprintln!("unknown command {other}; expected serve|sweep|info");
+            eprintln!("unknown command {other}; expected serve|sweep|info|frontend");
             std::process::exit(2);
         }
     }

@@ -114,6 +114,20 @@ impl Histogram {
         self.quantile(0.99)
     }
 
+    /// Fraction of recorded samples at or below `threshold_s` — the
+    /// SLO-attainment query (what share of turns met a TTFT/ITL
+    /// deadline), resolved to the histogram's ~3% log-bucket edges:
+    /// samples sharing the threshold's bucket all count as within it.
+    /// 1.0 for an empty histogram (a vacuously met SLO).
+    pub fn fraction_below(&self, threshold_s: f64) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        let cut = Self::bucket(threshold_s);
+        let within: u64 = self.counts[..=cut].iter().sum();
+        within as f64 / self.total as f64
+    }
+
     /// Fold `other`'s samples into this histogram.  Exact: bucket
     /// counts add position-wise, so quantiles of the merge equal the
     /// quantiles of recording all samples into one instance.
@@ -222,6 +236,18 @@ pub struct ServingStats {
     /// prefill replica published their prefix (`--disagg on`, decode
     /// role only).
     pub decode_handoffs: u64,
+    /// Workflows that reached the serving front end's admission gate
+    /// (arrivals observed while admission control — `--admit-queue` /
+    /// `--admit-tokens` — was enabled).  Stays 0 with the gate off, so
+    /// gate-off runs remain bit-identical to the pre-front-end engine
+    /// (pinned by a differential property test).
+    pub submitted_requests: u64,
+    /// Workflows load-shed at the admission gate: rejected at arrival
+    /// because the waiting queue was over its depth or token bound,
+    /// never entering the scheduler.  End-to-end conservation —
+    /// `submitted_requests == completed_requests + rejected_requests`
+    /// — is pinned by a property test.
+    pub rejected_requests: u64,
     /// Peak KV pool usage in bytes (the memory-explosion signal).
     pub peak_kv_bytes: u64,
     /// Simulated (or measured) seconds from run start to last retirement.
@@ -289,6 +315,8 @@ impl ServingStats {
         self.tasks_spawned += other.tasks_spawned;
         self.prefill_handoffs += other.prefill_handoffs;
         self.decode_handoffs += other.decode_handoffs;
+        self.submitted_requests += other.submitted_requests;
+        self.rejected_requests += other.rejected_requests;
         self.peak_kv_bytes += other.peak_kv_bytes;
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
     }
@@ -309,6 +337,31 @@ impl ServingStats {
         } else {
             self.completed_requests as f64 / self.wall_seconds
         }
+    }
+
+    /// Goodput: completed workflows per second whose end-to-end
+    /// latency met `request_slo_s` — the completion rate scaled by the
+    /// request-latency histogram's within-deadline fraction (exact to
+    /// the histogram's ~3% bucket resolution).  The serving bench
+    /// plots this against offered load: throughput counts everything,
+    /// goodput only what a user with a deadline would call served.
+    pub fn goodput_rps(&self, request_slo_s: f64) -> f64 {
+        let h = self.request_latency.as_ref().expect("stats built with new()");
+        self.requests_per_s() * h.fraction_below(request_slo_s)
+    }
+
+    /// SLO attainment on time-to-first-token: the fraction of turns
+    /// whose TTFT met `slo_s`.
+    pub fn slo_ttft_attainment(&self, slo_s: f64) -> f64 {
+        let h = self.time_to_first_token.as_ref().expect("stats built with new()");
+        h.fraction_below(slo_s)
+    }
+
+    /// SLO attainment on inter-token latency: the fraction of decode
+    /// gaps within `slo_s`.
+    pub fn slo_itl_attainment(&self, slo_s: f64) -> f64 {
+        let h = self.inter_token_latency.as_ref().expect("stats built with new()");
+        h.fraction_below(slo_s)
     }
 
     /// Snapshot-store restores across both tiers.
@@ -370,6 +423,8 @@ impl ServingStats {
             ("tasks_spawned", num(self.tasks_spawned as f64)),
             ("prefill_handoffs", num(self.prefill_handoffs as f64)),
             ("decode_handoffs", num(self.decode_handoffs as f64)),
+            ("submitted_requests", num(self.submitted_requests as f64)),
+            ("rejected_requests", num(self.rejected_requests as f64)),
             ("peak_kv_bytes", num(self.peak_kv_bytes as f64)),
             ("throughput_tok_s", num(self.throughput_tok_s())),
             ("cache_hit_rate", num(self.cache_hit_rate())),
@@ -472,6 +527,41 @@ mod tests {
         let v = s.to_json();
         assert_eq!(v.get("generated_tokens").unwrap().as_u64(), Some(10));
         assert_eq!(v.get("throughput_tok_s").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn fraction_below_matches_distribution() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms .. 1s uniform
+        }
+        let f = h.fraction_below(0.5);
+        assert!((f - 0.5).abs() < 0.05, "fraction {f}");
+        assert_eq!(h.fraction_below(10.0), 1.0);
+        assert!(h.fraction_below(1e-7) < 0.01);
+        assert_eq!(Histogram::new().fraction_below(1.0), 1.0, "vacuous SLO");
+    }
+
+    #[test]
+    fn admission_counters_merge_and_goodput() {
+        let mut a = ServingStats::new();
+        a.submitted_requests = 10;
+        a.rejected_requests = 2;
+        a.completed_requests = 8;
+        a.wall_seconds = 4.0;
+        a.request_latency.as_mut().unwrap().record(0.1);
+        a.request_latency.as_mut().unwrap().record(9.0);
+        let mut b = ServingStats::new();
+        b.submitted_requests = 5;
+        b.rejected_requests = 5;
+        a.merge(&b);
+        assert_eq!(a.submitted_requests, 15);
+        assert_eq!(a.rejected_requests, 7);
+        // goodput: 2 rps overall, half the samples within a 1s SLO.
+        assert!((a.goodput_rps(1.0) - 1.0).abs() < 1e-9);
+        let v = a.to_json();
+        assert_eq!(v.get("submitted_requests").unwrap().as_u64(), Some(15));
+        assert_eq!(v.get("rejected_requests").unwrap().as_u64(), Some(7));
     }
 
     #[test]

@@ -81,6 +81,31 @@ impl Rng {
         -u.ln() / lambda
     }
 
+    /// Pareto(alpha, x_m) via inverse transform — the heavy-tailed
+    /// inter-arrival distribution of the open-loop traffic generator
+    /// (`serve::openloop`).  The mean is `alpha * x_m / (alpha - 1)`
+    /// for `alpha > 1` (infinite otherwise), so callers targeting a
+    /// mean rate scale `x_m` accordingly; smaller `alpha` means
+    /// burstier traffic.
+    pub fn pareto(&mut self, alpha: f64, x_m: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        x_m / u.powf(1.0 / alpha)
+    }
+
+    /// Approximate bounded Zipf draw: a rank in [0, n) where rank k is
+    /// ~proportional to 1/(k+1)^s, via inverse transform on the
+    /// continuous CDF (exact in the large-n limit — fine for workload
+    /// popularity skew, and O(1) per draw so a million-user population
+    /// costs nothing).  Requires `s > 1` and `n >= 1`.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(s > 1.0 && n >= 1);
+        let u = self.f64();
+        // P(X <= x) = (1 - x^(1-s)) / (1 - n^(1-s)) over x in [1, n].
+        let tail = 1.0 - (n as f64).powf(1.0 - s);
+        let x = (1.0 - u * tail).powf(1.0 / (1.0 - s));
+        (x.floor() as u64).clamp(1, n) - 1
+    }
+
     /// Sample an index from explicit (unnormalized) weights.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
@@ -165,6 +190,37 @@ mod tests {
         let n = 200_000;
         let mean: f64 = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean {}", mean);
+    }
+
+    #[test]
+    fn pareto_mean_and_tail() {
+        let mut r = Rng::new(23);
+        let n = 200_000;
+        // alpha=3, x_m=2 -> mean = 3*2/2 = 3.
+        let xs: Vec<f64> = (0..n).map(|_| r.pareto(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.1, "mean {mean}");
+        // Every sample is at least x_m.
+        assert!(xs.iter().all(|&x| x >= 2.0));
+        // Heavy tail: the max is far above what an exponential with the
+        // same mean would ever produce in n draws (~mean * ln n ≈ 37).
+        let max = xs.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 60.0, "max {max} not heavy-tailed");
+    }
+
+    #[test]
+    fn zipf_skewed_and_bounded() {
+        let mut r = Rng::new(29);
+        let n = 1000u64;
+        let mut counts = vec![0usize; n as usize];
+        for _ in 0..100_000 {
+            let k = r.zipf(n, 1.5);
+            assert!(k < n);
+            counts[k as usize] += 1;
+        }
+        // Rank 0 dominates and the frequency decays with rank.
+        assert!(counts[0] > counts[9] && counts[9] > counts[99]);
+        assert!(counts[0] > 10 * counts[99], "{} vs {}", counts[0], counts[99]);
     }
 
     #[test]

@@ -208,6 +208,13 @@ impl Queues {
         }
     }
 
+    /// Summed prompt tokens across the waiting queue — the backlog
+    /// measure the serving front end's admission gate
+    /// (`ServingConfig::admit_tokens`) sheds load against.
+    pub fn queued_prompt_tokens(&self) -> usize {
+        self.waiting.iter().map(|t| t.prompt.len()).sum()
+    }
+
     /// Earliest tool-completion time among delayed turns, if any.
     pub fn next_ready(&self) -> Option<f64> {
         self.delayed.iter().map(|t| t.ready_at).min_by(f64::total_cmp)

@@ -1,0 +1,255 @@
+//! Admission control shared by the live front end and the simulated
+//! engine.
+//!
+//! One semantics, two enforcement points:
+//!
+//!   * **Virtual time** — the engine's arrival path
+//!     (`engine::Engine::surface_arrivals`) applies [`AdmissionLimits`]
+//!     against its scheduler queues (`sched::Queues`): an arrival that
+//!     finds the waiting queue over the depth or token bound is
+//!     load-shed and counted in `ServingStats::rejected_requests`.
+//!     That is how open-loop overload sweeps measure goodput under
+//!     admission control, deterministically.
+//!   * **Wall clock** — the HTTP front end ([`LiveGate`]) applies the
+//!     same limits to its in-flight request set; a shed request gets a
+//!     `503` with `Retry-After` (see `serve::Frontend`).
+//!
+//! Both bounds zero (the default) disables the gate entirely; the
+//! engine path is then bit-identical to the pre-front-end arrival code
+//! (pinned by `prop_serve_off_bit_identical`).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::config::ServingConfig;
+
+/// Admission bounds: how much backlog the serving system will queue
+/// before shedding new work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionLimits {
+    /// Maximum queued requests (turns) before shedding; 0 = unbounded.
+    pub max_queue: usize,
+    /// Maximum summed queued prompt tokens before shedding; 0 =
+    /// unbounded.
+    pub max_tokens: usize,
+}
+
+impl AdmissionLimits {
+    /// The limits a serving config encodes (`admit_queue` /
+    /// `admit_tokens`).
+    pub fn from_config(cfg: &ServingConfig) -> AdmissionLimits {
+        AdmissionLimits { max_queue: cfg.admit_queue, max_tokens: cfg.admit_tokens }
+    }
+
+    /// Whether any bound is active.
+    pub fn enabled(&self) -> bool {
+        self.max_queue > 0 || self.max_tokens > 0
+    }
+
+    /// Whether a new request may be admitted given the current backlog
+    /// (`depth` queued requests holding `tokens` prompt tokens).
+    /// Always true when disabled.
+    pub fn admits(&self, depth: usize, tokens: usize) -> bool {
+        let depth_over = self.max_queue > 0 && depth >= self.max_queue;
+        let tokens_over = self.max_tokens > 0 && tokens >= self.max_tokens;
+        !(depth_over || tokens_over)
+    }
+}
+
+/// Wall-clock admission gate for the HTTP front end: lock-free
+/// in-flight accounting with RAII release.
+///
+/// `try_admit` either returns an [`Admission`] guard (the request's
+/// slot and token budget are held until the guard drops — i.e. for the
+/// whole response, streamed or not) or counts a rejection for the
+/// caller to turn into backpressure (`503` + `Retry-After`).
+#[derive(Debug)]
+pub struct LiveGate {
+    limits: AdmissionLimits,
+    inflight: AtomicUsize,
+    inflight_tokens: AtomicUsize,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// Counter snapshot for the stats endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GateCounters {
+    /// Requests that reached the gate.
+    pub submitted: u64,
+    /// Requests shed at the gate.
+    pub rejected: u64,
+    /// Requests currently holding an [`Admission`].
+    pub inflight: usize,
+    /// Prompt tokens currently held by in-flight requests.
+    pub inflight_tokens: usize,
+}
+
+impl LiveGate {
+    /// Gate with the given limits.
+    pub fn new(limits: AdmissionLimits) -> LiveGate {
+        LiveGate {
+            limits,
+            inflight: AtomicUsize::new(0),
+            inflight_tokens: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured limits.
+    pub fn limits(&self) -> AdmissionLimits {
+        self.limits
+    }
+
+    /// Optimistically reserve a slot, then check: the small
+    /// over-admission window of check-then-reserve is gone, and a
+    /// losing reservation is rolled back before anyone observes its
+    /// work.  True = admitted (reservation held).
+    fn reserve(&self, prompt_tokens: usize) -> bool {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let depth = self.inflight.fetch_add(1, Ordering::SeqCst);
+        let tokens = self.inflight_tokens.fetch_add(prompt_tokens, Ordering::SeqCst);
+        if self.limits.admits(depth, tokens) {
+            true
+        } else {
+            self.release(prompt_tokens);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    fn release(&self, prompt_tokens: usize) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.inflight_tokens.fetch_sub(prompt_tokens, Ordering::SeqCst);
+    }
+
+    /// Try to admit a request carrying `prompt_tokens`; `None` means
+    /// shed (the rejection is already counted).
+    pub fn try_admit(&self, prompt_tokens: usize) -> Option<Admission<'_>> {
+        self.reserve(prompt_tokens).then_some(Admission { gate: self, prompt_tokens })
+    }
+
+    /// [`LiveGate::try_admit`] returning an owned (`'static`) guard —
+    /// for handlers that must move the admission into a streamed
+    /// response whose iterator outlives the handler call.
+    pub fn try_admit_owned(self: &Arc<Self>, prompt_tokens: usize) -> Option<AdmissionOwned> {
+        self.reserve(prompt_tokens)
+            .then(|| AdmissionOwned { gate: Arc::clone(self), prompt_tokens })
+    }
+
+    /// Snapshot the counters.
+    pub fn counters(&self) -> GateCounters {
+        GateCounters {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::SeqCst),
+            inflight_tokens: self.inflight_tokens.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// RAII admission: the slot and token budget return to the gate on
+/// drop.
+#[derive(Debug)]
+pub struct Admission<'a> {
+    gate: &'a LiveGate,
+    prompt_tokens: usize,
+}
+
+impl Drop for Admission<'_> {
+    fn drop(&mut self) {
+        self.gate.release(self.prompt_tokens);
+    }
+}
+
+/// Owned counterpart of [`Admission`] (keeps the gate alive via `Arc`);
+/// see [`LiveGate::try_admit_owned`].
+#[derive(Debug)]
+pub struct AdmissionOwned {
+    gate: Arc<LiveGate>,
+    prompt_tokens: usize,
+}
+
+impl Drop for AdmissionOwned {
+    fn drop(&mut self) {
+        self.gate.release(self.prompt_tokens);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_limits_admit_everything() {
+        let l = AdmissionLimits { max_queue: 0, max_tokens: 0 };
+        assert!(!l.enabled());
+        assert!(l.admits(usize::MAX - 1, usize::MAX - 1));
+    }
+
+    #[test]
+    fn depth_and_token_bounds() {
+        let l = AdmissionLimits { max_queue: 2, max_tokens: 100 };
+        assert!(l.enabled());
+        assert!(l.admits(1, 50));
+        assert!(!l.admits(2, 0), "depth bound");
+        assert!(!l.admits(0, 100), "token bound");
+    }
+
+    #[test]
+    fn live_gate_sheds_and_releases() {
+        let gate = LiveGate::new(AdmissionLimits { max_queue: 2, max_tokens: 0 });
+        let a = gate.try_admit(10).expect("first fits");
+        let _b = gate.try_admit(20).expect("second fits");
+        assert!(gate.try_admit(5).is_none(), "third over depth bound");
+        let c = gate.counters();
+        assert_eq!((c.submitted, c.rejected, c.inflight, c.inflight_tokens), (3, 1, 2, 30));
+        drop(a);
+        let _d = gate.try_admit(5).expect("slot freed");
+        let c = gate.counters();
+        assert_eq!((c.submitted, c.rejected, c.inflight, c.inflight_tokens), (4, 1, 2, 25));
+    }
+
+    #[test]
+    fn conservation_under_contention() {
+        let gate = LiveGate::new(AdmissionLimits { max_queue: 4, max_tokens: 0 });
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..500 {
+                        if let Some(adm) = gate.try_admit(3) {
+                            std::hint::black_box(&adm);
+                        }
+                    }
+                });
+            }
+        });
+        let c = gate.counters();
+        assert_eq!(c.submitted, 8 * 500);
+        assert_eq!(c.inflight, 0, "every admission released");
+        assert_eq!(c.inflight_tokens, 0);
+        assert!(c.rejected < c.submitted, "some admissions must succeed");
+    }
+
+    #[test]
+    fn owned_admission_moves_across_threads() {
+        let gate = Arc::new(LiveGate::new(AdmissionLimits { max_queue: 1, max_tokens: 0 }));
+        let adm = gate.try_admit_owned(4).expect("first fits");
+        assert!(gate.try_admit_owned(1).is_none(), "slot held");
+        let g2 = Arc::clone(&gate);
+        std::thread::spawn(move || drop(adm)).join().unwrap();
+        assert_eq!(g2.counters().inflight, 0);
+        assert!(g2.try_admit_owned(1).is_some(), "slot released from other thread");
+    }
+
+    #[test]
+    fn limits_from_config() {
+        let cfg = ServingConfig { admit_queue: 7, admit_tokens: 9, ..Default::default() };
+        assert_eq!(
+            AdmissionLimits::from_config(&cfg),
+            AdmissionLimits { max_queue: 7, max_tokens: 9 }
+        );
+        assert!(!AdmissionLimits::from_config(&ServingConfig::default()).enabled());
+    }
+}

@@ -1,0 +1,423 @@
+//! Minimal HTTP/1.1 transport over `std::net` — the offline stand-in
+//! for a real server crate (hyper/axum are unavailable without
+//! crates.io).
+//!
+//! Scope: exactly what the serving front end needs.  One request per
+//! connection (the server answers with `Connection: close`), request
+//! bodies sized by `Content-Length`, responses either sized
+//! (`Content-Length`) or streamed with `Transfer-Encoding: chunked` —
+//! the transport under token streaming.  A tiny blocking client
+//! ([`http_request`]) rides along for loopback tests and examples; it
+//! de-chunks transparently.
+//!
+//! The accept loop runs on its own OS thread and spawns a short-lived
+//! thread per connection (connections here are loopback test/demo
+//! traffic, not C10K).  [`Server::stop`] flips a shutdown flag and
+//! pokes the listener with a wake-up connection so `accept` observes
+//! it promptly.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Context as _;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, ...), uppercased by the client.
+    pub method: String,
+    /// Request path including any query string, e.g. `/v2/stats`.
+    pub path: String,
+    /// Header name/value pairs in arrival order; names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty unless `Content-Length` said otherwise).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body parsed as UTF-8 (empty string for an empty body).
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+/// Response payload: sized or streamed.
+pub enum Body {
+    /// Whole payload, sent with `Content-Length`.
+    Full(Vec<u8>),
+    /// Streamed payload, sent with `Transfer-Encoding: chunked`; each
+    /// yielded buffer becomes one chunk (empty buffers are skipped —
+    /// an empty chunk would terminate the stream early).
+    Chunks(Box<dyn Iterator<Item = Vec<u8>> + Send>),
+}
+
+/// An HTTP response under construction.
+pub struct Response {
+    /// Status code (the reason phrase is derived).
+    pub status: u16,
+    /// Extra headers beyond the transport-owned ones.
+    pub headers: Vec<(String, String)>,
+    /// Payload.
+    pub body: Body,
+}
+
+impl Response {
+    /// A sized response with a `Content-Type` header.
+    pub fn full(status: u16, content_type: &str, body: impl Into<Vec<u8>>) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), content_type.into())],
+            body: Body::Full(body.into()),
+        }
+    }
+
+    /// A JSON response.
+    pub fn json(status: u16, body: &str) -> Response {
+        Response::full(status, "application/json", body.as_bytes().to_vec())
+    }
+
+    /// A chunk-streamed response (newline-delimited JSON events here).
+    pub fn stream(status: u16, chunks: Box<dyn Iterator<Item = Vec<u8>> + Send>) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "application/x-ndjson".into())],
+            body: Body::Chunks(chunks),
+        }
+    }
+
+    /// Add a header.
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Request handler implemented by the front end.  `Send + Sync` because
+/// connections are served from short-lived threads.
+pub trait Handler: Send + Sync {
+    /// Produce the response for one request.
+    fn handle(&self, req: Request) -> Response;
+}
+
+/// A running HTTP server; dropping it (or calling [`Server::stop`])
+/// shuts the accept loop down.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use `127.0.0.1:0` for an ephemeral test port) and
+    /// serve `handler` until [`Server::stop`] or drop.
+    pub fn start(addr: &str, handler: Arc<dyn Handler>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let handler = Arc::clone(&handler);
+                std::thread::spawn(move || {
+                    // Connection errors (peer hangup, bad request
+                    // framing) end this connection only.
+                    let _ = serve_connection(stream, handler.as_ref());
+                });
+            }
+        });
+        Ok(Server { addr, shutdown, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves the ephemeral port for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept loop.
+    pub fn stop(&mut self) {
+        if self.accept_thread.is_none() {
+            return;
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_connection(stream: TcpStream, handler: &dyn Handler) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let req = match read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = Response::json(400, &format!("{{\"error\": \"{e}\"}}"));
+            return write_response(stream, resp);
+        }
+    };
+    let resp = handler.handle(req);
+    write_response(stream, resp)
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    anyhow::ensure!(version.starts_with("HTTP/1."), "unsupported version {version}");
+
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("read header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) = h.split_once(':').context("malformed header")?;
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_string();
+        if name == "content-length" {
+            content_length = value.parse().context("bad content-length")?;
+        }
+        headers.push((name, value));
+    }
+    anyhow::ensure!(content_length <= 16 << 20, "body too large");
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn write_response(mut stream: TcpStream, resp: Response) -> anyhow::Result<()> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status));
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("connection: close\r\n");
+    match resp.body {
+        Body::Full(bytes) => {
+            head.push_str(&format!("content-length: {}\r\n\r\n", bytes.len()));
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(&bytes)?;
+        }
+        Body::Chunks(chunks) => {
+            head.push_str("transfer-encoding: chunked\r\n\r\n");
+            stream.write_all(head.as_bytes())?;
+            for chunk in chunks {
+                if chunk.is_empty() {
+                    continue;
+                }
+                // Flush per chunk so a streaming client sees tokens as
+                // they are produced, not at stream end.
+                stream.write_all(format!("{:x}\r\n", chunk.len()).as_bytes())?;
+                stream.write_all(&chunk)?;
+                stream.write_all(b"\r\n")?;
+                stream.flush()?;
+            }
+            stream.write_all(b"0\r\n\r\n")?;
+        }
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+/// Blocking loopback HTTP client for tests and examples: sends one
+/// request, reads the full (de-chunked) response.  Returns
+/// `(status, headers, body)`.
+pub fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut w = stream.try_clone()?;
+    let body = body.unwrap_or("");
+    w.write_all(
+        format!(
+            "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    w.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("read status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line: {status_line:?}"))?;
+
+    let mut headers = Vec::new();
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().ok();
+            }
+            if name == "transfer-encoding" && value.eq_ignore_ascii_case("chunked") {
+                chunked = true;
+            }
+            headers.push((name, value));
+        }
+    }
+
+    let mut body = Vec::new();
+    if chunked {
+        loop {
+            let mut size_line = String::new();
+            reader.read_line(&mut size_line)?;
+            let size = usize::from_str_radix(size_line.trim(), 16).context("bad chunk size")?;
+            if size == 0 {
+                let mut trailer = String::new();
+                reader.read_line(&mut trailer)?;
+                break;
+            }
+            let mut chunk = vec![0u8; size];
+            reader.read_exact(&mut chunk)?;
+            body.extend_from_slice(&chunk);
+            let mut crlf = String::new();
+            reader.read_line(&mut crlf)?;
+        }
+    } else if let Some(n) = content_length {
+        body = vec![0u8; n];
+        reader.read_exact(&mut body)?;
+    } else {
+        reader.read_to_end(&mut body)?;
+    }
+    Ok((status, headers, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Handler for Echo {
+        fn handle(&self, req: Request) -> Response {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/ping") => Response::json(200, r#"{"pong": true}"#),
+                ("POST", "/echo") => {
+                    Response::full(200, "text/plain", req.body)
+                }
+                ("GET", "/stream") => {
+                    let chunks = (0..5).map(|i| format!("line {i}\n").into_bytes());
+                    Response::stream(200, Box::new(chunks))
+                }
+                ("GET", "/busy") => Response::json(503, r#"{"error": "over capacity"}"#)
+                    .with_header("retry-after", "1"),
+                _ => Response::json(404, r#"{"error": "not found"}"#),
+            }
+        }
+    }
+
+    fn server() -> Server {
+        Server::start("127.0.0.1:0", Arc::new(Echo)).unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let mut s = server();
+        let (status, _, body) = http_request(s.addr(), "GET", "/ping", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, br#"{"pong": true}"#);
+        s.stop();
+    }
+
+    #[test]
+    fn post_body_roundtrip() {
+        let s = server();
+        let (status, _, body) =
+            http_request(s.addr(), "POST", "/echo", Some("hello transport")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"hello transport");
+    }
+
+    #[test]
+    fn chunked_stream_reassembles() {
+        let s = server();
+        let (status, headers, body) = http_request(s.addr(), "GET", "/stream", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(headers
+            .iter()
+            .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked")));
+        let text = String::from_utf8(body).unwrap();
+        assert_eq!(text.lines().count(), 5);
+        assert!(text.starts_with("line 0"));
+    }
+
+    #[test]
+    fn backpressure_status_and_header() {
+        let s = server();
+        let (status, headers, _) = http_request(s.addr(), "GET", "/busy", None).unwrap();
+        assert_eq!(status, 503);
+        assert!(headers.iter().any(|(k, v)| k == "retry-after" && v == "1"));
+    }
+
+    #[test]
+    fn unknown_path_404_and_sequential_requests() {
+        let s = server();
+        for _ in 0..3 {
+            let (status, _, _) = http_request(s.addr(), "GET", "/nope", None).unwrap();
+            assert_eq!(status, 404);
+        }
+    }
+
+    #[test]
+    fn stop_unblocks_accept() {
+        let mut s = server();
+        s.stop();
+        s.stop(); // idempotent
+        assert!(http_request(s.addr(), "GET", "/ping", None).is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! The serving front end: an Inference-Protocol-style HTTP service in
+//! front of the simulated cluster.
+//!
+//! The repo's core is a virtual-time simulator, so the front end plays
+//! two roles:
+//!
+//!   * **Live protocol surface** ([`Frontend`] behind
+//!     [`http::Server`]): request/response + streaming token transport
+//!     with real admission control and backpressure (`503` +
+//!     `Retry-After` from [`gate::LiveGate`]).  Token *content* is
+//!     synthetic — the models themselves are synthetic stand-ins —
+//!     but the protocol mechanics (framing, streaming, shedding) are
+//!     real and tested over loopback TCP.
+//!   * **Job bridge** (`POST /v2/jobs/simulate`): accepts a serving +
+//!     workload configuration as JSON, runs it through the actual
+//!     `cluster`/`sched`/`engine` stack in virtual time, and returns
+//!     the stats — including goodput and SLO attainment — so a client
+//!     can drive open-loop sweeps over the wire.
+//!
+//! Endpoints:
+//!
+//! | Method | Path                      | Purpose                       |
+//! |--------|---------------------------|-------------------------------|
+//! | GET    | `/v2/health/ready`        | readiness probe               |
+//! | GET    | `/v2/stats`               | gate counters snapshot        |
+//! | POST   | `/v2/models/{m}/infer`    | generate (stream or full)     |
+//! | POST   | `/v2/jobs/simulate`       | run a sim job, return stats   |
+//!
+//! Admission semantics are shared with the engine's virtual-time gate
+//! (`ServingConfig::{admit_queue, admit_tokens}`); see [`gate`] for
+//! the one-semantics-two-clocks story, and [`openloop`] for the
+//! open-loop traffic generator that drives overload experiments.
+
+pub mod gate;
+pub mod http;
+pub mod openloop;
+pub mod protocol;
+
+pub use gate::{AdmissionLimits, GateCounters, LiveGate};
+pub use http::{Handler, Request, Response, Server};
+pub use openloop::{generate_open_loop, OpenLoopConfig, OpenLoopGen};
+pub use protocol::InferRequest;
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::config::{ServingConfig, WorkloadConfig};
+use crate::engine::executor::CostModel;
+use crate::json::{self, Value};
+use crate::rng::Rng;
+use crate::tokenizer::Tokenizer;
+use crate::workload;
+
+use gate::AdmissionOwned;
+
+/// Default request-completion SLO for goodput (seconds).
+pub const DEFAULT_SLO_REQUEST_S: f64 = 30.0;
+/// Default time-to-first-token SLO (seconds).
+pub const DEFAULT_SLO_TTFT_S: f64 = 2.0;
+/// Default inter-token-latency SLO (seconds).
+pub const DEFAULT_SLO_ITL_S: f64 = 0.2;
+
+/// Upper bound on `n_requests` a simulate job may ask for — the
+/// endpoint is synchronous, so runaway jobs would pin the connection
+/// thread.
+const MAX_JOB_REQUESTS: usize = 4096;
+
+/// The HTTP request handler; see the module docs for the endpoints.
+pub struct Frontend {
+    gate: Arc<LiveGate>,
+    tokenizer: Tokenizer,
+    n_models: usize,
+}
+
+impl Frontend {
+    /// Front end over `n_models` synthetic models with the given
+    /// admission limits.
+    pub fn new(limits: AdmissionLimits, n_models: usize) -> Frontend {
+        Frontend {
+            gate: Arc::new(LiveGate::new(limits)),
+            tokenizer: Tokenizer::new(2048),
+            n_models: n_models.max(1),
+        }
+    }
+
+    /// Shared handle to the admission gate (tests saturate it through
+    /// this; operators could export its counters).
+    pub fn gate(&self) -> Arc<LiveGate> {
+        Arc::clone(&self.gate)
+    }
+
+    fn infer(&self, model: usize, req: Request) -> Response {
+        if model >= self.n_models {
+            return Response::json(
+                404,
+                &protocol::error_body(&format!(
+                    "model {model} out of range (have {})",
+                    self.n_models
+                )),
+            );
+        }
+        let body = match req.body_str().map_err(|e| e.to_string()).and_then(|s| {
+            Value::parse(s).map_err(|e| e.to_string())
+        }) {
+            Ok(v) => v,
+            Err(e) => return Response::json(400, &protocol::error_body(&e)),
+        };
+        let infer = match InferRequest::from_json(&body, &self.tokenizer) {
+            Ok(r) => r,
+            Err(e) => return Response::json(400, &protocol::error_body(&e.to_string())),
+        };
+        // Backpressure: shed before any generation work happens.  The
+        // admission is held until the last byte of the response —
+        // streamed responses carry it inside the chunk iterator.
+        let Some(admission) = self.gate.try_admit_owned(infer.prompt.len()) else {
+            return Response::json(503, &protocol::error_body("over capacity, retry later"))
+                .with_header("retry-after", "1");
+        };
+        if infer.stream {
+            let stream = TokenStream::new(model, &infer, admission);
+            return Response::stream(200, Box::new(stream));
+        }
+        let tokens = synth_tokens(model, &infer.prompt, infer.max_tokens);
+        let reply = protocol::infer_reply(model, &tokens, infer.session.as_deref());
+        drop(admission);
+        Response::json(200, &reply)
+    }
+
+    fn simulate(&self, req: &Request) -> Response {
+        match run_simulate_job(req) {
+            Ok(reply) => Response::json(200, &reply),
+            Err(e) => Response::json(400, &protocol::error_body(&e.to_string())),
+        }
+    }
+
+    fn stats(&self) -> Response {
+        let c = self.gate.counters();
+        let l = self.gate.limits();
+        let body = json::obj(vec![
+            ("submitted", json::num(c.submitted as f64)),
+            ("rejected", json::num(c.rejected as f64)),
+            ("inflight", json::num(c.inflight as f64)),
+            ("inflight_tokens", json::num(c.inflight_tokens as f64)),
+            ("admit_queue", json::num(l.max_queue as f64)),
+            ("admit_tokens", json::num(l.max_tokens as f64)),
+            ("n_models", json::num(self.n_models as f64)),
+        ])
+        .to_string_pretty();
+        Response::json(200, &body)
+    }
+}
+
+impl Handler for Frontend {
+    fn handle(&self, req: Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/v2/health/ready") => Response::json(200, r#"{"ready": true}"#),
+            ("GET", "/v2/stats") => self.stats(),
+            ("POST", "/v2/jobs/simulate") => self.simulate(&req),
+            ("POST", path) => match parse_model_path(path) {
+                Some(model) => self.infer(model, req),
+                None => Response::json(404, &protocol::error_body("unknown path")),
+            },
+            _ => Response::json(404, &protocol::error_body("unknown path")),
+        }
+    }
+}
+
+/// `/v2/models/{m}/infer` -> `m`.
+fn parse_model_path(path: &str) -> Option<usize> {
+    let rest = path.strip_prefix("/v2/models/")?;
+    let (model, tail) = rest.split_once('/')?;
+    if tail != "infer" {
+        return None;
+    }
+    model.parse().ok()
+}
+
+/// Deterministic synthetic generation: same (model, prompt) -> same
+/// tokens, drawn from the workload's content-token range so replies
+/// look like everything else in the pipeline.
+fn synth_tokens(model: usize, prompt: &[u32], n: usize) -> Vec<u32> {
+    let mut h: u64 = 0xcbf29ce484222325 ^ model as u64;
+    for &t in prompt {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut rng = Rng::new(h);
+    (0..n).map(|_| 32 + rng.below(1900) as u32).collect()
+}
+
+/// Lazily generated token-event stream; holds its admission until the
+/// final `done` event has been yielded.
+struct TokenStream {
+    rng: Rng,
+    model: usize,
+    session: Option<String>,
+    index: usize,
+    total: usize,
+    done_sent: bool,
+    _admission: AdmissionOwned,
+}
+
+impl TokenStream {
+    fn new(model: usize, req: &InferRequest, admission: AdmissionOwned) -> TokenStream {
+        let mut h: u64 = 0xcbf29ce484222325 ^ model as u64;
+        for &t in &req.prompt {
+            h ^= t as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        TokenStream {
+            rng: Rng::new(h),
+            model,
+            session: req.session.clone(),
+            index: 0,
+            total: req.max_tokens,
+            done_sent: false,
+            _admission: admission,
+        }
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = Vec<u8>;
+
+    fn next(&mut self) -> Option<Vec<u8>> {
+        if self.index < self.total {
+            let token = 32 + self.rng.below(1900) as u32;
+            let ev = protocol::token_event(self.index, token);
+            self.index += 1;
+            return Some(ev.into_bytes());
+        }
+        if !self.done_sent {
+            self.done_sent = true;
+            let ev = protocol::done_event(self.model, self.total, self.session.as_deref());
+            return Some(ev.into_bytes());
+        }
+        None
+    }
+}
+
+/// Parse and run one `POST /v2/jobs/simulate` body; returns the reply
+/// JSON.  The body may carry `serving` ([`ServingConfig::from_json`]),
+/// either `open_loop` ([`OpenLoopConfig::from_json`]) or `workload`
+/// ([`WorkloadConfig::from_json`]), `kv_bytes_per_token`, and `slo`
+/// (`request_s` / `ttft_s` / `itl_s`) — everything defaults.
+fn run_simulate_job(req: &Request) -> anyhow::Result<String> {
+    let body = Value::parse(req.body_str()?)?;
+    let scfg = match body.get("serving") {
+        Some(v) => ServingConfig::from_json(v)?,
+        None => ServingConfig::default(),
+    };
+    let (wl, wl_json, n_models) = match (body.get("open_loop"), body.get("workload")) {
+        (Some(_), Some(_)) => anyhow::bail!("give either open_loop or workload, not both"),
+        (Some(ol), None) => {
+            let cfg = OpenLoopConfig::from_json(ol)?;
+            (generate_open_loop(&cfg), cfg.to_json(), cfg.base.n_models)
+        }
+        (None, wl) => {
+            let cfg = match wl {
+                Some(v) => WorkloadConfig::from_json(v)?,
+                None => WorkloadConfig::default(),
+            };
+            (workload::generate(&cfg), cfg.to_json(), cfg.n_models)
+        }
+    };
+    anyhow::ensure!(
+        wl.len() <= MAX_JOB_REQUESTS,
+        "n_requests {} over the job cap {MAX_JOB_REQUESTS}",
+        wl.len()
+    );
+    let kv_bpt = match body.get("kv_bytes_per_token") {
+        None => 2048,
+        Some(v) => v.as_u64().ok_or_else(|| anyhow::anyhow!("kv_bytes_per_token: want number"))?,
+    };
+    let slo = |key: &str, default: f64| -> f64 {
+        body.at(&["slo", key]).and_then(Value::as_f64).unwrap_or(default)
+    };
+    let slo_req = slo("request_s", DEFAULT_SLO_REQUEST_S);
+    let slo_ttft = slo("ttft_s", DEFAULT_SLO_TTFT_S);
+    let slo_itl = slo("itl_s", DEFAULT_SLO_ITL_S);
+
+    let out = Cluster::new(scfg.clone(), kv_bpt, n_models).run_sim(CostModel::default(), wl);
+    let m = &out.merged;
+    Ok(json::obj(vec![
+        ("serving", scfg.to_json()),
+        ("workload", wl_json),
+        ("cluster", out.to_json()),
+        (
+            "slo",
+            json::obj(vec![
+                ("request_s", json::num(slo_req)),
+                ("ttft_s", json::num(slo_ttft)),
+                ("itl_s", json::num(slo_itl)),
+                ("goodput_rps", json::num(m.goodput_rps(slo_req))),
+                ("ttft_attainment", json::num(m.slo_ttft_attainment(slo_ttft))),
+                ("itl_attainment", json::num(m.slo_itl_attainment(slo_itl))),
+            ]),
+        ),
+    ])
+    .to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::http::http_request;
+    use super::*;
+
+    fn start(limits: AdmissionLimits) -> (Server, Arc<LiveGate>) {
+        let fe = Frontend::new(limits, 4);
+        let gate = fe.gate();
+        let server = Server::start("127.0.0.1:0", Arc::new(fe)).unwrap();
+        (server, gate)
+    }
+
+    fn unlimited() -> AdmissionLimits {
+        AdmissionLimits { max_queue: 0, max_tokens: 0 }
+    }
+
+    #[test]
+    fn health_and_stats() {
+        let (s, _) = start(unlimited());
+        let (status, _, body) = http_request(s.addr(), "GET", "/v2/health/ready", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(
+            Value::parse(std::str::from_utf8(&body).unwrap())
+                .unwrap()
+                .get("ready")
+                .unwrap()
+                .as_bool(),
+            Some(true)
+        );
+        let (status, _, body) = http_request(s.addr(), "GET", "/v2/stats", None).unwrap();
+        assert_eq!(status, 200);
+        let v = Value::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("inflight").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("n_models").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn infer_full_reply_is_deterministic() {
+        let (s, _) = start(unlimited());
+        let body = r#"{"text": "what is the capital", "max_tokens": 6, "session": "u1"}"#;
+        let (status, _, first) =
+            http_request(s.addr(), "POST", "/v2/models/2/infer", Some(body)).unwrap();
+        assert_eq!(status, 200);
+        let v = Value::parse(std::str::from_utf8(&first).unwrap()).unwrap();
+        assert_eq!(v.get("generated").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("model").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("session").unwrap().as_str(), Some("u1"));
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 6);
+        let (_, _, second) =
+            http_request(s.addr(), "POST", "/v2/models/2/infer", Some(body)).unwrap();
+        assert_eq!(first, second, "same model+prompt must generate identically");
+        // A different model diverges.
+        let (_, _, other) =
+            http_request(s.addr(), "POST", "/v2/models/3/infer", Some(body)).unwrap();
+        let vo = Value::parse(std::str::from_utf8(&other).unwrap()).unwrap();
+        assert_ne!(
+            vo.get("tokens").unwrap().to_string(),
+            v.get("tokens").unwrap().to_string()
+        );
+    }
+
+    #[test]
+    fn infer_streams_ndjson_token_events() {
+        let (s, _) = start(unlimited());
+        let body = r#"{"tokens": [1, 50, 51, 52], "max_tokens": 5, "stream": true}"#;
+        let (status, headers, payload) =
+            http_request(s.addr(), "POST", "/v2/models/0/infer", Some(body)).unwrap();
+        assert_eq!(status, 200);
+        assert!(headers
+            .iter()
+            .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked")));
+        let text = String::from_utf8(payload).unwrap();
+        let events: Vec<Value> =
+            text.lines().map(|l| Value::parse(l).unwrap()).collect();
+        assert_eq!(events.len(), 6, "5 tokens + done");
+        for (i, e) in events[..5].iter().enumerate() {
+            assert_eq!(e.get("index").unwrap().as_usize(), Some(i));
+            assert!(e.get("token").unwrap().as_u64().is_some());
+        }
+        assert_eq!(events[5].get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(events[5].get("generated").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn sheds_with_503_when_saturated() {
+        let (s, gate) = start(AdmissionLimits { max_queue: 1, max_tokens: 0 });
+        // Hold the only slot, then hit the endpoint.
+        let _held = gate.try_admit_owned(1).unwrap();
+        let body = r#"{"tokens": [1, 2], "max_tokens": 2}"#;
+        let (status, headers, _) =
+            http_request(s.addr(), "POST", "/v2/models/0/infer", Some(body)).unwrap();
+        assert_eq!(status, 503);
+        assert!(headers.iter().any(|(k, v)| k == "retry-after" && v == "1"));
+        let c = gate.counters();
+        assert_eq!(c.rejected, 1);
+        drop(_held);
+        let (status, _, _) =
+            http_request(s.addr(), "POST", "/v2/models/0/infer", Some(body)).unwrap();
+        assert_eq!(status, 200, "recovers once the backlog drains");
+    }
+
+    #[test]
+    fn rejects_bad_requests_and_paths() {
+        let (s, _) = start(unlimited());
+        for (path, body, want) in [
+            ("/v2/models/9/infer", r#"{"tokens": [1]}"#, 404), // model range
+            ("/v2/models/0/infer", "not json", 400),
+            ("/v2/models/0/infer", r#"{}"#, 400), // no prompt
+            ("/v2/models/x/infer", r#"{"tokens": [1]}"#, 404),
+            ("/v2/nope", r#"{}"#, 404),
+        ] {
+            let (status, _, _) = http_request(s.addr(), "POST", path, Some(body)).unwrap();
+            assert_eq!(status, want, "{path} {body}");
+        }
+        let (status, _, _) = http_request(s.addr(), "DELETE", "/v2/stats", None).unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn simulate_job_runs_cluster_and_reports_slo() {
+        let (s, _) = start(unlimited());
+        let body = r#"{
+            "serving": {"replicas": 2, "admit_queue": 8},
+            "open_loop": {"base": {"n_requests": 24, "qps": 4.0, "seed": 3},
+                          "pareto_alpha": 1.5, "users": 100},
+            "slo": {"request_s": 60.0}
+        }"#;
+        let (status, _, reply) =
+            http_request(s.addr(), "POST", "/v2/jobs/simulate", Some(body)).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&reply));
+        let v = Value::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        let submitted = v.at(&["cluster", "stats", "submitted_requests"]).unwrap();
+        assert_eq!(submitted.as_usize(), Some(24), "gate on: every arrival counted");
+        let completed =
+            v.at(&["cluster", "stats", "completed_requests"]).unwrap().as_u64().unwrap();
+        let rejected =
+            v.at(&["cluster", "stats", "rejected_requests"]).unwrap().as_u64().unwrap();
+        assert_eq!(completed + rejected, 24, "conservation over the wire");
+        let good = v.at(&["slo", "goodput_rps"]).unwrap().as_f64().unwrap();
+        assert!(good >= 0.0);
+        let att = v.at(&["slo", "ttft_attainment"]).unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&att));
+        assert_eq!(v.at(&["slo", "request_s"]).unwrap().as_f64(), Some(60.0));
+    }
+
+    #[test]
+    fn simulate_job_caps_size_and_validates() {
+        let (s, _) = start(unlimited());
+        let too_big = r#"{"workload": {"n_requests": 100000}}"#;
+        let (status, _, _) =
+            http_request(s.addr(), "POST", "/v2/jobs/simulate", Some(too_big)).unwrap();
+        assert_eq!(status, 400);
+        let both = r#"{"workload": {}, "open_loop": {}}"#;
+        let (status, _, _) =
+            http_request(s.addr(), "POST", "/v2/jobs/simulate", Some(both)).unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn parse_model_path_shapes() {
+        assert_eq!(parse_model_path("/v2/models/0/infer"), Some(0));
+        assert_eq!(parse_model_path("/v2/models/12/infer"), Some(12));
+        assert_eq!(parse_model_path("/v2/models/12/other"), None);
+        assert_eq!(parse_model_path("/v2/models/abc/infer"), None);
+        assert_eq!(parse_model_path("/v2/models/"), None);
+    }
+}

@@ -1,0 +1,384 @@
+//! Open-loop traffic generation: heavy tails, sessions, diurnal bursts.
+//!
+//! The closed-loop generator (`workload::generate`) draws Poisson
+//! arrivals and forgets each request as it emits it.  Real serving
+//! traffic is none of that: arrivals are open-loop (the offered rate
+//! does not slow down when the system backs up — which is exactly what
+//! makes admission control matter), inter-arrivals are heavy-tailed
+//! (bursts), load breathes diurnally, and requests come from persistent
+//! users whose sessions re-send a growing shared prefix (the store /
+//! prefix-cache hit source).
+//!
+//! [`OpenLoopGen`] models all four as a streaming iterator with **O(1)
+//! state per arrival**: no per-user table is kept — a user's session
+//! prefix is a pure function of `(seed, user id)`, re-derived from a
+//! fresh child RNG at each arrival.  A population of ten million users
+//! costs exactly as much memory as a population of ten, which is what
+//! lets the generator scale to the "million-user" north star by
+//! streaming sessions instead of materializing them.
+//!
+//! Determinism: the whole stream is a pure function of
+//! [`OpenLoopConfig`]; two iterators with equal configs yield
+//! bit-identical workflows (pinned by `prop_openloop_deterministic`).
+
+use crate::config::WorkloadConfig;
+use crate::json::{self, Value};
+use crate::rng::Rng;
+use crate::tokens::TokenBuf;
+use crate::workload::{self, Workflow, SYSTEM_PREFIX_LEN};
+
+/// Open-loop traffic parameters wrapping a base workload config (which
+/// supplies rate, length distributions, turn structure and seed).
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Base workload: `qps` is the mean offered rate, `n_requests` the
+    /// stream length, `seed` the determinism root; length/turn
+    /// distributions are drawn exactly as in the closed-loop generator.
+    pub base: WorkloadConfig,
+    /// Simulated user population.  Users are never materialized — any
+    /// size up to `u64::MAX` costs O(1) memory.
+    pub users: u64,
+    /// Zipf skew of user popularity (> 1; heavier skew near 1 is
+    /// *larger* s here — rank-0 users dominate as s grows).  Values
+    /// <= 1 fall back to a uniform user draw.
+    pub zipf_s: f64,
+    /// Pareto tail index of inter-arrival times.  Must exceed 1 for the
+    /// mean to exist; values <= 1 fall back to Poisson (exponential)
+    /// arrivals.  Smaller alpha (closer to 1) = burstier traffic.
+    pub pareto_alpha: f64,
+    /// Tokens of per-user session prefix inserted between the shared
+    /// system prefix and the fresh request body.  A user's prefix is
+    /// stable across their arrivals — the recurring context that prefix
+    /// caching and the snapshot store can reuse.  0 disables sessions.
+    pub user_prefix_tokens: usize,
+    /// Diurnal modulation amplitude in [0, 1): instantaneous rate is
+    /// `qps * (1 + amplitude * sin(2*pi*t / period))`.  0 disables.
+    pub diurnal_amplitude: f64,
+    /// Diurnal period in seconds.
+    pub diurnal_period_s: f64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            base: WorkloadConfig::default(),
+            users: 1 << 20,
+            zipf_s: 1.3,
+            pareto_alpha: 1.5,
+            user_prefix_tokens: 32,
+            diurnal_amplitude: 0.0,
+            diurnal_period_s: 600.0,
+        }
+    }
+}
+
+impl OpenLoopConfig {
+    /// Dump the open-loop parameters (base config included) for result
+    /// files and the job endpoint.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("base", self.base.to_json()),
+            ("users", json::num(self.users as f64)),
+            ("zipf_s", json::num(self.zipf_s)),
+            ("pareto_alpha", json::num(self.pareto_alpha)),
+            ("user_prefix_tokens", json::num(self.user_prefix_tokens as f64)),
+            ("diurnal_amplitude", json::num(self.diurnal_amplitude)),
+            ("diurnal_period_s", json::num(self.diurnal_period_s)),
+        ])
+    }
+
+    /// Build from (possibly partial) JSON: the `base` member feeds
+    /// [`WorkloadConfig::from_json`]; every other key defaults.
+    pub fn from_json(v: &Value) -> anyhow::Result<OpenLoopConfig> {
+        let d = OpenLoopConfig::default();
+        let base = match v.get("base") {
+            Some(b) => WorkloadConfig::from_json(b)?,
+            None => d.base,
+        };
+        let n = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("{key}: want number")),
+            }
+        };
+        Ok(OpenLoopConfig {
+            base,
+            users: n("users", d.users as f64)? as u64,
+            zipf_s: n("zipf_s", d.zipf_s)?,
+            pareto_alpha: n("pareto_alpha", d.pareto_alpha)?,
+            user_prefix_tokens: n("user_prefix_tokens", d.user_prefix_tokens as f64)? as usize,
+            diurnal_amplitude: n("diurnal_amplitude", d.diurnal_amplitude)?,
+            diurnal_period_s: n("diurnal_period_s", d.diurnal_period_s)?,
+        })
+    }
+}
+
+/// Session prefix of `user` under `seed`: a pure function, so it can be
+/// re-derived at every arrival instead of stored per user.
+fn user_prefix(seed: u64, user: u64, len: usize) -> Vec<u32> {
+    // Decorrelate the child stream from both the workload rng and
+    // neighbouring users (plain XOR of small user ids would feed
+    // near-identical seeds to the generator's splitmix init).
+    let mut r = Rng::new(seed ^ user.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(17));
+    workload::content_tokens(&mut r, len)
+}
+
+/// Streaming open-loop workflow generator; see the module docs.
+///
+/// Yields exactly `cfg.base.n_requests` workflows.  All mutable state
+/// is the clock, the id counter and one RNG — independent of `users`.
+#[derive(Debug)]
+pub struct OpenLoopGen {
+    cfg: OpenLoopConfig,
+    rng: Rng,
+    sys: Vec<u32>,
+    now: f64,
+    next_id: u64,
+}
+
+impl OpenLoopGen {
+    /// Generator over `cfg`'s stream, starting at t = 0.
+    pub fn new(cfg: OpenLoopConfig) -> OpenLoopGen {
+        let rng = Rng::new(cfg.base.seed);
+        let sys = workload::system_prefix(SYSTEM_PREFIX_LEN);
+        OpenLoopGen { cfg, rng, sys, now: 0.0, next_id: 0 }
+    }
+
+    /// Inter-arrival draw at the current clock: heavy-tailed base draw,
+    /// compressed/stretched by the diurnal rate factor at `now`.
+    fn next_gap(&mut self) -> f64 {
+        let c = &self.cfg;
+        let qps = c.base.qps;
+        let gap = if c.pareto_alpha > 1.0 {
+            // x_m chosen so the Pareto mean is 1/qps.
+            let x_m = (c.pareto_alpha - 1.0) / (c.pareto_alpha * qps);
+            self.rng.pareto(c.pareto_alpha, x_m)
+        } else {
+            self.rng.exp(qps)
+        };
+        if c.diurnal_amplitude > 0.0 && c.diurnal_period_s > 0.0 {
+            let phase = 2.0 * std::f64::consts::PI * self.now / c.diurnal_period_s;
+            // Rate modulation shortens gaps at the peak of the day and
+            // stretches them in the trough; the floor keeps a mis-set
+            // amplitude >= 1 from freezing the clock.
+            let factor = (1.0 + c.diurnal_amplitude * phase.sin()).max(0.05);
+            gap / factor
+        } else {
+            gap
+        }
+    }
+}
+
+impl Iterator for OpenLoopGen {
+    type Item = Workflow;
+
+    fn next(&mut self) -> Option<Workflow> {
+        if self.next_id >= self.cfg.base.n_requests as u64 {
+            return None;
+        }
+        self.now += self.next_gap();
+        let c = &self.cfg;
+        let user = if c.users <= 1 {
+            0
+        } else if c.zipf_s > 1.0 {
+            self.rng.zipf(c.users, c.zipf_s)
+        } else {
+            self.rng.below(c.users)
+        };
+        // Prompt layout: shared system prefix, then the user's stable
+        // session prefix, then a fresh body — so popular users' prompts
+        // share a reusable prefix deeper than the system prompt alone.
+        let body_len =
+            self.rng.len_sample(c.base.prompt_mean, c.base.prompt_std, 8, 4096) as usize;
+        let mut prompt = self.sys.clone();
+        if c.user_prefix_tokens > 0 {
+            prompt.extend(user_prefix(c.base.seed, user, c.user_prefix_tokens));
+        }
+        prompt.extend(workload::content_tokens(&mut self.rng, body_len));
+        let turns = workload::plan_turns(&mut self.rng, &c.base);
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Workflow { id, arrival: self.now, prompt: TokenBuf::from(prompt), turns })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.cfg.base.n_requests as u64 - self.next_id) as usize;
+        (left, Some(left))
+    }
+}
+
+/// Collect the full stream (bounded by `base.n_requests`) — the
+/// convenience entry the CLI, benches and job endpoint use.
+pub fn generate_open_loop(cfg: &OpenLoopConfig) -> Vec<Workflow> {
+    OpenLoopGen::new(cfg.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> OpenLoopConfig {
+        OpenLoopConfig {
+            base: WorkloadConfig { n_requests: 256, qps: 2.0, seed: 11, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_open_loop(&cfg());
+        let b = generate_open_loop(&cfg());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.turns.len(), y.turns.len());
+        }
+        let mut other = cfg();
+        other.base.seed = 12;
+        let c = generate_open_loop(&other);
+        assert_ne!(a[0].prompt, c[0].prompt);
+    }
+
+    #[test]
+    fn arrivals_monotone_and_mean_rate_close() {
+        let mut c = cfg();
+        c.base.n_requests = 20_000;
+        c.base.qps = 4.0;
+        let wf = generate_open_loop(&c);
+        let mut prev = 0.0;
+        for w in &wf {
+            assert!(w.arrival > prev);
+            prev = w.arrival;
+        }
+        let rate = wf.len() as f64 / prev;
+        // Heavy-tailed arrivals converge on the mean slowly; a loose
+        // band still catches an x_m miscalibration (off by alpha/(a-1)
+        // would read ~3x).
+        assert!((rate / 4.0 - 1.0).abs() < 0.25, "rate {rate}");
+    }
+
+    #[test]
+    fn heavier_tail_than_poisson() {
+        let mut c = cfg();
+        c.base.n_requests = 20_000;
+        c.pareto_alpha = 1.2;
+        let wf = generate_open_loop(&c);
+        let gaps: Vec<f64> = wf.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let max = gaps.iter().cloned().fold(0.0, f64::max);
+        // For exponential gaps max/mean ~ ln n ≈ 10; a 1.2-tail blows
+        // far past that.
+        assert!(max / mean > 30.0, "max/mean {}", max / mean);
+    }
+
+    #[test]
+    fn session_prefix_recurs_for_same_user() {
+        // Single user: every arrival shares system + session prefix.
+        let mut c = cfg();
+        c.users = 1;
+        c.user_prefix_tokens = 24;
+        let wf = generate_open_loop(&c);
+        let shared = SYSTEM_PREFIX_LEN + 24;
+        for w in &wf[1..] {
+            assert_eq!(&w.prompt[..shared], &wf[0].prompt[..shared]);
+        }
+        // Distinct seeds give distinct session prefixes.
+        assert_ne!(
+            user_prefix(1, 0, 24),
+            user_prefix(2, 0, 24),
+            "session prefix must depend on seed"
+        );
+        // Neighbouring users differ despite the tiny id distance.
+        assert_ne!(user_prefix(1, 0, 24), user_prefix(1, 1, 24));
+    }
+
+    #[test]
+    fn zipf_popularity_concentrates_prefixes() {
+        let mut c = cfg();
+        c.base.n_requests = 4000;
+        c.users = 1 << 40; // absurd population: still O(1) memory
+        c.zipf_s = 1.5;
+        c.user_prefix_tokens = 16;
+        let wf = generate_open_loop(&c);
+        // Count distinct session prefixes: with strong skew, far fewer
+        // than one per request — the reuse the store feeds on.
+        let mut seen = std::collections::HashSet::new();
+        for w in &wf {
+            seen.insert(w.prompt[SYSTEM_PREFIX_LEN..SYSTEM_PREFIX_LEN + 16].to_vec());
+        }
+        assert!(seen.len() < wf.len() / 2, "{} prefixes / {} reqs", seen.len(), wf.len());
+        assert!(seen.len() > 10, "population must not collapse to one user");
+    }
+
+    #[test]
+    fn diurnal_phases_modulate_local_rate() {
+        let mut c = cfg();
+        c.base.n_requests = 30_000;
+        c.base.qps = 10.0;
+        c.pareto_alpha = 0.0; // Poisson base: isolates the diurnal term
+        c.diurnal_amplitude = 0.8;
+        c.diurnal_period_s = 200.0;
+        let wf = generate_open_loop(&c);
+        // Bucket arrivals by phase quadrant: the peak quadrant
+        // (sin > 0.5 region) must see far more arrivals than the trough.
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for w in &wf {
+            let s = (2.0 * std::f64::consts::PI * w.arrival / 200.0).sin();
+            if s > 0.5 {
+                peak += 1;
+            } else if s < -0.5 {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "peak {peak} vs trough {trough}: diurnal modulation missing"
+        );
+    }
+
+    #[test]
+    fn streams_at_scale_without_materializing_users() {
+        let mut c = cfg();
+        c.base.n_requests = 50_000;
+        c.users = u64::MAX; // the ultimate "millions of users"
+        c.zipf_s = 1.1;
+        let mut gen = OpenLoopGen::new(c);
+        // Drive the iterator without collecting: constant memory.
+        let mut count = 0usize;
+        let mut last = 0.0;
+        for w in &mut gen {
+            count += 1;
+            last = w.arrival;
+        }
+        assert_eq!(count, 50_000);
+        assert!(last > 0.0);
+        assert_eq!(gen.size_hint(), (0, Some(0)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = OpenLoopConfig {
+            users: 777,
+            zipf_s: 1.25,
+            pareto_alpha: 2.0,
+            user_prefix_tokens: 8,
+            diurnal_amplitude: 0.4,
+            diurnal_period_s: 120.0,
+            ..Default::default()
+        };
+        let back = OpenLoopConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.users, 777);
+        assert_eq!(back.zipf_s, 1.25);
+        assert_eq!(back.pareto_alpha, 2.0);
+        assert_eq!(back.user_prefix_tokens, 8);
+        assert_eq!(back.diurnal_amplitude, 0.4);
+        assert_eq!(back.diurnal_period_s, 120.0);
+        // Partial JSON defaults the rest.
+        let partial = Value::parse(r#"{"users": 5, "base": {"qps": 9.0}}"#).unwrap();
+        let p = OpenLoopConfig::from_json(&partial).unwrap();
+        assert_eq!(p.users, 5);
+        assert_eq!(p.base.qps, 9.0);
+        assert_eq!(p.pareto_alpha, OpenLoopConfig::default().pareto_alpha);
+    }
+}

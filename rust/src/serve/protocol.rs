@@ -1,0 +1,179 @@
+//! Wire types of the inference protocol (request/response JSON).
+//!
+//! The shapes follow the open Inference Protocol conventions (model in
+//! the path, JSON body, optional streaming): enough structure that a
+//! real client shim would be mechanical, small enough to live on the
+//! in-repo JSON parser.  Streamed responses are newline-delimited JSON
+//! events, one per generated token, closed by a `done` event — each
+//! event rides one HTTP chunk (see `serve::http`).
+
+use crate::json::{self, Value};
+use crate::tokenizer::Tokenizer;
+
+/// A parsed `/v2/models/{m}/infer` request body.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Prompt tokens: either given directly (`"tokens": [..]`) or
+    /// encoded from `"text"` with the deterministic tokenizer.
+    pub prompt: Vec<u32>,
+    /// Tokens to generate (`"max_tokens"`, default 16, capped at 4096).
+    pub max_tokens: usize,
+    /// Stream one event per token instead of a single JSON reply.
+    pub stream: bool,
+    /// Optional session tag, echoed back (persistent-user bookkeeping
+    /// for clients; the open-loop generator models sessions natively).
+    pub session: Option<String>,
+}
+
+impl InferRequest {
+    /// Parse a request body.  Exactly one of `tokens` / `text` must be
+    /// present.
+    pub fn from_json(v: &Value, tokenizer: &Tokenizer) -> anyhow::Result<InferRequest> {
+        let prompt = match (v.get("tokens"), v.get("text")) {
+            (Some(_), Some(_)) => anyhow::bail!("give either tokens or text, not both"),
+            (Some(toks), None) => toks
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("tokens: want array"))?
+                .iter()
+                .map(|t| {
+                    t.as_f64()
+                        .filter(|&f| f >= 0.0 && f < u32::MAX as f64)
+                        .map(|f| f as u32)
+                        .ok_or_else(|| anyhow::anyhow!("tokens: want non-negative numbers"))
+                })
+                .collect::<anyhow::Result<Vec<u32>>>()?,
+            (None, Some(text)) => {
+                let text = text.as_str().ok_or_else(|| anyhow::anyhow!("text: want string"))?;
+                tokenizer.encode(text)
+            }
+            (None, None) => anyhow::bail!("missing prompt: give tokens or text"),
+        };
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let max_tokens = match v.get("max_tokens") {
+            None => 16,
+            Some(x) => x.as_usize().ok_or_else(|| anyhow::anyhow!("max_tokens: want number"))?,
+        };
+        anyhow::ensure!(max_tokens >= 1, "max_tokens must be >= 1");
+        let stream = match v.get("stream") {
+            None => false,
+            Some(x) => x.as_bool().ok_or_else(|| anyhow::anyhow!("stream: want bool"))?,
+        };
+        let session = v.get("session").and_then(|s| s.as_str()).map(str::to_string);
+        Ok(InferRequest { prompt, max_tokens: max_tokens.min(4096), stream, session })
+    }
+}
+
+/// One streamed token event (newline-terminated for ndjson framing).
+pub fn token_event(index: usize, token: u32) -> String {
+    let mut s = json::obj(vec![
+        ("index", json::num(index as f64)),
+        ("token", json::num(token as f64)),
+    ])
+    .to_string();
+    s.push('\n');
+    s
+}
+
+/// The closing stream event.
+pub fn done_event(model: usize, generated: usize, session: Option<&str>) -> String {
+    let mut entries = vec![
+        ("done", Value::Bool(true)),
+        ("model", json::num(model as f64)),
+        ("generated", json::num(generated as f64)),
+    ];
+    if let Some(sess) = session {
+        entries.push(("session", json::s(sess)));
+    }
+    let mut s = json::obj(entries).to_string();
+    s.push('\n');
+    s
+}
+
+/// The single-shot (non-streamed) reply body.
+pub fn infer_reply(model: usize, tokens: &[u32], session: Option<&str>) -> String {
+    let mut entries = vec![
+        ("model", json::num(model as f64)),
+        ("generated", json::num(tokens.len() as f64)),
+        ("tokens", Value::Arr(tokens.iter().map(|&t| json::num(t as f64)).collect())),
+    ];
+    if let Some(sess) = session {
+        entries.push(("session", json::s(sess)));
+    }
+    json::obj(entries).to_string_pretty()
+}
+
+/// A JSON error body (for 4xx/5xx responses).
+pub fn error_body(msg: &str) -> String {
+    json::obj(vec![("error", json::s(msg))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(2048)
+    }
+
+    #[test]
+    fn parses_token_prompt() {
+        let v = Value::parse(r#"{"tokens": [1, 40, 41], "max_tokens": 8, "stream": true}"#)
+            .unwrap();
+        let r = InferRequest::from_json(&v, &tok()).unwrap();
+        assert_eq!(r.prompt, vec![1, 40, 41]);
+        assert_eq!(r.max_tokens, 8);
+        assert!(r.stream);
+        assert!(r.session.is_none());
+    }
+
+    #[test]
+    fn parses_text_prompt_via_tokenizer() {
+        let v = Value::parse(r#"{"text": "hello world", "session": "u7"}"#).unwrap();
+        let r = InferRequest::from_json(&v, &tok()).unwrap();
+        assert_eq!(r.prompt, tok().encode("hello world"));
+        assert_eq!(r.max_tokens, 16, "default");
+        assert!(!r.stream, "default");
+        assert_eq!(r.session.as_deref(), Some("u7"));
+    }
+
+    #[test]
+    fn rejects_bad_prompts() {
+        let t = tok();
+        for bad in [
+            r#"{}"#,
+            r#"{"tokens": [1], "text": "x"}"#,
+            r#"{"tokens": "nope"}"#,
+            r#"{"tokens": [-3]}"#,
+            r#"{"tokens": []}"#,
+            r#"{"text": "x", "max_tokens": 0}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(InferRequest::from_json(&v, &t).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn caps_max_tokens() {
+        let v = Value::parse(r#"{"tokens": [1], "max_tokens": 1000000}"#).unwrap();
+        assert_eq!(InferRequest::from_json(&v, &tok()).unwrap().max_tokens, 4096);
+    }
+
+    #[test]
+    fn events_are_ndjson() {
+        let e = token_event(3, 99);
+        assert!(e.ends_with('\n'));
+        let v = Value::parse(e.trim()).unwrap();
+        assert_eq!(v.get("index").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("token").unwrap().as_u64(), Some(99));
+
+        let d = done_event(2, 8, Some("s1"));
+        let v = Value::parse(d.trim()).unwrap();
+        assert_eq!(v.get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("generated").unwrap().as_usize(), Some(8));
+        assert_eq!(v.get("session").unwrap().as_str(), Some("s1"));
+
+        let r = Value::parse(&infer_reply(1, &[5, 6], None)).unwrap();
+        assert_eq!(r.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(r.get("session").is_none());
+    }
+}

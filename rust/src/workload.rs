@@ -53,8 +53,10 @@ impl Workflow {
 
 /// Unique-ish content tokens so distinct workflows don't alias in the
 /// prefix cache, while all workflows share a common system prefix (as
-/// real agent prompts do).
-fn content_tokens(rng: &mut Rng, n: usize) -> Vec<u32> {
+/// real agent prompts do).  Crate-visible: the open-loop session
+/// stream (`serve::openloop`) draws its fresh prompt bodies from the
+/// same distribution.
+pub(crate) fn content_tokens(rng: &mut Rng, n: usize) -> Vec<u32> {
     (0..n).map(|_| 32 + rng.below(1900) as u32).collect()
 }
 
@@ -79,46 +81,56 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Workflow> {
         let mut prompt = sys.clone();
         prompt.extend(content_tokens(&mut rng, prompt_len));
 
-        let trials = rng.range(cfg.turns_min, cfg.turns_max) as usize;
-        let mut turns = Vec::new();
-        let order = plan_routing(&mut rng, cfg, trials * 2 + 2);
-        let mut slot = 0;
-        for _trial in 0..trials {
-            let gen_len =
-                rng.len_sample(cfg.output_mean, cfg.output_std, 4, 512) as usize;
-            let obs_len = rng.len_sample(cfg.obs_mean, cfg.obs_std, 2, 256) as usize;
-            turns.push(TurnSpec {
-                model_id: order[slot],
-                gen_len,
-                obs: content_tokens(&mut rng, obs_len),
-                think_s: if turns.is_empty() {
-                    0.0
-                } else {
-                    rng.gaussian(cfg.think_mean, cfg.think_std).max(0.0)
-                },
-                is_reflection: false,
-            });
-            slot += 1;
-            if cfg.pattern == AgentPattern::Reflexion {
-                // Self-evaluation turn: short verdict + episodic memory
-                // appended to the context (grows the shared prefix).
-                let refl_len =
-                    rng.len_sample(cfg.output_mean * 0.5, cfg.output_std * 0.5, 4, 256) as usize;
-                let memory =
-                    rng.len_sample(cfg.obs_mean * 1.5, cfg.obs_std, 4, 256) as usize;
-                turns.push(TurnSpec {
-                    model_id: order[slot],
-                    gen_len: refl_len,
-                    obs: content_tokens(&mut rng, memory),
-                    think_s: rng.gaussian(cfg.think_mean * 0.3, cfg.think_std * 0.3).max(0.0),
-                    is_reflection: true,
-                });
-                slot += 1;
-            }
-        }
+        let turns = plan_turns(&mut rng, cfg);
         out.push(Workflow { id: id as u64, arrival, prompt: prompt.into(), turns });
     }
     out
+}
+
+/// Plan one workflow's turn sequence: trial count, per-slot model
+/// routing, generation/observation lengths and think times.  Shared by
+/// the closed-loop [`generate`] above and the open-loop session stream
+/// (`serve::openloop`) — both consume the rng in exactly this order,
+/// which keeps `generate` bit-identical to its pre-extraction output
+/// (the workload determinism tests and the engine's frozen-legacy
+/// differential pin it).
+pub(crate) fn plan_turns(rng: &mut Rng, cfg: &WorkloadConfig) -> Vec<TurnSpec> {
+    let trials = rng.range(cfg.turns_min, cfg.turns_max) as usize;
+    let mut turns = Vec::new();
+    let order = plan_routing(rng, cfg, trials * 2 + 2);
+    let mut slot = 0;
+    for _trial in 0..trials {
+        let gen_len = rng.len_sample(cfg.output_mean, cfg.output_std, 4, 512) as usize;
+        let obs_len = rng.len_sample(cfg.obs_mean, cfg.obs_std, 2, 256) as usize;
+        turns.push(TurnSpec {
+            model_id: order[slot],
+            gen_len,
+            obs: content_tokens(rng, obs_len),
+            think_s: if turns.is_empty() {
+                0.0
+            } else {
+                rng.gaussian(cfg.think_mean, cfg.think_std).max(0.0)
+            },
+            is_reflection: false,
+        });
+        slot += 1;
+        if cfg.pattern == AgentPattern::Reflexion {
+            // Self-evaluation turn: short verdict + episodic memory
+            // appended to the context (grows the shared prefix).
+            let refl_len =
+                rng.len_sample(cfg.output_mean * 0.5, cfg.output_std * 0.5, 4, 256) as usize;
+            let memory = rng.len_sample(cfg.obs_mean * 1.5, cfg.obs_std, 4, 256) as usize;
+            turns.push(TurnSpec {
+                model_id: order[slot],
+                gen_len: refl_len,
+                obs: content_tokens(rng, memory),
+                think_s: rng.gaussian(cfg.think_mean * 0.3, cfg.think_std * 0.3).max(0.0),
+                is_reflection: true,
+            });
+            slot += 1;
+        }
+    }
+    turns
 }
 
 /// Model id per turn slot.

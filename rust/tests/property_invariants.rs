@@ -1811,3 +1811,188 @@ fn prop_executor_invariants() {
         assert!(m.polls >= m.spawned, "seed {seed}: every task polled at least once");
     }
 }
+
+/// The open-loop generator is a pure function of its config: same seed
+/// gives a bit-identical workload (ids, arrival-time bits, prompts and
+/// turn plans), a different seed shifts the arrival process, and a full
+/// cluster run over the generated traffic is run-to-run deterministic
+/// in both stats and trace — across user populations, tail indices,
+/// diurnal amplitudes and replica counts.
+#[test]
+fn prop_openloop_deterministic() {
+    use icarus::cluster::Cluster;
+    use icarus::serve::{generate_open_loop, OpenLoopConfig};
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(21_000 + seed);
+        let cfg = OpenLoopConfig {
+            base: WorkloadConfig {
+                n_models: 1 + rng.below(6) as usize,
+                qps: 0.5 + rng.f64() * 4.0,
+                n_requests: 48,
+                seed: 700 + seed,
+                ..Default::default()
+            },
+            users: 1 + rng.below(1 << 16),
+            pareto_alpha: 1.1 + rng.f64(),
+            diurnal_amplitude: rng.f64() * 0.8,
+            ..Default::default()
+        };
+        let a = generate_open_loop(&cfg);
+        let b = generate_open_loop(&cfg);
+        assert_eq!(a.len(), b.len(), "seed {seed}: workload length");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id, "seed {seed}: ids");
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "seed {seed}: arrival bits");
+            assert_eq!(x.prompt.as_slice(), y.prompt.as_slice(), "seed {seed}: prompt");
+            assert_eq!(x.turns.len(), y.turns.len(), "seed {seed}: turn count");
+            for (t, u) in x.turns.iter().zip(&y.turns) {
+                assert_eq!(t.model_id, u.model_id, "seed {seed}: routing");
+                assert_eq!(t.gen_len, u.gen_len, "seed {seed}: gen plan");
+                assert_eq!(t.obs, u.obs, "seed {seed}: observations");
+                assert_eq!(t.think_s.to_bits(), u.think_s.to_bits(), "seed {seed}: think gaps");
+            }
+        }
+        let reseeded = OpenLoopConfig {
+            base: WorkloadConfig { seed: 7000 + seed, ..cfg.base.clone() },
+            ..cfg.clone()
+        };
+        let c = generate_open_loop(&reseeded);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.arrival.to_bits() != y.arrival.to_bits()),
+            "seed {seed}: a different seed must shift the arrival process"
+        );
+        let scfg = ServingConfig {
+            replicas: 1 + rng.below(3) as usize,
+            admit_queue: 32,
+            ..Default::default()
+        };
+        let run = |wl| {
+            Cluster::new(scfg.clone(), 2048, cfg.base.n_models)
+                .run_sim_traced(CostModel::default(), wl)
+        };
+        let (s1, t1) = run(a);
+        let (s2, t2) = run(b);
+        assert_eq!(s1.merged, s2.merged, "seed {seed}: stats run-to-run deterministic");
+        assert_eq!(s1.per_replica, s2.per_replica, "seed {seed}: per-replica stats");
+        assert_eq!(t1.events, t2.events, "seed {seed}: trace run-to-run deterministic");
+    }
+}
+
+/// Admission accounting conserves requests end to end: with the gate
+/// enabled, every open-loop arrival reaches it (`submitted ==
+/// n_requests`), every submitted request is either completed or
+/// rejected — no accepted request is silently dropped — and the
+/// per-replica counters sum to the merged ones, across random bounds,
+/// loads, tails and replica counts.
+#[test]
+fn prop_serve_admission_conservation() {
+    use icarus::cluster::Cluster;
+    use icarus::serve::{generate_open_loop, OpenLoopConfig};
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(22_000 + seed);
+        let n_requests = 24 + rng.below(40) as usize;
+        let n_models = 1 + rng.below(4) as usize;
+        let mut scfg = ServingConfig {
+            replicas: 1 + rng.below(4) as usize,
+            admit_queue: if rng.bool(0.7) { 1 + rng.below(12) as usize } else { 0 },
+            admit_tokens: if rng.bool(0.5) { 256 + rng.below(4096) as usize } else { 0 },
+            ..Default::default()
+        };
+        if scfg.admit_queue + scfg.admit_tokens == 0 {
+            scfg.admit_queue = 4; // keep the gate armed in every case
+        }
+        let tag = format!(
+            "seed {seed} (R={} q={} tok={})",
+            scfg.replicas, scfg.admit_queue, scfg.admit_tokens
+        );
+        let ocfg = OpenLoopConfig {
+            base: WorkloadConfig {
+                n_models,
+                qps: 1.0 + rng.f64() * 7.0,
+                n_requests,
+                seed: 800 + seed,
+                ..Default::default()
+            },
+            pareto_alpha: 1.1 + rng.f64(),
+            ..Default::default()
+        };
+        let wl = generate_open_loop(&ocfg);
+        let out = Cluster::new(scfg, 2048, n_models).run_sim(CostModel::default(), wl);
+        let m = &out.merged;
+        assert_eq!(m.submitted_requests, n_requests as u64, "{tag}: every arrival counted");
+        assert_eq!(
+            m.completed_requests + m.rejected_requests,
+            m.submitted_requests,
+            "{tag}: no accepted request may be silently dropped"
+        );
+        let sub: u64 = out.per_replica.iter().map(|r| r.submitted_requests).sum();
+        let rej: u64 = out.per_replica.iter().map(|r| r.rejected_requests).sum();
+        let comp: u64 = out.per_replica.iter().map(|r| r.completed_requests).sum();
+        assert_eq!(
+            (sub, rej, comp),
+            (m.submitted_requests, m.rejected_requests, m.completed_requests),
+            "{tag}: per-replica counters must sum to the merged ones"
+        );
+    }
+}
+
+/// The serving front end is provably inert when off: with both
+/// admission bounds at the default 0 the gate counters stay 0 (so the
+/// frozen-legacy differential above keeps pinning the default path to
+/// the pre-front-end engine), and arming the gate with unreachably
+/// large bounds changes nothing but the `submitted_requests` counter —
+/// stats and trace otherwise bit-identical, across modes, eviction
+/// policies and replica counts.
+#[test]
+fn prop_serve_off_bit_identical() {
+    use icarus::cluster::Cluster;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(23_000 + seed);
+        let mode = if rng.bool(0.5) { ServingMode::Icarus } else { ServingMode::Baseline };
+        let eviction =
+            if rng.bool(0.5) { EvictionPolicy::Recompute } else { EvictionPolicy::Swap };
+        let n_models = 1 + rng.below(5) as usize;
+        let base = ServingConfig {
+            mode,
+            eviction,
+            kv_pool_bytes: (8 + rng.below(48)) << 20,
+            replicas: 1 + rng.below(4) as usize,
+            ..Default::default()
+        };
+        let armed = ServingConfig {
+            admit_queue: usize::MAX / 2,
+            admit_tokens: usize::MAX / 2,
+            ..base.clone()
+        };
+        let wcfg = WorkloadConfig {
+            n_models,
+            qps: 0.3 + rng.f64() * 2.0,
+            n_requests: 24,
+            seed: 900 + seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let (a, at) =
+            Cluster::new(base, 2048, n_models).run_sim_traced(CostModel::default(), wl.clone());
+        let (b, bt) =
+            Cluster::new(armed, 2048, n_models).run_sim_traced(CostModel::default(), wl);
+        assert_eq!(at.events, bt.events, "seed {seed}: trace bit-identical with the gate inert");
+        assert_eq!(a.merged.submitted_requests, 0, "seed {seed}: gate off counts nothing");
+        assert_eq!(a.merged.rejected_requests, 0, "seed {seed}: gate off rejects nothing");
+        assert_eq!(b.merged.submitted_requests, 24, "seed {seed}: armed gate counts arrivals");
+        assert_eq!(b.merged.rejected_requests, 0, "seed {seed}: unreachable bounds never shed");
+        let mut bm = b.merged.clone();
+        bm.submitted_requests = 0;
+        assert_eq!(a.merged, bm, "seed {seed}: stats identical apart from the gate counter");
+        let scrubbed: Vec<_> = b
+            .per_replica
+            .iter()
+            .cloned()
+            .map(|mut s| {
+                s.submitted_requests = 0;
+                s
+            })
+            .collect();
+        assert_eq!(a.per_replica, scrubbed, "seed {seed}: per-replica stats identical");
+    }
+}

@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Guard the repo-root BENCH_<name>.json mirrors.
+
+Every bench writes its rows to bench_results/<name>.json and mirrors
+them to BENCH_<name>.json at the repository root so the perf trajectory
+is tracked in-tree.  This check fails CI when a mirror is missing,
+stale (not rewritten by this run — e.g. a bench stopped mirroring, or a
+checked-in mirror is silently rotting), structurally wrong (the "bench"
+key does not match the file name), or empty (zero rows).
+
+Usage, from the repo root, after the smoke benches ran:
+
+    touch .bench-stamp            # BEFORE running the benches
+    cargo bench --bench <name> -- --smoke   # for each name
+    python3 tools/check_bench_mirrors.py --stamp .bench-stamp \
+        sched_policies store_tiers overlap cluster_scale serving
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def check(name: str, stamp_mtime: float) -> list[str]:
+    path = f"BENCH_{name}.json"
+    if not os.path.exists(path):
+        return [f"{path}: missing (did `cargo bench --bench {name} -- --smoke` run?)"]
+    errors = []
+    if stamp_mtime is not None and os.path.getmtime(path) < stamp_mtime:
+        errors.append(f"{path}: stale — not rewritten after the stamp (bench stopped mirroring?)")
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return errors + [f"{path}: unreadable JSON: {e}"]
+    if doc.get("bench") != name:
+        errors.append(f"{path}: \"bench\" is {doc.get('bench')!r}, want {name!r}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{path}: \"rows\" must be a non-empty list")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="+", help="bench names (BENCH_<name>.json each)")
+    ap.add_argument(
+        "--stamp",
+        help="file touched before the benches ran; mirrors older than it are stale",
+    )
+    args = ap.parse_args()
+
+    stamp_mtime = None
+    if args.stamp:
+        if not os.path.exists(args.stamp):
+            print(f"stamp file {args.stamp} does not exist", file=sys.stderr)
+            return 2
+        stamp_mtime = os.path.getmtime(args.stamp)
+
+    failures = []
+    for name in args.names:
+        failures += check(name, stamp_mtime)
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if not failures:
+        print(f"ok: {len(args.names)} bench mirrors present, fresh and well-formed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
