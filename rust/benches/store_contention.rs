@@ -1,0 +1,245 @@
+//! Shared-store lock contention: store-op throughput vs consumer
+//! threads × lock-stripe shards × probe mix (EXPERIMENTS.md §Store
+//! contention).
+//!
+//! What this demonstrates:
+//!   * the single-lock snapshot store serializes every replica's
+//!     probes, publishes and restores — the hottest structure in the
+//!     ICaRus design scales *against* the consumer count;
+//!   * lock striping (`--store-shards`, default 2× replicas) removes
+//!     the serialization: at ≥4 threads, 8 shards beat the serial
+//!     layout (shards = 1, bit-identical to the pre-shard store — see
+//!     `prop_store_shards_bit_identical`) on every mix, most at
+//!     write-heavy mixes where even the striped read path must queue
+//!     behind same-shard writers;
+//!   * probes take shard *read* locks, so probe-heavy mixes scale
+//!     further than write-heavy ones at every shard count.
+//!
+//! This is a raw store microbenchmark — no engine, no virtual clock
+//! fence — so the numbers isolate lock contention from sim work.
+//! Chains are precomputed ([`chain_keys`]); hashing is off the
+//! measured path, exactly as on the engine's memoized hot path
+//! (`TokenBuf::block_chain`).
+//!
+//! Results land in bench_results/store_contention.json and, machine-
+//! readably for the perf trajectory, BENCH_store_contention.json at
+//! the repo root (CI runs this at smoke scale and uploads the
+//! artifact).
+//!
+//! Run: cargo bench --bench store_contention  [-- --smoke]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use icarus::json::{self, Value};
+use icarus::store::{chain_keys, BlockKey, SnapshotStore, TieredStore};
+
+const BLOCK_TOKENS: usize = 16;
+const KV_BPT: u64 = 64; // 1 KiB per block — accounting, not data
+
+/// Deterministic per-thread op stream (splitmix64): which chain an op
+/// touches and whether it probes or writes.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// The working set one thread hammers: a mix of thread-private chains
+/// and chains extending prefixes shared by every thread (the
+/// cross-replica dedup/reuse traffic the store exists for — and the
+/// cross-shard lock traffic that makes striping earn its keep).
+fn make_chains(thread: usize, shared: &[Vec<u32>]) -> Vec<Vec<BlockKey>> {
+    let mut chains = Vec::new();
+    for (i, prefix) in shared.iter().enumerate() {
+        // Shared prefix extended per-thread: common roots, private tails.
+        let mut ctx = prefix.clone();
+        ctx.extend((0..32u32).map(|t| t * 7 + (thread as u32) * 131 + i as u32));
+        chains.push(chain_keys(&ctx, BLOCK_TOKENS));
+    }
+    for i in 0..8u32 {
+        // Fully private chains (2–5 blocks).
+        let len = (2 + (i as usize % 4)) * BLOCK_TOKENS;
+        let ctx: Vec<u32> =
+            (0..len as u32).map(|t| t * 13 + (thread as u32) * 977 + i * 59 + 1).collect();
+        chains.push(chain_keys(&ctx, BLOCK_TOKENS));
+    }
+    chains
+}
+
+/// Hammer `store` from `threads` workers for `ops` operations each:
+/// `probe_rate` of them read-only peeks, the rest split between
+/// publishes and restores.  Returns aggregate store operations per
+/// wall-clock second.
+fn run_mix(store: &Arc<TieredStore>, threads: usize, ops: usize, probe_rate: f64) -> f64 {
+    let shared: Vec<Vec<u32>> =
+        (0..4u32).map(|i| (0..64u32).map(|t| t * 3 + i * 10_007).collect()).collect();
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for thread in 0..threads {
+            let store = Arc::clone(store);
+            let shared = &shared;
+            s.spawn(move || {
+                let chains = make_chains(thread, shared);
+                let mut rng = Rng(0x5eed ^ ((thread as u64) << 32));
+                // Warm the store so probes and restores have hits.
+                for c in &chains {
+                    store.publish_chain(c, 0.0, 0.0, thread);
+                }
+                for i in 0..ops {
+                    let now = 1.0 + i as f64 * 1e-6;
+                    let chain = &chains[(rng.next() as usize) % chains.len()];
+                    let p = rng.f64();
+                    if p < probe_rate {
+                        std::hint::black_box(store.peek_chain(chain, now));
+                    } else if p < probe_rate + (1.0 - probe_rate) * 0.5 {
+                        store.publish_chain(chain, now, now, thread);
+                    } else {
+                        std::hint::black_box(store.restore_chain(
+                            chain,
+                            0,
+                            now,
+                            (thread + 1) % threads.max(1),
+                        ));
+                    }
+                }
+            });
+        }
+    });
+    (threads * ops) as f64 / start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ops: usize = if smoke { 20_000 } else { 200_000 };
+    let thread_list: &[usize] = &[1, 2, 4, 8];
+    let shard_list: &[usize] = &[1, 2, 4, 8];
+    let probe_rates: &[f64] = if smoke { &[0.9] } else { &[0.9, 0.5] };
+
+    println!(
+        "== Store contention: threads x shards x probe mix, {ops} ops/thread{} ==\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+    println!(
+        "{:<28} {:>14} {:>12} {:>10}",
+        "threads/shards/probe", "ops/s", "serial ops/s", "speedup"
+    );
+
+    let mut rows = Vec::new();
+    for &probe_rate in probe_rates {
+        for &threads in thread_list {
+            let mut serial_ops_s = 0.0f64;
+            for &shards in shard_list {
+                // Budgets sized so the working set fits: contention,
+                // not eviction, is the variable under test (eviction
+                // upgrades to all-shard locking by design).
+                let store = Arc::new(TieredStore::with_shards(
+                    4096 * 1024,
+                    0,
+                    BLOCK_TOKENS,
+                    KV_BPT,
+                    shards,
+                ));
+                let ops_s = run_mix(&store, threads, ops, probe_rate);
+                if shards == 1 {
+                    // The serial baseline column: shards = 1 is the
+                    // pre-shard single-lock layout (pinned bit-identical
+                    // by prop_store_shards_bit_identical).
+                    serial_ops_s = ops_s;
+                }
+                let speedup = if serial_ops_s > 0.0 { ops_s / serial_ops_s } else { 0.0 };
+                println!(
+                    "{:<28} {:>14.0} {:>12.0} {:>9.2}x",
+                    format!("T={threads}/S={shards}/p={probe_rate:.1}"),
+                    ops_s,
+                    serial_ops_s,
+                    speedup,
+                );
+                rows.push(json::obj(vec![
+                    ("threads", json::num(threads as f64)),
+                    ("shards", json::num(shards as f64)),
+                    ("probe_rate", json::num(probe_rate)),
+                    ("ops_per_thread", json::num(ops as f64)),
+                    ("ops_per_s", json::num(ops_s)),
+                    ("serial_baseline_ops_per_s", json::num(serial_ops_s)),
+                    ("speedup_vs_serial", json::num(speedup)),
+                ]));
+            }
+        }
+    }
+
+    // The acceptance row: highest contention point (max threads), does
+    // max shards strictly beat the serial layout?
+    let at = |threads: usize, shards: usize, probe: f64| -> f64 {
+        rows.iter()
+            .find_map(|r| match r {
+                Value::Obj(kv) => {
+                    let get = |k: &str| {
+                        kv.iter().find(|(n, _)| n == k).and_then(|(_, v)| match v {
+                            Value::Num(x) => Some(*x),
+                            _ => None,
+                        })
+                    };
+                    (get("threads") == Some(threads as f64)
+                        && get("shards") == Some(shards as f64)
+                        && get("probe_rate") == Some(probe))
+                    .then(|| get("ops_per_s").unwrap_or(0.0))
+                }
+                _ => None,
+            })
+            .unwrap_or(0.0)
+    };
+    let top = *thread_list.last().expect("non-empty");
+    let mut scaling = Vec::new();
+    for &probe_rate in probe_rates {
+        let serial = at(top, 1, probe_rate);
+        let sharded = at(top, 8, probe_rate);
+        println!(
+            "\nT={top} p={probe_rate:.1}: shards=8 {:.0} ops/s vs serial {:.0} ops/s ({:.2}x)",
+            sharded,
+            serial,
+            if serial > 0.0 { sharded / serial } else { 0.0 },
+        );
+        scaling.push(json::obj(vec![
+            ("threads", json::num(top as f64)),
+            ("probe_rate", json::num(probe_rate)),
+            ("serial_ops_per_s", json::num(serial)),
+            ("shards8_ops_per_s", json::num(sharded)),
+            ("speedup", json::num(if serial > 0.0 { sharded / serial } else { 0.0 })),
+        ]));
+    }
+
+    // Hand-rolled mirror (same layout/paths as bench_util::write_results,
+    // which is coupled to engine-sweep Row objects; these rows are raw
+    // store-op measurements).
+    let doc = json::obj(vec![
+        ("bench", json::s("store_contention")),
+        ("rows", Value::Arr(rows)),
+        ("figure", json::s("store scaling (ROADMAP: consumer-count scaling)")),
+        ("baseline", json::s("shards=1 == pre-shard single-lock store")),
+        ("smoke", Value::Bool(smoke)),
+        ("sharded_vs_serial", Value::Arr(scaling)),
+    ]);
+    let dir = Path::new("bench_results");
+    std::fs::create_dir_all(dir).ok();
+    let path = dir.join("store_contention.json");
+    std::fs::write(&path, doc.to_string_pretty()).expect("write results");
+    println!("\nwrote {}", path.display());
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let bench_path = root.join("BENCH_store_contention.json");
+    match std::fs::write(&bench_path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {}", bench_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", bench_path.display()),
+    }
+}

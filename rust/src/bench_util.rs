@@ -93,6 +93,9 @@ pub struct Point {
     pub store_disk_bytes: u64,
     /// Background prefetch staging for queued turns.
     pub store_prefetch: bool,
+    /// Store lock-stripe count (0 = auto from the replica count;
+    /// `benches/store_contention.rs` sweeps this).
+    pub store_shards: usize,
     /// Cooperative overlap runtime: fly store/swap transfers as tasks
     /// instead of charging them inline (`benches/overlap.rs` sweeps
     /// this).
@@ -140,6 +143,7 @@ impl Default for Point {
             store_host_bytes: 0,
             store_disk_bytes: 0,
             store_prefetch: false,
+            store_shards: 0,
             overlap: false,
             disagg: false,
             prefill_replicas: 1,
@@ -169,6 +173,7 @@ impl Point {
             store_host_bytes: self.store_host_bytes,
             store_disk_bytes: self.store_disk_bytes,
             store_prefetch: self.store_prefetch,
+            store_shards: self.store_shards,
             overlap: self.overlap,
             disagg: self.disagg,
             prefill_replicas: self.prefill_replicas,
@@ -236,6 +241,9 @@ impl Point {
                 self.store_disk_bytes >> 20,
                 if self.store_prefetch { "+pf" } else { "" }
             ));
+            if self.store_shards > 0 {
+                s.push_str(&format!("/sh={}", self.store_shards));
+            }
         }
         if self.overlap {
             s.push_str("/ov");

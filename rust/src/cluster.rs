@@ -297,16 +297,25 @@ impl Cluster {
 
     /// The shared tiered snapshot store this cluster's config asks for
     /// (`None` with both budgets zero — the store then stays entirely
-    /// out of the engines' code paths).
+    /// out of the engines' code paths).  Lock striping defaults to
+    /// [`TieredStore::auto_shards`] over the replica count;
+    /// `--store-shards` overrides (rounded up to a power of two).
+    /// Either way stats and traces are shard-count-invariant — the knob
+    /// only moves lock contention.
     fn make_store(&self) -> Option<Arc<TieredStore>> {
         if self.scfg.store_host_bytes + self.scfg.store_disk_bytes == 0 {
             return None;
         }
-        Some(Arc::new(TieredStore::new(
+        let shards = match self.scfg.store_shards {
+            0 => TieredStore::auto_shards(self.replicas()),
+            n => n,
+        };
+        Some(Arc::new(TieredStore::with_shards(
             self.scfg.store_host_bytes,
             self.scfg.store_disk_bytes,
             self.scfg.block_tokens,
             self.kv_bytes_per_token,
+            shards,
         )))
     }
 

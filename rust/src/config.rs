@@ -189,6 +189,13 @@ pub struct ServingConfig {
     pub store_host_bytes: u64,
     /// Disk (NVMe) tier of the tiered KV snapshot store, in bytes.
     pub store_disk_bytes: u64,
+    /// Lock-striped shard count for the shared snapshot store.  0 (the
+    /// default) = automatic: the next power of two ≥ 2× the replica
+    /// count.  Explicit values round up to a power of two (capped at
+    /// 64).  Purely a contention knob: stats and traces are
+    /// bit-identical for every value (pinned by
+    /// `prop_store_shards_bit_identical`).
+    pub store_shards: usize,
     /// Issue background prefetches that stage disk-tier store entries
     /// into host memory for queued turns before admission, so their
     /// eventual restore pays PCIe instead of NVMe.
@@ -254,6 +261,7 @@ impl Default for ServingConfig {
             swap_bytes: 4 << 30,
             store_host_bytes: 0,
             store_disk_bytes: 0,
+            store_shards: 0,
             store_prefetch: false,
             overlap: false,
             prefix_caching: true,
@@ -282,6 +290,7 @@ impl ServingConfig {
             ("swap_bytes", json::num(self.swap_bytes as f64)),
             ("store_host_bytes", json::num(self.store_host_bytes as f64)),
             ("store_disk_bytes", json::num(self.store_disk_bytes as f64)),
+            ("store_shards", json::num(self.store_shards as f64)),
             ("store_prefetch", Value::Bool(self.store_prefetch)),
             ("overlap", Value::Bool(self.overlap)),
             ("prefix_caching", Value::Bool(self.prefix_caching)),
@@ -341,6 +350,7 @@ impl ServingConfig {
             swap_bytes: n("swap_bytes", d.swap_bytes as f64)? as u64,
             store_host_bytes: n("store_host_bytes", d.store_host_bytes as f64)? as u64,
             store_disk_bytes: n("store_disk_bytes", d.store_disk_bytes as f64)? as u64,
+            store_shards: n("store_shards", d.store_shards as f64)? as usize,
             store_prefetch: b("store_prefetch", d.store_prefetch)?,
             overlap: b("overlap", d.overlap)?,
             prefix_caching: b("prefix_caching", d.prefix_caching)?,
@@ -582,6 +592,7 @@ mod tests {
         assert_eq!(s.sched_policy, SchedPolicy::Fcfs, "legacy-pinned policy by default");
         assert_eq!(s.prefill_chunk, 0, "atomic prefill by default");
         assert_eq!(s.store_host_bytes + s.store_disk_bytes, 0, "store off by default");
+        assert_eq!(s.store_shards, 0, "automatic store sharding by default");
         assert!(!s.store_prefetch);
         assert!(!s.overlap, "serial transfer charging by default");
         assert!(!s.disagg, "homogeneous replicas by default");
@@ -614,6 +625,7 @@ mod tests {
             eviction: EvictionPolicy::Swap,
             prefill_chunk: 256,
             store_host_bytes: 1 << 20,
+            store_shards: 4,
             overlap: true,
             replicas: 3,
             cluster_routing: ClusterRouting::HashPrefix,

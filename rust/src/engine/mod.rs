@@ -339,7 +339,10 @@ impl<E: Executor> Engine<E> {
             let demoted = self.kv.take_demoted();
             if self.store.is_some() {
                 for ctx in demoted {
-                    self.publish_to_store(&ctx);
+                    // Demoted contexts come back as plain vectors (the
+                    // radix tree reconstructs them block by block); wrap
+                    // without copying to reach the chain-memoized path.
+                    self.publish_to_store(&crate::tokens::TokenBuf::from_vec(ctx));
                 }
             }
         }
@@ -1068,7 +1071,7 @@ impl<E: Executor> Engine<E> {
     /// virtual time the published prefix becomes visible to probes —
     /// including the store's causality-window clamp — or `None` when
     /// nothing was published (no store, or a sub-block context).
-    fn publish_to_store(&mut self, ctx: &[u32]) -> Option<f64> {
+    fn publish_to_store(&mut self, ctx: &crate::tokens::TokenBuf) -> Option<f64> {
         let Some(h) = &self.store else { return None };
         let bt = self.cfg.block_tokens;
         let aligned = (ctx.len() / bt) * bt;

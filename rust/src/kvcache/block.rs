@@ -34,6 +34,32 @@ pub fn hash_block(parent: u64, span: &[u32]) -> u64 {
     h ^ (h >> 31)
 }
 
+/// Content-address of one stored/indexed KV block: the rolling hash
+/// chain through the block plus the token depth it ends at.  The depth
+/// disambiguates the astronomically unlikely chain-hash collision
+/// across depths; same-depth collisions cost a spurious sim hit (or a
+/// token compare, in the radix tree), never memory unsafety.  Shared
+/// by the radix prefix cache and the tiered snapshot store so a chain
+/// hashed once (see `TokenBuf::block_chain`) serves both.
+pub type BlockKey = (u64, usize);
+
+/// The rolling chain keys of every block-aligned prefix of `prompt`,
+/// ascending by depth: `[(h1, bt), (h2, 2*bt), ..]` with
+/// `h1 = hash_block(ROOT_HASH, ..)` and each later hash chained on the
+/// previous.  The trailing partial block (if any) gets no key.
+pub fn chain_keys(prompt: &[u32], block_tokens: usize) -> Vec<BlockKey> {
+    let bt = block_tokens.max(1);
+    let mut keys = Vec::with_capacity(prompt.len() / bt);
+    let mut h = ROOT_HASH;
+    let mut off = 0;
+    while off + bt <= prompt.len() {
+        h = hash_block(h, &prompt[off..off + bt]);
+        off += bt;
+        keys.push((h, off));
+    }
+    keys
+}
+
 /// Fixed-capacity block pool with refcounted blocks and a free list.
 #[derive(Debug)]
 pub struct BlockPool {

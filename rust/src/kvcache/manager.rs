@@ -216,6 +216,27 @@ impl KvCacheManager {
         self.trees[self.namespace_of(model_id)].peek(prompt)
     }
 
+    /// [`KvCacheManager::probe_cached_tokens`] over a [`TokenBuf`],
+    /// going through the buffer's memoized rolling-hash chain
+    /// ([`TokenBuf::block_chain`] + [`RadixCache::peek_with_chain`]):
+    /// the scheduler re-probes every waiting turn every step, and a
+    /// turn's prompt never changes while it waits, so each block is
+    /// hashed once for the turn's lifetime instead of once per probe.
+    ///
+    /// [`TokenBuf`]: crate::tokens::TokenBuf
+    /// [`TokenBuf::block_chain`]: crate::tokens::TokenBuf::block_chain
+    pub fn probe_cached_tokens_buf(
+        &self,
+        model_id: usize,
+        prompt: &crate::tokens::TokenBuf,
+    ) -> usize {
+        if !self.prefix_caching {
+            return 0;
+        }
+        let chain = prompt.block_chain(self.pool.block_tokens);
+        self.trees[self.namespace_of(model_id)].peek_with_chain(prompt, &chain)
+    }
+
     /// Cache snapshots the prefix trees currently keep alive (payload
     /// count across namespaces).  The executor's live-handle count must
     /// match this at end of run if the engine dropped every handle it

@@ -320,6 +320,41 @@ impl RadixCache {
         covered
     }
 
+    /// [`RadixCache::peek`] with the prompt's rolling block-hash chain
+    /// precomputed (see `TokenBuf::block_chain`): the probe walks the
+    /// child index on the memoized hashes instead of re-hashing the
+    /// whole prefix — the per-step scheduler probe of a growing context
+    /// becomes O(depth) lookups with zero hashing.  `chain[i]` must be
+    /// the chain key of `prompt[..(i + 1) * block_tokens]`; token spans
+    /// are still compared as the collision guard.
+    pub fn peek_with_chain(&self, prompt: &[u32], chain: &[(u64, usize)]) -> usize {
+        let bt = self.block_tokens;
+        if bt == 0 {
+            return 0; // nothing inserted yet
+        }
+        let mut matched = 0usize;
+        let mut covered = 0usize; // through the deepest payload
+        let mut cur = self.root;
+        for key in chain {
+            if matched + bt > prompt.len() {
+                break;
+            }
+            debug_assert_eq!(key.1, matched + bt, "chain keyed at this tree's block size");
+            let span = &prompt[matched..matched + bt];
+            let next = match self.children.get(&(cur, key.0)) {
+                Some(cands) => cands.iter().copied().find(|&c| self.nodes[c].span[..] == span[..]),
+                None => None,
+            };
+            let Some(c) = next else { break };
+            matched += bt;
+            if self.nodes[c].payload.is_some() {
+                covered = matched;
+            }
+            cur = c;
+        }
+        covered
+    }
+
     /// Live (non-dead) nodes currently carrying a payload — i.e. cache
     /// snapshots the tree is keeping alive.  With the engine dropping
     /// every snapshot it is handed back, the executor's live-handle

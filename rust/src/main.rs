@@ -12,6 +12,9 @@
 //!            the tiered KV snapshot store (one instance shared by all
 //!            replicas; 0/0 = off) and `--store-prefetch on` stages
 //!            disk-tier entries for queued turns before admission.
+//!            `--store-shards N` overrides the store's lock-stripe
+//!            count (power of two; default auto = 2× replicas) —
+//!            contention only, stats/trace are shard-count-invariant.
 //!            `--overlap on` runs modeled store/swap transfers as
 //!            tasks on a per-replica cooperative executor so they
 //!            overlap with compute instead of stalling the replica
@@ -142,6 +145,7 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         swap_bytes: a.u64("swap-mb", 4096)? << 20,
         store_host_bytes: a.u64("store-host-bytes", 0)?,
         store_disk_bytes: a.u64("store-disk-bytes", 0)?,
+        store_shards: a.usize("store-shards", 0)?,
         store_prefetch: a.get("store-prefetch").unwrap_or("off") == "on",
         overlap: a.get("overlap").unwrap_or("off") == "on",
         prefix_caching: a.get("prefix-caching").unwrap_or("on") != "off",
@@ -220,6 +224,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 ));
             }
             if let Some(store) = &out.store {
+                // A poisoned store shard means a replica panicked and
+                // the store degraded to static misses mid-run: the
+                // numbers after that point are not the configured
+                // system.  Fail cleanly instead of reporting them.
+                anyhow::ensure!(
+                    store.lock_poisoned == 0,
+                    "snapshot store degraded mid-run: a replica panicked while holding a \
+                     shard lock ({} poisoned-lock encounters); results are invalid",
+                    store.lock_poisoned
+                );
                 store_json = Some(store.to_json());
             }
             out.merged

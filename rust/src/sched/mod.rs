@@ -113,7 +113,9 @@ impl<'a> CacheProbe<'a> {
     /// have nothing to prefill from and do not count) or restore from
     /// the snapshot store, whichever covers more.
     pub fn cached_tokens(&self, turn: &PendingTurn) -> usize {
-        let local = self.kv.probe_cached_tokens(turn.model_id, &turn.prompt);
+        // Memoized-chain probe: the turn's prompt is immutable while it
+        // waits, so its block hashes are computed once, not per step.
+        let local = self.kv.probe_cached_tokens_buf(turn.model_id, &turn.prompt);
         match self.store_coverage {
             Some(memo) => {
                 let key = (turn.prompt.as_ptr() as usize, turn.prompt.len());

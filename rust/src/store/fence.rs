@@ -22,7 +22,29 @@
 //! A replica that finishes (or unwinds) parks its clock at `+inf` via
 //! [`ClockFence::finish`], so stragglers never deadlock the fence;
 //! `StoreHandle` calls it from `Drop`, which covers panics.
-
+//!
+//! # De-amortized fast path
+//!
+//! `sync` is on the store hot path — it runs before *every* store
+//! operation of every replica, including the scheduler's per-turn
+//! per-step coverage probes — and the common case by far is "nobody is
+//! behind".  Proving that used to cost a full O(replicas) scan of the
+//! clock array (R² cache-line traffic per step across the cluster).
+//! The fence now keeps a monotone **horizon hint**: a lower bound on
+//! the minimum live clock, maintained with `fetch_max`.  A sync whose
+//! horizon is at or below the hint returns after one atomic load.
+//!
+//! The hint is only advanced from a scan in which **no clock was
+//! parked at `+inf`**.  That restriction is what keeps it a valid
+//! lower bound forever: a live replica's clock only moves forward, so
+//! a min over live clocks is monotone — but a *parked* clock may later
+//! be overwritten by `sync` again (a disaggregated replica finishing
+//! its prefill phase parks, then resumes as its decode half catches
+//! up), and resuming always re-enters at a clock ≥ the one it parked
+//! from (each engine's `now` is monotone), never below any min that
+//! was computed while it was still live.  Mins computed *while* it was
+//! parked, by contrast, could exceed its resume clock — so those are
+//! never folded into the hint.
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Default causality window in virtual seconds: far below every
@@ -36,6 +58,9 @@ pub struct ClockFence {
     /// Per-replica virtual clocks, as `f64::to_bits` (monotone for the
     /// non-negative times the engine produces).
     clocks: Vec<AtomicU64>,
+    /// Monotone lower bound on the minimum live clock (`f64::to_bits`;
+    /// see the module docs) — the one-load fast path for `sync`.
+    hint: AtomicU64,
     window: f64,
 }
 
@@ -44,6 +69,7 @@ impl ClockFence {
     pub fn new(replicas: usize) -> Self {
         ClockFence {
             clocks: (0..replicas.max(1)).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+            hint: AtomicU64::new(0f64.to_bits()),
             window: DEFAULT_WINDOW,
         }
     }
@@ -61,14 +87,36 @@ impl ClockFence {
     /// progress.
     pub fn sync(&self, replica: usize, now: f64) {
         self.clocks[replica].store(now.to_bits(), Ordering::Release);
+        if self.clocks.len() == 1 {
+            return; // a lone replica fences against nobody
+        }
         let horizon = now - self.window;
+        // Fast path: the monotone hint already proves every live
+        // replica is past the horizon — one load instead of a scan.
+        if f64::from_bits(self.hint.load(Ordering::Acquire)) >= horizon {
+            return;
+        }
         let mut spins = 0u32;
         loop {
-            let min = self
-                .clocks
-                .iter()
-                .map(|c| f64::from_bits(c.load(Ordering::Acquire)))
-                .fold(f64::INFINITY, f64::min);
+            let mut min = f64::INFINITY;
+            let mut parked = false;
+            for c in &self.clocks {
+                let t = f64::from_bits(c.load(Ordering::Acquire));
+                if t.is_infinite() {
+                    parked = true;
+                } else {
+                    min = min.min(t);
+                }
+            }
+            // Advance the hint only from all-live scans (see module
+            // docs: a parked replica may resume below a min computed
+            // while it was parked, but never below an all-live min).
+            if !parked && min.is_finite() {
+                self.hint.fetch_max(min.to_bits(), Ordering::AcqRel);
+            }
+            // `min` folds live clocks only, but a parked clock is +inf
+            // and can never lower a minimum — so this is exactly the
+            // old all-clocks gate (all-parked ⇒ min = +inf ⇒ pass).
             if min >= horizon {
                 return;
             }
@@ -126,5 +174,35 @@ mod tests {
         });
         f.sync(0, 10.0); // returns only once replica 1 caught up/finished
         t.join().unwrap();
+    }
+
+    #[test]
+    fn hint_never_outruns_a_parked_resume() {
+        // The disagg park/resume pattern: replica 1 parks, replica 0
+        // runs far ahead (scans see a parked clock, so the hint must
+        // NOT advance to replica 0's level), then replica 1 resumes at
+        // a much lower clock.  A later sync by replica 0 must still
+        // wait for it — a stale-high hint would skip that wait.
+        let f = Arc::new(ClockFence::new(2));
+        f.sync(1, 1e-3); // sub-window: does not block on replica 0 at t=0
+        f.finish(1);
+        f.sync(0, 100.0); // unblocked by the park; hint must not follow
+        assert!(f64::from_bits(f.hint.load(Ordering::Acquire)) <= 1e-3);
+        let g = f.clone();
+        let t = std::thread::spawn(move || {
+            // Resume below replica 0's clock (≥ its own park point, per
+            // engine monotonicity) and walk forward to release the main
+            // thread's fence.
+            for i in 0..=20 {
+                g.sync(1, 90.0 + f64::from(i));
+            }
+            g.finish(1);
+        });
+        // Must block until replica 1 passes 100 - window, not return on
+        // a stale hint.
+        f.sync(0, 100.0 + f64::from(1u8));
+        t.join().unwrap();
+        let hint = f64::from_bits(f.hint.load(Ordering::Acquire));
+        assert!(hint.is_finite(), "hint never becomes +inf");
     }
 }

@@ -47,6 +47,8 @@ mod tiered;
 pub use fence::{ClockFence, DEFAULT_WINDOW};
 pub use tiered::{StoreHandle, StorePrefetch, TieredStore};
 
+pub use crate::kvcache::block::{chain_keys, BlockKey};
+
 use crate::json::{self, Value};
 
 /// Which storage tier an entry currently occupies (and therefore which
@@ -222,6 +224,12 @@ pub struct StoreStats {
     pub handoff_pins: u64,
     /// Blocks currently carrying at least one handoff pin (gauge).
     pub pinned_blocks: usize,
+    /// Shard-lock acquisitions that found the lock poisoned by a
+    /// panicking replica.  Non-zero means the store degraded to a
+    /// static miss-everything state mid-run (see [`TieredStore`]); the
+    /// CLI fails the run with a clean error instead of letting the
+    /// panic cascade across replicas.
+    pub lock_poisoned: u64,
 }
 
 impl StoreStats {
@@ -248,6 +256,7 @@ impl StoreStats {
             ("prefetches", num(self.prefetches as f64)),
             ("handoff_pins", num(self.handoff_pins as f64)),
             ("pinned_blocks", num(self.pinned_blocks as f64)),
+            ("lock_poisoned", num(self.lock_poisoned as f64)),
         ])
     }
 }
@@ -256,15 +265,66 @@ impl StoreStats {
 /// snapshot entries behind tiered byte budgets (see the module docs;
 /// [`TieredStore`] is the shipped implementation).
 ///
+/// The core methods are **chain-based**: they take the prompt's rolling
+/// block-hash chain ([`BlockKey`]s, ascending depth — see
+/// [`chain_keys`] and the memoized `TokenBuf::block_chain`) instead of
+/// raw tokens, so a hot path that probes the same growing context every
+/// step hashes each block once for its lifetime, and a sharded store
+/// can group a whole chain's keys and acquire each shard **once per
+/// chain** instead of once per block.  Token-slice wrappers (`peek`,
+/// `publish`, ...) are provided for callers without a memoized chain
+/// (tests, one-shot tools).
+///
 /// Every method takes the caller's virtual `now`; see the module docs
 /// for the background-transfer timing model.  `Send + Sync` because one
 /// instance is shared across cluster replica threads.
 pub trait SnapshotStore: Send + Sync {
+    /// Tokens per stored block — the block size chains passed to the
+    /// `_chain` methods must be keyed at (the wrappers use it to hash).
+    fn block_tokens(&self) -> usize;
+
+    /// Chain-based [`SnapshotStore::peek`]: side-effect-free coverage
+    /// probe over a precomputed chain.  Takes **no exclusive lock** —
+    /// concurrent probes never serialize against each other.
+    fn peek_chain(&self, chain: &[BlockKey], now: f64) -> usize;
+
+    /// Chain-based [`SnapshotStore::begin_restore`].
+    fn restore_chain(
+        &self,
+        chain: &[BlockKey],
+        min_tokens: usize,
+        now: f64,
+        replica: usize,
+    ) -> Option<StoreHit>;
+
+    /// Chain-based [`SnapshotStore::publish`].
+    fn publish_chain(&self, chain: &[BlockKey], now: f64, visible_at: f64, replica: usize);
+
+    /// Chain-based [`SnapshotStore::prefetch_candidate`] (read-only,
+    /// like [`SnapshotStore::peek_chain`]).
+    fn prefetch_candidate_chain(&self, chain: &[BlockKey], now: f64) -> Option<StorePrefetch>;
+
+    /// Chain-based [`SnapshotStore::stage`].
+    fn stage_chain(&self, chain: &[BlockKey], now: f64, price: &dyn Fn(u64) -> f64) -> bool;
+
+    /// Chain-based [`SnapshotStore::pin`] (default no-op for stores
+    /// without eviction).
+    fn pin_chain(&self, chain: &[BlockKey]) {
+        let _ = chain;
+    }
+
+    /// Chain-based [`SnapshotStore::unpin`] (default no-op).
+    fn unpin_chain(&self, chain: &[BlockKey]) {
+        let _ = chain;
+    }
+
     /// Side-effect-free coverage probe: block-aligned prompt tokens a
     /// restore could serve right now (no LRU touch — schedulers may
     /// probe every waiting turn every step, mirroring
     /// `RadixCache::peek`).
-    fn peek(&self, prompt: &[u32], now: f64) -> usize;
+    fn peek(&self, prompt: &[u32], now: f64) -> usize {
+        self.peek_chain(&chain_keys(prompt, self.block_tokens()), now)
+    }
 
     /// Find the longest visible stored block prefix of `prompt`
     /// covering strictly more than `min_tokens` (the caller's local
@@ -280,7 +340,9 @@ pub trait SnapshotStore: Send + Sync {
         min_tokens: usize,
         now: f64,
         replica: usize,
-    ) -> Option<StoreHit>;
+    ) -> Option<StoreHit> {
+        self.restore_chain(&chain_keys(prompt, self.block_tokens()), min_tokens, now, replica)
+    }
 
     /// Publish a completed context into the store (write-back), one
     /// content-addressed entry per block.  The transfer runs in the
@@ -291,13 +353,17 @@ pub trait SnapshotStore: Send + Sync {
     /// hold is truncated rather than allowed to evict its own shallower
     /// blocks — the stored prefix stays probe-reachable instead of
     /// degenerating to unreachable tail blocks.
-    fn publish(&self, ctx: &[u32], now: f64, visible_at: f64, replica: usize);
+    fn publish(&self, ctx: &[u32], now: f64, visible_at: f64, replica: usize) {
+        self.publish_chain(&chain_keys(ctx, self.block_tokens()), now, visible_at, replica);
+    }
 
     /// Disk-resident, unstaged blocks inside `prompt`'s stored prefix,
     /// if any — what a prefetch would stage.  Side-effect-free
     /// (diagnostics and tests; [`SnapshotStore::stage`] is
     /// self-contained and does not need a prior candidate probe).
-    fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch>;
+    fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch> {
+        self.prefetch_candidate_chain(&chain_keys(prompt, self.block_tokens()), now)
+    }
 
     /// Begin staging `prompt`'s disk-resident, unstaged stored blocks
     /// into host memory.  The bytes to move and the completion time —
@@ -309,7 +375,9 @@ pub trait SnapshotStore: Send + Sync {
     /// consumed by that restore, not a third tier); the transfer runs
     /// in the background and consumes no engine time.  Returns false
     /// when there was nothing (new) to stage.
-    fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool;
+    fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+        self.stage_chain(&chain_keys(prompt, self.block_tokens()), now, price)
+    }
 
     /// Pin `ctx`'s stored block chain against demotion and drop — the
     /// disaggregated handoff guarantee: a prefix published by a prefill
@@ -317,17 +385,16 @@ pub trait SnapshotStore: Send + Sync {
     /// to) when the owning decode replica consumes it, no matter what
     /// pressure other publishes apply in between.  Pins are counted, so
     /// overlapping handoffs sharing prefix blocks nest; blocks absent
-    /// from the store (truncated publish) are skipped.  The default
-    /// implementation is a no-op for stores without eviction.
+    /// from the store (truncated publish) are skipped.
     fn pin(&self, ctx: &[u32]) {
-        let _ = ctx;
+        self.pin_chain(&chain_keys(ctx, self.block_tokens()));
     }
 
     /// Release one pin on each block of `ctx`'s stored chain (the
     /// decode-side consume).  Saturating: blocks that were dropped
     /// before ever being pinned, or never pinned, are skipped.
     fn unpin(&self, ctx: &[u32]) {
-        let _ = ctx;
+        self.unpin_chain(&chain_keys(ctx, self.block_tokens()));
     }
 
     /// Snapshot of the aggregate store counters.

@@ -1,6 +1,10 @@
 //! The shipped [`SnapshotStore`]: bounded host + disk tiers over
 //! content-addressed **block** entries, with LRU demotion (host → disk
-//! → drop), background write-back visibility and prefetch staging.
+//! → drop), background write-back visibility, prefetch staging — and
+//! **lock striping**: entries live in N shards keyed by the rolling
+//! block hash (`shard = hash & (N-1)`), so store traffic from
+//! different replicas only serializes when it actually touches the
+//! same shards.
 //!
 //! Granularity: one entry per KV block, keyed by the rolling
 //! block-hash chain — the same keying the radix prefix cache uses for
@@ -21,21 +25,63 @@
 //! hole) until LRU ages them out or a republish of the context
 //! reinserts the missing prefix — wasted budget at worst, never a
 //! wrong hit.
+//!
+//! # Sharding and determinism
+//!
+//! The shard count is an implementation knob, **never** a semantic
+//! one: stats and traces are bit-identical for every shard count
+//! (pinned by `prop_store_shards_bit_identical`).  That holds because
+//! everything order-bearing is global, not per-shard:
+//!
+//!   * **LRU ticks** come from one atomic counter, so recency is a
+//!     single total order no matter which shard an entry lives in;
+//!     eviction scans take the *globally* least-recent unpinned entry
+//!     (the minimum over each locked shard's per-tier LRU head —
+//!     identical to the unsharded scan, since every entry older than a
+//!     shard's first unpinned entry is pinned).
+//!   * **Tier budgets** are global atomics with reserve-then-commit
+//!     discipline: a reservation is made with a CAS (never
+//!     over-admitting past capacity), and commits under the shard lock
+//!     that also guards the entry, so a successful reservation always
+//!     materializes; failure paths (truncation) occur strictly before
+//!     a successful reserve, so no reservation dangles.
+//!   * **Lock order** is ascending shard index, always — probes and
+//!     chain ops lock only the chain's shards; eviction pressure
+//!     upgrades to all shards (releasing the chain locks first), so
+//!     two publishes can never deadlock.
+//!
+//! Read-only probes ([`SnapshotStore::peek_chain`],
+//! [`SnapshotStore::prefetch_candidate_chain`]) take shard **read**
+//! locks only, so scheduler coverage probes — issued for every waiting
+//! turn, every step, on every replica — never serialize against each
+//! other, only against writers of the same shards.
+//!
+//! # Poison recovery
+//!
+//! A replica that panics while holding a shard lock poisons it.
+//! Instead of propagating the panic into every other replica (a
+//! cascade that used to take the whole cluster down with one bug), the
+//! store flips into a degraded static state: every later operation is
+//! a miss/no-op, the `lock_poisoned` stat counts the encounters, and
+//! the CLI fails the run with a clean error.  The panicking replica
+//! itself still surfaces once through the cluster's thread join.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
-use crate::kvcache::block::{hash_block, ROOT_HASH};
+use crate::kvcache::block::BlockKey;
+use crate::tokens::TokenBuf;
 
 use super::fence::{ClockFence, DEFAULT_WINDOW};
-use super::{SnapshotStore, StoreHit, StoreStats, StoreTier, TierBudget};
+use super::{chain_keys, SnapshotStore, StoreHit, StoreStats, StoreTier, TierAccountingError};
 
-/// Block-entry key: the rolling hash chain through this block plus the
-/// token depth it ends at (the depth disambiguates the astronomically
-/// unlikely chain-hash collision across depths; same-depth collisions
-/// cost a spurious sim hit, never memory unsafety — README
-/// §Substitutions notes the approximation).
-type Key = (u64, usize);
+/// Block-entry key (see [`BlockKey`]): the rolling hash chain through
+/// this block plus the token depth it ends at (the depth disambiguates
+/// the astronomically unlikely chain-hash collision across depths;
+/// same-depth collisions cost a spurious sim hit, never memory
+/// unsafety — README §Substitutions notes the approximation).
+type Key = BlockKey;
 
 #[derive(Debug)]
 struct Entry {
@@ -48,7 +94,7 @@ struct Entry {
     /// Virtual time a prefetch finishes staging this (disk) block into
     /// host memory; `+inf` when never staged.
     staged_at: f64,
-    /// LRU tick (strictly increasing across all touches).
+    /// LRU tick (strictly increasing across all touches, globally).
     tick: u64,
     /// Outstanding handoff pins (see [`SnapshotStore::pin`]): while
     /// non-zero the block is skipped by every eviction scan — neither
@@ -57,18 +103,14 @@ struct Entry {
     pins: u32,
 }
 
-#[derive(Debug)]
-struct Inner {
+/// One lock-striped partition of the store: the entries whose chain
+/// hash lands in this shard, plus per-tier LRU indexes over them
+/// (tick → key; ticks are globally unique, so each BTreeMap is a total
+/// recency order within its shard × tier).
+#[derive(Debug, Default)]
+struct Shard {
     entries: HashMap<Key, Entry>,
-    /// Per-tier LRU indexes: tick -> key (ticks are unique, so each is
-    /// a total recency order within its tier).  Split per tier so
-    /// demotion cascades find a tier's LRU entry in O(log n) instead
-    /// of scanning a global order past the other tier's entries.
     lru: [BTreeMap<u64, Key>; 2],
-    host: TierBudget,
-    disk: TierBudget,
-    next_tick: u64,
-    stats: StoreStats,
 }
 
 fn tier_idx(tier: StoreTier) -> usize {
@@ -78,80 +120,102 @@ fn tier_idx(tier: StoreTier) -> usize {
     }
 }
 
-impl Inner {
-    fn touch(&mut self, key: Key) {
-        let tick = self.next_tick;
-        self.next_tick += 1;
-        if let Some(e) = self.entries.get_mut(&key) {
-            self.lru[tier_idx(e.tier)].remove(&e.tick);
-            e.tick = tick;
-            self.lru[tier_idx(e.tier)].insert(tick, key);
-        }
+/// Global tier byte budget behind an atomic: `reserve` is a CAS that
+/// refuses to pass `capacity` (soft failure — the caller demotes,
+/// drops or truncates), `release` a checked decrement whose underflow
+/// is the same hard error [`super::TierBudget`] reports (a caller
+/// bug, never absorbed silently).
+#[derive(Debug)]
+struct AtomicBudget {
+    capacity: u64,
+    used: AtomicU64,
+}
+
+impl AtomicBudget {
+    fn new(capacity: u64) -> Self {
+        AtomicBudget { capacity, used: AtomicU64::new(0) }
     }
 
-    /// Least-recently-used *unpinned* key currently in `tier`.
-    /// Handoff-pinned blocks are immovable until consumed, so eviction
-    /// scans past them in recency order (O(pinned) extra per scan, and
-    /// pins are transient); `None` when every resident block is pinned.
-    fn lru_victim(&self, tier: StoreTier) -> Option<Key> {
-        self.lru[tier_idx(tier)].values().find(|k| self.entries[*k].pins == 0).copied()
+    fn used(&self) -> u64 {
+        self.used.load(Ordering::SeqCst)
     }
 
-    fn drop_entry(&mut self, key: Key, block_bytes: u64) {
-        let e = self.entries.remove(&key).expect("dropping a present entry");
-        self.lru[tier_idx(e.tier)].remove(&e.tick);
-        match e.tier {
-            StoreTier::Host => self.host.release(block_bytes),
-            StoreTier::Disk => self.disk.release(block_bytes),
-        }
-        .expect("tier accounting");
-        self.stats.dropped_entries += 1;
-        self.stats.bytes_dropped += block_bytes;
+    /// Reserve `bytes` unless that would exceed capacity.  Lock-free:
+    /// concurrent reservations in different shards proceed in
+    /// parallel; the CAS guarantees the sum never over-admits.
+    fn reserve(&self, bytes: u64) -> bool {
+        self.used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |u| {
+                let next = u.checked_add(bytes)?;
+                (next <= self.capacity).then_some(next)
+            })
+            .is_ok()
     }
 
-    /// Demote the host-LRU block one tier down: into disk when disk
-    /// has capacity for a block (dropping disk-LRU blocks as needed),
-    /// off the pipeline's far end otherwise.  Returns false — making
-    /// no change — when the host tier is empty, or when making room
-    /// would *drop* a block in `protected` (prefix-first admission: a
-    /// publish must never destroy its own already-placed prefix; see
-    /// [`SnapshotStore::publish`]).  Demoting a protected block to
-    /// disk is fine — the chain stays contiguous across tiers.
-    fn demote_host_lru(&mut self, block_bytes: u64, protected: &HashSet<Key>) -> bool {
-        let Some(key) = self.lru_victim(StoreTier::Host) else {
-            return false;
-        };
-        if block_bytes <= self.disk.capacity() {
-            // Pre-check the disk victims before touching any budget so
-            // a protected victim aborts with no partial state.
-            while self.disk.free() < block_bytes {
-                let Some(victim) = self.lru_victim(StoreTier::Disk) else {
-                    return false; // every disk block is pinned
-                };
-                if protected.contains(&victim) {
-                    return false;
-                }
-                self.drop_entry(victim, block_bytes);
-            }
-            self.host.release(block_bytes).expect("tier accounting");
-            assert!(self.disk.reserve(block_bytes), "free space was checked");
-            let e = self.entries.get_mut(&key).expect("demoting a present entry");
-            e.tier = StoreTier::Disk;
-            // The host copy is gone; any prefetch staging with it.
-            e.staged_at = f64::INFINITY;
-            let tick = e.tick;
-            self.lru[tier_idx(StoreTier::Host)].remove(&tick);
-            self.lru[tier_idx(StoreTier::Disk)].insert(tick, key);
-            self.stats.demotions_to_disk += 1;
-        } else {
-            if protected.contains(&key) {
-                return false;
-            }
-            self.drop_entry(key, block_bytes);
-        }
-        true
+    /// Release `bytes`; underflow is a hard error and leaves occupancy
+    /// untouched (see [`TierAccountingError`]).
+    fn release(&self, bytes: u64) -> Result<(), TierAccountingError> {
+        self.used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |u| u.checked_sub(bytes))
+            .map(|_| ())
+            .map_err(|used| TierAccountingError { released: bytes, used })
     }
 }
+
+/// Monotone event counters + gauges behind atomics, so [`stats`]
+/// snapshots — and every counted event — are lock-free.
+///
+/// [`stats`]: SnapshotStore::stats
+#[derive(Debug, Default)]
+struct Counters {
+    entries: AtomicU64,
+    publishes: AtomicU64,
+    dedup_publishes: AtomicU64,
+    publish_rejected: AtomicU64,
+    bytes_published: AtomicU64,
+    bytes_dropped: AtomicU64,
+    demotions_to_disk: AtomicU64,
+    dropped_entries: AtomicU64,
+    host_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    remote_hits: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetches: AtomicU64,
+    handoff_pins: AtomicU64,
+    pinned_blocks: AtomicU64,
+    lock_poisoned: AtomicU64,
+}
+
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Shard guards held for one store operation, indexed by shard id
+/// (`None` for shards the operation does not touch).  Built in
+/// ascending shard order, always — the store's whole deadlock-freedom
+/// argument.
+struct Guards<G> {
+    g: Vec<Option<G>>,
+}
+
+impl<G: std::ops::Deref<Target = Shard>> Guards<G> {
+    fn shard(&self, idx: usize) -> &Shard {
+        self.g[idx].as_deref().expect("operation locked this shard")
+    }
+
+    fn all(&self) -> bool {
+        self.g.iter().all(Option::is_some)
+    }
+}
+
+impl<G: std::ops::DerefMut<Target = Shard>> Guards<G> {
+    fn shard_mut(&mut self, idx: usize) -> &mut Shard {
+        self.g[idx].as_deref_mut().expect("operation locked this shard")
+    }
+}
+
+type ReadGuards<'a> = Guards<RwLockReadGuard<'a, Shard>>;
+type WriteGuards<'a> = Guards<RwLockWriteGuard<'a, Shard>>;
 
 /// A prefetchable span: disk-resident, unstaged blocks inside a
 /// prompt's stored prefix (see [`SnapshotStore::prefetch_candidate`]).
@@ -163,12 +227,27 @@ pub struct StorePrefetch {
     pub bytes: u64,
 }
 
-/// Content-addressed host + disk block store (see the `store` module
-/// docs for the architecture and timing model).  One instance is
-/// shared, behind an `Arc`, by every engine replica of a cluster.
+/// Content-addressed host + disk block store, lock-striped into
+/// power-of-two shards (see the module docs for the architecture,
+/// timing model and determinism argument).  One instance is shared,
+/// behind an `Arc`, by every engine replica of a cluster.
 #[derive(Debug)]
 pub struct TieredStore {
-    inner: Mutex<Inner>,
+    /// Lock-striped partitions; `shard_of(key) = key.0 & mask`.
+    shards: Box<[RwLock<Shard>]>,
+    /// `shards.len() - 1` (shard counts are powers of two).
+    mask: u64,
+    /// Global host-tier budget (atomic: reservations from different
+    /// shards never serialize).
+    host: AtomicBudget,
+    /// Global disk-tier budget.
+    disk: AtomicBudget,
+    /// Global LRU tick source — one total recency order across shards.
+    next_tick: AtomicU64,
+    c: Counters,
+    /// Set once a poisoned shard lock is seen; all later operations
+    /// degrade to miss/no-op (see the module docs).
+    dead: AtomicBool,
     block_tokens: usize,
     /// Bytes one stored block holds (block_tokens * kv_bytes_per_token).
     block_bytes: u64,
@@ -177,34 +256,64 @@ pub struct TieredStore {
     window: f64,
 }
 
+/// Hard ceiling on the shard count: the shard set must fit a `u64`
+/// lock-acquisition bitmask, and 64 stripes is already far past the
+/// point of diminishing returns for any plausible replica count.
+pub const MAX_SHARDS: usize = 64;
+
 impl TieredStore {
-    /// Store with `host_bytes` + `disk_bytes` budgets, pricing blocks
-    /// of `block_tokens` tokens at `kv_bytes_per_token`.
+    /// Unsharded store (`shards = 1`) with `host_bytes` + `disk_bytes`
+    /// budgets, pricing blocks of `block_tokens` tokens at
+    /// `kv_bytes_per_token` — the exact pre-sharding layout (pinned by
+    /// `prop_store_shards_bit_identical`).
     pub fn new(
         host_bytes: u64,
         disk_bytes: u64,
         block_tokens: usize,
         kv_bytes_per_token: u64,
     ) -> Self {
-        let stats = StoreStats {
-            host_capacity: host_bytes,
-            disk_capacity: disk_bytes,
-            ..Default::default()
-        };
+        Self::with_shards(host_bytes, disk_bytes, block_tokens, kv_bytes_per_token, 1)
+    }
+
+    /// Store striped into `shards` partitions (rounded up to a power
+    /// of two, clamped to `1..=`[`MAX_SHARDS`]).  Stats and traces are
+    /// bit-identical for every value; the knob only moves lock
+    /// contention (`--store-shards` on the CLI,
+    /// `benches/store_contention.rs` for the scaling curve).
+    pub fn with_shards(
+        host_bytes: u64,
+        disk_bytes: u64,
+        block_tokens: usize,
+        kv_bytes_per_token: u64,
+        shards: usize,
+    ) -> Self {
+        let n = shards.clamp(1, MAX_SHARDS).next_power_of_two().min(MAX_SHARDS);
         let block_tokens = block_tokens.max(1);
         TieredStore {
-            inner: Mutex::new(Inner {
-                entries: HashMap::new(),
-                lru: [BTreeMap::new(), BTreeMap::new()],
-                host: TierBudget::new(host_bytes),
-                disk: TierBudget::new(disk_bytes),
-                next_tick: 0,
-                stats,
-            }),
+            shards: (0..n).map(|_| RwLock::new(Shard::default())).collect(),
+            mask: (n - 1) as u64,
+            host: AtomicBudget::new(host_bytes),
+            disk: AtomicBudget::new(disk_bytes),
+            next_tick: AtomicU64::new(0),
+            c: Counters::default(),
+            dead: AtomicBool::new(false),
             block_tokens,
             block_bytes: block_tokens as u64 * kv_bytes_per_token,
             window: DEFAULT_WINDOW,
         }
+    }
+
+    /// The default shard count for a cluster of `replicas` consumers:
+    /// the next power of two ≥ 2× the replica count (two stripes per
+    /// consumer keeps the expected collision rate of independent
+    /// chains low), clamped to [`MAX_SHARDS`].
+    pub fn auto_shards(replicas: usize) -> usize {
+        (replicas.max(1) * 2).next_power_of_two().min(MAX_SHARDS)
+    }
+
+    /// Number of lock-striped shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
     }
 
     /// Bytes one stored block costs.
@@ -212,52 +321,218 @@ impl TieredStore {
         self.block_bytes
     }
 
-    /// The rolling chain keys of every block-aligned prefix of
-    /// `prompt`, ascending by depth.
-    fn chain_keys(&self, prompt: &[u32]) -> Vec<Key> {
-        let bt = self.block_tokens;
-        let mut keys = Vec::with_capacity(prompt.len() / bt);
-        let mut h = ROOT_HASH;
-        let mut off = 0;
-        while off + bt <= prompt.len() {
-            h = hash_block(h, &prompt[off..off + bt]);
-            off += bt;
-            keys.push((h, off));
-        }
-        keys
+    fn shard_of(&self, key: Key) -> usize {
+        (key.0 & self.mask) as usize
     }
 
-    /// Longest contiguous visible block prefix of `keys`: the count of
-    /// leading keys whose entries are present and past write-back.
-    fn covered(inner: &Inner, keys: &[Key], now: f64) -> usize {
-        keys.iter()
-            .take_while(|&k| inner.entries.get(k).is_some_and(|e| now >= e.visible_at))
+    /// Bit i set ⇔ shard i holds at least one of `chain`'s keys.
+    fn chain_mask(&self, chain: &[Key]) -> u64 {
+        chain.iter().fold(0u64, |m, k| m | 1u64 << self.shard_of(*k))
+    }
+
+    fn all_mask(&self) -> u64 {
+        if self.shards.len() == MAX_SHARDS {
+            u64::MAX
+        } else {
+            (1u64 << self.shards.len()) - 1
+        }
+    }
+
+    fn poisoned(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    fn mark_poisoned(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        bump(&self.c.lock_poisoned);
+    }
+
+    /// Write-lock the shards in `mask`, ascending.  `None` (after
+    /// flipping the store dead) when any lock is poisoned.
+    fn write_shards(&self, mask: u64) -> Option<WriteGuards<'_>> {
+        let mut g = Vec::with_capacity(self.shards.len());
+        for (i, s) in self.shards.iter().enumerate() {
+            if mask >> i & 1 == 1 {
+                match s.write() {
+                    Ok(guard) => g.push(Some(guard)),
+                    Err(_) => {
+                        self.mark_poisoned();
+                        return None;
+                    }
+                }
+            } else {
+                g.push(None);
+            }
+        }
+        Some(Guards { g })
+    }
+
+    /// Read-lock the shards in `mask`, ascending (probes: readers
+    /// never serialize against each other).
+    fn read_shards(&self, mask: u64) -> Option<ReadGuards<'_>> {
+        let mut g = Vec::with_capacity(self.shards.len());
+        for (i, s) in self.shards.iter().enumerate() {
+            if mask >> i & 1 == 1 {
+                match s.read() {
+                    Ok(guard) => g.push(Some(guard)),
+                    Err(_) => {
+                        self.mark_poisoned();
+                        return None;
+                    }
+                }
+            } else {
+                g.push(None);
+            }
+        }
+        Some(Guards { g })
+    }
+
+    /// Longest contiguous visible block prefix of `chain`: the count
+    /// of leading keys whose entries are present and past write-back.
+    fn covered<G: std::ops::Deref<Target = Shard>>(
+        &self,
+        lk: &Guards<G>,
+        chain: &[Key],
+        now: f64,
+    ) -> usize {
+        chain
+            .iter()
+            .take_while(|k| {
+                lk.shard(self.shard_of(**k)).entries.get(k).is_some_and(|e| now >= e.visible_at)
+            })
             .count()
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().expect("store lock poisoned (a replica panicked)")
+    /// Re-tick `key` to most-recent (no-op when absent — the global
+    /// tick is still consumed, exactly like the unsharded layout, so
+    /// tick streams stay comparable across shard counts).
+    fn touch(&self, lk: &mut WriteGuards<'_>, key: Key) {
+        let tick = self.next_tick.fetch_add(1, Ordering::Relaxed);
+        let shard = lk.shard_mut(self.shard_of(key));
+        if let Some(e) = shard.entries.get_mut(&key) {
+            shard.lru[tier_idx(e.tier)].remove(&e.tick);
+            e.tick = tick;
+            shard.lru[tier_idx(e.tier)].insert(tick, key);
+        }
+    }
+
+    /// Globally least-recently-used *unpinned* key currently in
+    /// `tier`.  Requires **all** shards locked: the global minimum is
+    /// the min over each shard's first unpinned entry (every entry
+    /// globally older than the winner is pinned — otherwise it would
+    /// be its own shard's earlier first-unpinned — so this equals the
+    /// unsharded scan).  Handoff-pinned blocks are immovable until
+    /// consumed; `None` when every resident block is pinned.
+    fn lru_victim(&self, lk: &WriteGuards<'_>, tier: StoreTier) -> Option<Key> {
+        debug_assert!(lk.all(), "global LRU scan requires every shard locked");
+        let mut best: Option<(u64, Key)> = None;
+        for g in &lk.g {
+            let shard = g.as_deref().expect("all shards locked");
+            if let Some(key) =
+                shard.lru[tier_idx(tier)].values().find(|k| shard.entries[*k].pins == 0).copied()
+            {
+                let tick = shard.entries[&key].tick;
+                let better = match best {
+                    None => true,
+                    Some((t, _)) => tick < t,
+                };
+                if better {
+                    best = Some((tick, key));
+                }
+            }
+        }
+        best.map(|(_, k)| k)
+    }
+
+    fn drop_entry(&self, lk: &mut WriteGuards<'_>, key: Key) {
+        let shard = lk.shard_mut(self.shard_of(key));
+        let e = shard.entries.remove(&key).expect("dropping a present entry");
+        shard.lru[tier_idx(e.tier)].remove(&e.tick);
+        match e.tier {
+            StoreTier::Host => self.host.release(self.block_bytes),
+            StoreTier::Disk => self.disk.release(self.block_bytes),
+        }
+        .expect("tier accounting");
+        self.c.entries.fetch_sub(1, Ordering::Relaxed);
+        bump(&self.c.dropped_entries);
+        self.c.bytes_dropped.fetch_add(self.block_bytes, Ordering::Relaxed);
+    }
+
+    /// Demote the global host-LRU block one tier down: into disk when
+    /// disk has capacity for a block (dropping disk-LRU blocks as
+    /// needed), off the pipeline's far end otherwise.  Returns false —
+    /// reserving nothing further — when the host tier is empty, or
+    /// when making room would *drop* a block in `protected`
+    /// (prefix-first admission: a publish must never destroy its own
+    /// already-placed prefix; see [`SnapshotStore::publish`]).
+    /// Demoting a protected block to disk is fine — the chain stays
+    /// contiguous across tiers.  Requires all shards locked (global
+    /// LRU); aborts happen strictly before a successful disk reserve,
+    /// so no reservation is ever left dangling.
+    fn demote_host_lru(&self, lk: &mut WriteGuards<'_>, protected: &HashSet<Key>) -> bool {
+        let Some(key) = self.lru_victim(lk, StoreTier::Host) else {
+            return false;
+        };
+        if self.block_bytes <= self.disk.capacity {
+            while !self.disk.reserve(self.block_bytes) {
+                let Some(victim) = self.lru_victim(lk, StoreTier::Disk) else {
+                    return false; // every disk block is pinned
+                };
+                if protected.contains(&victim) {
+                    return false;
+                }
+                self.drop_entry(lk, victim);
+            }
+            // Commit: the disk reservation is held, move the entry.
+            self.host.release(self.block_bytes).expect("tier accounting");
+            let shard = lk.shard_mut(self.shard_of(key));
+            let e = shard.entries.get_mut(&key).expect("demoting a present entry");
+            e.tier = StoreTier::Disk;
+            // The host copy is gone; any prefetch staging with it.
+            e.staged_at = f64::INFINITY;
+            let tick = e.tick;
+            shard.lru[tier_idx(StoreTier::Host)].remove(&tick);
+            shard.lru[tier_idx(StoreTier::Disk)].insert(tick, key);
+            bump(&self.c.demotions_to_disk);
+        } else {
+            if protected.contains(&key) {
+                return false;
+            }
+            self.drop_entry(lk, key);
+        }
+        true
     }
 }
 
 impl SnapshotStore for TieredStore {
-    fn peek(&self, prompt: &[u32], now: f64) -> usize {
-        let keys = self.chain_keys(prompt);
-        let inner = self.lock();
-        Self::covered(&inner, &keys, now) * self.block_tokens
+    fn block_tokens(&self) -> usize {
+        self.block_tokens
     }
 
-    fn begin_restore(
+    fn peek_chain(&self, chain: &[Key], now: f64) -> usize {
+        if self.poisoned() {
+            return 0;
+        }
+        let Some(lk) = self.read_shards(self.chain_mask(chain)) else {
+            return 0;
+        };
+        self.covered(&lk, chain, now) * self.block_tokens
+    }
+
+    fn restore_chain(
         &self,
-        prompt: &[u32],
+        chain: &[Key],
         min_tokens: usize,
         now: f64,
         replica: usize,
     ) -> Option<StoreHit> {
-        let keys = self.chain_keys(prompt);
-        let mut inner = self.lock();
-        let inner = &mut *inner;
-        let blocks = Self::covered(inner, &keys, now);
+        if self.poisoned() {
+            return None;
+        }
+        let Some(mut lk) = self.write_shards(self.chain_mask(chain)) else {
+            return None;
+        };
+        let blocks = self.covered(&lk, chain, now);
         let tokens = blocks * self.block_tokens;
         if tokens <= min_tokens {
             return None;
@@ -269,8 +544,12 @@ impl SnapshotStore for TieredStore {
         let mut host_bytes = 0;
         let mut disk_bytes = 0;
         let mut remote = false;
-        for k in &keys[first..blocks] {
-            let e = inner.entries.get_mut(k).expect("covered block is present");
+        for k in &chain[first..blocks] {
+            let e = lk
+                .shard_mut(self.shard_of(*k))
+                .entries
+                .get_mut(k)
+                .expect("covered block is present");
             match e.tier {
                 StoreTier::Host => host_bytes += self.block_bytes,
                 StoreTier::Disk if e.staged_at <= now => {
@@ -279,7 +558,7 @@ impl SnapshotStore for TieredStore {
                     // the next one pays NVMe again unless re-prefetched
                     // (staging scratch is transient, not a third tier).
                     e.staged_at = f64::INFINITY;
-                    inner.stats.prefetch_hits += 1;
+                    bump(&self.c.prefetch_hits);
                 }
                 StoreTier::Disk => disk_bytes += self.block_bytes,
             }
@@ -290,28 +569,35 @@ impl SnapshotStore for TieredStore {
         // Touch the whole matched chain, deepest block first, so the
         // root stays the most recent and LRU eviction peels chain
         // tails instead of punching holes.
-        for &k in keys[..blocks].iter().rev() {
-            inner.touch(k);
+        for &k in chain[..blocks].iter().rev() {
+            self.touch(&mut lk, k);
         }
         if disk_bytes > 0 {
-            inner.stats.disk_hits += 1;
+            bump(&self.c.disk_hits);
         } else {
-            inner.stats.host_hits += 1;
+            bump(&self.c.host_hits);
         }
         if remote {
-            inner.stats.remote_hits += 1;
+            bump(&self.c.remote_hits);
         }
         Some(StoreHit { tokens, host_bytes, disk_bytes, remote })
     }
 
-    fn publish(&self, ctx: &[u32], now: f64, visible_at: f64, replica: usize) {
-        let keys = self.chain_keys(ctx);
-        if keys.is_empty() {
+    fn publish_chain(&self, chain: &[Key], now: f64, visible_at: f64, replica: usize) {
+        if chain.is_empty() || self.poisoned() {
             return;
         }
         let visible_at = visible_at.max(now + self.window);
-        let mut inner = self.lock();
-        let inner = &mut *inner;
+        // Fast path: lock only the chain's own shards.  Budget
+        // reservations are atomic, so as long as the tiers have room
+        // no other shard is ever involved; only eviction pressure
+        // (reserve failure) upgrades to the all-shards slow path,
+        // because victim selection is global.
+        let chain_mask = self.chain_mask(chain);
+        let Some(mut lk) = self.write_shards(chain_mask) else {
+            return;
+        };
+        let mut have_all = chain_mask == self.all_mask();
         let mut inserted = 0u64;
         let mut rejected = false;
         // Blocks of THIS chain already resident (deduped or just
@@ -322,50 +608,86 @@ impl SnapshotStore for TieredStore {
         // Prefix-first admission truncates the chain instead: the
         // placed prefix stays usable.
         let mut placed: HashSet<Key> = HashSet::new();
-        for &key in &keys {
-            if let Some(e) = inner.entries.get_mut(&key) {
+        let mut idx = 0;
+        'place: while idx < chain.len() {
+            let key = chain[idx];
+            let sid = self.shard_of(key);
+            if let Some(e) = lk.shard_mut(sid).entries.get_mut(&key) {
                 // Shared-prefix block already stored (possibly by
                 // another model/workflow/replica): one copy, refreshed.
                 e.visible_at = e.visible_at.min(visible_at);
                 placed.insert(key);
+                idx += 1;
                 continue;
             }
-            let tier = if self.block_bytes <= inner.host.capacity() {
-                let mut truncated = false;
-                while !inner.host.reserve(self.block_bytes) {
-                    if !inner.demote_host_lru(self.block_bytes, &placed) {
-                        truncated = true;
-                        break;
-                    }
-                }
-                if truncated {
-                    break;
-                }
-                StoreTier::Host
-            } else if self.block_bytes <= inner.disk.capacity() {
-                let mut truncated = false;
-                while !inner.disk.reserve(self.block_bytes) {
-                    let victim = inner.lru_victim(StoreTier::Disk);
-                    let Some(victim) = victim.filter(|v| !placed.contains(v)) else {
-                        truncated = true;
-                        break;
+            let tier = if self.block_bytes <= self.host.capacity {
+                if self.host.reserve(self.block_bytes) {
+                    StoreTier::Host
+                } else if !have_all {
+                    // Upgrade: eviction needs the global LRU, i.e.
+                    // every shard.  Release the chain locks, take all
+                    // (still ascending — deadlock-free) and re-examine
+                    // this block: a racing publisher may have inserted
+                    // it, or freed room, in the window between.
+                    drop(lk);
+                    let Some(all) = self.write_shards(self.all_mask()) else {
+                        return;
                     };
-                    inner.drop_entry(victim, self.block_bytes);
+                    lk = all;
+                    have_all = true;
+                    continue;
+                } else {
+                    let mut truncated = false;
+                    while !self.host.reserve(self.block_bytes) {
+                        if !self.demote_host_lru(&mut lk, &placed) {
+                            truncated = true;
+                            break;
+                        }
+                    }
+                    if truncated {
+                        break 'place;
+                    }
+                    StoreTier::Host
                 }
-                if truncated {
-                    break;
+            } else if self.block_bytes <= self.disk.capacity {
+                if self.disk.reserve(self.block_bytes) {
+                    StoreTier::Disk
+                } else if !have_all {
+                    drop(lk);
+                    let Some(all) = self.write_shards(self.all_mask()) else {
+                        return;
+                    };
+                    lk = all;
+                    have_all = true;
+                    continue;
+                } else {
+                    let mut truncated = false;
+                    while !self.disk.reserve(self.block_bytes) {
+                        let victim = self.lru_victim(&lk, StoreTier::Disk);
+                        let Some(victim) = victim.filter(|v| !placed.contains(v)) else {
+                            truncated = true;
+                            break;
+                        };
+                        self.drop_entry(&mut lk, victim);
+                    }
+                    if truncated {
+                        break 'place;
+                    }
+                    StoreTier::Disk
                 }
-                StoreTier::Disk
             } else {
                 // A block fits in no tier: nothing deeper can be
                 // reachable either.
-                inner.stats.publish_rejected += 1;
+                bump(&self.c.publish_rejected);
                 rejected = true;
-                break;
+                break 'place;
             };
-            let tick = inner.next_tick;
-            inner.next_tick += 1;
-            inner.entries.insert(
+            // Commit the reservation: insert under this key's shard
+            // lock (the same lock the presence check above ran under,
+            // so a racing duplicate insert is impossible).
+            let tick = self.next_tick.fetch_add(1, Ordering::Relaxed);
+            let shard = lk.shard_mut(sid);
+            shard.entries.insert(
                 key,
                 Entry {
                     tier,
@@ -376,31 +698,36 @@ impl SnapshotStore for TieredStore {
                     pins: 0,
                 },
             );
-            inner.lru[tier_idx(tier)].insert(tick, key);
+            shard.lru[tier_idx(tier)].insert(tick, key);
+            self.c.entries.fetch_add(1, Ordering::Relaxed);
+            self.c.bytes_published.fetch_add(self.block_bytes, Ordering::Relaxed);
             placed.insert(key);
             inserted += 1;
-            inner.stats.bytes_published += self.block_bytes;
+            idx += 1;
         }
         // Refresh LRU over the whole chain, deepest first (see
-        // `begin_restore`), covering both new and deduped blocks.
-        for &k in keys.iter().rev() {
-            inner.touch(k);
+        // `restore_chain`), covering both new and deduped blocks.
+        for &k in chain.iter().rev() {
+            self.touch(&mut lk, k);
         }
+        drop(lk);
         if inserted > 0 {
-            inner.stats.publishes += 1;
+            bump(&self.c.publishes);
         } else if !rejected {
-            inner.stats.dedup_publishes += 1;
+            bump(&self.c.dedup_publishes);
         }
     }
 
-    fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch> {
-        let keys = self.chain_keys(prompt);
-        let inner = self.lock();
-        let blocks = Self::covered(&inner, &keys, now);
-        let bytes: u64 = keys[..blocks]
+    fn prefetch_candidate_chain(&self, chain: &[Key], now: f64) -> Option<StorePrefetch> {
+        if self.poisoned() {
+            return None;
+        }
+        let lk = self.read_shards(self.chain_mask(chain))?;
+        let blocks = self.covered(&lk, chain, now);
+        let bytes: u64 = chain[..blocks]
             .iter()
             .filter(|k| {
-                let e = &inner.entries[*k];
+                let e = &lk.shard(self.shard_of(**k)).entries[*k];
                 e.tier == StoreTier::Disk && e.staged_at.is_infinite()
             })
             .map(|_| self.block_bytes)
@@ -408,26 +735,23 @@ impl SnapshotStore for TieredStore {
         (bytes > 0).then_some(StorePrefetch { tokens: blocks * self.block_tokens, bytes })
     }
 
-    fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
-        {
-            // Nothing on disk -> nothing stageable; skip the hash walk.
-            let inner = self.lock();
-            if inner.disk.used() == 0 {
-                return false;
-            }
+    fn stage_chain(&self, chain: &[Key], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+        if self.poisoned() || self.disk.used() == 0 {
+            // Nothing on disk -> nothing stageable.
+            return false;
         }
-        let keys = self.chain_keys(prompt);
-        let mut inner = self.lock();
-        let inner = &mut *inner;
-        let blocks = Self::covered(inner, &keys, now);
-        // Bytes and completion time are computed under the same lock
-        // that marks the staging, so a racing replica can neither
+        let Some(mut lk) = self.write_shards(self.chain_mask(chain)) else {
+            return false;
+        };
+        let blocks = self.covered(&lk, chain, now);
+        // Bytes and completion time are computed under the same locks
+        // that mark the staging, so a racing replica can neither
         // double-stage nor leave this staging priced for a transfer
         // larger than what it actually moves.
-        let bytes: u64 = keys[..blocks]
+        let bytes: u64 = chain[..blocks]
             .iter()
-            .filter(|&k| {
-                let e = &inner.entries[k];
+            .filter(|k| {
+                let e = &lk.shard(self.shard_of(**k)).entries[*k];
                 e.tier == StoreTier::Disk && e.staged_at.is_infinite()
             })
             .map(|_| self.block_bytes)
@@ -436,58 +760,95 @@ impl SnapshotStore for TieredStore {
             return false;
         }
         let ready_at = (now + price(bytes)).max(now + self.window);
-        for k in &keys[..blocks] {
-            let e = inner.entries.get_mut(k).expect("covered block is present");
+        for k in &chain[..blocks] {
+            let e = lk
+                .shard_mut(self.shard_of(*k))
+                .entries
+                .get_mut(k)
+                .expect("covered block is present");
             if e.tier == StoreTier::Disk && e.staged_at.is_infinite() {
                 e.staged_at = ready_at;
             }
         }
-        inner.stats.prefetches += 1;
+        bump(&self.c.prefetches);
         true
     }
 
-    fn pin(&self, ctx: &[u32]) {
-        let keys = self.chain_keys(ctx);
-        let mut inner = self.lock();
-        let inner = &mut *inner;
+    fn pin_chain(&self, chain: &[Key]) {
+        if self.poisoned() {
+            return;
+        }
+        let Some(mut lk) = self.write_shards(self.chain_mask(chain)) else {
+            return;
+        };
         let mut any = false;
-        for k in &keys {
-            if let Some(e) = inner.entries.get_mut(k) {
+        for k in chain {
+            if let Some(e) = lk.shard_mut(self.shard_of(*k)).entries.get_mut(k) {
                 if e.pins == 0 {
-                    inner.stats.pinned_blocks += 1;
+                    bump(&self.c.pinned_blocks);
                 }
                 e.pins += 1;
                 any = true;
             }
         }
         if any {
-            inner.stats.handoff_pins += 1;
+            bump(&self.c.handoff_pins);
         }
     }
 
-    fn unpin(&self, ctx: &[u32]) {
-        let keys = self.chain_keys(ctx);
-        let mut inner = self.lock();
-        let inner = &mut *inner;
-        for k in &keys {
-            if let Some(e) = inner.entries.get_mut(k) {
+    fn unpin_chain(&self, chain: &[Key]) {
+        if self.poisoned() {
+            return;
+        }
+        let Some(mut lk) = self.write_shards(self.chain_mask(chain)) else {
+            return;
+        };
+        for k in chain {
+            if let Some(e) = lk.shard_mut(self.shard_of(*k)).entries.get_mut(k) {
                 if e.pins > 0 {
                     e.pins -= 1;
                     if e.pins == 0 {
-                        inner.stats.pinned_blocks -= 1;
+                        self.c.pinned_blocks.fetch_sub(1, Ordering::Relaxed);
                     }
                 }
             }
         }
     }
 
+    /// Token-slice staging keeps the unsharded fast-out: an empty disk
+    /// tier skips the hash walk entirely.
+    fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+        if self.disk.used() == 0 {
+            return false;
+        }
+        self.stage_chain(&chain_keys(prompt, self.block_tokens), now, price)
+    }
+
     fn stats(&self) -> StoreStats {
-        let inner = self.lock();
-        let mut s = inner.stats.clone();
-        s.entries = inner.entries.len();
-        s.host_used = inner.host.used();
-        s.disk_used = inner.disk.used();
-        s
+        // Lock-free: gauges and counters are atomics, so a stats
+        // snapshot never serializes against store traffic.
+        StoreStats {
+            entries: self.c.entries.load(Ordering::Relaxed) as usize,
+            host_used: self.host.used(),
+            disk_used: self.disk.used(),
+            host_capacity: self.host.capacity,
+            disk_capacity: self.disk.capacity,
+            publishes: self.c.publishes.load(Ordering::Relaxed),
+            dedup_publishes: self.c.dedup_publishes.load(Ordering::Relaxed),
+            publish_rejected: self.c.publish_rejected.load(Ordering::Relaxed),
+            bytes_published: self.c.bytes_published.load(Ordering::Relaxed),
+            bytes_dropped: self.c.bytes_dropped.load(Ordering::Relaxed),
+            demotions_to_disk: self.c.demotions_to_disk.load(Ordering::Relaxed),
+            dropped_entries: self.c.dropped_entries.load(Ordering::Relaxed),
+            host_hits: self.c.host_hits.load(Ordering::Relaxed),
+            disk_hits: self.c.disk_hits.load(Ordering::Relaxed),
+            remote_hits: self.c.remote_hits.load(Ordering::Relaxed),
+            prefetch_hits: self.c.prefetch_hits.load(Ordering::Relaxed),
+            prefetches: self.c.prefetches.load(Ordering::Relaxed),
+            handoff_pins: self.c.handoff_pins.load(Ordering::Relaxed),
+            pinned_blocks: self.c.pinned_blocks.load(Ordering::Relaxed) as usize,
+            lock_poisoned: self.c.lock_poisoned.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -502,6 +863,12 @@ impl SnapshotStore for TieredStore {
 /// exists to remove.  Dropping the handle parks the replica's fence
 /// clock, so a finished (or panicking) replica never deadlocks the
 /// others.
+///
+/// The handle speaks [`TokenBuf`]s, not token slices: every operation
+/// goes through the buffer's memoized rolling-hash chain
+/// (`TokenBuf::block_chain`), so a growing context re-hashes only its
+/// new tokens across the engine's repeated probes, publishes and
+/// restores.
 pub struct StoreHandle {
     store: Arc<dyn SnapshotStore>,
     fence: Option<Arc<ClockFence>>,
@@ -540,46 +907,56 @@ impl StoreHandle {
         }
     }
 
-    /// See [`SnapshotStore::peek`] (fences at `now` first).
-    pub fn peek(&self, prompt: &[u32], now: f64) -> usize {
+    /// The memoized chain of `prompt` at this store's block size.
+    fn chain(&self, prompt: &TokenBuf) -> Arc<Vec<BlockKey>> {
+        prompt.block_chain(self.store.block_tokens())
+    }
+
+    /// See [`SnapshotStore::peek_chain`] (fences at `now` first).
+    pub fn peek(&self, prompt: &TokenBuf, now: f64) -> usize {
+        let chain = self.chain(prompt);
         self.sync(now);
-        self.store.peek(prompt, now)
+        self.store.peek_chain(&chain, now)
     }
 
-    /// See [`SnapshotStore::begin_restore`] (fences at `now` first).
-    pub fn begin_restore(&self, prompt: &[u32], min_tokens: usize, now: f64) -> Option<StoreHit> {
+    /// See [`SnapshotStore::restore_chain`] (fences at `now` first).
+    pub fn begin_restore(&self, prompt: &TokenBuf, min_tokens: usize, now: f64) -> Option<StoreHit> {
+        let chain = self.chain(prompt);
         self.sync(now);
-        self.store.begin_restore(prompt, min_tokens, now, self.replica)
+        self.store.restore_chain(&chain, min_tokens, now, self.replica)
     }
 
-    /// See [`SnapshotStore::publish`] (fences at `now` first).
-    pub fn publish(&self, ctx: &[u32], now: f64, visible_at: f64) {
+    /// See [`SnapshotStore::publish_chain`] (fences at `now` first).
+    pub fn publish(&self, ctx: &TokenBuf, now: f64, visible_at: f64) {
+        let chain = self.chain(ctx);
         self.sync(now);
-        self.store.publish(ctx, now, visible_at, self.replica);
+        self.store.publish_chain(&chain, now, visible_at, self.replica);
     }
 
-    /// See [`SnapshotStore::prefetch_candidate`] (fences at `now`
-    /// first).
-    pub fn prefetch_candidate(&self, prompt: &[u32], now: f64) -> Option<StorePrefetch> {
+    /// See [`SnapshotStore::prefetch_candidate_chain`] (fences at
+    /// `now` first).
+    pub fn prefetch_candidate(&self, prompt: &TokenBuf, now: f64) -> Option<StorePrefetch> {
+        let chain = self.chain(prompt);
         self.sync(now);
-        self.store.prefetch_candidate(prompt, now)
+        self.store.prefetch_candidate_chain(&chain, now)
     }
 
-    /// See [`SnapshotStore::stage`] (fences at `now` first).
-    pub fn stage(&self, prompt: &[u32], now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+    /// See [`SnapshotStore::stage_chain`] (fences at `now` first).
+    pub fn stage(&self, prompt: &TokenBuf, now: f64, price: &dyn Fn(u64) -> f64) -> bool {
+        let chain = self.chain(prompt);
         self.sync(now);
-        self.store.stage(prompt, now, price)
+        self.store.stage_chain(&chain, now, price)
     }
 
-    /// See [`SnapshotStore::pin`] (no fence: pins have no visibility
-    /// semantics — they only constrain eviction).
-    pub fn pin(&self, ctx: &[u32]) {
-        self.store.pin(ctx);
+    /// See [`SnapshotStore::pin_chain`] (no fence: pins have no
+    /// visibility semantics — they only constrain eviction).
+    pub fn pin(&self, ctx: &TokenBuf) {
+        self.store.pin_chain(&self.chain(ctx));
     }
 
-    /// See [`SnapshotStore::unpin`].
-    pub fn unpin(&self, ctx: &[u32]) {
-        self.store.unpin(ctx);
+    /// See [`SnapshotStore::unpin_chain`].
+    pub fn unpin(&self, ctx: &TokenBuf) {
+        self.store.unpin_chain(&self.chain(ctx));
     }
 
     /// Snapshot of the shared store's aggregate counters.
@@ -863,5 +1240,128 @@ mod tests {
         assert_eq!(hit.disk_bytes, 2 * 1024);
         assert_eq!(s.stats().disk_used, 2 * 1024);
         ledger_balances(&s);
+    }
+
+    #[test]
+    fn sharded_store_behaves_like_unsharded() {
+        // The full-surface smoke at shards = 8: same answers as every
+        // other unit test expects at shards = 1.  (The exhaustive
+        // bit-identity sweep lives in prop_store_shards_bit_identical.)
+        let s = TieredStore::with_shards(4 * 1024, 4 * 1024, BT, BPT, 8);
+        assert_eq!(s.shards(), 8);
+        for salt in 0..5u32 {
+            publish_now(&s, &toks(32, 1000 * (salt + 1)), f64::from(salt), 0);
+        }
+        let st = s.stats();
+        assert_eq!(st.host_used, 4 * 1024, "host full");
+        assert_eq!(st.disk_used, 4 * 1024, "disk full");
+        assert_eq!(st.demotions_to_disk, 6, "cross-shard demotions follow global LRU");
+        assert_eq!(st.dropped_entries, 2);
+        assert_eq!(s.peek(&toks(32, 1000), 10.0), 0, "oldest dropped");
+        let hit = s.begin_restore(&toks(32, 5000), 0, 10.0, 1).expect("newest");
+        assert_eq!(hit.disk_bytes, 0, "newest still host-resident");
+        assert!(hit.remote);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn shard_counts_round_up_and_clamp() {
+        for (asked, got) in [(0usize, 1usize), (1, 1), (2, 2), (3, 4), (5, 8), (64, 64), (500, 64)]
+        {
+            let s = TieredStore::with_shards(1024, 0, BT, BPT, asked);
+            assert_eq!(s.shards(), got, "asked {asked}");
+        }
+        assert_eq!(TieredStore::auto_shards(1), 2);
+        assert_eq!(TieredStore::auto_shards(3), 8);
+        assert_eq!(TieredStore::auto_shards(4), 8);
+        assert_eq!(TieredStore::auto_shards(100), 64, "clamped");
+    }
+
+    #[test]
+    fn chain_ops_match_token_ops() {
+        // The chain-based entry points and the token-slice wrappers
+        // are the same operation (the wrappers just hash first).
+        let s = store(16, 4);
+        let ctx = TokenBuf::from_vec(toks(48, 3));
+        let chain = ctx.block_chain(BT);
+        s.publish_chain(&chain, 0.0, 0.0, 0);
+        assert_eq!(s.peek_chain(&chain, LATER), 48);
+        assert_eq!(s.peek(&ctx, LATER), 48, "wrapper agrees");
+        let hit = s.restore_chain(&chain, 16, LATER, 1).expect("hit");
+        assert_eq!(hit.tokens, 48);
+        assert_eq!(hit.host_bytes, 2 * 1024);
+        s.pin_chain(&chain);
+        assert_eq!(s.stats().pinned_blocks, 3);
+        s.unpin_chain(&chain);
+        assert_eq!(s.stats().pinned_blocks, 0);
+        ledger_balances(&s);
+    }
+
+    #[test]
+    fn poisoned_lock_degrades_to_static_misses_not_a_cascade() {
+        // One shard so every operation's lock mask includes the
+        // poisoned lock (with more shards, which ops notice first
+        // depends on where their chains hash).
+        let s = Arc::new(TieredStore::with_shards(16 * 1024, 0, BT, BPT, 1));
+        let ctx = toks(32, 1);
+        publish_now(&s, &ctx, 0.0, 0);
+        assert_eq!(s.peek(&ctx, LATER), 32);
+        // A replica panics while holding a shard write lock.
+        let s2 = Arc::clone(&s);
+        let t = std::thread::spawn(move || {
+            let _guard = s2.shards[0].write().unwrap();
+            panic!("replica dies mid-publish");
+        });
+        assert!(t.join().is_err(), "the panicking thread itself still fails");
+        // Every later op degrades instead of propagating the panic:
+        // probes miss, publishes/pins no-op, restores decline.
+        assert_eq!(s.peek(&ctx, LATER), 0);
+        publish_now(&s, &toks(32, 2), 2.0, 0);
+        assert!(s.begin_restore(&ctx, 0, LATER, 1).is_none());
+        assert!(!s.stage(&ctx, LATER, &|_| 0.5));
+        assert!(s.prefetch_candidate(&ctx, LATER).is_none());
+        s.pin(&ctx);
+        s.unpin(&ctx);
+        let st = s.stats();
+        assert!(st.lock_poisoned >= 1, "poison encounters are counted");
+        assert_eq!(st.publishes, 1, "no publish after the poison");
+        // Stats stay readable (lock-free) for the clean run-fail path.
+        assert_eq!(st.host_used, 2 * 1024);
+    }
+
+    #[test]
+    fn concurrent_hammer_conserves_budgets() {
+        // 8 threads publish/restore/peek overlapping chains through a
+        // small sharded store; the atomic budgets must never over-admit
+        // and the ledger must balance once quiet.
+        let s = Arc::new(TieredStore::with_shards(8 * 1024, 4 * 1024, BT, BPT, 8));
+        let threads: Vec<_> = (0..8)
+            .map(|r| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..200u32 {
+                        let ctx = toks(32 + (i as usize % 3) * 16, (r as u32) * 7 + i % 11);
+                        let now = f64::from(i) * 0.01;
+                        s.publish(&ctx, now, now, r);
+                        let _ = s.begin_restore(&ctx, 0, now + 1.0, (r + 1) % 8);
+                        let _ = s.peek(&ctx, now + 1.0);
+                        let st = s.stats();
+                        assert!(st.host_used <= st.host_capacity, "host over-admitted");
+                        assert!(st.disk_used <= st.disk_capacity, "disk over-admitted");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("hammer thread");
+        }
+        let st = s.stats();
+        assert_eq!(st.lock_poisoned, 0);
+        assert_eq!(
+            st.bytes_published,
+            st.host_used + st.disk_used + st.bytes_dropped,
+            "ledger balances after concurrent churn"
+        );
+        assert_eq!(st.entries as u64 * 1024, st.host_used + st.disk_used, "entry gauge matches");
     }
 }

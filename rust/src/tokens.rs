@@ -12,16 +12,41 @@
 
 use std::fmt;
 use std::ops::Deref;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+use crate::kvcache::block::{hash_block, BlockKey, ROOT_HASH};
+
+/// Memoized rolling block-hash chain over a buffer's leading tokens
+/// (see [`TokenBuf::block_chain`]).  Shared across clones through an
+/// `Arc<Mutex<..>>`: clones view the same tokens, so they share the
+/// same chain, and whichever handle probes first hashes for all of
+/// them.  The keys vector is itself `Arc`-wrapped so the hot path
+/// returns an O(1) handle instead of copying the chain per probe.
+#[derive(Debug, Default)]
+struct ChainMemo {
+    /// Block size the memoized keys were computed at (0 = empty memo).
+    block_tokens: usize,
+    /// Chain keys of the leading `keys.len()` blocks, ascending depth.
+    keys: Arc<Vec<BlockKey>>,
+}
 
 /// Immutable view of the first `len` tokens of a shared buffer.
 ///
 /// Cloning is O(1).  [`TokenBuf::extended`] appends, reusing the
 /// allocation when this is the only owner viewing the whole buffer.
+///
+/// Buffers also memoize their rolling block-hash chain
+/// ([`TokenBuf::block_chain`]): the radix prefix cache and the tiered
+/// snapshot store both probe by the same content-addressed chain, and
+/// agentic contexts only grow, so repeated probes of a growing context
+/// rehash only the new tokens instead of the whole prefix.
 #[derive(Clone, Default)]
 pub struct TokenBuf {
     data: Arc<Vec<u32>>,
     len: usize,
+    /// Chain memo, shared with clones (equal tokens ⇒ equal chain).
+    /// Equality/hashing/debug ignore it: it is a cache, not state.
+    chain: Arc<Mutex<ChainMemo>>,
 }
 
 impl TokenBuf {
@@ -32,7 +57,7 @@ impl TokenBuf {
 
     /// Wrap an owned vector without copying.
     pub fn from_vec(v: Vec<u32>) -> Self {
-        TokenBuf { len: v.len(), data: Arc::new(v) }
+        TokenBuf { len: v.len(), data: Arc::new(v), chain: Arc::default() }
     }
 
     /// The visible tokens as a slice.
@@ -58,10 +83,18 @@ impl TokenBuf {
 
     /// Append `extra`, consuming self.  In place when uniquely owned;
     /// otherwise copies the visible prefix plus `extra` into a fresh
-    /// buffer (copy-on-extend).
+    /// buffer (copy-on-extend).  Either way the rolling-hash memo of
+    /// the surviving prefix carries over, so the chain over the old
+    /// tokens is never rehashed (see [`TokenBuf::block_chain`]).
     pub fn extended(mut self, extra: &[u32]) -> TokenBuf {
         if let Some(v) = Arc::get_mut(&mut self.data) {
-            v.truncate(self.len); // drop any tail beyond our view
+            if v.len() > self.len {
+                // Dropping a tail beyond our view invalidates any memo
+                // keys hashed over it (data uniqueness implies no live
+                // clone shares the memo, so truncating is safe).
+                v.truncate(self.len);
+                Self::truncate_memo(&self.chain, self.len);
+            }
             v.extend_from_slice(extra);
             self.len = v.len();
             return self;
@@ -69,12 +102,79 @@ impl TokenBuf {
         let mut v = Vec::with_capacity(self.len + extra.len());
         v.extend_from_slice(&self.data[..self.len]);
         v.extend_from_slice(extra);
-        TokenBuf { len: v.len(), data: Arc::new(v) }
+        // The copied prefix is identical, so its chain keys still hold;
+        // the sharer we split from keeps the original memo.
+        let chain = Arc::new(Mutex::new(Self::memo_prefix(&self.chain, self.len)));
+        TokenBuf { len: v.len(), data: Arc::new(v), chain }
     }
 
     /// Copy the visible tokens into an owned vector.
     pub fn to_vec(&self) -> Vec<u32> {
         self.as_slice().to_vec()
+    }
+
+    /// The rolling block-hash chain keys of this buffer's block-aligned
+    /// prefixes (ascending depth; see
+    /// [`chain_keys`](crate::kvcache::block::chain_keys)), memoized:
+    /// the first call hashes the whole prefix, later calls on this
+    /// buffer — or any clone, or any `extended` descendant — hash only
+    /// blocks beyond what was already memoized.  Returns a shared
+    /// handle, so a probe-heavy hot path (scheduler coverage probes,
+    /// store peeks) pays O(1) per probe after the first.
+    ///
+    /// A `block_tokens` different from the memo's discards and rebuilds
+    /// it (the engine uses one block size per run, so in practice the
+    /// memo is built once and only ever extended).
+    pub fn block_chain(&self, block_tokens: usize) -> Arc<Vec<BlockKey>> {
+        let bt = block_tokens.max(1);
+        let mut memo = self.chain.lock().unwrap_or_else(|e| e.into_inner());
+        if memo.block_tokens != bt {
+            memo.block_tokens = bt;
+            memo.keys = Arc::new(Vec::new());
+        }
+        let want = self.len / bt;
+        let have = memo.keys.len();
+        if have < want {
+            let keys = Arc::make_mut(&mut memo.keys);
+            let mut h = keys.last().map_or(ROOT_HASH, |k| k.0);
+            for b in have..want {
+                h = hash_block(h, &self.data[b * bt..(b + 1) * bt]);
+                keys.push((h, (b + 1) * bt));
+            }
+        }
+        if memo.keys.len() > want {
+            // Defensive: no current path constructs a view shorter than
+            // its memo (clones share `len`; `extended` truncates), but a
+            // probe must never see keys past the view — copy, not trust.
+            return Arc::new(memo.keys[..want].to_vec());
+        }
+        Arc::clone(&memo.keys)
+    }
+
+    /// Drop memo keys hashed beyond the first `len` tokens.
+    fn truncate_memo(chain: &Arc<Mutex<ChainMemo>>, len: usize) {
+        let mut memo = chain.lock().unwrap_or_else(|e| e.into_inner());
+        if memo.block_tokens > 0 {
+            let keep = len / memo.block_tokens;
+            if memo.keys.len() > keep {
+                Arc::make_mut(&mut memo.keys).truncate(keep);
+            }
+        }
+    }
+
+    /// A fresh memo carrying `chain`'s keys over the first `len` tokens.
+    fn memo_prefix(chain: &Arc<Mutex<ChainMemo>>, len: usize) -> ChainMemo {
+        let memo = chain.lock().unwrap_or_else(|e| e.into_inner());
+        if memo.block_tokens == 0 {
+            return ChainMemo::default();
+        }
+        let keep = (len / memo.block_tokens).min(memo.keys.len());
+        let keys = if keep == memo.keys.len() {
+            Arc::clone(&memo.keys)
+        } else {
+            Arc::new(memo.keys[..keep].to_vec())
+        };
+        ChainMemo { block_tokens: memo.block_tokens, keys }
     }
 }
 
@@ -181,5 +281,58 @@ mod tests {
         assert_eq!(a.len(), 10);
         assert_eq!(&a[..3], &[0, 1, 2]);
         assert_eq!(a.iter().sum::<u32>(), 45);
+    }
+
+    #[test]
+    fn block_chain_matches_unmemoized_hashing() {
+        let toks: Vec<u32> = (0..50).collect();
+        let buf = TokenBuf::from_vec(toks.clone());
+        for bt in [1usize, 4, 16, 64] {
+            assert_eq!(
+                *buf.block_chain(bt),
+                crate::kvcache::block::chain_keys(&toks, bt),
+                "bt {bt}: memoized chain equals the direct hash walk"
+            );
+        }
+    }
+
+    #[test]
+    fn block_chain_extends_incrementally_and_shares_across_clones() {
+        let buf = TokenBuf::from_vec((0..32).collect());
+        let c1 = buf.block_chain(16);
+        assert_eq!(c1.len(), 2);
+        // A clone reuses the exact same memoized vector.
+        let clone = buf.clone();
+        assert!(Arc::ptr_eq(&c1, &clone.block_chain(16)), "clones share the memo");
+        // Growing the context extends the chain from the memoized tail;
+        // the leading keys are bit-identical (same Arc contents).
+        drop(clone);
+        let grown = buf.extended(&(32..70).collect::<Vec<_>>());
+        let c2 = grown.block_chain(16);
+        assert_eq!(c2.len(), 4, "70 tokens = 4 full blocks");
+        assert_eq!(c2[..2], c1[..], "old prefix keys unchanged");
+        assert_eq!(*c2, crate::kvcache::block::chain_keys(grown.as_slice(), 16));
+    }
+
+    #[test]
+    fn block_chain_survives_copy_on_extend_without_stale_keys() {
+        // A shared buffer extended two ways: each descendant's chain
+        // must hash its own tokens, with the common prefix carried over.
+        let base = TokenBuf::from_vec((0..32).collect());
+        let _warm = base.block_chain(16); // memoize before the split
+        let x = base.clone().extended(&[100; 16]);
+        let y = base.extended(&[200; 16]);
+        assert_eq!(*x.block_chain(16), crate::kvcache::block::chain_keys(x.as_slice(), 16));
+        assert_eq!(*y.block_chain(16), crate::kvcache::block::chain_keys(y.as_slice(), 16));
+        assert_eq!(x.block_chain(16)[..2], y.block_chain(16)[..2], "shared prefix, same keys");
+        assert_ne!(x.block_chain(16)[2], y.block_chain(16)[2], "divergent tails, different keys");
+    }
+
+    #[test]
+    fn block_chain_rebuilds_on_block_size_change() {
+        let buf = TokenBuf::from_vec((0..64).collect());
+        assert_eq!(buf.block_chain(16).len(), 4);
+        assert_eq!(buf.block_chain(32).len(), 2, "new block size rebuilds");
+        assert_eq!(*buf.block_chain(32), crate::kvcache::block::chain_keys(buf.as_slice(), 32));
     }
 }

@@ -1480,6 +1480,248 @@ fn prop_store_zero_budget_bit_identical() {
     }
 }
 
+/// Lock striping is a pure contention optimization: for ANY shard
+/// count the store's observable behavior is bit-identical to the
+/// serial layout (`--store-shards 1`, the pre-shard single-lock
+/// store).  Two layers:
+///
+///   * op-level differential — one seeded op sequence applied to
+///     stores at shard counts 1/2/4/8 must return identical results
+///     from every probe/restore/stage/prefetch and identical stats
+///     after every step, with budgets tight enough that demotion,
+///     rejection and the publish all-shard upgrade path all fire;
+///   * run-level differential — cluster runs with the store enabled
+///     produce bit-identical merged stats, traces and store counters
+///     for explicit shard counts and the auto default (`0`).
+#[test]
+fn prop_store_shards_bit_identical() {
+    use icarus::cluster::Cluster;
+    use icarus::store::{SnapshotStore, TieredStore};
+    for seed in 0..10u64 {
+        let shard_counts = [1usize, 2, 4, 8];
+        let stores: Vec<TieredStore> = shard_counts
+            .iter()
+            .map(|&s| TieredStore::with_shards(20 * 16 * 64, 12 * 16 * 64, 16, 64, s))
+            .collect();
+        let mut rng = Rng::new(18_000 + seed);
+        let mut published: Vec<Vec<u32>> = Vec::new();
+        let mut now = 0.0f64;
+        for step in 0..400 {
+            now += 0.01;
+            let tag = format!("seed {seed} step {step}");
+            match rng.below(7) {
+                0 | 1 => {
+                    let n = rng.range(8, 120) as usize;
+                    let mut ctx: Vec<u32> = (0..16u32).collect(); // shared prefix
+                    ctx.extend((0..n).map(|_| rng.below(200) as u32));
+                    let rep = rng.below(4) as usize;
+                    for s in &stores {
+                        s.publish(&ctx, now, now, rep);
+                    }
+                    published.push(ctx);
+                }
+                2 if !published.is_empty() => {
+                    let i = rng.below(published.len() as u64) as usize;
+                    let peeks: Vec<usize> =
+                        stores.iter().map(|s| s.peek(&published[i], now)).collect();
+                    assert!(peeks.windows(2).all(|w| w[0] == w[1]), "{tag}: peek {peeks:?}");
+                }
+                3 if !published.is_empty() => {
+                    let i = rng.below(published.len() as u64) as usize;
+                    let rep = rng.below(4) as usize;
+                    let hits: Vec<_> = stores
+                        .iter()
+                        .map(|s| s.begin_restore(&published[i], 0, now, rep))
+                        .collect();
+                    assert!(hits.windows(2).all(|w| w[0] == w[1]), "{tag}: restore {hits:?}");
+                }
+                4 if !published.is_empty() => {
+                    let i = rng.below(published.len() as u64) as usize;
+                    let staged: Vec<bool> =
+                        stores.iter().map(|s| s.stage(&published[i], now, &|_| 0.5)).collect();
+                    assert!(staged.windows(2).all(|w| w[0] == w[1]), "{tag}: stage {staged:?}");
+                }
+                5 if !published.is_empty() => {
+                    let i = rng.below(published.len() as u64) as usize;
+                    let pf: Vec<_> = stores
+                        .iter()
+                        .map(|s| s.prefetch_candidate(&published[i], now))
+                        .collect();
+                    assert!(pf.windows(2).all(|w| w[0] == w[1]), "{tag}: prefetch {pf:?}");
+                }
+                _ if !published.is_empty() => {
+                    let i = rng.below(published.len() as u64) as usize;
+                    if rng.bool(0.5) {
+                        for s in &stores {
+                            s.pin(&published[i]);
+                        }
+                    } else {
+                        // Saturating at zero pins, so blind unpins are
+                        // fine — and identical across layouts.
+                        for s in &stores {
+                            s.unpin(&published[i]);
+                        }
+                    }
+                }
+                _ => {}
+            }
+            let stats: Vec<_> = stores.iter().map(|s| s.stats()).collect();
+            assert!(stats.windows(2).all(|w| w[0] == w[1]), "{tag}: stats diverged {stats:?}");
+        }
+    }
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(18_500 + seed);
+        let mode = if rng.bool(0.5) { ServingMode::Icarus } else { ServingMode::Baseline };
+        let eviction =
+            if rng.bool(0.5) { EvictionPolicy::Recompute } else { EvictionPolicy::Swap };
+        let replicas = 1 + rng.below(4) as usize;
+        let n_models = 1 + rng.below(6) as usize;
+        let base = ServingConfig {
+            mode,
+            eviction,
+            kv_pool_bytes: (8 + rng.below(48)) << 20,
+            replicas,
+            store_host_bytes: 6 << 20,
+            store_disk_bytes: 4 << 20,
+            store_prefetch: rng.bool(0.5),
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            n_models,
+            qps: 0.3 + rng.f64(),
+            n_requests: 24,
+            seed: 700 + seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let serial = ServingConfig { store_shards: 1, ..base.clone() };
+        let (a, at) = Cluster::new(serial, 2048, n_models)
+            .run_sim_traced(CostModel::default(), wl.clone());
+        for shards in [0usize, 2, 8] {
+            let cfg = ServingConfig { store_shards: shards, ..base.clone() };
+            let (b, bt) = Cluster::new(cfg, 2048, n_models)
+                .run_sim_traced(CostModel::default(), wl.clone());
+            assert_eq!(a.merged, b.merged, "seed {seed} shards {shards}: stats");
+            assert_eq!(at.events, bt.events, "seed {seed} shards {shards}: trace");
+            assert_eq!(a.store, b.store, "seed {seed} shards {shards}: store counters");
+        }
+        assert!(a.store.is_some(), "seed {seed}: store must be built");
+    }
+}
+
+/// The sharded store's atomic tier budgets never over-admit and its
+/// byte ledger balances — under true concurrency (threads hammering
+/// one store through every public op) and at the end of engine runs
+/// under both eviction policies.
+#[test]
+fn prop_sharded_budget_conservation() {
+    use std::sync::Arc;
+
+    use icarus::cluster::Cluster;
+    use icarus::store::{SnapshotStore, TieredStore};
+    for seed in 0..3u64 {
+        for shards in [2usize, 8] {
+            let store =
+                Arc::new(TieredStore::with_shards(24 * 16 * 64, 10 * 16 * 64, 16, 64, shards));
+            std::thread::scope(|scope| {
+                for t in 0..8u64 {
+                    let store = Arc::clone(&store);
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(19_000 + seed * 100 + t);
+                        let mut published: Vec<Vec<u32>> = Vec::new();
+                        let mut now = 0.0f64;
+                        for _ in 0..300 {
+                            now += 0.01;
+                            match rng.below(5) {
+                                0 | 1 => {
+                                    let n = rng.range(8, 96) as usize;
+                                    let mut ctx: Vec<u32> = (0..16u32).collect();
+                                    ctx.extend((0..n).map(|_| rng.below(150) as u32));
+                                    store.publish(&ctx, now, now, t as usize);
+                                    published.push(ctx);
+                                }
+                                2 if !published.is_empty() => {
+                                    let i = rng.below(published.len() as u64) as usize;
+                                    let _ = store.begin_restore(
+                                        &published[i],
+                                        0,
+                                        now + 1.0,
+                                        (t as usize + 1) % 8,
+                                    );
+                                }
+                                3 if !published.is_empty() => {
+                                    let i = rng.below(published.len() as u64) as usize;
+                                    let _ = store.peek(&published[i], now);
+                                    let _ = store.stage(&published[i], now, &|_| 0.5);
+                                }
+                                _ if !published.is_empty() => {
+                                    let i = rng.below(published.len() as u64) as usize;
+                                    if rng.bool(0.5) {
+                                        store.pin(&published[i]);
+                                    } else {
+                                        store.unpin(&published[i]);
+                                    }
+                                }
+                                _ => {}
+                            }
+                        }
+                    });
+                }
+            });
+            // Quiescent: every op completed, so the ledger must balance
+            // exactly and neither tier may sit above capacity (atomic
+            // reserve-then-commit admission).
+            let st = store.stats();
+            let tag = format!("seed {seed} shards {shards}");
+            assert_eq!(
+                st.bytes_published,
+                st.host_used + st.disk_used + st.bytes_dropped,
+                "{tag}: concurrent ledger"
+            );
+            assert!(st.host_used <= st.host_capacity, "{tag}: host budget over-admitted");
+            assert!(st.disk_used <= st.disk_capacity, "{tag}: disk budget over-admitted");
+            assert_eq!(st.lock_poisoned, 0, "{tag}: no poisoned locks");
+        }
+    }
+    for &eviction in &[EvictionPolicy::Recompute, EvictionPolicy::Swap] {
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(19_500 + seed);
+            let replicas = 2 + rng.below(3) as usize;
+            let n_models = 1 + rng.below(6) as usize;
+            let cfg = ServingConfig {
+                mode: ServingMode::Icarus,
+                eviction,
+                kv_pool_bytes: (8 + rng.below(24)) << 20,
+                replicas,
+                store_host_bytes: 4 << 20,
+                store_disk_bytes: 2 << 20,
+                store_prefetch: true,
+                store_shards: [0, 2, 8][rng.below(3) as usize],
+                ..Default::default()
+            };
+            let wcfg = WorkloadConfig {
+                n_models,
+                qps: 0.3 + rng.f64(),
+                n_requests: 24,
+                seed: 900 + seed,
+                ..Default::default()
+            };
+            let out = Cluster::new(cfg, 2048, n_models)
+                .run_sim(CostModel::default(), generate(&wcfg));
+            let st = out.store.expect("store enabled");
+            let tag = format!("{eviction:?} seed {seed}");
+            assert_eq!(
+                st.bytes_published,
+                st.host_used + st.disk_used + st.bytes_dropped,
+                "{tag}: end-of-run ledger"
+            );
+            assert!(st.host_used <= st.host_capacity, "{tag}: host budget");
+            assert!(st.disk_used <= st.disk_capacity, "{tag}: disk budget");
+            assert_eq!(st.lock_poisoned, 0, "{tag}: poisoned locks");
+        }
+    }
+}
+
 /// A cluster with one replica is the single engine: same `ServingStats`
 /// bit for bit, same trace — across random modes, loads and seeds.
 #[test]

@@ -13,7 +13,8 @@ Usage, from the repo root, after the smoke benches ran:
     touch .bench-stamp            # BEFORE running the benches
     cargo bench --bench <name> -- --smoke   # for each name
     python3 tools/check_bench_mirrors.py --stamp .bench-stamp \
-        sched_policies store_tiers overlap cluster_scale serving
+        sched_policies store_tiers overlap cluster_scale serving \
+        store_contention
 """
 
 import argparse
