@@ -28,7 +28,9 @@
 //! Run: cargo bench --bench serving  [-- --smoke]
 
 use icarus::bench_util::{write_results, Point, Row, KV_BPT_SMALL};
-use icarus::config::ServingMode;
+use icarus::cluster::Cluster;
+use icarus::config::{ClusterRouting, ServingConfig, ServingMode, WorkloadConfig};
+use icarus::engine::executor::CostModel;
 use icarus::json::{self, Value};
 
 const HOST_8MB: u64 = 8 << 20;
@@ -210,4 +212,39 @@ fn main() {
             }),
         ],
     );
+
+    // Smoke runs also emit a Perfetto trace of one obs-on
+    // disaggregated run so CI can validate the exporter end to end
+    // (tools/check_trace.py --require-kinds ...): disagg + a shared
+    // store + clock-advancing restores cover all six span kinds.
+    if smoke {
+        let scfg = ServingConfig {
+            obs: true,
+            replicas: 4,
+            disagg: true,
+            prefill_replicas: 2,
+            cluster_routing: ClusterRouting::PrefillDecode,
+            kv_pool_bytes: 32 << 20,
+            store_host_bytes: 512 << 20,
+            ..Default::default()
+        };
+        let wcfg = WorkloadConfig {
+            n_models: 4,
+            qps: 1.5,
+            n_requests: 48,
+            seed: 21,
+            ..Default::default()
+        };
+        let out = Cluster::new(scfg, KV_BPT_SMALL, wcfg.n_models)
+            .run_sim(CostModel::default(), icarus::workload::generate(&wcfg));
+        let text = icarus::obs::export_chrome_trace(&out.obs).to_string_pretty();
+        // Repo root, next to the BENCH_ mirrors (same best-effort
+        // rationale as bench_util::write_results) — but deliberately
+        // not BENCH_-prefixed: it is a format fixture, not a result.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../trace_smoke.json");
+        match std::fs::write(&path, text) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write {}: {e}", path.display()),
+        }
+    }
 }

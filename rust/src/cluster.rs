@@ -55,7 +55,8 @@ use crate::engine::Engine;
 use crate::json::{self, Value};
 use crate::kvcache::block::{hash_block, ROOT_HASH};
 use crate::metrics::ServingStats;
-use crate::store::{ClockFence, SnapshotStore, StoreHandle, StoreStats, TieredStore};
+use crate::obs::ObsRecorder;
+use crate::store::{ClockFence, ShardStats, SnapshotStore, StoreHandle, StoreStats, TieredStore};
 use crate::trace::{Trace, TurnEvent};
 use crate::workload::Workflow;
 
@@ -140,6 +141,14 @@ pub struct ClusterStats {
     /// config leaves the store disabled).  Global, not per-replica —
     /// per-replica restore counters live in each `ServingStats`.
     pub store: Option<StoreStats>,
+    /// Per-shard counters of the shared store's lock stripes — hits,
+    /// publishes, evictions, lock takes/contention per stripe (see
+    /// `store::ShardStats`).  Empty unless `--obs on` *and* the store is
+    /// enabled, so the obs-off results JSON keeps its exact shape.
+    pub store_shards: Vec<ShardStats>,
+    /// Per-replica obs recorders in replica order (empty unless
+    /// `--obs on`) — the input to [`crate::obs::export_chrome_trace`].
+    pub obs: Vec<ObsRecorder>,
 }
 
 impl ClusterStats {
@@ -153,7 +162,14 @@ impl ClusterStats {
         for s in &per_replica {
             merged.merge(s);
         }
-        ClusterStats { merged, per_replica, roles, store }
+        ClusterStats {
+            merged,
+            per_replica,
+            roles,
+            store,
+            store_shards: Vec::new(),
+            obs: Vec::new(),
+        }
     }
 
     /// True when this run's replicas play heterogeneous roles
@@ -207,6 +223,12 @@ impl ClusterStats {
         }
         if let Some(store) = &self.store {
             entries.push(("store", store.to_json()));
+        }
+        if !self.store_shards.is_empty() {
+            entries.push((
+                "store_shards",
+                Value::Arr(self.store_shards.iter().map(ShardStats::to_json).collect()),
+            ));
         }
         json::obj(entries)
     }
@@ -390,6 +412,8 @@ impl Cluster {
                             self.n_models,
                             factory(),
                         );
+                        // Obs lanes are keyed by replica id (no-op off).
+                        engine.set_obs_replica(replica);
                         if let Some(st) = store {
                             let st: Arc<dyn SnapshotStore> = st;
                             engine.attach_store(StoreHandle::new(st, fence, replica));
@@ -405,6 +429,16 @@ impl Cluster {
         })
     }
 
+    /// Per-shard store counters for the results JSON — collected only
+    /// under `--obs` (they are diagnostics; the obs-off JSON keeps its
+    /// exact pre-obs shape), and only when the store exists.
+    fn collect_shard_stats(&self, store: &Option<Arc<TieredStore>>) -> Vec<ShardStats> {
+        match store {
+            Some(st) if self.scfg.obs => st.shard_stats(),
+            _ => Vec::new(),
+        }
+    }
+
     /// Run the workload across the replica fleet, building one executor
     /// per replica with `factory`.  Blocks until every replica drains.
     pub fn run_with<E, F>(&self, factory: F, workload: Vec<Workflow>) -> ClusterStats
@@ -413,8 +447,19 @@ impl Cluster {
         F: Fn() -> E + Sync,
     {
         let store = self.make_store();
-        let per_replica = self.run_replicas(&store, factory, workload, |e, w| e.run(w));
-        ClusterStats::from_replicas(per_replica, self.roles(), store.map(|s| s.stats()))
+        let outcomes = self.run_replicas(&store, factory, workload, |e, w| e.run_obs(w));
+        let mut per_replica = Vec::with_capacity(outcomes.len());
+        let mut obs = Vec::new();
+        for (stats, rec) in outcomes {
+            per_replica.push(stats);
+            obs.extend(rec);
+        }
+        let store_shards = self.collect_shard_stats(&store);
+        let mut out =
+            ClusterStats::from_replicas(per_replica, self.roles(), store.map(|s| s.stats()));
+        out.store_shards = store_shards;
+        out.obs = obs;
+        out
     }
 
     /// Like [`Cluster::run_with`], but each replica also records a
@@ -430,21 +475,25 @@ impl Cluster {
         F: Fn() -> E + Sync,
     {
         let store = self.make_store();
-        let outcomes = self.run_replicas(&store, factory, workload, |e, w| e.run_traced(w));
+        let outcomes = self.run_replicas(&store, factory, workload, |e, w| e.run_traced_obs(w));
         let mut per_replica = Vec::with_capacity(outcomes.len());
         let mut events: Vec<TurnEvent> = Vec::new();
-        for (stats, trace) in outcomes {
+        let mut obs = Vec::new();
+        for (stats, trace, rec) in outcomes {
             per_replica.push(stats);
             events.extend(trace.events);
+            obs.extend(rec);
         }
         // Reconcile the per-replica virtual clocks into one timeline.
         // The sort is stable, so a single replica's trace (already in
         // completion order) passes through unchanged.
         events.sort_by(|a, b| a.completed_at.total_cmp(&b.completed_at));
-        (
-            ClusterStats::from_replicas(per_replica, self.roles(), store.map(|s| s.stats())),
-            Trace { events },
-        )
+        let store_shards = self.collect_shard_stats(&store);
+        let mut out =
+            ClusterStats::from_replicas(per_replica, self.roles(), store.map(|s| s.stats()));
+        out.store_shards = store_shards;
+        out.obs = obs;
+        (out, Trace { events })
     }
 
     /// Run with one [`SimExecutor`] per replica — the configuration the
@@ -761,6 +810,31 @@ mod tests {
         assert!(!a.is_disaggregated());
         assert_eq!(a.merged, b.merged);
         assert_eq!(a.merged_for_role(ReplicaRole::Decode), None);
+    }
+
+    #[test]
+    fn obs_threads_through_replicas_and_stays_empty_when_off() {
+        let wl = workload(24, 1.0, 11);
+        let scfg = ServingConfig {
+            replicas: 2,
+            obs: true,
+            store_host_bytes: 128 << 20,
+            ..Default::default()
+        };
+        let out = Cluster::new(scfg, 2048, 4).run_sim(CostModel::default(), wl.clone());
+        assert_eq!(out.obs.len(), 2, "one recorder per replica");
+        let lanes: Vec<usize> = out.obs.iter().map(|r| r.replica()).collect();
+        assert_eq!(lanes, vec![0, 1], "recorders tagged in replica order");
+        assert!(out.obs.iter().all(|r| !r.spans().is_empty()), "every lane recorded");
+        assert!(!out.store_shards.is_empty(), "per-shard counters collected under obs");
+        assert!(out.to_json().to_string_pretty().contains("store_shards"));
+        // Off (default): no recorders, no shard block, JSON shape as
+        // before the obs layer existed.
+        let scfg =
+            ServingConfig { replicas: 2, store_host_bytes: 128 << 20, ..Default::default() };
+        let out = Cluster::new(scfg, 2048, 4).run_sim(CostModel::default(), wl);
+        assert!(out.obs.is_empty() && out.store_shards.is_empty());
+        assert!(!out.to_json().to_string_pretty().contains("store_shards"));
     }
 
     #[test]

@@ -245,6 +245,12 @@ pub struct ServingConfig {
     /// the waiting queue's summed prompt tokens are at or above this.
     /// 0 (the default) disables the token bound.
     pub admit_tokens: usize,
+    /// Observability (`--obs on`): per-request lifecycle spans keyed by
+    /// virtual time, per-phase latency attribution in the stats, and
+    /// per-shard store counters.  Off (the default) records nothing and
+    /// is bit-identical — stats *and* trace — to the pre-obs engine
+    /// (pinned by a differential property test).
+    pub obs: bool,
 }
 
 impl Default for ServingConfig {
@@ -271,6 +277,7 @@ impl Default for ServingConfig {
             prefill_replicas: 1,
             admit_queue: 0,
             admit_tokens: 0,
+            obs: false,
         }
     }
 }
@@ -300,6 +307,7 @@ impl ServingConfig {
             ("prefill_replicas", json::num(self.prefill_replicas as f64)),
             ("admit_queue", json::num(self.admit_queue as f64)),
             ("admit_tokens", json::num(self.admit_tokens as f64)),
+            ("obs", Value::Bool(self.obs)),
         ])
     }
 
@@ -363,6 +371,7 @@ impl ServingConfig {
             prefill_replicas: n("prefill_replicas", d.prefill_replicas as f64)? as usize,
             admit_queue: n("admit_queue", d.admit_queue as f64)? as usize,
             admit_tokens: n("admit_tokens", d.admit_tokens as f64)? as usize,
+            obs: b("obs", d.obs)?,
         })
     }
 }
@@ -598,6 +607,7 @@ mod tests {
         assert!(!s.disagg, "homogeneous replicas by default");
         assert_eq!(s.prefill_replicas, 1);
         assert_eq!(s.admit_queue + s.admit_tokens, 0, "admission gate off by default");
+        assert!(!s.obs, "observability off (and bit-identical) by default");
         let w = WorkloadConfig::default();
         assert!(w.turns_min <= w.turns_max);
         assert!(w.qps > 0.0);
@@ -631,6 +641,7 @@ mod tests {
             cluster_routing: ClusterRouting::HashPrefix,
             admit_queue: 64,
             admit_tokens: 8192,
+            obs: true,
             ..Default::default()
         };
         let back = ServingConfig::from_json(&cfg.to_json()).unwrap();

@@ -50,6 +50,7 @@ use crate::config::{EvictionPolicy, ServingConfig};
 use crate::disagg::{DisaggHandle, Handoff, PrefillRequest, PrefillResponse, ReplicaRole};
 use crate::kvcache::{Alloc, KvCacheManager};
 use crate::metrics::ServingStats;
+use crate::obs::{ObsRecorder, SpanKind};
 use crate::sched::{self, CacheProbe, Queues, Scheduler};
 use crate::store::StoreHandle;
 use crate::trace::{Trace, TurnEvent};
@@ -113,6 +114,12 @@ pub struct Engine<E: Executor> {
     prefetch_seen: HashSet<(usize, usize, usize)>,
     stats: ServingStats,
     trace: Option<Trace>,
+    /// Observability recorder: `Some` iff `cfg.obs` — per-replica
+    /// virtual-time spans, counter samples and per-sequence phase
+    /// bookkeeping (see `crate::obs`).  `None` — the default — leaves
+    /// every obs branch dormant, which is what keeps `--obs off` runs
+    /// bit-identical (stats *and* trace) to the pre-obs engine.
+    obs: Option<ObsRecorder>,
 }
 
 /// Waiting-queue prefix scanned for prefetch candidates per step: deep
@@ -146,6 +153,7 @@ impl<E: Executor> Engine<E> {
         let kv = KvCacheManager::new(&cfg, kv_bytes_per_token, n_models);
         let sched = sched::make(cfg.sched_policy);
         let ovl = cfg.overlap.then(Overlap::new);
+        let obs = cfg.obs.then(|| ObsRecorder::new(0));
         Engine {
             cfg,
             exec,
@@ -165,12 +173,22 @@ impl<E: Executor> Engine<E> {
             prefetch_seen: HashSet::new(),
             stats: ServingStats::new(),
             trace: None,
+            obs,
         }
     }
 
     /// Record a per-turn event trace during `run` (see `trace::Trace`).
     pub fn enable_trace(&mut self) {
         self.trace = Some(Trace::new());
+    }
+
+    /// Cluster runs: tag the obs recorder's lane with this replica's
+    /// index (spans are exported one Perfetto process per replica).
+    /// No-op when `--obs off`.
+    pub fn set_obs_replica(&mut self, replica: usize) {
+        if let Some(o) = self.obs.as_mut() {
+            o.set_replica(replica);
+        }
     }
 
     /// Attach this engine's handle on a (possibly shared) tiered
@@ -204,6 +222,24 @@ impl<E: Executor> Engine<E> {
         self.enable_trace();
         let stats = self.run_inner(workload);
         (stats, self.trace.take().unwrap_or_default())
+    }
+
+    /// Like `run`, but also returns the obs recorder (`None` unless
+    /// the config enables `--obs`).
+    pub fn run_obs(mut self, workload: Vec<Workflow>) -> (ServingStats, Option<ObsRecorder>) {
+        let stats = self.run_inner(workload);
+        (stats, self.obs.take())
+    }
+
+    /// Like `run_traced`, but also returns the obs recorder (`None`
+    /// unless the config enables `--obs`).
+    pub fn run_traced_obs(
+        mut self,
+        workload: Vec<Workflow>,
+    ) -> (ServingStats, Trace, Option<ObsRecorder>) {
+        self.enable_trace();
+        let stats = self.run_inner(workload);
+        (stats, self.trace.take().unwrap_or_default(), self.obs.take())
     }
 
     /// The engine's KV cache manager (post-run inspection).
@@ -304,6 +340,15 @@ impl<E: Executor> Engine<E> {
                 .as_mut()
                 .unwrap()
                 .record(self.q.waiting.len() as f64);
+            // Counter samples use engine-local values only (queue depth,
+            // batch size, this replica's cumulative restored bytes) —
+            // never mid-run shared-store gauges, whose values depend on
+            // cross-replica interleaving and would break determinism.
+            if let Some(o) = self.obs.as_mut() {
+                o.counter(self.now, "queue_depth", self.q.waiting.len() as f64);
+                o.counter(self.now, "running", self.q.running.len() as f64);
+                o.counter(self.now, "restored_bytes", self.stats.store_restored_bytes as f64);
+            }
             let step_start = self.now;
             if self.cfg.overlap {
                 self.admit_overlap();
@@ -604,8 +649,11 @@ impl<E: Executor> Engine<E> {
                     Alloc::Ok(adm) => {
                         self.drop_snapshots(&adm.dropped_snapshots);
                         self.kv.swap.swap_in(bytes).expect("swap tier accounting");
+                        let picked_at = self.now;
                         self.now += self.exec.swap_in_cost(bytes);
                         self.next_seq_id += 1;
+                        let tokens = turn.prompt.len() as u64;
+                        self.obs_admit(seq_id, model_id, turn.ready_at, picked_at, tokens);
                         self.spawn_running(seq_id, turn, model_id, handle);
                         continue;
                     }
@@ -625,6 +673,7 @@ impl<E: Executor> Engine<E> {
                 Alloc::Ok(adm) => {
                     self.next_seq_id += 1;
                     self.drop_snapshots(&adm.dropped_snapshots);
+                    let picked_at = self.now;
                     // Charge PCIe time for blocks restored from swap.
                     if adm.swap_in_bytes > 0 {
                         self.now += self.exec.swap_in_cost(adm.swap_in_bytes);
@@ -677,6 +726,7 @@ impl<E: Executor> Engine<E> {
                         turn.from_handoff = false;
                         self.stats.decode_handoffs += 1;
                     }
+                    self.obs_admit(seq_id, model_id, turn.ready_at, picked_at, cached as u64);
                     let uncached = turn.prompt.len() - cached;
                     // The budget settles against the real admission
                     // outcome regardless of the policy's estimate.
@@ -696,6 +746,31 @@ impl<E: Executor> Engine<E> {
                     self.check_admissible_when_idle(&turn);
                     self.q.waiting.insert(idx, turn);
                     break;
+                }
+            }
+        }
+    }
+
+    /// Obs: open a sequence's phase bookkeeping at admission (emits the
+    /// queue span `ready_at → picked_at`) and attribute any serial
+    /// admission-side transfer — the clock advance from `picked_at` to
+    /// now — as a transfer span plus per-sequence stall.  No-op when
+    /// `--obs off`.
+    fn obs_admit(
+        &mut self,
+        seq_id: u64,
+        model_id: usize,
+        ready_at: f64,
+        picked_at: f64,
+        tokens: u64,
+    ) {
+        let now = self.now;
+        if let Some(o) = self.obs.as_mut() {
+            o.begin_seq(seq_id, model_id, ready_at, picked_at);
+            if now > picked_at {
+                o.span(SpanKind::Transfer, picked_at, now, seq_id as i64, model_id as i64, tokens);
+                if let Some(s) = o.seq_mut(seq_id) {
+                    s.stall += now - picked_at;
                 }
             }
         }
@@ -759,6 +834,7 @@ impl<E: Executor> Engine<E> {
                         self.next_seq_id += 1;
                         let dur = self.exec.swap_in_cost(bytes);
                         let now = self.now;
+                        self.obs_admit(seq_id, model_id, turn.ready_at, now, 0);
                         self.ovl
                             .as_mut()
                             .expect("overlap admission requires overlap state")
@@ -833,6 +909,7 @@ impl<E: Executor> Engine<E> {
                     if turn.was_preempted {
                         self.stats.recomputed_tokens += uncached as u64;
                     }
+                    self.obs_admit(seq_id, model_id, turn.ready_at, self.now, cached as u64);
                     if transfer > 0.0 {
                         // Privatize the prefix-cache snapshot across
                         // the in-flight window: a payload displacement
@@ -889,6 +966,27 @@ impl<E: Executor> Engine<E> {
                 let stalled_in_flight = stalled_total - t.stall_mark;
                 self.stats.overlapped_transfer_time +=
                     ((t.complete_at - t.issued_at) - stalled_in_flight).max(0.0);
+                if let Some(o) = self.obs.as_mut() {
+                    let (seq_id, model_id) = match &t.kind {
+                        TransferKind::SwapIn { turn, seq_id, .. }
+                        | TransferKind::StoreRestore { turn, seq_id, .. } => {
+                            (*seq_id, turn.model_id)
+                        }
+                    };
+                    o.span(
+                        SpanKind::Transfer,
+                        t.issued_at,
+                        t.complete_at,
+                        seq_id as i64,
+                        model_id as i64,
+                        0,
+                    );
+                    // The sequence waited out the whole flight, even
+                    // where other sequences' compute hid it replica-wide.
+                    if let Some(s) = o.seq_mut(seq_id) {
+                        s.stall += t.complete_at - t.issued_at;
+                    }
+                }
                 match t.kind {
                     TransferKind::SwapIn { turn, seq_id, handle } => {
                         let model_id = turn.model_id;
@@ -929,6 +1027,20 @@ impl<E: Executor> Engine<E> {
             .prefill(model_id, &turn.prompt, cached, base)
             .expect("prefill failed");
         self.now += duration;
+        if let Some(o) = self.obs.as_mut() {
+            o.span(
+                SpanKind::Prefill,
+                self.now - duration,
+                self.now,
+                seq_id as i64,
+                model_id as i64,
+                (turn.prompt.len() - cached) as u64,
+            );
+            if let Some(s) = o.seq_mut(seq_id) {
+                s.prefill_start = self.now - duration;
+                s.prefill_end = self.now;
+            }
+        }
         self.stats
             .time_to_first_token
             .as_mut()
@@ -983,6 +1095,15 @@ impl<E: Executor> Engine<E> {
         // from: a payload displacement (identical context re-published)
         // between now and the first chunk must not invalidate it.
         let base = base.map(|b| self.exec.snapshot(b));
+        // Obs: chunked prefill runs from admission to final-chunk
+        // promotion; fused-step compute spans are batch-level, so the
+        // per-sequence window lives in the bookkeeping alone.
+        if let Some(o) = self.obs.as_mut() {
+            if let Some(s) = o.seq_mut(seq_id) {
+                s.prefill_start = self.now;
+                s.prefill_end = self.now;
+            }
+        }
         self.q.running.push(RunningSeq {
             seq_id,
             wf_idx: turn.wf_idx,
@@ -1085,6 +1206,11 @@ impl<E: Executor> Engine<E> {
         // New store contents invalidate the prefetch scan's
         // already-probed verdicts (see `issue_prefetches`).
         self.prefetch_seen.clear();
+        // Obs: the write-back span covers submit → probe-visibility
+        // (context-level, not sequence-level: demotions publish too).
+        if let Some(o) = self.obs.as_mut() {
+            o.span(SpanKind::WriteBack, self.now, visible_at, -1, -1, aligned as u64);
+        }
         // Overlap mode: the D2H write-back becomes a background task —
         // visibility timing is unchanged (the store models it), but
         // the transfer shows up in the runtime's task counters and as
@@ -1262,6 +1388,9 @@ impl<E: Executor> Engine<E> {
             .collect();
         let dur = self.exec.decode(&mut slots).expect("decode failed");
         self.now += dur;
+        if let Some(o) = self.obs.as_mut() {
+            o.span(SpanKind::Decode, self.now - dur, self.now, -1, -1, slots.len() as u64);
+        }
         for (seq, slot) in self.q.running.iter_mut().zip(&slots) {
             debug_assert_eq!(seq.seq_id, slot.seq_id);
             seq.cache = slot.cache;
@@ -1400,6 +1529,12 @@ impl<E: Executor> Engine<E> {
         let dur = self.exec.fused_step(&mut chunks, &mut slots).expect("fused step failed");
         self.now += dur;
         self.stats.prefill_chunks += chunks.len() as u64;
+        // Obs: one batch-level compute span per fused step, labelled by
+        // the dominant work (any chunk ⇒ prefill; else pure decode).
+        if let Some(o) = self.obs.as_mut() {
+            let kind = if chunks.is_empty() { SpanKind::Decode } else { SpanKind::Prefill };
+            o.span(kind, self.now - dur, self.now, -1, -1, (chunks.len() + slots.len()) as u64);
+        }
         let chunk_out: Vec<(u64, usize, Option<u64>, Option<u32>)> =
             chunks.iter().map(|c| (c.seq_id, c.end(), c.cache, c.first_token)).collect();
         drop(chunks);
@@ -1470,6 +1605,11 @@ impl<E: Executor> Engine<E> {
                 .as_mut()
                 .unwrap()
                 .record((self.now - ready_at).max(0.0));
+            if let Some(o) = self.obs.as_mut() {
+                if let Some(s) = o.seq_mut(seq_id) {
+                    s.prefill_end = self.now;
+                }
+            }
             // The first token occupies one slot, exactly like the
             // atomic path; under extreme pressure the sequence preempts
             // itself (prefill is complete here, so the normal
@@ -1521,6 +1661,24 @@ impl<E: Executor> Engine<E> {
             h.pin(&seq.prompt);
         }
         self.stats.prefill_handoffs += 1;
+        // Obs: the handoff span covers respond → the decode side's
+        // admissibility horizon.  Prefill-role sequences never reach
+        // `finish_turn`, so their bookkeeping closes here (the decode
+        // replica attributes the turn's phases on its side).
+        if let Some(o) = self.obs.as_mut() {
+            if let Some(s) = o.seq_mut(seq.seq_id) {
+                s.prefill_end = self.now;
+            }
+            o.span(
+                SpanKind::Handoff,
+                self.now,
+                admissible_at,
+                seq.seq_id as i64,
+                seq.model_id as i64,
+                seq.prompt.len() as u64,
+            );
+            o.finish_seq(seq.seq_id);
+        }
         let job = &self.prefill_jobs[seq.wf_idx];
         self.disagg.as_ref().expect("prefill handoff requires disagg").respond(
             job.reply_to,
@@ -1559,6 +1717,19 @@ impl<E: Executor> Engine<E> {
     fn finish_turn(&mut self, seq: RunningSeq) {
         debug_assert!(seq.prefill.is_none(), "prefilling seq cannot retire");
         self.stats.completed_turns += 1;
+        // Obs: close the sequence's bookkeeping and attribute the turn's
+        // latency across queue/prefill/stall/decode.  `None` (obs off)
+        // leaves the trace event's breakdown at 0.0 — the legacy
+        // serialization shape.
+        let now = self.now;
+        let phases = self.obs.as_mut().and_then(|o| o.finish_seq(seq.seq_id)).map(|s| {
+            (
+                (s.picked_at - s.ready_at).max(0.0),
+                (s.prefill_end - s.prefill_start).max(0.0),
+                s.stall,
+                (now - s.prefill_end).max(0.0),
+            )
+        });
         if let Some(trace) = &mut self.trace {
             trace.record(TurnEvent {
                 wf_id: self.wfs[seq.wf_idx].spec.id,
@@ -1569,6 +1740,9 @@ impl<E: Executor> Engine<E> {
                 prompt_tokens: seq.prompt.len(),
                 cached_tokens: seq.cached_tokens,
                 generated_tokens: seq.generated.len(),
+                queue_wait: phases.map_or(0.0, |p| p.0),
+                prefill_time: phases.map_or(0.0, |p| p.1),
+                stall_time: phases.map_or(0.0, |p| p.2),
             });
         }
         self.stats
@@ -1576,6 +1750,9 @@ impl<E: Executor> Engine<E> {
             .as_mut()
             .unwrap()
             .record((self.now - seq.ready_at).max(0.0));
+        if let Some((queue, prefill, stall, decode)) = phases {
+            self.stats.record_phases(seq.model_id, queue, prefill, stall, decode);
+        }
         let seq_id = seq.seq_id;
         let wf_idx = seq.wf_idx;
         let turn_idx = seq.turn_idx;
@@ -1722,6 +1899,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn obs_records_spans_counters_and_phase_attribution() {
+        let wcfg = WorkloadConfig {
+            pattern: AgentPattern::ReAct,
+            n_models: 4,
+            qps: 0.5,
+            n_requests: 16,
+            routing: Routing::RoundRobin,
+            seed: 7,
+            ..Default::default()
+        };
+        let scfg = ServingConfig { obs: true, ..Default::default() };
+        let exec = SimExecutor::new(CostModel::default(), scfg.mode);
+        let engine = Engine::new(scfg, 2048, 4, exec);
+        let (stats, obs) = engine.run_obs(generate(&wcfg));
+        let obs = obs.expect("obs on returns a recorder");
+        for kind in [SpanKind::Queue, SpanKind::Prefill, SpanKind::Decode] {
+            assert!(obs.spans().iter().any(|s| s.kind == kind), "{kind:?} span present");
+        }
+        assert!(!obs.counters().is_empty(), "per-step counter samples present");
+        assert!(!stats.phases.is_empty(), "per-model phase histograms recorded");
+        let turns: u64 = stats.phases.iter().map(|p| p.decode.count()).sum();
+        assert_eq!(turns, stats.completed_turns, "one phase sample per retired turn");
+        // Obs off: run_obs returns no recorder and records no phases.
+        let exec = SimExecutor::new(CostModel::default(), ServingMode::Icarus);
+        let engine = Engine::new(ServingConfig::default(), 2048, 4, exec);
+        let (stats, obs) = engine.run_obs(generate(&wcfg));
+        assert!(obs.is_none());
+        assert!(stats.phases.is_empty());
     }
 
     #[test]

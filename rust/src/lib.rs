@@ -22,8 +22,10 @@
 //!     transfers with compute (see `runtime::exec`; `--overlap on`),
 //!     the serving front end — an Inference-Protocol-style HTTP
 //!     service with streaming responses, admission control, and an
-//!     open-loop heavy-tailed traffic generator (see `serve`) — and
-//!     the PJRT runtime that executes the artifacts.
+//!     open-loop heavy-tailed traffic generator (see `serve`) — the
+//!     unified observability layer (deterministic virtual-time spans,
+//!     Perfetto export, per-phase latency attribution; see `obs`;
+//!     `--obs on`) — and the PJRT runtime that executes the artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation; the `icarus` binary is self-contained afterwards.
@@ -42,6 +44,7 @@ pub mod engine;
 pub mod json;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
@@ -62,6 +65,7 @@ pub use engine::executor::{CostModel, Executor, SimExecutor};
 pub use engine::Engine;
 pub use kvcache::KvCacheManager;
 pub use metrics::ServingStats;
+pub use obs::ObsRecorder;
 pub use sched::Scheduler;
 pub use serve::{AdmissionLimits, Frontend, LiveGate, OpenLoopConfig, OpenLoopGen};
 pub use store::{SnapshotStore, StoreStats, StoreTier, TieredStore};

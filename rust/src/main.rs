@@ -36,6 +36,17 @@
 //!            diurnal bursts (`--diurnal-amp`, `--diurnal-period`).
 //!            `--slo-request/--slo-ttft/--slo-itl` set the SLOs behind
 //!            the printed goodput and attainment report.
+//!            `--obs on` records phase-attributed spans on the virtual
+//!            clock (queue, prefill, transfer, handoff, decode,
+//!            write-back) plus per-phase latency histograms and
+//!            per-shard store counters in the stats JSON;
+//!            `--trace-out t.json` additionally exports the spans as a
+//!            Chrome trace-event (Perfetto) timeline, one lane per
+//!            replica.  Off (the default) is bit-identical — stats and
+//!            trace — to the obs-less engine.  When an obs run fails
+//!            (e.g. a poisoned store shard), the tail of each replica's
+//!            span log is dumped to `obs_flight.json` (override with
+//!            `--flight-out`).
 //!   sweep  — QPS sweep for one (mode, N) setting (the figures' rows).
 //!            `--threads T` runs the sweep points across T worker
 //!            threads (near-linear wall-clock speedup for the grids;
@@ -62,6 +73,8 @@
 //!       --cluster-routing prefill_decode --store-host-bytes 268435456
 //!   icarus serve --openloop on --qps 4.0 --requests 512 --replicas 4 \
 //!       --admit-queue 64 --slo-ttft 2.0
+//!   icarus serve --obs on --trace-out trace.json --replicas 2 \
+//!       --store-host-bytes 268435456 --qps 1.5
 //!   icarus sweep --mode baseline --models 8 --qps-list 0.2,0.4,0.6,0.8
 //!   icarus sweep --threads 4 --json sweep.json
 //!   icarus frontend --port 8080 --models 4 --admit-queue 128
@@ -155,6 +168,7 @@ fn serving_config(a: &Args) -> Result<ServingConfig> {
         prefill_replicas: a.usize("prefill-replicas", 1)?,
         admit_queue: a.usize("admit-queue", 0)?,
         admit_tokens: a.usize("admit-tokens", 0)?,
+        obs: a.get("obs").unwrap_or("off") == "on",
     })
 }
 
@@ -200,6 +214,10 @@ fn write_json_flag(a: &Args, text: &str) -> Result<()> {
 fn cmd_serve(a: &Args) -> Result<()> {
     let scfg = serving_config(a)?;
     let wcfg = workload_config(a)?;
+    anyhow::ensure!(
+        a.get("trace-out").is_none() || scfg.obs,
+        "--trace-out requires --obs on (spans are recorded only under obs)"
+    );
     let open_loop = a.get("openloop").unwrap_or("off") == "on";
     let (workload, workload_json) = if open_loop {
         let ocfg = openloop_config(a, wcfg.clone())?;
@@ -209,6 +227,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     };
     let mut per_replica_json = None;
     let mut store_json = None;
+    let mut store_shards_json = None;
     let stats = match a.get("executor").unwrap_or("sim") {
         "sim" => {
             // serve-small KV bytes/token unless overridden.
@@ -228,13 +247,34 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 // the store degraded to static misses mid-run: the
                 // numbers after that point are not the configured
                 // system.  Fail cleanly instead of reporting them.
-                anyhow::ensure!(
-                    store.lock_poisoned == 0,
-                    "snapshot store degraded mid-run: a replica panicked while holding a \
-                     shard lock ({} poisoned-lock encounters); results are invalid",
-                    store.lock_poisoned
-                );
+                if store.lock_poisoned > 0 {
+                    // Failure flight recorder: dump the tail of each
+                    // replica's span log next to the error, so the
+                    // failure's immediate history is inspectable
+                    // without a full trace export.
+                    if !out.obs.is_empty() {
+                        let path = a.get("flight-out").unwrap_or("obs_flight.json");
+                        let doc = icarus::obs::flight_json(&out.obs);
+                        std::fs::write(path, doc.to_string_pretty())?;
+                        eprintln!("wrote failure flight recording to {path}");
+                    }
+                    anyhow::bail!(
+                        "snapshot store degraded mid-run: a replica panicked while holding \
+                         a shard lock ({} poisoned-lock encounters); results are invalid",
+                        store.lock_poisoned
+                    );
+                }
                 store_json = Some(store.to_json());
+            }
+            if !out.store_shards.is_empty() {
+                store_shards_json = Some(Value::Arr(
+                    out.store_shards.iter().map(|s| s.to_json()).collect(),
+                ));
+            }
+            if let Some(path) = a.get("trace-out") {
+                let doc = icarus::obs::export_chrome_trace(&out.obs);
+                std::fs::write(path, doc.to_string_pretty())?;
+                println!("wrote perfetto trace to {path}");
             }
             out.merged
         }
@@ -257,6 +297,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 !scfg.disagg,
                 "--disagg on needs --executor sim (disaggregation splits a \
                  multi-replica cluster; PJRT runs a single engine)"
+            );
+            anyhow::ensure!(
+                !scfg.obs,
+                "--obs on needs --executor sim (spans are keyed by deterministic \
+                 virtual time; PJRT durations are measured wall time)"
             );
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let config = a.get("config").unwrap_or("serve-small");
@@ -305,6 +350,9 @@ fn cmd_serve(a: &Args) -> Result<()> {
     if let Some(store) = store_json {
         entries.push(("store", store));
     }
+    if let Some(shards) = store_shards_json {
+        entries.push(("store_shards", shards));
+    }
     let text = json::obj(entries).to_string_pretty();
     println!("{text}");
     write_json_flag(a, &text)
@@ -325,6 +373,7 @@ fn cmd_frontend(a: &Args) -> Result<()> {
     println!("icarus frontend listening on http://{}", server.addr());
     println!("  GET  /v2/health/ready   readiness probe");
     println!("  GET  /v2/stats          admission-gate counters");
+    println!("  GET  /v2/metrics        Prometheus text exposition");
     println!("  POST /v2/models/{{m}}/infer   generate (\"stream\": true for ndjson)");
     println!("  POST /v2/jobs/simulate  run a virtual-time sim job");
     loop {

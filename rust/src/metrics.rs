@@ -74,6 +74,13 @@ impl Histogram {
         }
     }
 
+    /// Exact sum of the recorded samples — what a Prometheus
+    /// `_seconds_total` counter wants (tracked outside the buckets, so
+    /// no bucket-resolution error).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     /// Largest recorded sample (0 when empty).
     pub fn max(&self) -> f64 {
         if self.total == 0 {
@@ -139,6 +146,55 @@ impl Histogram {
         self.sum += other.sum;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
+    }
+}
+
+/// Per-model phase attribution of turn latency (`--obs on` only): the
+/// queue / prefill / stall / decode decomposition the paper's fig4/fig5
+/// latency figures are built from.  One instance per model id; all four
+/// histograms merge exactly, so cluster-level phase attribution is
+/// bit-identical to recording every sample on one replica.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelPhases {
+    /// Ready → admission pick (scheduler queue wait).
+    pub queue: Histogram,
+    /// Prefill compute (atomic, or first to last chunk).
+    pub prefill: Histogram,
+    /// Transfer time compute did not hide (serial restores, swap-ins,
+    /// gated overlap windows).
+    pub stall: Histogram,
+    /// First token → retirement (decode residency).
+    pub decode: Histogram,
+}
+
+impl ModelPhases {
+    /// Fold another model's phase histograms into this one (exact).
+    pub fn merge(&mut self, other: &ModelPhases) {
+        self.queue.merge(&other.queue);
+        self.prefill.merge(&other.prefill);
+        self.stall.merge(&other.stall);
+        self.decode.merge(&other.decode);
+    }
+
+    /// Summary JSON for results files: per phase, the quantiles plus
+    /// the exact time sum (the Prometheus counter form).
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::{num, obj};
+        let h = |h: &Histogram| {
+            obj(vec![
+                ("p50", num(h.p50())),
+                ("p95", num(h.p95())),
+                ("mean", num(h.mean())),
+                ("sum", num(h.sum())),
+                ("count", num(h.count() as f64)),
+            ])
+        };
+        obj(vec![
+            ("queue", h(&self.queue)),
+            ("prefill", h(&self.prefill)),
+            ("stall", h(&self.stall)),
+            ("decode", h(&self.decode)),
+        ])
     }
 }
 
@@ -252,6 +308,10 @@ pub struct ServingStats {
     pub peak_kv_bytes: u64,
     /// Simulated (or measured) seconds from run start to last retirement.
     pub wall_seconds: f64,
+    /// Per-model phase attribution, indexed by model id (`--obs on`
+    /// only; empty — and absent from the JSON dump — when obs is off,
+    /// keeping obs-off stats bit-identical to the pre-obs engine).
+    pub phases: Vec<ModelPhases>,
 }
 
 impl ServingStats {
@@ -319,6 +379,33 @@ impl ServingStats {
         self.rejected_requests += other.rejected_requests;
         self.peak_kv_bytes += other.peak_kv_bytes;
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+        if self.phases.len() < other.phases.len() {
+            self.phases.resize_with(other.phases.len(), ModelPhases::default);
+        }
+        for (dst, src) in self.phases.iter_mut().zip(&other.phases) {
+            dst.merge(src);
+        }
+    }
+
+    /// Record one retired turn's phase decomposition under `model`,
+    /// growing the per-model table on first sight (`--obs on` only —
+    /// the engine never calls this with obs off).
+    pub fn record_phases(
+        &mut self,
+        model: usize,
+        queue: f64,
+        prefill: f64,
+        stall: f64,
+        decode: f64,
+    ) {
+        if self.phases.len() <= model {
+            self.phases.resize_with(model + 1, ModelPhases::default);
+        }
+        let p = &mut self.phases[model];
+        p.queue.record(queue);
+        p.prefill.record(prefill);
+        p.stall.record(stall);
+        p.decode.record(decode);
     }
 
     /// Generated tokens per wall-clock second.
@@ -393,7 +480,7 @@ impl ServingStats {
                 ("count", num(h.count() as f64)),
             ])
         };
-        obj(vec![
+        let mut entries = vec![
             ("request_latency", h(&self.request_latency)),
             ("turn_latency", h(&self.turn_latency)),
             ("ttft", h(&self.time_to_first_token)),
@@ -429,7 +516,14 @@ impl ServingStats {
             ("throughput_tok_s", num(self.throughput_tok_s())),
             ("cache_hit_rate", num(self.cache_hit_rate())),
             ("wall_seconds", num(self.wall_seconds)),
-        ])
+        ];
+        if !self.phases.is_empty() {
+            entries.push((
+                "phases",
+                crate::json::Value::Arr(self.phases.iter().map(ModelPhases::to_json).collect()),
+            ));
+        }
+        obj(entries)
     }
 }
 
@@ -562,6 +656,39 @@ mod tests {
         let v = a.to_json();
         assert_eq!(v.get("submitted_requests").unwrap().as_u64(), Some(15));
         assert_eq!(v.get("rejected_requests").unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn phase_attribution_merges_exactly_and_stays_out_of_json_when_empty() {
+        // Empty phases (obs off): no "phases" key — obs-off stats JSON
+        // is byte-identical to the pre-obs format.
+        let off = ServingStats::new();
+        assert!(!off.to_json().to_string_pretty().contains("phases"));
+        // Recording grows the per-model table and lands per phase.
+        let mut a = ServingStats::new();
+        a.record_phases(2, 0.1, 0.2, 0.05, 0.4);
+        a.record_phases(0, 0.3, 0.1, 0.0, 0.2);
+        assert_eq!(a.phases.len(), 3);
+        assert_eq!(a.phases[2].queue.count(), 1);
+        assert_eq!(a.phases[1].queue.count(), 0, "untouched model stays empty");
+        assert!((a.phases[2].decode.sum() - 0.4).abs() < 1e-12);
+        // Merge is position-wise and extends to the longer table.
+        let mut b = ServingStats::new();
+        b.record_phases(2, 0.7, 0.2, 0.1, 0.3);
+        let mut merged = ServingStats::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.phases[2].queue.count(), 2);
+        assert!((merged.phases[2].stall.sum() - 0.15).abs() < 1e-12);
+        // Identity: merging into fresh stats reproduces the phases too.
+        let mut fresh = ServingStats::new();
+        fresh.merge(&a);
+        assert_eq!(fresh, a);
+        // Non-empty phases do show up in the dump, with exact sums.
+        let v = a.to_json();
+        let phases = v.get("phases").and_then(crate::json::Value::as_arr).expect("phases");
+        assert_eq!(phases.len(), 3);
+        assert_eq!(phases[2].at(&["queue", "count"]).unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Unified observability: deterministic span recording, Chrome
+//! trace-event (Perfetto) export, and a failure flight recorder.
+//!
+//! The engine is a discrete-event loop over a *virtual* clock, so every
+//! span here is keyed by virtual time: two runs with the same seed and
+//! config produce byte-identical exports, regardless of wall-clock
+//! jitter, thread scheduling, or `--store-shards`.  That determinism is
+//! pinned by `prop_obs_deterministic`; the converse — that recording
+//! *nothing* costs nothing — is pinned by `prop_obs_off_bit_identical`
+//! (the recorder is an `Option` on the engine, `None` unless `--obs on`,
+//! exactly like the trace/store/overlap handles).
+//!
+//! One [`ObsRecorder`] per replica.  Spans fall on a small set of
+//! per-replica tracks:
+//!
+//! | track | contents | event shape |
+//! |-------|----------|-------------|
+//! | compute | prefill + decode steps (serial in virtual time) | `B`/`E` pairs |
+//! | queue | per-sequence wait from `ready_at` to admission | `X` (may overlap) |
+//! | transfer | store restores, swap-ins, overlap windows | `X` |
+//! | handoff | disagg prefill→decode handoff horizons | `X` |
+//! | write_back | store publish visibility windows | `X` |
+//!
+//! plus `C` counter samples (queue depth, running batch, cumulative
+//! restored bytes) — all engine-local values, never mid-run samples of
+//! shared-store gauges, which would be interleaving-dependent.
+//!
+//! The flight recorder is the tail of the span log: when a run fails
+//! (e.g. the store reports `lock_poisoned`), the last
+//! [`FLIGHT_SPANS`] spans per replica are dumped as JSON so the
+//! failure's immediate history is inspectable without a full trace.
+
+use std::collections::HashMap;
+
+use crate::json::{self, Value};
+
+/// Spans kept per replica by the failure flight recorder (the tail of
+/// the span log dumped on run failure).
+pub const FLIGHT_SPANS: usize = 256;
+
+/// Lifecycle phase a span covers.  `as_str` names are the stable
+/// vocabulary shared by the Perfetto export, `tools/check_trace.py`,
+/// and the docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Waiting in the scheduler queue: `ready_at` → admission pick.
+    Queue,
+    /// A prefill step (atomic, or one fused chunked-prefill step).
+    Prefill,
+    /// A modeled data movement: store restore, swap-in/out, or an
+    /// overlap transfer window.
+    Transfer,
+    /// Disaggregated prefill→decode handoff: respond → admissible.
+    Handoff,
+    /// A decode step over the running batch.
+    Decode,
+    /// Store publish: submit → cross-replica visibility horizon.
+    WriteBack,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used in exports and validators.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Transfer => "transfer",
+            SpanKind::Handoff => "handoff",
+            SpanKind::Decode => "decode",
+            SpanKind::WriteBack => "write_back",
+        }
+    }
+
+    /// Per-replica track (Chrome `tid`) this kind renders on.  Compute
+    /// steps share track 0 — they are serial in virtual time, so the
+    /// lane nests `B`/`E` pairs without overlap; the other kinds get a
+    /// track each and render as `X` complete events (which may overlap
+    /// legitimately, e.g. many queued sequences).
+    pub fn track(self) -> u64 {
+        match self {
+            SpanKind::Prefill | SpanKind::Decode => 0,
+            SpanKind::Queue => 1,
+            SpanKind::Transfer => 2,
+            SpanKind::Handoff => 3,
+            SpanKind::WriteBack => 4,
+        }
+    }
+}
+
+/// Chrome `tid` of the counter track (separate from every span track).
+const COUNTER_TRACK: u64 = 5;
+
+/// One recorded span, in virtual seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Phase this span covers.
+    pub kind: SpanKind,
+    /// Virtual start time (seconds).
+    pub start: f64,
+    /// Virtual end time (seconds); `>= start`.
+    pub end: f64,
+    /// Sequence id the span belongs to, or -1 for batch-level spans.
+    pub seq: i64,
+    /// Model id, or -1 when the span spans models (batch-level decode).
+    pub model: i64,
+    /// Tokens the span moved or computed (0 when not meaningful).
+    pub tokens: u64,
+}
+
+impl Span {
+    /// JSON form used by the flight-recorder dump.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s(self.kind.as_str())),
+            ("start", json::num(self.start)),
+            ("end", json::num(self.end)),
+            ("seq", json::num(self.seq as f64)),
+            ("model", json::num(self.model as f64)),
+            ("tokens", json::num(self.tokens as f64)),
+        ])
+    }
+}
+
+/// One counter sample on a replica's counter track.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    /// Virtual sample time (seconds).
+    pub t: f64,
+    /// Counter name (stable static vocabulary).
+    pub name: &'static str,
+    /// Sampled value.
+    pub value: f64,
+}
+
+/// Per-sequence phase bookkeeping, kept in a side table inside the
+/// recorder (not on `RunningSeq`) so the obs-off engine layout — and
+/// the frozen `legacy_engine` differential — is untouched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqObs {
+    /// Model the sequence runs on.
+    pub model_id: usize,
+    /// Arrival time of the turn (virtual seconds).
+    pub ready_at: f64,
+    /// Time the scheduler picked the turn for admission (before any
+    /// admission-side transfer is charged).
+    pub picked_at: f64,
+    /// First virtual instant of prefill compute.
+    pub prefill_start: f64,
+    /// Virtual instant the last prompt token was encoded (first token
+    /// emitted); decode residency runs from here to completion.
+    pub prefill_end: f64,
+    /// Transfer time charged to this sequence that compute did not
+    /// hide: serial restores, swap-ins, and the gated share of overlap
+    /// windows.
+    pub stall: f64,
+}
+
+/// Deterministic per-replica span/counter recorder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsRecorder {
+    replica: usize,
+    spans: Vec<Span>,
+    counters: Vec<CounterSample>,
+    seq: HashMap<u64, SeqObs>,
+}
+
+impl ObsRecorder {
+    /// Fresh recorder for `replica`'s lane.
+    pub fn new(replica: usize) -> Self {
+        ObsRecorder { replica, spans: Vec::new(), counters: Vec::new(), seq: HashMap::new() }
+    }
+
+    /// Replica lane this recorder feeds.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Re-key the lane (the cluster assigns replica ids after engine
+    /// construction).
+    pub fn set_replica(&mut self, replica: usize) {
+        self.replica = replica;
+    }
+
+    /// Record one span.  Zero-length spans are kept (they still mark an
+    /// instant); negative lengths are clamped to zero.
+    pub fn span(
+        &mut self,
+        kind: SpanKind,
+        start: f64,
+        end: f64,
+        seq: i64,
+        model: i64,
+        tokens: u64,
+    ) {
+        self.spans.push(Span { kind, start, end: end.max(start), seq, model, tokens });
+    }
+
+    /// Record one counter sample.
+    pub fn counter(&mut self, t: f64, name: &'static str, value: f64) {
+        self.counters.push(CounterSample { t, name, value });
+    }
+
+    /// Open per-sequence bookkeeping at admission pick time and emit
+    /// the queue span (`ready_at` → `picked_at`).
+    pub fn begin_seq(&mut self, seq_id: u64, model_id: usize, ready_at: f64, picked_at: f64) {
+        self.span(SpanKind::Queue, ready_at, picked_at, seq_id as i64, model_id as i64, 0);
+        self.seq.insert(
+            seq_id,
+            SeqObs {
+                model_id,
+                ready_at,
+                picked_at,
+                prefill_start: picked_at,
+                prefill_end: picked_at,
+                stall: 0.0,
+            },
+        );
+    }
+
+    /// Mutable view of a sequence's bookkeeping (None once finished, or
+    /// for sequences admitted before `--obs` — impossible in practice).
+    pub fn seq_mut(&mut self, seq_id: u64) -> Option<&mut SeqObs> {
+        self.seq.get_mut(&seq_id)
+    }
+
+    /// Close out a sequence's bookkeeping, returning it for phase
+    /// attribution.
+    pub fn finish_seq(&mut self, seq_id: u64) -> Option<SeqObs> {
+        self.seq.remove(&seq_id)
+    }
+
+    /// All recorded spans, in emission (virtual-time) order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// All recorded counter samples, in emission order.
+    pub fn counters(&self) -> &[CounterSample] {
+        &self.counters
+    }
+}
+
+/// Event-phase sort rank: metadata first, then `E` before `B` so two
+/// back-to-back compute spans sharing a boundary timestamp close the
+/// old span before opening the new one (keeps lane depth ≤ 1 for
+/// validators and viewers alike).
+fn rank(ph: &str) -> u8 {
+    match ph {
+        "M" => 0,
+        "E" => 1,
+        "B" => 2,
+        "X" => 3,
+        _ => 4, // "C"
+    }
+}
+
+/// Render recorders as one Chrome trace-event / Perfetto JSON document:
+/// one process (`pid`) per replica, the track layout described in the
+/// module docs, timestamps in microseconds of virtual time.  Events are
+/// explicitly sorted (ts, pid, tid, phase rank) so the export is
+/// byte-deterministic.
+pub fn export_chrome_trace(recorders: &[ObsRecorder]) -> Value {
+    // (ts_us, pid, tid, rank, event)
+    let mut events: Vec<(f64, u64, u64, u8, Value)> = Vec::new();
+    let meta = |pid: u64, tid: u64, what: &str, name: &str| {
+        json::obj(vec![
+            ("ph", json::s("M")),
+            ("pid", json::num(pid as f64)),
+            ("tid", json::num(tid as f64)),
+            ("name", json::s(what)),
+            ("args", json::obj(vec![("name", json::s(name))])),
+        ])
+    };
+    for r in recorders {
+        let pid = r.replica() as u64;
+        events.push((0.0, pid, 0, 0, meta(pid, 0, "process_name", &format!("replica {pid}"))));
+        for (tid, name) in
+            [(0, "compute"), (1, "queue"), (2, "transfer"), (3, "handoff"), (4, "write_back")]
+        {
+            events.push((0.0, pid, tid, 0, meta(pid, tid, "thread_name", name)));
+        }
+        for sp in &r.spans {
+            let tid = sp.kind.track();
+            let ts = sp.start * 1e6;
+            let dur = (sp.end - sp.start) * 1e6;
+            let args = json::obj(vec![
+                ("seq", json::num(sp.seq as f64)),
+                ("model", json::num(sp.model as f64)),
+                ("tokens", json::num(sp.tokens as f64)),
+            ]);
+            // Zero-width compute spans render as `X` (dur 0): a `B`/`E`
+            // pair at one timestamp would sort E-before-B (the rank that
+            // keeps *adjacent* spans' boundaries closed) and unbalance
+            // the lane.
+            let be = tid == 0 && sp.end > sp.start;
+            let base = vec![
+                ("ph", json::s(if be { "B" } else { "X" })),
+                ("pid", json::num(pid as f64)),
+                ("tid", json::num(tid as f64)),
+                ("ts", json::num(ts)),
+                ("name", json::s(sp.kind.as_str())),
+                ("args", args),
+            ];
+            if be {
+                events.push((ts, pid, tid, rank("B"), json::obj(base)));
+                events.push((
+                    sp.end * 1e6,
+                    pid,
+                    tid,
+                    rank("E"),
+                    json::obj(vec![
+                        ("ph", json::s("E")),
+                        ("pid", json::num(pid as f64)),
+                        ("tid", json::num(tid as f64)),
+                        ("ts", json::num(sp.end * 1e6)),
+                    ]),
+                ));
+            } else {
+                let mut ev = base;
+                ev.push(("dur", json::num(dur)));
+                events.push((ts, pid, tid, rank("X"), json::obj(ev)));
+            }
+        }
+        for c in &r.counters {
+            let ts = c.t * 1e6;
+            events.push((
+                ts,
+                pid,
+                COUNTER_TRACK,
+                rank("C"),
+                json::obj(vec![
+                    ("ph", json::s("C")),
+                    ("pid", json::num(pid as f64)),
+                    ("tid", json::num(COUNTER_TRACK as f64)),
+                    ("ts", json::num(ts)),
+                    ("name", json::s(c.name)),
+                    ("args", json::obj(vec![(c.name, json::num(c.value))])),
+                ]),
+            ));
+        }
+    }
+    events.sort_by(|a, b| {
+        a.0.total_cmp(&b.0)
+            .then(a.1.cmp(&b.1))
+            .then(a.2.cmp(&b.2))
+            .then(a.3.cmp(&b.3))
+    });
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("traceEvents", Value::Arr(events.into_iter().map(|e| e.4).collect())),
+    ])
+}
+
+/// The failure flight recording: the last [`FLIGHT_SPANS`] spans per
+/// replica, as a JSON document the CLI dumps to disk when a run fails.
+pub fn flight_json(recorders: &[ObsRecorder]) -> Value {
+    json::obj(vec![(
+        "replicas",
+        Value::Arr(
+            recorders
+                .iter()
+                .map(|r| {
+                    let tail = &r.spans[r.spans.len().saturating_sub(FLIGHT_SPANS)..];
+                    json::obj(vec![
+                        ("replica", json::num(r.replica() as f64)),
+                        ("spans", Value::Arr(tail.iter().map(Span::to_json).collect())),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> ObsRecorder {
+        let mut r = ObsRecorder::new(0);
+        r.begin_seq(7, 2, 0.5, 1.0);
+        r.span(SpanKind::Transfer, 1.0, 1.25, 7, 2, 128);
+        r.seq_mut(7).unwrap().stall += 0.25;
+        r.span(SpanKind::Prefill, 1.25, 2.0, 7, 2, 512);
+        r.span(SpanKind::Decode, 2.0, 2.5, -1, -1, 4);
+        r.span(SpanKind::WriteBack, 2.5, 2.75, 7, 2, 512);
+        r.span(SpanKind::Handoff, 2.5, 2.6, 7, 2, 0);
+        r.counter(2.0, "queue_depth", 3.0);
+        r
+    }
+
+    #[test]
+    fn seq_bookkeeping_round_trips() {
+        let mut r = sample_recorder();
+        let s = r.finish_seq(7).expect("tracked");
+        assert_eq!(s.model_id, 2);
+        assert_eq!(s.ready_at, 0.5);
+        assert_eq!(s.picked_at, 1.0);
+        assert_eq!(s.stall, 0.25);
+        assert!(r.finish_seq(7).is_none(), "finish removes");
+        // The queue span was emitted at begin_seq.
+        assert!(r.spans().iter().any(|sp| sp.kind == SpanKind::Queue && sp.start == 0.5));
+    }
+
+    #[test]
+    fn export_is_sorted_balanced_and_deterministic() {
+        let r = sample_recorder();
+        let doc = export_chrome_trace(std::slice::from_ref(&r));
+        let events = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents");
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut depth = 0i64;
+        let (mut b, mut e) = (0, 0);
+        for ev in events {
+            let ts = ev.get("ts").and_then(Value::as_f64).unwrap_or(0.0);
+            assert!(ts >= last_ts, "ts monotone across the export");
+            last_ts = ts;
+            match ev.get("ph").and_then(Value::as_str).unwrap() {
+                "B" => {
+                    b += 1;
+                    depth += 1;
+                    assert!(depth <= 1, "compute lane must not self-overlap");
+                }
+                "E" => {
+                    e += 1;
+                    depth -= 1;
+                    assert!(depth >= 0);
+                }
+                "X" => {
+                    assert!(ev.get("dur").and_then(Value::as_f64).unwrap() >= 0.0);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(b, e, "B/E balanced");
+        assert_eq!(b, 2, "prefill + decode compute spans");
+        // Byte determinism: same recorder, same document.
+        let again = export_chrome_trace(std::slice::from_ref(&r));
+        assert_eq!(doc.to_string_pretty(), again.to_string_pretty());
+    }
+
+    #[test]
+    fn zero_width_compute_spans_do_not_unbalance_the_lane() {
+        let mut r = ObsRecorder::new(0);
+        r.span(SpanKind::Prefill, 1.0, 1.0, 7, 0, 0);
+        let doc = export_chrome_trace(std::slice::from_ref(&r));
+        let text = doc.to_string_pretty();
+        assert!(!text.contains("\"B\"") && !text.contains("\"E\""));
+        let events = doc.get("traceEvents").and_then(Value::as_arr).unwrap();
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .expect("zero-width span exported as X");
+        assert_eq!(x.get("dur").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(x.get("tid").and_then(Value::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn export_names_every_kind_and_lane() {
+        let r = sample_recorder();
+        let text = export_chrome_trace(std::slice::from_ref(&r)).to_string_pretty();
+        for kind in ["queue", "prefill", "transfer", "handoff", "decode", "write_back"] {
+            assert!(text.contains(&format!("\"name\": \"{kind}\"")), "missing {kind}");
+        }
+        assert!(text.contains("replica 0"), "process lane named");
+        assert!(text.contains("queue_depth"), "counter track present");
+    }
+
+    #[test]
+    fn flight_ring_is_bounded_to_the_tail() {
+        let mut r = ObsRecorder::new(3);
+        for i in 0..(FLIGHT_SPANS + 50) {
+            r.span(SpanKind::Decode, i as f64, i as f64 + 0.5, -1, -1, 1);
+        }
+        let doc = flight_json(std::slice::from_ref(&r));
+        let spans = doc
+            .at(&["replicas"])
+            .and_then(Value::as_arr)
+            .and_then(|rs| rs[0].get("spans"))
+            .and_then(Value::as_arr)
+            .expect("spans");
+        assert_eq!(spans.len(), FLIGHT_SPANS);
+        // The ring keeps the *most recent* spans.
+        let first = spans[0].get("start").and_then(Value::as_f64).unwrap();
+        assert_eq!(first, 50.0);
+    }
+}

@@ -22,9 +22,17 @@
 //! | Method | Path                      | Purpose                       |
 //! |--------|---------------------------|-------------------------------|
 //! | GET    | `/v2/health/ready`        | readiness probe               |
-//! | GET    | `/v2/stats`               | gate counters snapshot        |
+//! | GET    | `/v2/stats`               | gate counters + last-job view |
+//! | GET    | `/v2/metrics`             | Prometheus text exposition    |
 //! | POST   | `/v2/models/{m}/infer`    | generate (stream or full)     |
 //! | POST   | `/v2/jobs/simulate`       | run a sim job, return stats   |
+//!
+//! `/v2/metrics` serves the live gate counters plus a snapshot of the
+//! most recent simulate job in Prometheus text format (version 0.0.4),
+//! so a scraper pointed at the front end sees shedding and phase
+//! attribution without parsing results JSON.  When the last job ran
+//! with `serving.obs = true`, `/v2/stats` additionally carries the
+//! per-shard store counters and per-model phase histograms.
 //!
 //! Admission semantics are shared with the engine's virtual-time gate
 //! (`ServingConfig::{admit_queue, admit_tokens}`); see [`gate`] for
@@ -41,13 +49,14 @@ pub use http::{Handler, Request, Response, Server};
 pub use openloop::{generate_open_loop, OpenLoopConfig, OpenLoopGen};
 pub use protocol::InferRequest;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ClusterStats};
 use crate::config::{ServingConfig, WorkloadConfig};
 use crate::engine::executor::CostModel;
 use crate::json::{self, Value};
 use crate::rng::Rng;
+use crate::store::ShardStats;
 use crate::tokenizer::Tokenizer;
 use crate::workload;
 
@@ -70,6 +79,10 @@ pub struct Frontend {
     gate: Arc<LiveGate>,
     tokenizer: Tokenizer,
     n_models: usize,
+    /// Stats of the most recent `POST /v2/jobs/simulate` run — the
+    /// source for the job-scoped blocks of `/v2/stats` and
+    /// `/v2/metrics`.  `None` until the first job completes.
+    last_job: Mutex<Option<ClusterStats>>,
 }
 
 impl Frontend {
@@ -80,6 +93,7 @@ impl Frontend {
             gate: Arc::new(LiveGate::new(limits)),
             tokenizer: Tokenizer::new(2048),
             n_models: n_models.max(1),
+            last_job: Mutex::new(None),
         }
     }
 
@@ -128,7 +142,10 @@ impl Frontend {
 
     fn simulate(&self, req: &Request) -> Response {
         match run_simulate_job(req) {
-            Ok(reply) => Response::json(200, &reply),
+            Ok((reply, out)) => {
+                *self.last_job.lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
+                Response::json(200, &reply)
+            }
             Err(e) => Response::json(400, &protocol::error_body(&e.to_string())),
         }
     }
@@ -136,7 +153,7 @@ impl Frontend {
     fn stats(&self) -> Response {
         let c = self.gate.counters();
         let l = self.gate.limits();
-        let body = json::obj(vec![
+        let mut entries = vec![
             ("submitted", json::num(c.submitted as f64)),
             ("rejected", json::num(c.rejected as f64)),
             ("inflight", json::num(c.inflight as f64)),
@@ -144,9 +161,146 @@ impl Frontend {
             ("admit_queue", json::num(l.max_queue as f64)),
             ("admit_tokens", json::num(l.max_tokens as f64)),
             ("n_models", json::num(self.n_models as f64)),
-        ])
-        .to_string_pretty();
+        ];
+        // Job-scoped diagnostics: only present once a simulate job ran
+        // with the matching features on, so the base response shape is
+        // untouched for plain protocol deployments.
+        if let Some(job) = self.last_job.lock().unwrap_or_else(|e| e.into_inner()).as_ref() {
+            if !job.store_shards.is_empty() {
+                entries.push((
+                    "store_shards",
+                    Value::Arr(job.store_shards.iter().map(ShardStats::to_json).collect()),
+                ));
+            }
+            if !job.merged.phases.is_empty() {
+                entries.push((
+                    "phases",
+                    Value::Arr(job.merged.phases.iter().map(|p| p.to_json()).collect()),
+                ));
+            }
+        }
+        let body = json::obj(entries).to_string_pretty();
         Response::json(200, &body)
+    }
+
+    /// `GET /v2/metrics`: Prometheus text exposition.  Gate counters
+    /// are live (and monotone where named `_total`); job metrics are a
+    /// snapshot of the last simulate run.
+    fn metrics(&self) -> Response {
+        let c = self.gate.counters();
+        let mut out = String::new();
+        let one = |out: &mut String, name: &str, kind: &str, help: &str, v: f64| {
+            prom_block(out, name, kind, help, &[(String::new(), v)]);
+        };
+        one(
+            &mut out,
+            "icarus_gate_submitted_total",
+            "counter",
+            "Requests that reached the admission gate.",
+            c.submitted as f64,
+        );
+        one(
+            &mut out,
+            "icarus_gate_rejected_total",
+            "counter",
+            "Requests shed at the admission gate.",
+            c.rejected as f64,
+        );
+        one(
+            &mut out,
+            "icarus_gate_inflight",
+            "gauge",
+            "Requests currently holding an admission.",
+            c.inflight as f64,
+        );
+        one(
+            &mut out,
+            "icarus_gate_inflight_tokens",
+            "gauge",
+            "Prompt tokens held by in-flight requests.",
+            c.inflight_tokens as f64,
+        );
+        if let Some(job) = self.last_job.lock().unwrap_or_else(|e| e.into_inner()).as_ref() {
+            let m = &job.merged;
+            one(
+                &mut out,
+                "icarus_job_completed_requests",
+                "gauge",
+                "Requests completed by the last simulate job.",
+                m.completed_requests as f64,
+            );
+            one(
+                &mut out,
+                "icarus_job_generated_tokens",
+                "gauge",
+                "Tokens generated by the last simulate job.",
+                m.generated_tokens as f64,
+            );
+            if !m.phases.is_empty() {
+                let mut samples = Vec::new();
+                for (model, p) in m.phases.iter().enumerate() {
+                    for (phase, h) in [
+                        ("queue", &p.queue),
+                        ("prefill", &p.prefill),
+                        ("stall", &p.stall),
+                        ("decode", &p.decode),
+                    ] {
+                        samples
+                            .push((format!("{{model=\"{model}\",phase=\"{phase}\"}}"), h.sum()));
+                    }
+                }
+                prom_block(
+                    &mut out,
+                    "icarus_phase_seconds_total",
+                    "counter",
+                    "Virtual seconds per request phase over the last simulate job (obs on).",
+                    &samples,
+                );
+            }
+            if !job.store_shards.is_empty() {
+                let shard_samples = |f: &dyn Fn(&ShardStats) -> u64| -> Vec<(String, f64)> {
+                    job.store_shards
+                        .iter()
+                        .enumerate()
+                        .map(|(i, s)| (format!("{{shard=\"{i}\"}}"), f(s) as f64))
+                        .collect()
+                };
+                prom_block(
+                    &mut out,
+                    "icarus_store_shard_hits",
+                    "gauge",
+                    "Blocks restored per store shard over the last simulate job.",
+                    &shard_samples(&|s| s.hits),
+                );
+                prom_block(
+                    &mut out,
+                    "icarus_store_shard_evictions",
+                    "gauge",
+                    "Entries evicted per store shard over the last simulate job.",
+                    &shard_samples(&|s| s.evictions),
+                );
+                prom_block(
+                    &mut out,
+                    "icarus_store_shard_contended",
+                    "gauge",
+                    "Contended lock acquisitions per store shard over the last simulate job.",
+                    &shard_samples(&|s| s.contended),
+                );
+            }
+        }
+        Response::full(200, "text/plain; version=0.0.4", out.into_bytes())
+    }
+}
+
+/// Append one metric family in Prometheus text exposition format:
+/// `# HELP` / `# TYPE` header, then one sample line per label set
+/// (the label string is either empty or a complete `{k="v",...}`).
+fn prom_block(out: &mut String, name: &str, kind: &str, help: &str, samples: &[(String, f64)]) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (labels, value) in samples {
+        let _ = writeln!(out, "{name}{labels} {value}");
     }
 }
 
@@ -155,6 +309,7 @@ impl Handler for Frontend {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/v2/health/ready") => Response::json(200, r#"{"ready": true}"#),
             ("GET", "/v2/stats") => self.stats(),
+            ("GET", "/v2/metrics") => self.metrics(),
             ("POST", "/v2/jobs/simulate") => self.simulate(&req),
             ("POST", path) => match parse_model_path(path) {
                 Some(model) => self.infer(model, req),
@@ -239,11 +394,13 @@ impl Iterator for TokenStream {
 }
 
 /// Parse and run one `POST /v2/jobs/simulate` body; returns the reply
-/// JSON.  The body may carry `serving` ([`ServingConfig::from_json`]),
-/// either `open_loop` ([`OpenLoopConfig::from_json`]) or `workload`
+/// JSON plus the raw cluster stats (deposited as the front end's
+/// last-job snapshot).  The body may carry `serving`
+/// ([`ServingConfig::from_json`]), either `open_loop`
+/// ([`OpenLoopConfig::from_json`]) or `workload`
 /// ([`WorkloadConfig::from_json`]), `kv_bytes_per_token`, and `slo`
 /// (`request_s` / `ttft_s` / `itl_s`) — everything defaults.
-fn run_simulate_job(req: &Request) -> anyhow::Result<String> {
+fn run_simulate_job(req: &Request) -> anyhow::Result<(String, ClusterStats)> {
     let body = Value::parse(req.body_str()?)?;
     let scfg = match body.get("serving") {
         Some(v) => ServingConfig::from_json(v)?,
@@ -281,7 +438,7 @@ fn run_simulate_job(req: &Request) -> anyhow::Result<String> {
 
     let out = Cluster::new(scfg.clone(), kv_bpt, n_models).run_sim(CostModel::default(), wl);
     let m = &out.merged;
-    Ok(json::obj(vec![
+    let reply = json::obj(vec![
         ("serving", scfg.to_json()),
         ("workload", wl_json),
         ("cluster", out.to_json()),
@@ -297,7 +454,8 @@ fn run_simulate_job(req: &Request) -> anyhow::Result<String> {
             ]),
         ),
     ])
-    .to_string_pretty())
+    .to_string_pretty();
+    Ok((reply, out))
 }
 
 #[cfg(test)]
@@ -456,6 +614,95 @@ mod tests {
         let (status, _, _) =
             http_request(s.addr(), "POST", "/v2/jobs/simulate", Some(both)).unwrap();
         assert_eq!(status, 400);
+    }
+
+    /// The value of metric `name` in a Prometheus text body (first
+    /// sample line, any label set).
+    fn sample(text: &str, name: &str) -> f64 {
+        text.lines()
+            .find(|l| {
+                !l.starts_with('#')
+                    && l.split(|ch: char| ch == '{' || ch == ' ').next() == Some(name)
+            })
+            .and_then(|l| l.rsplit(' ').next())
+            .unwrap_or_else(|| panic!("no sample for {name}"))
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn metrics_serve_valid_prometheus_text_with_monotone_counters() {
+        let (s, _) = start(unlimited());
+        let (status, headers, body) = http_request(s.addr(), "GET", "/v2/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(
+            headers
+                .iter()
+                .any(|(k, v)| k == "content-type" && v.starts_with("text/plain")),
+            "{headers:?}"
+        );
+        let first = String::from_utf8(body).unwrap();
+        // Exposition-format shape: every family announces # HELP then
+        // # TYPE before its samples, and every sample parses as
+        // `name[{labels}] value`.
+        let mut helped = std::collections::HashSet::new();
+        let mut typed = std::collections::HashSet::new();
+        for line in first.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                helped.insert(rest.split(' ').next().unwrap().to_string());
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap();
+                assert!(helped.contains(name), "TYPE before HELP for {name}");
+                assert!(matches!(it.next(), Some("counter" | "gauge")), "{line}");
+                typed.insert(name.to_string());
+            } else if !line.is_empty() {
+                let name = line.split(|ch: char| ch == '{' || ch == ' ').next().unwrap();
+                assert!(typed.contains(name), "sample without TYPE: {line}");
+                let value = line.rsplit(' ').next().unwrap();
+                assert!(value.parse::<f64>().is_ok(), "unparseable sample: {line}");
+            }
+        }
+        let before = sample(&first, "icarus_gate_submitted_total");
+        let infer = r#"{"tokens": [1, 2], "max_tokens": 2}"#;
+        http_request(s.addr(), "POST", "/v2/models/0/infer", Some(infer)).unwrap();
+        let (_, _, after) = http_request(s.addr(), "GET", "/v2/metrics", None).unwrap();
+        let after = String::from_utf8(after).unwrap();
+        assert!(
+            sample(&after, "icarus_gate_submitted_total") > before,
+            "counters must be monotone across scrapes"
+        );
+        assert_eq!(sample(&after, "icarus_gate_inflight"), 0.0, "admission released");
+    }
+
+    #[test]
+    fn obs_job_surfaces_phases_and_shard_stats() {
+        let (s, _) = start(unlimited());
+        // No job yet: the scrape has gate families only.
+        let (_, _, bare) = http_request(s.addr(), "GET", "/v2/metrics", None).unwrap();
+        assert!(!String::from_utf8(bare).unwrap().contains("icarus_job_"));
+        let body = r#"{
+            "serving": {"replicas": 2, "obs": true, "store_host_bytes": 134217728},
+            "workload": {"n_requests": 16, "seed": 5}
+        }"#;
+        let (status, _, reply) =
+            http_request(s.addr(), "POST", "/v2/jobs/simulate", Some(body)).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&reply));
+        let (_, _, stats) = http_request(s.addr(), "GET", "/v2/stats", None).unwrap();
+        let v = Value::parse(std::str::from_utf8(&stats).unwrap()).unwrap();
+        assert!(
+            !v.get("store_shards").unwrap().as_arr().unwrap().is_empty(),
+            "per-shard store block after an obs job"
+        );
+        assert!(
+            !v.get("phases").unwrap().as_arr().unwrap().is_empty(),
+            "phase summary after an obs job"
+        );
+        let (_, _, m) = http_request(s.addr(), "GET", "/v2/metrics", None).unwrap();
+        let m = String::from_utf8(m).unwrap();
+        assert!(m.contains("icarus_phase_seconds_total{model=\"0\",phase=\"queue\"}"), "{m}");
+        assert!(m.contains("icarus_store_shard_hits{shard=\"0\"}"), "{m}");
+        assert!(sample(&m, "icarus_job_completed_requests") > 0.0);
     }
 
     #[test]

@@ -261,6 +261,46 @@ impl StoreStats {
     }
 }
 
+/// Per-shard counters of a sharded store (`--obs on` surfacing only —
+/// deliberately **not** part of [`StoreStats`]: aggregate stats are
+/// shard-count-invariant, pinned by `prop_store_shards_bit_identical`,
+/// while this breakdown is exactly the shard-layout-dependent view that
+/// invariant forbids there).  The contention counters are how a
+/// misconfigured `--store-shards` shows up: one hot shard with high
+/// `contended` means the hash partitioning is fighting the access
+/// pattern.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardStats {
+    /// Blocks restored out of this shard.
+    pub hits: u64,
+    /// Block entries published into this shard.
+    pub publishes: u64,
+    /// Entries evicted (demoted or dropped) out of this shard.
+    pub evictions: u64,
+    /// Read-lock acquisitions on this shard.
+    pub read_locks: u64,
+    /// Write-lock acquisitions on this shard.
+    pub write_locks: u64,
+    /// Lock acquisitions that found the shard held and had to block —
+    /// the striping-efficacy signal.
+    pub contended: u64,
+}
+
+impl ShardStats {
+    /// Dump the shard's counters for results files.
+    pub fn to_json(&self) -> Value {
+        use json::num;
+        json::obj(vec![
+            ("hits", num(self.hits as f64)),
+            ("publishes", num(self.publishes as f64)),
+            ("evictions", num(self.evictions as f64)),
+            ("read_locks", num(self.read_locks as f64)),
+            ("write_locks", num(self.write_locks as f64)),
+            ("contended", num(self.contended as f64)),
+        ])
+    }
+}
+
 /// The store abstraction the engine talks to: content-addressed KV
 /// snapshot entries behind tiered byte budgets (see the module docs;
 /// [`TieredStore`] is the shipped implementation).
@@ -399,6 +439,14 @@ pub trait SnapshotStore: Send + Sync {
 
     /// Snapshot of the aggregate store counters.
     fn stats(&self) -> StoreStats;
+
+    /// Snapshot of per-shard counters, indexed by shard (empty for
+    /// unsharded stores — the default keeps existing implementations
+    /// untouched).  Surfaced only under `--obs on`; see [`ShardStats`]
+    /// for why this lives outside [`SnapshotStore::stats`].
+    fn shard_stats(&self) -> Vec<ShardStats> {
+        Vec::new()
+    }
 }
 
 #[cfg(test)]

@@ -68,13 +68,15 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError};
 
 use crate::kvcache::block::BlockKey;
 use crate::tokens::TokenBuf;
 
 use super::fence::{ClockFence, DEFAULT_WINDOW};
-use super::{chain_keys, SnapshotStore, StoreHit, StoreStats, StoreTier, TierAccountingError};
+use super::{
+    chain_keys, ShardStats, SnapshotStore, StoreHit, StoreStats, StoreTier, TierAccountingError,
+};
 
 /// Block-entry key (see [`BlockKey`]): the rolling hash chain through
 /// this block plus the token depth it ends at (the depth disambiguates
@@ -190,6 +192,34 @@ fn bump(c: &AtomicU64) {
     c.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Per-shard counters ([`ShardStats`] is the snapshot form).  Kept
+/// outside [`Counters`] and outside `stats()`: the aggregate view is
+/// shard-count-invariant by contract, this breakdown is deliberately
+/// not.  All relaxed atomics — a handful of uncontended adds per store
+/// operation, never a lock.
+#[derive(Debug, Default)]
+struct ShardCounters {
+    hits: AtomicU64,
+    publishes: AtomicU64,
+    evictions: AtomicU64,
+    read_locks: AtomicU64,
+    write_locks: AtomicU64,
+    contended: AtomicU64,
+}
+
+impl ShardCounters {
+    fn snapshot(&self) -> ShardStats {
+        ShardStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            publishes: self.publishes.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            read_locks: self.read_locks.load(Ordering::Relaxed),
+            write_locks: self.write_locks.load(Ordering::Relaxed),
+            contended: self.contended.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Shard guards held for one store operation, indexed by shard id
 /// (`None` for shards the operation does not touch).  Built in
 /// ascending shard order, always — the store's whole deadlock-freedom
@@ -245,6 +275,9 @@ pub struct TieredStore {
     /// Global LRU tick source — one total recency order across shards.
     next_tick: AtomicU64,
     c: Counters,
+    /// Per-shard hit/publish/eviction/lock counters, indexed like
+    /// `shards` (observability surfacing; see [`ShardCounters`]).
+    per_shard: Box<[ShardCounters]>,
     /// Set once a poisoned shard lock is seen; all later operations
     /// degrade to miss/no-op (see the module docs).
     dead: AtomicBool,
@@ -296,6 +329,7 @@ impl TieredStore {
             disk: AtomicBudget::new(disk_bytes),
             next_tick: AtomicU64::new(0),
             c: Counters::default(),
+            per_shard: (0..n).map(|_| ShardCounters::default()).collect(),
             dead: AtomicBool::new(false),
             block_tokens,
             block_bytes: block_tokens as u64 * kv_bytes_per_token,
@@ -348,14 +382,25 @@ impl TieredStore {
     }
 
     /// Write-lock the shards in `mask`, ascending.  `None` (after
-    /// flipping the store dead) when any lock is poisoned.
+    /// flipping the store dead) when any lock is poisoned.  Each
+    /// acquisition tries the lock first so the per-shard `contended`
+    /// counter sees exactly the acquisitions that had to block.
     fn write_shards(&self, mask: u64) -> Option<WriteGuards<'_>> {
         let mut g = Vec::with_capacity(self.shards.len());
         for (i, s) in self.shards.iter().enumerate() {
             if mask >> i & 1 == 1 {
-                match s.write() {
+                bump(&self.per_shard[i].write_locks);
+                let locked = match s.try_write() {
+                    Ok(guard) => Ok(guard),
+                    Err(TryLockError::WouldBlock) => {
+                        bump(&self.per_shard[i].contended);
+                        s.write().map_err(|_| ())
+                    }
+                    Err(TryLockError::Poisoned(_)) => Err(()),
+                };
+                match locked {
                     Ok(guard) => g.push(Some(guard)),
-                    Err(_) => {
+                    Err(()) => {
                         self.mark_poisoned();
                         return None;
                     }
@@ -368,14 +413,24 @@ impl TieredStore {
     }
 
     /// Read-lock the shards in `mask`, ascending (probes: readers
-    /// never serialize against each other).
+    /// never serialize against each other, so `contended` here counts
+    /// only reader-vs-writer collisions).
     fn read_shards(&self, mask: u64) -> Option<ReadGuards<'_>> {
         let mut g = Vec::with_capacity(self.shards.len());
         for (i, s) in self.shards.iter().enumerate() {
             if mask >> i & 1 == 1 {
-                match s.read() {
+                bump(&self.per_shard[i].read_locks);
+                let locked = match s.try_read() {
+                    Ok(guard) => Ok(guard),
+                    Err(TryLockError::WouldBlock) => {
+                        bump(&self.per_shard[i].contended);
+                        s.read().map_err(|_| ())
+                    }
+                    Err(TryLockError::Poisoned(_)) => Err(()),
+                };
+                match locked {
                     Ok(guard) => g.push(Some(guard)),
-                    Err(_) => {
+                    Err(()) => {
                         self.mark_poisoned();
                         return None;
                     }
@@ -455,6 +510,7 @@ impl TieredStore {
         .expect("tier accounting");
         self.c.entries.fetch_sub(1, Ordering::Relaxed);
         bump(&self.c.dropped_entries);
+        bump(&self.per_shard[self.shard_of(key)].evictions);
         self.c.bytes_dropped.fetch_add(self.block_bytes, Ordering::Relaxed);
     }
 
@@ -494,6 +550,7 @@ impl TieredStore {
             shard.lru[tier_idx(StoreTier::Host)].remove(&tick);
             shard.lru[tier_idx(StoreTier::Disk)].insert(tick, key);
             bump(&self.c.demotions_to_disk);
+            bump(&self.per_shard[self.shard_of(key)].evictions);
         } else {
             if protected.contains(&key) {
                 return false;
@@ -545,6 +602,7 @@ impl SnapshotStore for TieredStore {
         let mut disk_bytes = 0;
         let mut remote = false;
         for k in &chain[first..blocks] {
+            bump(&self.per_shard[self.shard_of(*k)].hits);
             let e = lk
                 .shard_mut(self.shard_of(*k))
                 .entries
@@ -700,6 +758,7 @@ impl SnapshotStore for TieredStore {
             );
             shard.lru[tier_idx(tier)].insert(tick, key);
             self.c.entries.fetch_add(1, Ordering::Relaxed);
+            bump(&self.per_shard[sid].publishes);
             self.c.bytes_published.fetch_add(self.block_bytes, Ordering::Relaxed);
             placed.insert(key);
             inserted += 1;
@@ -850,6 +909,10 @@ impl SnapshotStore for TieredStore {
             lock_poisoned: self.c.lock_poisoned.load(Ordering::Relaxed),
         }
     }
+
+    fn shard_stats(&self) -> Vec<ShardStats> {
+        self.per_shard.iter().map(ShardCounters::snapshot).collect()
+    }
 }
 
 /// One replica's view of the shared store: the store `Arc`, the
@@ -920,7 +983,12 @@ impl StoreHandle {
     }
 
     /// See [`SnapshotStore::restore_chain`] (fences at `now` first).
-    pub fn begin_restore(&self, prompt: &TokenBuf, min_tokens: usize, now: f64) -> Option<StoreHit> {
+    pub fn begin_restore(
+        &self,
+        prompt: &TokenBuf,
+        min_tokens: usize,
+        now: f64,
+    ) -> Option<StoreHit> {
         let chain = self.chain(prompt);
         self.sync(now);
         self.store.restore_chain(&chain, min_tokens, now, self.replica)
@@ -963,6 +1031,12 @@ impl StoreHandle {
     pub fn stats(&self) -> StoreStats {
         self.store.stats()
     }
+
+    /// Snapshot of the shared store's per-shard counters (empty for
+    /// unsharded implementations; see [`ShardStats`]).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.store.shard_stats()
+    }
 }
 
 impl Drop for StoreHandle {
@@ -1003,6 +1077,35 @@ mod tests {
             st.host_used + st.disk_used + st.bytes_dropped,
             "every published byte is resident or dropped"
         );
+    }
+
+    #[test]
+    fn shard_counters_track_publishes_hits_and_evictions() {
+        let s = TieredStore::with_shards(16 * 1024, 0, BT, BPT, 4);
+        assert_eq!(s.shard_stats().len(), 4);
+        let ctx = toks(48, 0); // 3 blocks
+        publish_now(&s, &ctx, 0.0, 0);
+        let st = s.shard_stats();
+        assert_eq!(st.iter().map(|x| x.publishes).sum::<u64>(), 3, "one per block");
+        assert!(st.iter().map(|x| x.write_locks).sum::<u64>() > 0);
+        assert_eq!(st.iter().map(|x| x.contended).sum::<u64>(), 0, "single thread");
+        s.begin_restore(&ctx, 0, LATER, 1);
+        let st = s.shard_stats();
+        assert_eq!(st.iter().map(|x| x.hits).sum::<u64>(), 3, "one per restored block");
+        // Peeks take read locks only.
+        s.peek(&ctx, LATER);
+        assert!(s.shard_stats().iter().map(|x| x.read_locks).sum::<u64>() > 0);
+        // Overflowing a host-only store drops entries: evictions land
+        // on the shard that owned the victim.
+        for salt in 1..40u32 {
+            publish_now(&s, &toks(32, salt * 1000), salt as f64, 0);
+        }
+        assert!(
+            s.shard_stats().iter().map(|x| x.evictions).sum::<u64>() > 0,
+            "pressure must evict"
+        );
+        // The aggregate view stays shard-blind: no per-shard fields.
+        assert_eq!(s.stats().publishes + s.stats().dedup_publishes, 40);
     }
 
     #[test]

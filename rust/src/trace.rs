@@ -27,6 +27,16 @@ pub struct TurnEvent {
     pub cached_tokens: usize,
     /// Tokens the turn generated.
     pub generated_tokens: usize,
+    /// Seconds spent waiting in the scheduler queue before admission.
+    /// Populated only under `--obs on`; 0.0 otherwise (and when reading
+    /// trace files written before the breakdown existed).
+    pub queue_wait: f64,
+    /// Seconds of prefill compute (atomic, or first to last chunk).
+    /// Obs-only, like [`TurnEvent::queue_wait`].
+    pub prefill_time: f64,
+    /// Seconds of transfer time compute did not hide (serial restores,
+    /// swap-ins, gated overlap windows).  Obs-only.
+    pub stall_time: f64,
 }
 
 impl TurnEvent {
@@ -35,9 +45,11 @@ impl TurnEvent {
         self.completed_at - self.ready_at
     }
 
-    /// Serialize the event for trace files.
+    /// Serialize the event for trace files.  The phase-breakdown keys
+    /// are emitted only when any of them is non-zero, so obs-off traces
+    /// stay byte-identical to the pre-breakdown format.
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut entries = vec![
             ("wf", json::num(self.wf_id as f64)),
             ("turn", json::num(self.turn_idx as f64)),
             ("model", json::num(self.model_id as f64)),
@@ -46,11 +58,20 @@ impl TurnEvent {
             ("prompt_tokens", json::num(self.prompt_tokens as f64)),
             ("cached_tokens", json::num(self.cached_tokens as f64)),
             ("generated_tokens", json::num(self.generated_tokens as f64)),
-        ])
+        ];
+        if self.queue_wait != 0.0 || self.prefill_time != 0.0 || self.stall_time != 0.0 {
+            entries.push(("queue_wait", json::num(self.queue_wait)));
+            entries.push(("prefill_time", json::num(self.prefill_time)));
+            entries.push(("stall_time", json::num(self.stall_time)));
+        }
+        json::obj(entries)
     }
 
     /// Inverse of [`TurnEvent::to_json`] (None on malformed input).
+    /// Backward compatible: trace files that predate the phase
+    /// breakdown simply lack the keys, which read back as 0.0.
     pub fn from_json(v: &Value) -> Option<TurnEvent> {
+        let opt = |key: &str| v.get(key).and_then(Value::as_f64).unwrap_or(0.0);
         Some(TurnEvent {
             wf_id: v.get("wf")?.as_u64()?,
             turn_idx: v.get("turn")?.as_usize()?,
@@ -60,6 +81,9 @@ impl TurnEvent {
             prompt_tokens: v.get("prompt_tokens")?.as_usize()?,
             cached_tokens: v.get("cached_tokens")?.as_usize()?,
             generated_tokens: v.get("generated_tokens")?.as_usize()?,
+            queue_wait: opt("queue_wait"),
+            prefill_time: opt("prefill_time"),
+            stall_time: opt("stall_time"),
         })
     }
 }
@@ -145,6 +169,9 @@ mod tests {
             prompt_tokens: 10,
             cached_tokens: 4,
             generated_tokens: 8,
+            queue_wait: 0.0,
+            prefill_time: 0.0,
+            stall_time: 0.0,
         }
     }
 
@@ -186,6 +213,40 @@ mod tests {
         let back = Trace::load(&path).unwrap();
         assert_eq!(back.events, t.events);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn breakdown_fields_round_trip_and_stay_out_of_legacy_shape() {
+        // Zero breakdown (obs off): the JSON shape is the pre-breakdown
+        // one — no new keys — and reads back as zeroes.
+        let legacy = ev(1, 0.5, 2);
+        let dump = legacy.to_json().to_string_pretty();
+        assert!(!dump.contains("queue_wait") && !dump.contains("stall_time"));
+        assert_eq!(TurnEvent::from_json(&legacy.to_json()).unwrap(), legacy);
+        // Non-zero breakdown round-trips exactly.
+        let mut full = ev(2, 0.9, 0);
+        full.queue_wait = 0.125;
+        full.prefill_time = 0.5;
+        full.stall_time = 0.0625;
+        let dump = full.to_json().to_string_pretty();
+        assert!(dump.contains("queue_wait") && dump.contains("prefill_time"));
+        assert_eq!(TurnEvent::from_json(&full.to_json()).unwrap(), full);
+    }
+
+    #[test]
+    fn from_json_accepts_pre_breakdown_trace_files() {
+        // A literal event as PR ≤ 9 trace files wrote it: no breakdown
+        // keys at all.  Must parse, with the new fields defaulting to 0.
+        let old = Value::parse(
+            r#"{"wf": 3, "turn": 1, "model": 2, "ready_at": 1.5, "completed_at": 2.25,
+                "prompt_tokens": 64, "cached_tokens": 16, "generated_tokens": 32}"#,
+        )
+        .unwrap();
+        let e = TurnEvent::from_json(&old).expect("legacy shape parses");
+        assert_eq!(e.wf_id, 3);
+        assert_eq!(e.queue_wait, 0.0);
+        assert_eq!(e.prefill_time, 0.0);
+        assert_eq!(e.stall_time, 0.0);
     }
 
     #[test]

@@ -1083,6 +1083,11 @@ mod legacy_engine {
                 prompt_tokens: seq.prompt.len(),
                 cached_tokens: seq.cached_tokens,
                 generated_tokens: seq.generated.len(),
+                // The frozen reference predates the obs layer; the
+                // breakdown fields stay at their obs-off value.
+                queue_wait: 0.0,
+                prefill_time: 0.0,
+                stall_time: 0.0,
             });
             self.stats
                 .turn_latency
@@ -2117,6 +2122,120 @@ fn prop_openloop_deterministic() {
         assert_eq!(s1.merged, s2.merged, "seed {seed}: stats run-to-run deterministic");
         assert_eq!(s1.per_replica, s2.per_replica, "seed {seed}: per-replica stats");
         assert_eq!(t1.events, t2.events, "seed {seed}: trace run-to-run deterministic");
+    }
+}
+
+/// The observability gate is provably inert: `--obs on` only
+/// *observes* the schedule, so stats and trace at the same seed are
+/// bit-identical to the off run modulo the data obs adds (per-model
+/// phase histograms; per-turn breakdown fields), and the obs-off
+/// results JSON keeps its exact pre-obs shape — no `phases`, no
+/// `store_shards` keys, no recorders — across modes, store on/off,
+/// overlap and replica counts.
+#[test]
+fn prop_obs_off_bit_identical() {
+    use icarus::cluster::Cluster;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(23_000 + seed);
+        let mode = if rng.bool(0.5) { ServingMode::Icarus } else { ServingMode::Baseline };
+        let base = ServingConfig {
+            mode,
+            kv_pool_bytes: (8 + rng.below(48)) << 20,
+            replicas: 1 + rng.below(3) as usize,
+            store_host_bytes: if rng.bool(0.5) { 0 } else { 256 << 20 },
+            overlap: rng.bool(0.5),
+            ..Default::default()
+        };
+        let obs_on = ServingConfig { obs: true, ..base.clone() };
+        let wcfg = WorkloadConfig {
+            n_models: 1 + rng.below(6) as usize,
+            qps: 0.3 + rng.f64(),
+            n_requests: 24,
+            seed: 900 + seed,
+            ..Default::default()
+        };
+        let wl = generate(&wcfg);
+        let (off, off_t) = Cluster::new(base, 2048, wcfg.n_models)
+            .run_sim_traced(CostModel::default(), wl.clone());
+        let (on, on_t) =
+            Cluster::new(obs_on, 2048, wcfg.n_models).run_sim_traced(CostModel::default(), wl);
+        // Stats: identical except the phase histograms obs adds.
+        assert!(off.merged.phases.is_empty(), "seed {seed}: no phase data off");
+        assert!(!on.merged.phases.is_empty(), "seed {seed}: phase data on");
+        let mut scrubbed = on.merged.clone();
+        scrubbed.phases.clear();
+        assert_eq!(off.merged, scrubbed, "seed {seed}: stats bit-identical modulo phases");
+        for (o, n) in off.per_replica.iter().zip(&on.per_replica) {
+            let mut n = n.clone();
+            n.phases.clear();
+            assert_eq!(*o, n, "seed {seed}: per-replica stats bit-identical modulo phases");
+        }
+        // Trace: identical except the per-turn breakdown fields.
+        assert_eq!(off_t.events.len(), on_t.events.len(), "seed {seed}: trace length");
+        for (o, n) in off_t.events.iter().zip(&on_t.events) {
+            assert!(
+                o.queue_wait == 0.0 && o.prefill_time == 0.0 && o.stall_time == 0.0,
+                "seed {seed}: breakdown must stay zero with obs off"
+            );
+            let mut n = n.clone();
+            n.queue_wait = 0.0;
+            n.prefill_time = 0.0;
+            n.stall_time = 0.0;
+            assert_eq!(*o, n, "seed {seed}: trace bit-identical modulo breakdown");
+        }
+        // Off leaves no obs residue in the results JSON.
+        assert!(off.obs.is_empty() && off.store_shards.is_empty(), "seed {seed}: no recorders");
+        assert_eq!(on.obs.len(), on.per_replica.len(), "seed {seed}: one lane per replica");
+        let off_json = off.to_json().to_string_pretty();
+        assert!(
+            !off_json.contains("phases") && !off_json.contains("store_shards"),
+            "seed {seed}: obs-off JSON must keep its pre-obs shape"
+        );
+    }
+}
+
+/// The Perfetto export is a pure function of (config, workload): the
+/// same seed yields a byte-identical trace file across runs *and*
+/// across store shard counts — spans and counter tracks are keyed by
+/// virtual time and engine-local values only, so lock striping (which
+/// `prop_store_shards_bit_identical` already pins as stats-inert)
+/// cannot leak into the timeline either.
+#[test]
+fn prop_obs_deterministic() {
+    use icarus::cluster::Cluster;
+    use icarus::obs::export_chrome_trace;
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(24_000 + seed);
+        let overlap = rng.bool(0.5);
+        let qps = 0.5 + rng.f64();
+        let n_models = 1 + rng.below(4) as usize;
+        let mk = |shards: usize| {
+            let scfg = ServingConfig {
+                obs: true,
+                replicas: 2,
+                kv_pool_bytes: 16 << 20,
+                store_host_bytes: 256 << 20,
+                store_shards: shards,
+                overlap,
+                ..Default::default()
+            };
+            let wcfg = WorkloadConfig {
+                n_models,
+                qps,
+                n_requests: 24,
+                seed: 950 + seed,
+                ..Default::default()
+            };
+            let out =
+                Cluster::new(scfg, 2048, n_models).run_sim(CostModel::default(), generate(&wcfg));
+            export_chrome_trace(&out.obs).to_string_pretty()
+        };
+        let a = mk(1);
+        let b = mk(1);
+        assert_eq!(a, b, "seed {seed}: export must be run-to-run byte-identical");
+        let c = mk(4);
+        assert_eq!(a, c, "seed {seed}: shard count must not leak into the timeline");
+        assert!(a.contains("traceEvents"), "seed {seed}: export shape");
     }
 }
 

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event / Perfetto JSON file from `--trace-out`.
+
+The exporter (rust/src/obs) writes one process per replica with a
+serial compute lane (tid 0, B/E pairs — or X when zero-width) and
+X-complete lanes for queue/transfer/handoff/write_back, plus counter
+samples (C) on the counter track.  This check fails CI when:
+
+  * the file is not well-formed JSON or "traceEvents" is empty;
+  * an event has an unknown phase, a non-integer pid/tid, or (for
+    non-metadata phases) a non-numeric ts;
+  * timestamps go backwards within a (pid, tid) track in file order —
+    viewers tolerate disorder, but the export is documented as
+    byte-deterministically sorted, so any disorder is an exporter bug;
+  * the compute lane's B/E pairs nest (depth > 1), close without
+    opening, or are left open at end of file.  Only tid 0 is checked:
+    queue/transfer X spans may legitimately overlap (many sequences
+    wait at once);
+  * an X event has no numeric dur, or a C event has no args;
+  * with --require-kinds, a named span kind never appears as a B/X
+    event name (counters do not count).
+
+Usage, on a trace emitted by an obs-on run:
+
+    icarus serve --obs on --trace-out trace.json ...
+    python3 tools/check_trace.py trace.json \
+        --require-kinds queue,prefill,transfer,handoff,decode,write_back
+"""
+
+import argparse
+import json
+import sys
+
+# Track layout mirrored from rust/src/obs (SpanKind::track): the serial
+# compute lane is the only one with begin/end pairs.
+COMPUTE_TID = 0
+
+KNOWN_PHASES = ("M", "B", "E", "X", "C")
+
+
+def check(path: str, require_kinds: set[str]) -> list[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON: {e}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f'{path}: "traceEvents" must be a non-empty list']
+
+    errors = []
+    last_ts: dict[tuple[int, int], float] = {}
+    depth: dict[tuple[int, int], int] = {}
+    kinds: set[str] = set()
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            errors.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if not isinstance(e.get("pid"), int) or not isinstance(e.get("tid"), int):
+            errors.append(f"event {i}: pid/tid must be integers: {e}")
+            continue
+        if ph == "M":
+            continue  # metadata carries no timestamp
+        track = (e["pid"], e["tid"])
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool):
+            errors.append(f"event {i}: ts must be a number: {e}")
+            continue
+        if ts < last_ts.get(track, float("-inf")):
+            errors.append(f"event {i}: ts {ts} goes backwards on track {track}")
+        last_ts[track] = ts
+        if ph in ("B", "X"):
+            kinds.add(e.get("name"))
+        if ph == "X" and not isinstance(e.get("dur"), (int, float)):
+            errors.append(f"event {i}: X event without numeric dur: {e}")
+        if ph == "C" and not isinstance(e.get("args"), dict):
+            errors.append(f"event {i}: C event without args: {e}")
+        if e["tid"] == COMPUTE_TID and ph in ("B", "E"):
+            d = depth.get(track, 0) + (1 if ph == "B" else -1)
+            if d not in (0, 1):
+                errors.append(
+                    f"event {i}: compute lane depth {d} on track {track} "
+                    "(B/E unbalanced or nested)"
+                )
+            depth[track] = d
+    for track, d in sorted(depth.items()):
+        if d != 0:
+            errors.append(f"track {track}: compute lane left open (depth {d})")
+    missing = require_kinds - kinds
+    if missing:
+        have = ", ".join(sorted(k for k in kinds if k)) or "none"
+        errors.append(f"{path}: missing span kinds: {', '.join(sorted(missing))} (have: {have})")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("traces", nargs="+", help="trace files to validate")
+    ap.add_argument(
+        "--require-kinds",
+        default="",
+        help="comma-separated span names that must each appear as a B/X event",
+    )
+    args = ap.parse_args()
+    require = {k for k in args.require_kinds.split(",") if k}
+
+    failures = []
+    for path in args.traces:
+        failures += check(path, require)
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if not failures:
+        print(f"ok: {len(args.traces)} trace file(s) well-formed, sorted and balanced")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
